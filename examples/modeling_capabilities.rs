@@ -1,0 +1,51 @@
+//! Modeling-capabilities study (paper §10.1, Figs 4–5): contrast
+//! FacilityLocation (representation) with DisparitySum (diversity) on the
+//! controlled 48-point dataset, and print the behaviours the paper
+//! describes: cluster centers first + outlier last for FL; remote
+//! corners/outliers first for DisparitySum.
+//!
+//! Run: `cargo run --release --example modeling_capabilities`
+
+use submodlib::data::controlled;
+use submodlib::experiments::fig5;
+
+fn main() -> anyhow::Result<()> {
+    let (ground, _represented, outliers) = controlled::fig4_dataset();
+    let r = fig5(10)?;
+
+    println!("=== FacilityLocation (models representation) ===");
+    for (rank, (e, gain)) in r.fl.order.iter().enumerate() {
+        let tag = if outliers.contains(e) { "  <-- OUTLIER" } else { "" };
+        println!(
+            "  pick {rank}: element {e:>2} at ({:>5.2},{:>5.2}) gain {gain:.4}{tag}",
+            ground.get(*e, 0),
+            ground.get(*e, 1)
+        );
+    }
+    println!(
+        "first outlier picked at rank: {:?} (paper: \"picked up only at the end\")",
+        r.fl_first_outlier_rank
+    );
+
+    println!("\n=== DisparitySum (models diversity) ===");
+    for (rank, (e, gain)) in r.dsum.order.iter().enumerate() {
+        let tag = if outliers.contains(e) { "  <-- OUTLIER" } else { "" };
+        println!(
+            "  pick {rank}: element {e:>2} at ({:>5.2},{:>5.2}) gain {gain:.4}{tag}",
+            ground.get(*e, 0),
+            ground.get(*e, 1)
+        );
+    }
+    println!(
+        "first outlier picked at rank: {:?} (paper: \"remote corner points get picked up first\")",
+        r.dsum_first_outlier_rank
+    );
+
+    assert!(
+        r.dsum_first_outlier_rank.unwrap_or(usize::MAX)
+            < r.fl_first_outlier_rank.unwrap_or(usize::MAX),
+        "paper behaviour check failed"
+    );
+    println!("\npaper behaviour reproduced ✓");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+"""AOT compile path: lower the L2 entry points to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized
+HloModuleProto) is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the `xla`
+0.1.6 Rust crate links) rejects with ``proto.id() <= INT_MAX``.  The text
+parser on the Rust side (``HloModuleProto::from_text_file``) reassigns ids
+and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Artifacts (DESIGN.md §6), written to ``--outdir`` plus a manifest.json the
+Rust runtime reads to discover entries and shapes:
+
+    similarity_{euclidean,cosine,dot}_256x256x1024.hlo.txt
+    fl_gains_1024x256.hlo.txt
+
+Each entry is lowered with ``return_tuple=True`` → the Rust side unwraps
+with ``to_tuple1()``.
+
+Usage (from python/): python -m compile.aot --outdir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Tile geometry shared with rust/src/runtime/tiled.rs (via manifest.json).
+TM, TN, D = 256, 256, 1024
+GN, GC = 1024, 256  # fl_gains: rows (ground set block), candidate columns
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entries():
+    """(name, jitted fn, example args) for every artifact."""
+    f32 = jax.numpy.float32
+    x = jax.ShapeDtypeStruct((TM, D), f32)
+    y = jax.ShapeDtypeStruct((TN, D), f32)
+    s = jax.ShapeDtypeStruct((GN, GC), f32)
+    mv = jax.ShapeDtypeStruct((GN,), f32)
+    out = []
+    for metric in ("euclidean", "cosine", "dot"):
+        fn = functools.partial(model.similarity_block, metric=metric)
+        out.append(
+            (
+                f"similarity_{metric}_{TM}x{TN}x{D}",
+                fn,
+                (x, y),
+                {"kind": "similarity", "metric": metric, "tm": TM, "tn": TN, "d": D},
+            )
+        )
+    out.append(
+        (
+            f"fl_gains_{GN}x{GC}",
+            model.fl_gain_block,
+            (s, mv),
+            {"kind": "fl_gains", "n": GN, "c": GC},
+        )
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias; ignored path tail")
+    args = ap.parse_args()
+    outdir = args.outdir
+    if args.out:  # Makefile passes --out artifacts/model.hlo.txt
+        outdir = os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = {"tile": {"tm": TM, "tn": TN, "d": D, "gn": GN, "gc": GC}, "entries": {}}
+    for name, fn, example_args, meta in entries():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {**meta, "file": f"{name}.hlo.txt"}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Sentinel the Makefile tracks for up-to-date checks.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("# sentinel; real artifacts are the *.hlo.txt files\n")
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {outdir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: batched FacilityLocation marginal gains.
+
+The greedy inner loop's hot-spot (paper §6, Table 3 row 1): given the
+memoized statistic ``max_vec[i] = max_{j∈A} s_ij`` the marginal gain of a
+candidate element c is
+
+    gain(c) = f(A ∪ {c}) − f(A) = Σ_i max(S[i, c] − max_vec[i], 0)
+
+Evaluating a whole batch of candidates at once turns the greedy scan into
+one fused elementwise-max + column reduction over a similarity tile — a
+VPU-friendly reduction that streams S through VMEM row-block by row-block
+while the (c,) accumulator stays resident.
+
+interpret=True for CPU-PJRT execution (see similarity.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fl_gains_kernel(s_ref, m_ref, o_ref):
+    """Accumulate relu(S_block − max_vec_block) column sums."""
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(
+        jnp.maximum(s_ref[...] - m_ref[...][:, None], 0.0), axis=0
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tr",))
+def fl_gains(s, max_vec, tr=128):
+    """Batched FL gains. s: (n, c), max_vec: (n,) -> (c,). n % tr == 0."""
+    n, c = s.shape
+    assert max_vec.shape == (n,)
+    assert n % tr == 0, f"row count {n} not aligned to row tile {tr}"
+    grid = (n // tr,)
+    return pl.pallas_call(
+        _fl_gains_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, c), lambda r: (r, 0)),
+            pl.BlockSpec((tr,), lambda r: (r,)),
+        ],
+        out_specs=pl.BlockSpec((c,), lambda r: (0,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=True,
+    )(s, max_vec)

@@ -1,0 +1,66 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only.  The pytest suite (and the
+hypothesis sweeps) assert ``assert_allclose(pallas(...), ref(...))`` — this
+is the core correctness signal for Layer 1.
+
+The math mirrors Submodlib's kernel helpers:
+
+* ``gram``           — raw inner-product matrix X·Yᵀ.
+* ``similarity``     — the metric-transformed similarity kernel used by all
+                       similarity-based set functions (FacilityLocation,
+                       GraphCut, LogDet, …):
+                       - ``dot``       : s_ij = <x_i, y_j>
+                       - ``cosine``    : s_ij = <x_i, y_j> / (|x_i||y_j|)
+                       - ``euclidean`` : s_ij = 1 / (1 + ||x_i − y_j||)
+                         (Submodlib's euclidean-similarity convention)
+                       - ``rbf``       : s_ij = exp(−γ ||x_i − y_j||²)
+* ``fl_gains``       — batched FacilityLocation marginal gains given the
+                       memoized statistic max_vec[i] = max_{j∈A} s_ij
+                       (paper Table 3, row 1):
+                       gain(c) = Σ_i max(S[i,c] − max_vec[i], 0).
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def gram(x, y):
+    """Raw inner products: (m,d),(n,d) -> (m,n)."""
+    return x @ y.T
+
+
+def sq_dists(x, y):
+    """Pairwise squared euclidean distances via the gram expansion."""
+    g = gram(x, y)
+    nx = jnp.sum(x * x, axis=1)
+    ny = jnp.sum(y * y, axis=1)
+    d2 = nx[:, None] + ny[None, :] - 2.0 * g
+    return jnp.maximum(d2, 0.0)
+
+
+def similarity(x, y, metric="euclidean", gamma=1.0):
+    """Metric-transformed similarity kernel (see module docstring)."""
+    if metric == "dot":
+        return gram(x, y)
+    if metric == "cosine":
+        nx = jnp.sqrt(jnp.sum(x * x, axis=1))
+        ny = jnp.sqrt(jnp.sum(y * y, axis=1))
+        return gram(x, y) / jnp.maximum(nx[:, None] * ny[None, :], EPS)
+    if metric == "euclidean":
+        return 1.0 / (1.0 + jnp.sqrt(sq_dists(x, y)))
+    if metric == "rbf":
+        return jnp.exp(-gamma * sq_dists(x, y))
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def fl_gains(s, max_vec):
+    """FacilityLocation batched marginal gains.
+
+    s:       (n, c) similarity columns for c candidate elements
+    max_vec: (n,)   memoized max-similarity-to-current-set statistic
+    returns  (c,)   gain of adding each candidate to the current set
+    """
+    return jnp.sum(jnp.maximum(s - max_vec[:, None], 0.0), axis=0)

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: tiled gram / similarity computation.
+
+This is the compute hot-spot of Submodlib's "dense kernel creation in C++"
+path (paper §8, usage pattern 1), re-thought for the TPU MXU:
+
+* the (m, d)·(d, n) inner-product is tiled into (TM, TK)·(TK, TN) blocks
+  sized for VMEM; the grid iterates (row-tile, col-tile, k-tile) and
+  accumulates partial gram products into the output tile, which is the
+  classic MXU-friendly systolic schedule;
+* BlockSpec index maps express the HBM↔VMEM movement the paper's C++ code
+  did implicitly through cache blocking.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime loads byte-identically (see DESIGN.md §6).
+
+The metric transforms (cosine normalization, euclidean 1/(1+d), rbf) are
+applied in Layer 2 (`model.py`) on top of the gram tile — XLA fuses them
+into the same loop, and keeping the Pallas kernel a pure contraction keeps
+the MXU estimate honest (DESIGN.md §9).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x_ref, y_ref, o_ref):
+    """One (TM, TN) output tile: accumulate x_tile @ y_tile.T over k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU contraction: (TM, TK) @ (TK, TN). f32 accumulation.
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def gram(x, y, tm=128, tn=128, tk=256):
+    """Tiled X·Yᵀ via Pallas. Shapes must be tile-aligned (Rust pads)."""
+    m, d = x.shape
+    n, d2 = y.shape
+    assert d == d2, "feature dims must match"
+    assert m % tm == 0 and n % tn == 0 and d % tk == 0, (
+        f"shapes ({m},{d})x({n},{d2}) not aligned to tiles ({tm},{tn},{tk})"
+    )
+    grid = (m // tm, n // tn, d // tk)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, tk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)

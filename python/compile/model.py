@@ -1,0 +1,54 @@
+"""L2: the JAX compute graph that the Rust runtime executes via PJRT.
+
+Submodlib's compute graph is not a neural model; its analogue of "fwd" is
+(1) building the metric-transformed similarity kernel between two feature
+blocks and (2) evaluating batched marginal gains.  Both call the L1 Pallas
+kernels (`kernels.similarity.gram`, `kernels.fl_gains.fl_gains`) so that
+the Pallas code lowers into the same HLO module the Rust side loads.
+
+Entry points (AOT-lowered by aot.py at the tile shapes in DESIGN.md §6):
+
+* ``similarity_block(x, y, metric)`` — (TM,D),(TN,D) → (TM,TN) similarity
+  tile.  Metric transform runs on top of the Pallas gram tile; XLA fuses.
+* ``fl_gain_block(s, max_vec)``      — (N,C),(N,) → (C,) batched FL gains.
+
+All shapes are static; the Rust runtime pads inputs up to tile multiples
+and stitches tiles (rust/src/runtime/tiled.rs).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import fl_gains as _flg
+from .kernels import ref
+from .kernels import similarity as _sim
+
+EPS = 1e-12
+
+
+def similarity_block(x, y, metric="euclidean", gamma=1.0, tm=128, tn=128, tk=256):
+    """Metric-transformed similarity tile on top of the Pallas gram tile."""
+    g = _sim.gram(x, y, tm=tm, tn=tn, tk=tk)
+    if metric == "dot":
+        return g
+    if metric == "cosine":
+        nx = jnp.sqrt(jnp.sum(x * x, axis=1))
+        ny = jnp.sqrt(jnp.sum(y * y, axis=1))
+        return g / jnp.maximum(nx[:, None] * ny[None, :], EPS)
+    nx = jnp.sum(x * x, axis=1)
+    ny = jnp.sum(y * y, axis=1)
+    d2 = jnp.maximum(nx[:, None] + ny[None, :] - 2.0 * g, 0.0)
+    if metric == "euclidean":
+        return 1.0 / (1.0 + jnp.sqrt(d2))
+    if metric == "rbf":
+        return jnp.exp(-gamma * d2)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def fl_gain_block(s, max_vec, tr=128):
+    """Batched FacilityLocation marginal gains (Pallas kernel)."""
+    return _flg.fl_gains(s, max_vec, tr=tr)
+
+
+# Reference (pure-jnp) versions, re-exported for the test suite.
+ref_similarity = ref.similarity
+ref_fl_gains = ref.fl_gains

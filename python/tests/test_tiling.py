@@ -1,0 +1,78 @@
+"""Tile-configuration invariance: the Pallas gram kernel must produce the
+same similarity block for ANY valid tile geometry — this is the property
+that lets aot.py pick one fixed geometry while the Rust runtime pads
+arbitrary inputs to it (DESIGN.md §6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class TestTileInvariance:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        metric=st.sampled_from(["euclidean", "cosine", "dot"]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_same_result_across_tile_configs(self, metric, seed):
+        # 16x32 inputs evenly tiled three different ways
+        x = _rand((16, 32), seed)
+        y = _rand((16, 32), seed + 1)
+        configs = [(16, 16, 32), (8, 8, 16), (4, 16, 8)]
+        outs = [
+            np.asarray(
+                model.similarity_block(
+                    jnp.asarray(x), jnp.asarray(y), metric=metric, tm=tm, tn=tn, tk=tk
+                )
+            )
+            for tm, tn, tk in configs
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-4)
+
+    def test_zero_padding_features_is_exact(self):
+        # appending zero feature columns must not change any metric —
+        # the property the Rust tiler relies on when padding d up to 1024
+        x = _rand((8, 24), 3)
+        y = _rand((8, 24), 4)
+        xp = np.concatenate([x, np.zeros((8, 8), np.float32)], axis=1)
+        yp = np.concatenate([y, np.zeros((8, 8), np.float32)], axis=1)
+        for metric in ["euclidean", "cosine", "dot", "rbf"]:
+            a = np.asarray(
+                model.similarity_block(
+                    jnp.asarray(x), jnp.asarray(y), metric=metric, tm=8, tn=8, tk=24
+                )
+            )
+            b = np.asarray(
+                model.similarity_block(
+                    jnp.asarray(xp), jnp.asarray(yp), metric=metric, tm=8, tn=8, tk=32
+                )
+            )
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6, err_msg=metric)
+
+    def test_fl_gains_row_block_decomposition(self):
+        # fl_gains over the whole matrix equals the sum over row blocks
+        # with the same max_vec slices — the property the Rust fl_gains
+        # tiler relies on when looping GN blocks
+        s = _rand((32, 6), 5)
+        mv = np.abs(_rand((32,), 6))
+        whole = np.asarray(model.fl_gain_block(jnp.asarray(s), jnp.asarray(mv), tr=8))
+        parts = sum(
+            np.asarray(
+                model.fl_gain_block(
+                    jnp.asarray(s[b : b + 16]), jnp.asarray(mv[b : b + 16]), tr=8
+                )
+            )
+            for b in (0, 16)
+        )
+        np.testing.assert_allclose(whole, parts, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,90 @@
+//! Ablation bench: the L3 streaming coordinator — selection latency vs
+//! shard capacity and stage-1 candidate factor, plus ingest throughput.
+//! (The design choices DESIGN.md §3 calls out for the two-stage scheme.)
+
+use submodlib::config::CoordinatorConfig;
+use submodlib::coordinator::{Coordinator, SelectRequest};
+use submodlib::data::synthetic;
+use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::functions::traits::{SetFunction, Subset};
+use submodlib::kernel::{DenseKernel, Metric};
+use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use submodlib::util::bench::BenchRunner;
+
+fn build(items: usize, dim: usize, cap: usize, factor: f64) -> Coordinator {
+    let cfg = CoordinatorConfig {
+        workers: std::thread::available_parallelism().map(|x| x.get()).unwrap_or(2),
+        shard_capacity: cap,
+        ingest_depth: 256,
+        per_shard_factor: factor,
+    };
+    let c = Coordinator::new(cfg);
+    let data = synthetic::blobs(items, dim, 10, 2.0, 321);
+    let h = c.ingest_handle();
+    for i in 0..items {
+        h.ingest(data.row(i).to_vec()).unwrap();
+    }
+    c
+}
+
+fn main() {
+    let items = 2000;
+    let dim = 32;
+    let budget = 25;
+
+    let mut runner = BenchRunner::from_env();
+    eprintln!("coordinator ablation: {items} items, dim {dim}, budget {budget}");
+
+    // ingest throughput (fresh coordinator each sample)
+    let data = synthetic::blobs(items, dim, 10, 2.0, 321);
+    runner.bench("ingest_2000", || {
+        let c = Coordinator::new(CoordinatorConfig {
+            shard_capacity: 256,
+            ..Default::default()
+        });
+        let h = c.ingest_handle();
+        for i in 0..items {
+            h.ingest(data.row(i).to_vec()).unwrap();
+        }
+        c.len()
+    });
+
+    // shard-capacity sweep (quadratic per-shard kernels → capacity is the
+    // latency/quality knob)
+    for cap in [128usize, 256, 512, 2000] {
+        let c = build(items, dim, cap, 2.0);
+        runner.bench(&format!("select_cap{cap}"), || {
+            c.select(SelectRequest { budget, ..Default::default() }).unwrap().value
+        });
+    }
+
+    // stage-1 factor sweep (more candidates → better merge, slower)
+    for factor in [1.0f64, 2.0, 4.0] {
+        let c = build(items, dim, 256, factor);
+        runner.bench(&format!("select_factor{factor}"), || {
+            c.select(SelectRequest { budget, ..Default::default() }).unwrap().value
+        });
+    }
+
+    // quality vs flat baseline at each capacity
+    let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+    let flat = maximize(
+        &f,
+        Budget::cardinality(budget),
+        OptimizerKind::LazyGreedy,
+        &MaximizeOpts::default(),
+    )
+    .unwrap();
+    for cap in [128usize, 512, 2000] {
+        let c = build(items, dim, cap, 2.0);
+        let resp = c.select(SelectRequest { budget, ..Default::default() }).unwrap();
+        let v = f.evaluate(&Subset::from_ids(items, &resp.ids));
+        eprintln!(
+            "quality cap={cap}: two-stage {v:.2} vs flat {:.2} ({:.1}%)",
+            flat.value,
+            100.0 * v / flat.value
+        );
+        assert!(v >= 0.85 * flat.value);
+    }
+    runner.finish("coordinator_ablation");
+}

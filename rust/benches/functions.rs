@@ -1,0 +1,84 @@
+//! Bench: per-function marginal-gain cost — the inner-loop primitive
+//! every optimizer drives (paper §6: the point of memoization is making
+//! this cheap). One row per regular function at n=500.
+
+use submodlib::data::synthetic;
+use submodlib::functions::disparity_min::DisparityMin;
+use submodlib::functions::disparity_sum::DisparitySum;
+use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::functions::feature_based::{ConcaveShape, FeatureBased};
+use submodlib::functions::graph_cut::GraphCut;
+use submodlib::functions::log_determinant::LogDeterminant;
+use submodlib::functions::prob_set_cover::ProbabilisticSetCover;
+use submodlib::functions::set_cover::SetCover;
+use submodlib::functions::traits::{SetFunction, Subset};
+use submodlib::kernel::{DenseKernel, Metric};
+use submodlib::rng::Pcg64;
+use submodlib::util::bench::BenchRunner;
+
+/// Time a full memoized greedy sweep of `k` picks (init + k×(scan+update)).
+fn sweep(f: &dyn SetFunction, k: usize) -> f64 {
+    let mut w = f.clone_box();
+    w.init_memoization(&Subset::empty(f.n()));
+    let mut picked = vec![false; f.n()];
+    let mut total = 0.0;
+    for _ in 0..k {
+        let mut best = (usize::MAX, f64::MIN);
+        for e in 0..f.n() {
+            if picked[e] {
+                continue;
+            }
+            let g = w.marginal_gain_memoized(e);
+            if g > best.1 {
+                best = (e, g);
+            }
+        }
+        w.update_memoization(best.0);
+        picked[best.0] = true;
+        total += best.1;
+    }
+    total
+}
+
+fn main() {
+    let n = 500;
+    let k = 20;
+    let data = synthetic::blobs(n, 8, 10, 2.0, 42);
+    let euclid = DenseKernel::from_data(&data, Metric::Euclidean);
+    let rbf = DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.25 });
+    let dist = DenseKernel::distances_from_data(&data);
+
+    let mut rng = Pcg64::new(9);
+    let n_concepts = 100;
+    let cover: Vec<Vec<u32>> = (0..n)
+        .map(|_| (0..5).map(|_| rng.next_below(n_concepts) as u32).collect())
+        .collect();
+    let probs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..n_concepts).map(|_| if rng.next_f32() < 0.05 { rng.next_f32() } else { 0.0 }).collect())
+        .collect();
+    let feats: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|_| (0..8).map(|_| (rng.next_below(64) as u32, rng.next_f32())).collect())
+        .collect();
+
+    let mut runner = BenchRunner::from_env();
+    eprintln!("per-function greedy sweep: n={n}, k={k}");
+
+    let fl = FacilityLocation::new(euclid.clone());
+    runner.bench("FacilityLocation", || sweep(&fl, k));
+    let gc = GraphCut::new(euclid.clone(), 0.4).unwrap();
+    runner.bench("GraphCut", || sweep(&gc, k));
+    let ld = LogDeterminant::with_regularization(rbf, 0.1).unwrap();
+    runner.bench("LogDeterminant", || sweep(&ld, k));
+    let sc = SetCover::new(cover, vec![1.0; n_concepts]).unwrap();
+    runner.bench("SetCover", || sweep(&sc, k));
+    let psc = ProbabilisticSetCover::new(probs, vec![1.0; n_concepts]).unwrap();
+    runner.bench("ProbabilisticSetCover", || sweep(&psc, k));
+    let fb = FeatureBased::new(feats, vec![1.0; 64], ConcaveShape::Sqrt).unwrap();
+    runner.bench("FeatureBased", || sweep(&fb, k));
+    let dsum = DisparitySum::new(dist.clone());
+    runner.bench("DisparitySum", || sweep(&dsum, k));
+    let dmin = DisparityMin::new(dist);
+    runner.bench("DisparityMin", || sweep(&dmin, k));
+
+    runner.finish("function_sweeps");
+}

@@ -1,0 +1,82 @@
+//! Ablation bench: paper §8 usage patterns — dense vs sparse vs clustered
+//! FacilityLocation, and the kernel-construction cost itself (the knob the
+//! paper exposes as `mode=` and `num_neighbors=`).
+
+use submodlib::clustering::{kmeans, partition};
+use submodlib::data::synthetic;
+use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::kernel::{DenseKernel, Metric, SparseKernel};
+use submodlib::linalg::Matrix;
+use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use submodlib::util::bench::BenchRunner;
+
+fn main() {
+    let n = 1000;
+    let k = 50;
+    let dim = 32;
+    let data = synthetic::blobs(n, dim, 10, 2.0, 42);
+
+    let mut runner = BenchRunner::from_env();
+    eprintln!("kernel modes: n={n}, dim={dim}, budget={k}");
+
+    // construction costs
+    runner.bench("build_dense_kernel", || DenseKernel::from_data(&data, Metric::Euclidean).n());
+    runner.bench("build_sparse_kernel_k32", || {
+        SparseKernel::from_data(&data, Metric::Euclidean, 32).unwrap().nnz()
+    });
+
+    // selection costs per mode
+    let dense = DenseKernel::from_data(&data, Metric::Euclidean);
+    let sparse = SparseKernel::from_data(&data, Metric::Euclidean, 32).unwrap();
+    let km = kmeans(&data, 10, 30, 1);
+    let parts = partition(&km.labels, 10);
+    let clusters: Vec<(Vec<usize>, DenseKernel)> = parts
+        .into_iter()
+        .filter(|ids| !ids.is_empty())
+        .map(|ids| {
+            let mut sub = Matrix::zeros(ids.len(), dim);
+            for (li, &g) in ids.iter().enumerate() {
+                sub.row_mut(li).copy_from_slice(data.row(g));
+            }
+            (ids, DenseKernel::from_data(&sub, Metric::Euclidean))
+        })
+        .collect();
+
+    let f_dense = FacilityLocation::new(dense);
+    let f_sparse = FacilityLocation::sparse(sparse);
+    let f_clustered = FacilityLocation::clustered(clusters, n);
+    let opts = MaximizeOpts::default();
+
+    let dense_val = runner
+        .bench("select_dense", || {
+            maximize(&f_dense, Budget::cardinality(k), OptimizerKind::LazyGreedy, &opts)
+                .unwrap()
+                .value
+        })
+        .median
+        .as_secs_f64();
+    runner.bench("select_sparse_k32", || {
+        maximize(&f_sparse, Budget::cardinality(k), OptimizerKind::LazyGreedy, &opts)
+            .unwrap()
+            .value
+    });
+    runner.bench("select_clustered", || {
+        maximize(&f_clustered, Budget::cardinality(k), OptimizerKind::LazyGreedy, &opts)
+            .unwrap()
+            .value
+    });
+    let _ = dense_val;
+
+    // quality comparison (sparse/clustered trade accuracy for speed)
+    let vd = maximize(&f_dense, Budget::cardinality(k), OptimizerKind::LazyGreedy, &opts)
+        .unwrap()
+        .value;
+    let vs = maximize(&f_sparse, Budget::cardinality(k), OptimizerKind::LazyGreedy, &opts)
+        .unwrap()
+        .value;
+    let vc = maximize(&f_clustered, Budget::cardinality(k), OptimizerKind::LazyGreedy, &opts)
+        .unwrap()
+        .value;
+    eprintln!("objective: dense {vd:.2}, sparse {vs:.2}, clustered {vc:.2}");
+    runner.finish("kernel_modes");
+}

@@ -1,0 +1,84 @@
+//! Ablation bench: paper §6 / Tables 3–4 — memoization on vs off.
+//!
+//! "Off" drives the optimizers through the stateless `marginal_gain`
+//! path (recomputing from scratch each query), "on" uses the memoized
+//! statistics. The paper's efficiency claim rests on this gap.
+
+use submodlib::data::synthetic;
+use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::functions::graph_cut::GraphCut;
+use submodlib::functions::log_determinant::LogDeterminant;
+use submodlib::functions::traits::{SetFunction, Subset};
+use submodlib::kernel::{DenseKernel, Metric};
+use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use submodlib::util::bench::BenchRunner;
+
+/// Naive greedy WITHOUT memoization: stateless marginal gains.
+fn greedy_stateless(f: &dyn SetFunction, k: usize) -> f64 {
+    let n = f.n();
+    let mut s = Subset::empty(n);
+    let mut value = 0.0;
+    for _ in 0..k {
+        let mut best = (usize::MAX, f64::MIN);
+        for e in 0..n {
+            if s.contains(e) {
+                continue;
+            }
+            let g = f.marginal_gain(&s, e);
+            if g > best.1 {
+                best = (e, g);
+            }
+        }
+        if best.0 == usize::MAX || best.1 <= 0.0 {
+            break;
+        }
+        s.insert(best.0);
+        value += best.1;
+    }
+    value
+}
+
+fn main() {
+    let n = 200;
+    let k = 20;
+    let data = synthetic::blobs(n, 2, 8, 2.0, 42);
+    let kernel = DenseKernel::from_data(&data, Metric::Euclidean);
+    let rbf = DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 });
+
+    let mut runner = BenchRunner::from_env();
+    eprintln!("memoization ablation: n={n}, budget={k}");
+
+    let fl = FacilityLocation::new(kernel.clone());
+    runner.bench("fl_memoized", || {
+        maximize(&fl, Budget::cardinality(k), OptimizerKind::NaiveGreedy, &MaximizeOpts::default())
+            .unwrap()
+            .value
+    });
+    runner.bench("fl_stateless", || greedy_stateless(&fl, k));
+
+    let gc = GraphCut::new(kernel.clone(), 0.4).unwrap();
+    runner.bench("gc_memoized", || {
+        maximize(&gc, Budget::cardinality(k), OptimizerKind::NaiveGreedy, &MaximizeOpts::default())
+            .unwrap()
+            .value
+    });
+    runner.bench("gc_stateless", || greedy_stateless(&gc, k));
+
+    let ld = LogDeterminant::with_regularization(rbf, 0.1).unwrap();
+    runner.bench("logdet_memoized", || {
+        maximize(&ld, Budget::cardinality(k), OptimizerKind::NaiveGreedy, &MaximizeOpts::default())
+            .unwrap()
+            .value
+    });
+    runner.bench("logdet_stateless", || greedy_stateless(&ld, k));
+
+    // memoized must beat stateless for every function
+    let rs = runner.results();
+    let t = |n: &str| rs.iter().find(|r| r.name == n).unwrap().median.as_secs_f64();
+    for f in ["fl", "gc", "logdet"] {
+        let speedup = t(&format!("{f}_stateless")) / t(&format!("{f}_memoized"));
+        eprintln!("{f}: memoization speedup {speedup:.1}x");
+        assert!(speedup > 1.5, "{f} memoization not paying off ({speedup:.2}x)");
+    }
+    runner.finish("memoization_ablation");
+}

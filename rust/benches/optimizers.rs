@@ -1,0 +1,51 @@
+//! Bench: paper Table 2 — running-time comparison of the four optimizers
+//! on the §5.3.5 workload (500 points, 10 clusters, σ=4, FacilityLocation,
+//! budget 100). Reproduced claim: LazierThanLazy ≤ Lazy < Stochastic <
+//! Naive. (`BENCH_SAMPLES` env var controls sample count.)
+
+use submodlib::data::synthetic;
+use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::kernel::{DenseKernel, Metric};
+use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use submodlib::util::bench::BenchRunner;
+
+fn main() {
+    let data = synthetic::blobs(500, 2, 10, 4.0, 42);
+    let kernel = DenseKernel::from_data(&data, Metric::Euclidean);
+    let f = FacilityLocation::new(kernel);
+    let opts = MaximizeOpts::default();
+    let budget = Budget::cardinality(100);
+
+    let mut runner = BenchRunner::from_env();
+    eprintln!("Table 2 workload: n=500, 10 clusters, sigma=4, FL, budget=100");
+    for (name, kind) in [
+        ("NaiveGreedy", OptimizerKind::NaiveGreedy),
+        ("StochasticGreedy", OptimizerKind::StochasticGreedy),
+        ("LazyGreedy", OptimizerKind::LazyGreedy),
+        ("LazierThanLazyGreedy", OptimizerKind::LazierThanLazyGreedy),
+    ] {
+        runner.bench(name, || {
+            maximize(&f, budget.clone(), kind, &opts).unwrap().value
+        });
+    }
+
+    // shape assertions (who wins) — a failed reproduction should be loud
+    let rs = runner.results();
+    let t = |n: &str| rs.iter().find(|r| r.name == n).unwrap().median.as_secs_f64();
+    assert!(t("LazyGreedy") < t("NaiveGreedy"), "paper ordering violated: lazy vs naive");
+    assert!(
+        t("LazierThanLazyGreedy") < t("NaiveGreedy"),
+        "paper ordering violated: lazier vs naive"
+    );
+    assert!(
+        t("StochasticGreedy") < t("NaiveGreedy"),
+        "paper ordering violated: stochastic vs naive"
+    );
+    eprintln!(
+        "speedups vs naive: lazy {:.1}x, lazier {:.1}x, stochastic {:.1}x (paper: 9.4x, 9.7x, 3.4x)",
+        t("NaiveGreedy") / t("LazyGreedy"),
+        t("NaiveGreedy") / t("LazierThanLazyGreedy"),
+        t("NaiveGreedy") / t("StochasticGreedy"),
+    );
+    runner.finish("table2_optimizers");
+}

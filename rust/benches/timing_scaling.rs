@@ -1,0 +1,37 @@
+//! Bench: paper Table 5 — FacilityLocation selection time vs ground-set
+//! size (1024-d random features, budget 100, kernel build included).
+//! Reproduced claim: near-quadratic growth, tractable at n = 10 000.
+//!
+//! Full paper sizes run when `BENCH_FULL=1`; default sweep stops at 5000
+//! to keep `cargo bench` turnaround sane.
+
+use submodlib::experiments::table5::{render, run_size};
+use submodlib::kernel::KernelBackend;
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let sizes: &[usize] = if full {
+        submodlib::experiments::table5::PAPER_SIZES
+    } else {
+        &[50, 100, 200, 500, 1000, 2000, 5000]
+    };
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let row = run_size(n, 1024, 100, 7, &KernelBackend::Native).unwrap();
+        eprintln!(
+            "n={n:<6} kernel {:.4}s select {:.4}s total {:.4}s",
+            row.kernel_seconds, row.select_seconds, row.total_seconds
+        );
+        rows.push(row);
+    }
+    // shape assertion: growth from n=500 to n=5000 must be superlinear in
+    // total time (kernel build is O(n² d))
+    let t = |n: usize| rows.iter().find(|r| r.n == n).unwrap().total_seconds;
+    if sizes.contains(&500) && sizes.contains(&5000) {
+        let ratio = t(5000) / t(500).max(1e-9);
+        assert!(ratio > 10.0, "expected superlinear scaling, got {ratio:.1}x for 10x data");
+        eprintln!("500→5000 scaling: {ratio:.1}x (paper: 0.0166s → 2.469s = 149x)");
+    }
+    println!("== table5_timing ==");
+    print!("{}", render(&rows));
+}

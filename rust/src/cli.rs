@@ -1,0 +1,256 @@
+//! Command-line interface — a small hand-rolled parser (clap is
+//! unavailable in the offline registry) with the same UX:
+//!
+//! ```text
+//! submodlib select   --data points.csv --function fl --budget 10 --optimizer lazy
+//! submodlib exp      table2|table5|fig3|fig5|fig7|fig8|fig10|all [--quick]
+//! submodlib serve    --items 2000 --requests 20        # streaming demo
+//! submodlib runtime  --n 512 --dim 1024                # PJRT vs native kernel build
+//! ```
+
+use std::collections::HashMap;
+
+use crate::error::{Result, SubmodError};
+
+/// Parsed command line.
+#[derive(Debug)]
+pub struct Cli {
+    pub config: Option<String>,
+    pub command: Command,
+}
+
+#[derive(Debug)]
+pub enum Command {
+    Select {
+        data: String,
+        function: String,
+        budget: usize,
+        optimizer: String,
+        metric: String,
+        param: f64,
+        out: Option<String>,
+    },
+    Exp {
+        target: String,
+        quick: bool,
+    },
+    Serve {
+        items: usize,
+        dim: usize,
+        requests: usize,
+        budget: usize,
+    },
+    Runtime {
+        n: usize,
+        dim: usize,
+        artifacts: String,
+    },
+    /// Problem 2 (Submodular Cover): min-cost subset with f(X) ≥ c·f(V).
+    Cover {
+        data: String,
+        function: String,
+        /// coverage as a fraction of f(V)
+        fraction: f64,
+        metric: String,
+    },
+    Help,
+}
+
+pub const USAGE: &str = "\
+submodlib — Submodlib (2022) reproduction: submodular optimization engine
+
+USAGE:
+  submodlib [--config cfg.json] <COMMAND> [OPTIONS]
+
+COMMANDS:
+  select    one-shot subset selection from a CSV feature matrix
+              --data <csv> [--function fl|gc|logdet|dsum|dmin|fb]
+              [--budget 10] [--optimizer naive|lazy|stochastic|lazier]
+              [--metric euclidean|cosine|dot|rbf] [--param 0.4] [--out sel.csv]
+  exp       reproduce a paper table/figure (CSV dumps into out_dir)
+              <table2|table5|fig3|fig5|fig7|fig8|fig10|all> [--quick]
+  serve     streaming-coordinator demo (synthetic stream + selections)
+              [--items 2000] [--dim 16] [--requests 10] [--budget 10]
+  runtime   PJRT-artifact kernel build vs native, with numerics check
+              [--n 512] [--dim 1024] [--artifacts artifacts]
+  cover     Problem 2: minimum subset reaching a coverage target
+              --data <csv> [--function fl] [--fraction 0.9] [--metric euclidean]
+  help      this text
+";
+
+/// Split argv into flags (`--k v` / bare `--flag`) and positionals.
+fn split_args(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut pos = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let is_bare = i + 1 >= args.len() || args[i + 1].starts_with("--");
+            if is_bare {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (flags, pos)
+}
+
+fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| SubmodError::InvalidParam(format!("--{key} {v:?} is not an integer"))),
+    }
+}
+
+fn get_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| SubmodError::InvalidParam(format!("--{key} {v:?} is not a number"))),
+    }
+}
+
+impl Cli {
+    /// Parse from raw args (everything after the program name).
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let (flags, pos) = split_args(args);
+        let config = flags.get("config").cloned();
+        let cmd = pos.first().map(String::as_str).unwrap_or("help");
+        let command = match cmd {
+            "select" => Command::Select {
+                data: flags
+                    .get("data")
+                    .cloned()
+                    .ok_or_else(|| SubmodError::InvalidParam("select requires --data".into()))?,
+                function: flags.get("function").cloned().unwrap_or_else(|| "fl".into()),
+                budget: get_usize(&flags, "budget", 10)?,
+                optimizer: flags.get("optimizer").cloned().unwrap_or_else(|| "lazy".into()),
+                metric: flags.get("metric").cloned().unwrap_or_else(|| "euclidean".into()),
+                param: get_f64(&flags, "param", 0.4)?,
+                out: flags.get("out").cloned(),
+            },
+            "exp" => Command::Exp {
+                target: pos
+                    .get(1)
+                    .cloned()
+                    .ok_or_else(|| SubmodError::InvalidParam("exp requires a target".into()))?,
+                quick: flags.contains_key("quick"),
+            },
+            "serve" => Command::Serve {
+                items: get_usize(&flags, "items", 2000)?,
+                dim: get_usize(&flags, "dim", 16)?,
+                requests: get_usize(&flags, "requests", 10)?,
+                budget: get_usize(&flags, "budget", 10)?,
+            },
+            "runtime" => Command::Runtime {
+                n: get_usize(&flags, "n", 512)?,
+                dim: get_usize(&flags, "dim", 1024)?,
+                artifacts: flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
+            },
+            "cover" => Command::Cover {
+                data: flags
+                    .get("data")
+                    .cloned()
+                    .ok_or_else(|| SubmodError::InvalidParam("cover requires --data".into()))?,
+                function: flags.get("function").cloned().unwrap_or_else(|| "fl".into()),
+                fraction: get_f64(&flags, "fraction", 0.9)?,
+                metric: flags.get("metric").cloned().unwrap_or_else(|| "euclidean".into()),
+            },
+            "help" | "--help" | "-h" => Command::Help,
+            other => {
+                return Err(SubmodError::InvalidParam(format!("unknown command {other:?}")))
+            }
+        };
+        Ok(Cli { config, command })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_select() {
+        let c = Cli::parse(&argv("select --data d.csv --budget 7 --optimizer naive")).unwrap();
+        match c.command {
+            Command::Select { data, budget, optimizer, .. } => {
+                assert_eq!(data, "d.csv");
+                assert_eq!(budget, 7);
+                assert_eq!(optimizer, "naive");
+            }
+            _ => panic!("wrong command"),
+        }
+    }
+
+    #[test]
+    fn select_requires_data() {
+        assert!(Cli::parse(&argv("select --budget 5")).is_err());
+    }
+
+    #[test]
+    fn parses_exp_with_quick() {
+        let c = Cli::parse(&argv("exp table2 --quick")).unwrap();
+        match c.command {
+            Command::Exp { target, quick } => {
+                assert_eq!(target, "table2");
+                assert!(quick);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn global_config_flag() {
+        let c = Cli::parse(&argv("--config cfg.json serve --items 10")).unwrap();
+        assert_eq!(c.config.as_deref(), Some("cfg.json"));
+        match c.command {
+            Command::Serve { items, .. } => assert_eq!(items, 10),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn bad_numbers_rejected() {
+        assert!(Cli::parse(&argv("serve --items ten")).is_err());
+        assert!(Cli::parse(&argv("select --data x --param abc")).is_err());
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(Cli::parse(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn parses_cover() {
+        let c = Cli::parse(&argv("cover --data d.csv --fraction 0.8")).unwrap();
+        match c.command {
+            Command::Cover { data, fraction, function, .. } => {
+                assert_eq!(data, "d.csv");
+                assert_eq!(fraction, 0.8);
+                assert_eq!(function, "fl");
+            }
+            _ => panic!(),
+        }
+        assert!(Cli::parse(&argv("cover --fraction 0.8")).is_err());
+    }
+
+    #[test]
+    fn defaults_to_help() {
+        let c = Cli::parse(&[]).unwrap();
+        assert!(matches!(c.command, Command::Help));
+    }
+}

@@ -1,0 +1,168 @@
+//! k-means++ seeding + Lloyd iterations, deterministic given a seed.
+
+use crate::linalg::{self, Matrix};
+use crate::rng::Pcg64;
+
+/// Result of a k-means run.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    /// Cluster label per item.
+    pub labels: Vec<usize>,
+    /// k × d centroid matrix.
+    pub centroids: Matrix,
+    /// Final within-cluster sum of squared distances.
+    pub inertia: f64,
+    /// Lloyd iterations executed.
+    pub iterations: usize,
+}
+
+/// k-means++ / Lloyd. `data` rows are items. Deterministic in `seed`.
+pub fn kmeans(data: &Matrix, k: usize, max_iters: usize, seed: u64) -> KMeansResult {
+    let n = data.rows();
+    let d = data.cols();
+    assert!(k >= 1 && k <= n, "k={k} n={n}");
+    let mut rng = Pcg64::new(seed);
+
+    // --- k-means++ seeding ---
+    let mut centroids = Matrix::zeros(k, d);
+    let first = rng.next_below(n);
+    centroids.row_mut(0).copy_from_slice(data.row(first));
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| linalg::sq_dist(data.row(i), centroids.row(0)) as f64)
+        .collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.next_below(n)
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut idx = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                if target < w {
+                    idx = i;
+                    break;
+                }
+                target -= w;
+            }
+            idx
+        };
+        centroids.row_mut(c).copy_from_slice(data.row(pick));
+        for i in 0..n {
+            let nd = linalg::sq_dist(data.row(i), centroids.row(c)) as f64;
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+
+    // --- Lloyd ---
+    let mut labels = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // assign
+        let mut new_inertia = 0f64;
+        for i in 0..n {
+            let (mut best, mut bd) = (0usize, f32::INFINITY);
+            for c in 0..k {
+                let dist = linalg::sq_dist(data.row(i), centroids.row(c));
+                if dist < bd {
+                    bd = dist;
+                    best = c;
+                }
+            }
+            labels[i] = best;
+            new_inertia += bd as f64;
+        }
+        // update
+        let mut sums = Matrix::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = labels[i];
+            counts[c] += 1;
+            let row = data.row(i);
+            let srow = sums.row_mut(c);
+            for (s, &x) in srow.iter_mut().zip(row) {
+                *s += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f32;
+                for v in centroids.row_mut(c) {
+                    *v = 0.0;
+                }
+                let srow = sums.row(c).to_vec();
+                for (cv, sv) in centroids.row_mut(c).iter_mut().zip(srow) {
+                    *cv = sv * inv;
+                }
+            } else {
+                // re-seed empty cluster at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = linalg::sq_dist(data.row(a), centroids.row(labels[a]));
+                        let db = linalg::sq_dist(data.row(b), centroids.row(labels[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                let row = data.row(far).to_vec();
+                centroids.row_mut(c).copy_from_slice(&row);
+            }
+        }
+        if (inertia - new_inertia).abs() < 1e-9 * (1.0 + inertia.abs()) {
+            inertia = new_inertia;
+            break;
+        }
+        inertia = new_inertia;
+    }
+    KMeansResult { labels, centroids, inertia, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn separates_well_separated_blobs() {
+        let data = synthetic::blobs(120, 2, 3, 0.2, 7);
+        let r = kmeans(&data, 3, 50, 1);
+        // every cluster label set should be "pure": all points generated
+        // from one blob share a label. blobs() lays points out blob-major.
+        let per = 120 / 3;
+        for b in 0..3 {
+            let l0 = r.labels[b * per];
+            for i in 0..per {
+                assert_eq!(r.labels[b * per + i], l0, "blob {b} split");
+            }
+        }
+        assert!(r.inertia < 50.0);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let data = synthetic::blobs(60, 2, 3, 0.5, 9);
+        let a = kmeans(&data, 3, 30, 5);
+        let b = kmeans(&data, 3, 30, 5);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.inertia, b.inertia);
+    }
+
+    #[test]
+    fn k_equals_n_zero_inertia() {
+        let data = synthetic::blobs(8, 2, 2, 1.0, 3);
+        let r = kmeans(&data, 8, 20, 1);
+        assert!(r.inertia < 1e-6);
+    }
+
+    #[test]
+    fn k_one_centroid_is_mean() {
+        let data = Matrix::from_rows(&[&[0.0, 0.0], &[2.0, 0.0], &[0.0, 2.0], &[2.0, 2.0]]);
+        let r = kmeans(&data, 1, 10, 1);
+        assert!((r.centroids.get(0, 0) - 1.0).abs() < 1e-6);
+        assert!((r.centroids.get(0, 1) - 1.0).abs() < 1e-6);
+    }
+
+    use crate::linalg::Matrix;
+}

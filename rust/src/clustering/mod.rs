@@ -1,0 +1,31 @@
+//! Clustering substrate.
+//!
+//! Submodlib's `"clustered"` kernel mode and the generic `ClusteredFunction`
+//! (paper §8) need a clustering of the ground set; the library either
+//! accepts user-provided cluster labels (supervised subset selection) or
+//! clusters internally. We implement k-means++ / Lloyd from scratch.
+
+pub mod kmeans;
+
+pub use kmeans::{kmeans, KMeansResult};
+
+/// Partition element ids by cluster label. Labels must be < k.
+pub fn partition(labels: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); k];
+    for (i, &l) in labels.iter().enumerate() {
+        assert!(l < k, "label {l} >= k {k}");
+        out[l].push(i);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn partition_groups() {
+        let parts = super::partition(&[0, 1, 0, 2, 1], 3);
+        assert_eq!(parts[0], vec![0, 2]);
+        assert_eq!(parts[1], vec![1, 4]);
+        assert_eq!(parts[2], vec![3]);
+    }
+}

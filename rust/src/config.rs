@@ -1,0 +1,218 @@
+//! Configuration system: one struct tree covering the coordinator, kernel
+//! construction and experiment defaults, loadable from JSON
+//! (`--config path`, parsed by util::json) with CLI overrides on top.
+
+use std::path::Path;
+
+use crate::error::{Result, SubmodError};
+use crate::util::json::Json;
+
+/// Similarity metric selection (config mirror of [`crate::kernel::Metric`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MetricConfig {
+    Euclidean,
+    Cosine,
+    Dot,
+    Rbf { gamma: f32 },
+}
+
+impl MetricConfig {
+    pub fn parse(name: &str, gamma: Option<f64>) -> Result<Self> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "euclidean" => MetricConfig::Euclidean,
+            "cosine" => MetricConfig::Cosine,
+            "dot" => MetricConfig::Dot,
+            "rbf" => MetricConfig::Rbf { gamma: gamma.unwrap_or(1.0) as f32 },
+            other => {
+                return Err(SubmodError::InvalidParam(format!("unknown metric {other:?}")))
+            }
+        })
+    }
+}
+
+impl From<MetricConfig> for crate::kernel::Metric {
+    fn from(m: MetricConfig) -> Self {
+        match m {
+            MetricConfig::Euclidean => crate::kernel::Metric::Euclidean,
+            MetricConfig::Cosine => crate::kernel::Metric::Cosine,
+            MetricConfig::Dot => crate::kernel::Metric::Dot,
+            MetricConfig::Rbf { gamma } => crate::kernel::Metric::Rbf { gamma },
+        }
+    }
+}
+
+/// Coordinator (streaming service) settings.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Worker threads for per-shard selection.
+    pub workers: usize,
+    /// Items per shard before a new shard opens.
+    pub shard_capacity: usize,
+    /// Bounded ingest queue depth (backpressure).
+    pub ingest_depth: usize,
+    /// Stage-1 per-shard candidate multiplier: each shard returns
+    /// `ceil(budget * factor / n_shards)` candidates, min 1.
+    pub per_shard_factor: f64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 4,
+            shard_capacity: 512,
+            ingest_depth: 1024,
+            per_shard_factor: 2.0,
+        }
+    }
+}
+
+/// Kernel-construction settings.
+#[derive(Debug, Clone)]
+pub struct KernelConfig {
+    pub metric: MetricConfig,
+    /// "native" or "pjrt"
+    pub backend: String,
+    /// artifacts dir for the pjrt backend
+    pub artifacts_dir: String,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            metric: MetricConfig::Euclidean,
+            backend: "native".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// Top-level config.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub coordinator: CoordinatorConfig,
+    pub kernel: KernelConfig,
+    /// Experiment output directory.
+    pub out_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            coordinator: CoordinatorConfig::default(),
+            kernel: KernelConfig::default(),
+            out_dir: "out".into(),
+        }
+    }
+}
+
+impl Config {
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    /// Parse from JSON; absent fields keep defaults.
+    pub fn parse(text: &str) -> Result<Config> {
+        let v = Json::parse(text)?;
+        let mut cfg = Config::default();
+        if let Some(c) = v.get("coordinator") {
+            if let Some(x) = c.get("workers").and_then(Json::as_usize) {
+                cfg.coordinator.workers = x;
+            }
+            if let Some(x) = c.get("shard_capacity").and_then(Json::as_usize) {
+                cfg.coordinator.shard_capacity = x;
+            }
+            if let Some(x) = c.get("ingest_depth").and_then(Json::as_usize) {
+                cfg.coordinator.ingest_depth = x;
+            }
+            if let Some(x) = c.get("per_shard_factor").and_then(Json::as_f64) {
+                cfg.coordinator.per_shard_factor = x;
+            }
+        }
+        if let Some(k) = v.get("kernel") {
+            if let Some(m) = k.get("metric").and_then(Json::as_str) {
+                let gamma = k.get("gamma").and_then(Json::as_f64);
+                cfg.kernel.metric = MetricConfig::parse(m, gamma)?;
+            }
+            if let Some(b) = k.get("backend").and_then(Json::as_str) {
+                cfg.kernel.backend = b.to_string();
+            }
+            if let Some(d) = k.get("artifacts_dir").and_then(Json::as_str) {
+                cfg.kernel.artifacts_dir = d.to_string();
+            }
+        }
+        if let Some(o) = v.get("out_dir").and_then(Json::as_str) {
+            cfg.out_dir = o.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.coordinator.workers == 0 {
+            return Err(SubmodError::InvalidParam("workers must be ≥ 1".into()));
+        }
+        if self.coordinator.shard_capacity == 0 {
+            return Err(SubmodError::InvalidParam("shard_capacity must be ≥ 1".into()));
+        }
+        if self.coordinator.per_shard_factor <= 0.0 {
+            return Err(SubmodError::InvalidParam("per_shard_factor must be > 0".into()));
+        }
+        match self.kernel.backend.as_str() {
+            "native" | "pjrt" => Ok(()),
+            other => Err(SubmodError::InvalidParam(format!("unknown backend {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let c = Config::parse(r#"{"out_dir": "results"}"#).unwrap();
+        assert_eq!(c.out_dir, "results");
+        assert_eq!(c.coordinator.workers, 4);
+    }
+
+    #[test]
+    fn full_json_overrides() {
+        let c = Config::parse(
+            r#"{
+                "coordinator": {"workers": 8, "shard_capacity": 100,
+                                "ingest_depth": 10, "per_shard_factor": 1.5},
+                "kernel": {"metric": "rbf", "gamma": 0.5, "backend": "pjrt",
+                           "artifacts_dir": "a"},
+                "out_dir": "x"
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.coordinator.workers, 8);
+        assert_eq!(c.kernel.metric, MetricConfig::Rbf { gamma: 0.5 });
+        assert_eq!(c.kernel.backend, "pjrt");
+        assert_eq!(c.out_dir, "x");
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        assert!(Config::parse(r#"{"coordinator": {"workers": 0}}"#).is_err());
+        assert!(Config::parse(r#"{"kernel": {"backend": "gpu"}}"#).is_err());
+        assert!(Config::parse(r#"{"kernel": {"metric": "hamming"}}"#).is_err());
+    }
+
+    #[test]
+    fn load_from_file() {
+        let dir = std::env::temp_dir().join("submodlib_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"coordinator": {"workers": 8}}"#).unwrap();
+        let c = Config::load(&p).unwrap();
+        assert_eq!(c.coordinator.workers, 8);
+    }
+}

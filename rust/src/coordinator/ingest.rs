@@ -1,0 +1,125 @@
+//! Bounded ingestion: feature rows flow through a `sync_channel` with
+//! fixed depth — when the drain lags, producers block (backpressure)
+//! instead of ballooning memory. A drain thread moves rows into the
+//! [`super::shard::ShardStore`].
+//!
+//! (The architecture sketch calls for tokio here; the offline registry
+//! ships no async runtime, so the coordinator uses std threads + bounded
+//! channels, which give the same backpressure semantics for this
+//! CPU-bound pipeline.)
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::shard::ShardStore;
+use crate::error::{Result, SubmodError};
+
+/// One ingest message: features + reply channel for the assigned id.
+pub(crate) struct IngestMsg {
+    pub features: Vec<f32>,
+    pub reply: SyncSender<Result<usize>>,
+}
+
+/// Producer-side handle (cheap to clone; many producers allowed).
+#[derive(Clone)]
+pub struct IngestHandle {
+    tx: SyncSender<IngestMsg>,
+    metrics: Arc<Metrics>,
+}
+
+impl IngestHandle {
+    /// Submit one item; blocks (backpressure) when the queue is full.
+    /// Returns the item's global id once stored.
+    pub fn ingest(&self, features: Vec<f32>) -> Result<usize> {
+        let (reply, rx) = sync_channel(1);
+        let msg = IngestMsg { features, reply };
+        // try_send first so backpressure events are observable in metrics
+        match self.tx.try_send(msg) {
+            Ok(()) => {}
+            Err(TrySendError::Full(msg)) => {
+                self.metrics
+                    .backpressure_waits
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.tx
+                    .send(msg)
+                    .map_err(|_| SubmodError::Coordinator("ingest channel closed".into()))?;
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(SubmodError::Coordinator("ingest channel closed".into()));
+            }
+        }
+        rx.recv()
+            .map_err(|_| SubmodError::Coordinator("ingest drain dropped reply".into()))?
+    }
+}
+
+/// Spawn the drain thread; returns the producer handle and the join
+/// handle (the drain exits when every producer handle is dropped).
+pub(crate) fn spawn_drain(
+    store: Arc<ShardStore>,
+    metrics: Arc<Metrics>,
+    depth: usize,
+) -> (IngestHandle, std::thread::JoinHandle<()>) {
+    let (tx, rx): (SyncSender<IngestMsg>, Receiver<IngestMsg>) =
+        sync_channel(depth.max(1));
+    let m = metrics.clone();
+    let join = std::thread::spawn(move || {
+        while let Ok(msg) = rx.recv() {
+            let res = store.push(msg.features);
+            if res.is_ok() {
+                m.items_ingested.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            let _ = msg.reply.send(res);
+        }
+    });
+    (IngestHandle { tx, metrics }, join)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ingest_assigns_sequential_ids() {
+        let store = Arc::new(ShardStore::new(4));
+        let metrics = Arc::new(Metrics::new());
+        let (h, _join) = spawn_drain(store.clone(), metrics.clone(), 8);
+        for i in 0..6 {
+            let id = h.ingest(vec![i as f32, 1.0]).unwrap();
+            assert_eq!(id, i);
+        }
+        assert_eq!(store.len(), 6);
+        assert_eq!(metrics.snapshot().items_ingested, 6);
+    }
+
+    #[test]
+    fn dim_error_propagates() {
+        let store = Arc::new(ShardStore::new(4));
+        let metrics = Arc::new(Metrics::new());
+        let (h, _join) = spawn_drain(store, metrics, 8);
+        h.ingest(vec![1.0, 2.0]).unwrap();
+        assert!(h.ingest(vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn concurrent_producers_with_tiny_queue() {
+        let store = Arc::new(ShardStore::new(1024));
+        let metrics = Arc::new(Metrics::new());
+        let (h, _join) = spawn_drain(store.clone(), metrics.clone(), 1);
+        let mut threads = Vec::new();
+        for t in 0..8 {
+            let h = h.clone();
+            threads.push(std::thread::spawn(move || {
+                for i in 0..16 {
+                    h.ingest(vec![(t * 16 + i) as f32]).unwrap();
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(store.len(), 128);
+        assert_eq!(metrics.snapshot().items_ingested, 128);
+    }
+}

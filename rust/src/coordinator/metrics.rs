@@ -1,0 +1,128 @@
+//! Coordinator metrics: lock-free counters plus a fixed-bucket latency
+//! histogram (enough for p50/p99 without external crates).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Latency histogram buckets (µs upper bounds), roughly logarithmic.
+const BUCKETS_US: [u64; 12] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 100_000, 1_000_000, u64::MAX];
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub items_ingested: AtomicU64,
+    pub selections_served: AtomicU64,
+    pub selections_failed: AtomicU64,
+    pub backpressure_waits: AtomicU64,
+    select_latency: [AtomicU64; 12],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_select_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len() - 1);
+        self.select_latency[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let hist: Vec<u64> =
+            self.select_latency.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        MetricsSnapshot {
+            items_ingested: self.items_ingested.load(Ordering::Relaxed),
+            selections_served: self.selections_served.load(Ordering::Relaxed),
+            selections_failed: self.selections_failed.load(Ordering::Relaxed),
+            backpressure_waits: self.backpressure_waits.load(Ordering::Relaxed),
+            latency_p50_us: percentile(&hist, 0.50),
+            latency_p99_us: percentile(&hist, 0.99),
+        }
+    }
+}
+
+fn percentile(hist: &[u64], p: f64) -> u64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = (total as f64 * p).ceil() as u64;
+    let mut acc = 0;
+    for (i, &c) in hist.iter().enumerate() {
+        acc += c;
+        if acc >= target {
+            return BUCKETS_US[i];
+        }
+    }
+    *BUCKETS_US.last().unwrap()
+}
+
+/// Point-in-time metrics view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub items_ingested: u64,
+    pub selections_served: u64,
+    pub selections_failed: u64,
+    pub backpressure_waits: u64,
+    /// bucketized upper-bound estimates
+    pub latency_p50_us: u64,
+    pub latency_p99_us: u64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ingested={} served={} failed={} backpressure={} p50≤{}µs p99≤{}µs",
+            self.items_ingested,
+            self.selections_served,
+            self.selections_failed,
+            self.backpressure_waits,
+            self.latency_p50_us,
+            self.latency_p99_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.items_ingested.fetch_add(5, Ordering::Relaxed);
+        m.selections_served.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.items_ingested, 5);
+        assert_eq!(s.selections_served, 2);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::new();
+        for _ in 0..99 {
+            m.record_select_latency(Duration::from_micros(80));
+        }
+        m.record_select_latency(Duration::from_millis(50));
+        let s = m.snapshot();
+        assert_eq!(s.latency_p50_us, 100); // bucket upper bound
+        assert!(s.latency_p99_us >= 80);
+    }
+
+    #[test]
+    fn empty_histogram_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.latency_p50_us, 0);
+        assert_eq!(s.latency_p99_us, 0);
+    }
+
+    #[test]
+    fn display_mentions_counters() {
+        let m = Metrics::new();
+        m.items_ingested.fetch_add(3, Ordering::Relaxed);
+        assert!(m.snapshot().to_string().contains("ingested=3"));
+    }
+}

@@ -1,0 +1,26 @@
+//! Layer-3 coordinator: a streaming subset-selection pipeline.
+//!
+//! Submodlib is a library, not a service; its natural data-pipeline
+//! deployment (the use cases the paper's §1 motivates — continual data
+//! subset selection for training pipelines, streaming summarization) is a
+//! long-running selector over an *arriving* ground set. That is what this
+//! coordinator provides:
+//!
+//! * [`ingest`]   — bounded ingestion queue (backpressure) feeding
+//!   fixed-capacity feature [`shard`]s;
+//! * [`service`]  — the orchestrator: routes selection requests to worker
+//!   tasks that run stage-1 greedy per shard in parallel, then merges the
+//!   per-shard candidates with a stage-2 greedy over the union (the
+//!   two-stage scheme of Wei, Iyer & Bilmes 2014, cited by the paper for
+//!   exactly this scaling role);
+//! * [`metrics`]  — ingest/select counters and latency accounting.
+
+pub mod ingest;
+pub mod metrics;
+pub mod service;
+pub mod shard;
+
+pub use ingest::IngestHandle;
+pub use metrics::MetricsSnapshot;
+pub use service::{Coordinator, SelectRequest, SelectResponse};
+pub use shard::ShardStore;

@@ -1,0 +1,324 @@
+//! The selection service: two-stage distributed greedy over the sharded
+//! ground set.
+//!
+//! Stage 1 (fan-out): each shard runs greedy (the requested function +
+//! optimizer) over its own dense kernel, returning
+//! `ceil(budget · factor / n_shards)` local candidates. Shards run on a
+//! scoped thread pool of `cfg.workers` threads.
+//!
+//! Stage 2 (merge): the union of candidates forms a reduced ground set; a
+//! final greedy over its kernel picks the answer. This is the classic
+//! composable two-stage scheme (Wei, Iyer & Bilmes 2014 — cited by the
+//! paper for exactly this scaling role; same shape as GreeDi).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::CoordinatorConfig;
+use crate::coordinator::ingest::{spawn_drain, IngestHandle};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::shard::{Shard, ShardStore};
+use crate::error::{Result, SubmodError};
+use crate::functions::disparity_sum::DisparitySum;
+use crate::functions::facility_location::FacilityLocation;
+use crate::functions::graph_cut::GraphCut;
+use crate::functions::log_determinant::LogDeterminant;
+use crate::functions::traits::SetFunction;
+use crate::kernel::{DenseKernel, Metric};
+use crate::linalg::Matrix;
+use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+
+/// Which objective a selection request optimizes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ObjectiveKind {
+    FacilityLocation,
+    GraphCut { lambda: f64 },
+    /// LogDet always uses an RBF kernel internally (positive definite).
+    LogDeterminant { reg: f64 },
+    DisparitySum,
+}
+
+impl ObjectiveKind {
+    fn build(&self, data: &Matrix, metric: Metric) -> Result<Box<dyn SetFunction>> {
+        Ok(match *self {
+            ObjectiveKind::FacilityLocation => {
+                Box::new(FacilityLocation::new(DenseKernel::from_data(data, metric)))
+            }
+            ObjectiveKind::GraphCut { lambda } => {
+                Box::new(GraphCut::new(DenseKernel::from_data(data, metric), lambda)?)
+            }
+            ObjectiveKind::LogDeterminant { reg } => Box::new(
+                LogDeterminant::with_regularization(
+                    DenseKernel::from_data(data, Metric::Rbf { gamma: 1.0 }),
+                    reg,
+                )?,
+            ),
+            ObjectiveKind::DisparitySum => {
+                Box::new(DisparitySum::new(DenseKernel::distances_from_data(data)))
+            }
+        })
+    }
+
+    /// DisparitySum is supermodular → lazy bounds are invalid; route it to
+    /// NaiveGreedy regardless of the requested optimizer.
+    fn effective_optimizer(&self, requested: OptimizerKind) -> OptimizerKind {
+        match self {
+            ObjectiveKind::DisparitySum => OptimizerKind::NaiveGreedy,
+            _ => requested,
+        }
+    }
+}
+
+/// A selection request.
+#[derive(Debug, Clone)]
+pub struct SelectRequest {
+    pub objective: ObjectiveKind,
+    pub budget: usize,
+    pub optimizer: OptimizerKind,
+    pub metric: Metric,
+}
+
+impl Default for SelectRequest {
+    fn default() -> Self {
+        SelectRequest {
+            objective: ObjectiveKind::FacilityLocation,
+            budget: 10,
+            optimizer: OptimizerKind::LazyGreedy,
+            metric: Metric::Euclidean,
+        }
+    }
+}
+
+/// A selection response: global ids + objective value + stage accounting.
+#[derive(Debug, Clone)]
+pub struct SelectResponse {
+    pub ids: Vec<usize>,
+    pub value: f64,
+    pub shards: usize,
+    pub stage1_candidates: usize,
+    pub elapsed_ms: f64,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    store: Arc<ShardStore>,
+    metrics: Arc<Metrics>,
+    ingest: IngestHandle,
+    cfg: CoordinatorConfig,
+    _drain: std::thread::JoinHandle<()>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Coordinator {
+        let store = Arc::new(ShardStore::new(cfg.shard_capacity));
+        let metrics = Arc::new(Metrics::new());
+        let (ingest, drain) = spawn_drain(store.clone(), metrics.clone(), cfg.ingest_depth);
+        Coordinator { store, metrics, ingest, cfg, _drain: drain }
+    }
+
+    /// Producer handle for streaming items in.
+    pub fn ingest_handle(&self) -> IngestHandle {
+        self.ingest.clone()
+    }
+
+    /// Items currently in the ground set.
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Run one two-stage selection over the current ground set.
+    pub fn select(&self, req: SelectRequest) -> Result<SelectResponse> {
+        let t0 = Instant::now();
+        let shards = self.store.snapshot();
+        if shards.is_empty() {
+            self.metrics
+                .selections_failed
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return Err(SubmodError::Coordinator("ground set is empty".into()));
+        }
+        let n_shards = shards.len();
+        let per_shard =
+            (((req.budget as f64) * self.cfg.per_shard_factor / n_shards as f64).ceil()
+                as usize)
+                .max(1);
+
+        // stage 1: fan out per-shard greedy over `workers` threads
+        let queue: Mutex<Vec<Shard>> = Mutex::new(shards);
+        let results: Mutex<Vec<Result<Vec<usize>>>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..self.cfg.workers.max(1) {
+                scope.spawn(|| loop {
+                    let shard = {
+                        let mut q = queue.lock().unwrap();
+                        match q.pop() {
+                            Some(s) => s,
+                            None => break,
+                        }
+                    };
+                    let r = stage1(&shard, &req, per_shard);
+                    results.lock().unwrap().push(r);
+                });
+            }
+        });
+        let mut candidates: Vec<usize> = Vec::new();
+        for r in results.into_inner().unwrap() {
+            candidates.extend(r?);
+        }
+        candidates.sort_unstable();
+        candidates.dedup();
+        let stage1_candidates = candidates.len();
+
+        // stage 2: greedy over the candidate union
+        let features = self.store.gather(&candidates)?;
+        let f = req.objective.build(&features, req.metric)?;
+        let budget = req.budget.min(candidates.len());
+        let sel = maximize(
+            f.as_ref(),
+            Budget::cardinality(budget),
+            req.objective.effective_optimizer(req.optimizer),
+            &MaximizeOpts {
+                stop_if_zero_gain: false,
+                stop_if_negative_gain: false,
+                ..Default::default()
+            },
+        )?;
+        let ids: Vec<usize> = sel.ids().iter().map(|&local| candidates[local]).collect();
+
+        let elapsed = t0.elapsed();
+        self.metrics.record_select_latency(elapsed);
+        self.metrics
+            .selections_served
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(SelectResponse {
+            ids,
+            value: sel.value,
+            shards: n_shards,
+            stage1_candidates,
+            elapsed_ms: elapsed.as_secs_f64() * 1e3,
+        })
+    }
+}
+
+fn stage1(shard: &Shard, req: &SelectRequest, per_shard: usize) -> Result<Vec<usize>> {
+    let data = shard.matrix();
+    let f = req.objective.build(&data, req.metric)?;
+    let budget = per_shard.min(shard.len());
+    // first-pick gains can legitimately be 0 (DisparitySum) — relax stop
+    // rules so every shard returns its quota of candidates.
+    let opts = MaximizeOpts {
+        stop_if_zero_gain: false,
+        stop_if_negative_gain: false,
+        ..Default::default()
+    };
+    let sel = maximize(
+        f.as_ref(),
+        Budget::cardinality(budget),
+        req.objective.effective_optimizer(req.optimizer),
+        &opts,
+    )?;
+    Ok(sel.ids().iter().map(|&local| shard.base_id + local).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn seeded_coordinator(n: usize, shard_cap: usize) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            shard_capacity: shard_cap,
+            ingest_depth: 64,
+            per_shard_factor: 2.0,
+        };
+        let c = Coordinator::new(cfg);
+        let data = synthetic::blobs(n, 2, 5, 1.5, 77);
+        let h = c.ingest_handle();
+        for i in 0..n {
+            h.ingest(data.row(i).to_vec()).unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn select_returns_budget_ids() {
+        let c = seeded_coordinator(120, 32);
+        let resp = c.select(SelectRequest { budget: 10, ..Default::default() }).unwrap();
+        assert_eq!(resp.ids.len(), 10);
+        assert!(resp.shards >= 4);
+        assert!(resp.stage1_candidates >= 10);
+        let set: std::collections::HashSet<_> = resp.ids.iter().collect();
+        assert_eq!(set.len(), 10);
+        assert!(resp.ids.iter().all(|&id| id < 120));
+        let m = c.metrics();
+        assert_eq!(m.selections_served, 1);
+        assert_eq!(m.items_ingested, 120);
+    }
+
+    #[test]
+    fn two_stage_close_to_flat_greedy() {
+        let c = seeded_coordinator(150, 40);
+        let resp = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+        // flat single-machine baseline on identical data
+        let data = synthetic::blobs(150, 2, 5, 1.5, 77);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let flat = maximize(
+            &f,
+            Budget::cardinality(8),
+            OptimizerKind::LazyGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        let subset = crate::functions::traits::Subset::from_ids(150, &resp.ids);
+        let coord_value = f.evaluate(&subset);
+        assert!(
+            coord_value >= 0.85 * flat.value,
+            "two-stage {coord_value} vs flat {}",
+            flat.value
+        );
+    }
+
+    #[test]
+    fn empty_ground_set_fails_cleanly() {
+        let c = Coordinator::new(CoordinatorConfig::default());
+        assert!(c.select(SelectRequest::default()).is_err());
+        assert_eq!(c.metrics().selections_failed, 1);
+    }
+
+    #[test]
+    fn other_objectives_work() {
+        let c = seeded_coordinator(60, 20);
+        for obj in [
+            ObjectiveKind::GraphCut { lambda: 0.4 },
+            ObjectiveKind::DisparitySum,
+            ObjectiveKind::LogDeterminant { reg: 0.1 },
+        ] {
+            let resp = c
+                .select(SelectRequest { objective: obj, budget: 5, ..Default::default() })
+                .unwrap();
+            assert_eq!(resp.ids.len(), 5, "{obj:?}");
+        }
+    }
+
+    #[test]
+    fn growing_ground_set_between_requests() {
+        let c = seeded_coordinator(50, 16);
+        let r1 = c.select(SelectRequest { budget: 5, ..Default::default() }).unwrap();
+        let h = c.ingest_handle();
+        let extra = synthetic::blobs(30, 2, 2, 1.0, 99);
+        for i in 0..30 {
+            h.ingest(extra.row(i).to_vec()).unwrap();
+        }
+        let r2 = c.select(SelectRequest { budget: 5, ..Default::default() }).unwrap();
+        assert!(r2.shards >= r1.shards);
+        assert_eq!(c.len(), 80);
+    }
+}

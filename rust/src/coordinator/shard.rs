@@ -1,0 +1,168 @@
+//! Sharded feature store: the coordinator's ground set, grown by ingest.
+//!
+//! Items get globally unique ids in arrival order; shards are closed at
+//! `capacity` items so stage-1 selection cost per shard stays bounded
+//! (dense kernels are O(shard²)).
+
+use std::sync::RwLock;
+
+use crate::linalg::Matrix;
+
+/// One closed or open shard of features.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// global id of this shard's first item
+    pub base_id: usize,
+    /// row-major features
+    pub rows: Vec<Vec<f32>>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Features as a matrix.
+    pub fn matrix(&self) -> Matrix {
+        let n = self.rows.len();
+        let d = self.rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut m = Matrix::zeros(n, d);
+        for (i, r) in self.rows.iter().enumerate() {
+            m.row_mut(i).copy_from_slice(r);
+        }
+        m
+    }
+}
+
+/// Thread-safe sharded store.
+#[derive(Debug)]
+pub struct ShardStore {
+    capacity: usize,
+    dim: RwLock<Option<usize>>,
+    shards: RwLock<Vec<Shard>>,
+    total: RwLock<usize>,
+}
+
+impl ShardStore {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        ShardStore {
+            capacity,
+            dim: RwLock::new(None),
+            shards: RwLock::new(vec![Shard { base_id: 0, rows: Vec::new() }]),
+            total: RwLock::new(0),
+        }
+    }
+
+    /// Append one item; returns its global id. Fails on dim mismatch.
+    pub fn push(&self, features: Vec<f32>) -> crate::error::Result<usize> {
+        let mut dim = self.dim.write().unwrap();
+        match *dim {
+            None => *dim = Some(features.len()),
+            Some(d) if d != features.len() => {
+                return Err(crate::error::SubmodError::Shape(format!(
+                    "feature dim {} vs store dim {d}",
+                    features.len()
+                )))
+            }
+            _ => {}
+        }
+        drop(dim);
+        let mut shards = self.shards.write().unwrap();
+        let mut total = self.total.write().unwrap();
+        let id = *total;
+        if shards.last().unwrap().len() >= self.capacity {
+            shards.push(Shard { base_id: id, rows: Vec::new() });
+        }
+        shards.last_mut().unwrap().rows.push(features);
+        *total += 1;
+        Ok(id)
+    }
+
+    /// Total items ingested.
+    pub fn len(&self) -> usize {
+        *self.total.read().unwrap()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of all non-empty shards.
+    pub fn snapshot(&self) -> Vec<Shard> {
+        self.shards.read().unwrap().iter().filter(|s| !s.is_empty()).cloned().collect()
+    }
+
+    /// Fetch features for a set of global ids (stage-2 merge).
+    pub fn gather(&self, ids: &[usize]) -> crate::error::Result<Matrix> {
+        let shards = self.shards.read().unwrap();
+        let d = self.dim.read().unwrap().unwrap_or(0);
+        let mut m = Matrix::zeros(ids.len(), d);
+        for (row, &id) in ids.iter().enumerate() {
+            let shard = shards
+                .iter()
+                .rev()
+                .find(|s| s.base_id <= id)
+                .ok_or(crate::error::SubmodError::OutOfGroundSet { id, n: self.len() })?;
+            let local = id - shard.base_id;
+            if local >= shard.len() {
+                return Err(crate::error::SubmodError::OutOfGroundSet { id, n: self.len() });
+            }
+            m.row_mut(row).copy_from_slice(&shard.rows[local]);
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_sequential_and_shards_split() {
+        let store = ShardStore::new(3);
+        for i in 0..8 {
+            assert_eq!(store.push(vec![i as f32, 0.0]).unwrap(), i);
+        }
+        let shards = store.snapshot();
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards[0].len(), 3);
+        assert_eq!(shards[2].len(), 2);
+        assert_eq!(shards[1].base_id, 3);
+        assert_eq!(store.len(), 8);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let store = ShardStore::new(4);
+        store.push(vec![1.0, 2.0]).unwrap();
+        assert!(store.push(vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn gather_returns_right_rows() {
+        let store = ShardStore::new(2);
+        for i in 0..5 {
+            store.push(vec![i as f32, (i * i) as f32]).unwrap();
+        }
+        let m = store.gather(&[4, 0, 3]).unwrap();
+        assert_eq!(m.row(0), &[4.0, 16.0]);
+        assert_eq!(m.row(1), &[0.0, 0.0]);
+        assert_eq!(m.row(2), &[3.0, 9.0]);
+        assert!(store.gather(&[99]).is_err());
+    }
+
+    #[test]
+    fn shard_matrix() {
+        let store = ShardStore::new(10);
+        store.push(vec![1.0, 2.0]).unwrap();
+        store.push(vec![3.0, 4.0]).unwrap();
+        let m = store.snapshot()[0].matrix();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.get(1, 1), 4.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Controlled 2-D datasets reproducing the paper's qualitative figures.
+//!
+//! The paper does not publish coordinates; these are hand-laid-out to
+//! match its *descriptions* exactly — "some clusters and some outliers"
+//! (Fig 4: 48 ground points + a separate represented set; Fig 6: 46 ground
+//! points + query points disjoint from the ground set) — so that the
+//! documented behaviours (FL picks cluster centers first and the outlier
+//! last; DisparitySum picks remote corners/outliers first; FLQMI at η=0
+//! picks one point per query then saturates; GCMI is pure retrieval) are
+//! reproducible and *testable*.
+
+use crate::linalg::Matrix;
+
+/// Fig 4 dataset: 48 ground points (4 tight clusters of 11 + 4 outliers)
+/// and a 12-point represented set straddling the clusters.
+/// Returns (ground, represented, outlier indices).
+pub fn fig4_dataset() -> (Matrix, Matrix, Vec<usize>) {
+    let mut pts: Vec<[f32; 2]> = Vec::with_capacity(48);
+    // 4 clusters of 11 points each around these centers
+    let centers = [[2.0f32, 2.0], [8.0, 2.5], [2.5, 8.0], [8.0, 8.0]];
+    // deterministic ring layout: center + 10 points on two radii
+    for c in &centers {
+        pts.push(*c);
+        for r in 0..10 {
+            let ang = r as f32 * std::f32::consts::TAU / 10.0;
+            let rad = if r % 2 == 0 { 0.55 } else { 0.95 };
+            pts.push([c[0] + rad * ang.cos(), c[1] + rad * ang.sin()]);
+        }
+    }
+    // 4 outliers far from every cluster
+    let outliers_xy = [[13.5f32, 13.0], [-2.5, 12.5], [13.0, -2.0], [5.0, 14.0]];
+    let outlier_idx: Vec<usize> = (44..48).collect();
+    pts.extend_from_slice(&outliers_xy);
+    let ground = matrix_from_xy(&pts);
+
+    // represented set: 12 green points clustered near clusters 0, 1 and 3
+    let rep: Vec<[f32; 2]> = vec![
+        [2.2, 1.8],
+        [1.7, 2.4],
+        [2.6, 2.3],
+        [8.2, 2.2],
+        [7.7, 2.8],
+        [8.5, 2.9],
+        [7.8, 7.7],
+        [8.3, 8.4],
+        [7.6, 8.3],
+        [8.6, 7.8],
+        [2.1, 2.6],
+        [8.1, 2.6],
+    ];
+    (ground, matrix_from_xy(&rep), outlier_idx)
+}
+
+/// Fig 6 dataset: 46 ground points (3 clusters + outliers) and 2 query
+/// points placed near two *different* clusters, disjoint from the ground
+/// set. Returns (ground, queries, per-cluster index ranges, outlier idx).
+#[allow(clippy::type_complexity)]
+pub fn fig6_dataset() -> (Matrix, Matrix, Vec<std::ops::Range<usize>>, Vec<usize>) {
+    let mut pts: Vec<[f32; 2]> = Vec::with_capacity(46);
+    let centers = [[2.0f32, 2.0], [9.0, 2.0], [5.5, 9.0]];
+    let mut ranges = Vec::new();
+    for c in &centers {
+        let start = pts.len();
+        pts.push(*c);
+        for r in 0..13 {
+            let ang = r as f32 * std::f32::consts::TAU / 13.0;
+            let rad = if r % 2 == 0 { 0.5 } else { 0.9 };
+            pts.push([c[0] + rad * ang.cos(), c[1] + rad * ang.sin()]);
+        }
+        ranges.push(start..pts.len());
+    }
+    // 4 outliers
+    let outlier_idx: Vec<usize> = (42..46).collect();
+    pts.extend_from_slice(&[[14.0, 14.0], [-3.0, 13.0], [14.5, -2.5], [-3.5, -3.0]]);
+    let ground = matrix_from_xy(&pts);
+
+    // queries near clusters 0 and 1, offset so they are not ground points
+    let queries = matrix_from_xy(&[[2.3, 1.6], [8.7, 2.4]]);
+    (ground, queries, ranges, outlier_idx)
+}
+
+/// Privacy-figure companion dataset: same geometry as fig6 but the two
+/// "conditioning" points act as a private set near clusters 1 and 2.
+pub fn private_set_for_fig6() -> Matrix {
+    matrix_from_xy(&[[9.3, 1.7], [5.2, 9.3]])
+}
+
+fn matrix_from_xy(pts: &[[f32; 2]]) -> Matrix {
+    let mut m = Matrix::zeros(pts.len(), 2);
+    for (i, p) in pts.iter().enumerate() {
+        m.set(i, 0, p[0]);
+        m.set(i, 1, p[1]);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    #[test]
+    fn fig4_counts() {
+        let (g, rep, out) = fig4_dataset();
+        assert_eq!(g.rows(), 48);
+        assert_eq!(rep.rows(), 12);
+        assert_eq!(out, vec![44, 45, 46, 47]);
+    }
+
+    #[test]
+    fn fig4_outliers_are_remote() {
+        let (g, _, out) = fig4_dataset();
+        // every outlier's nearest non-outlier neighbor is farther than any
+        // intra-cluster distance (~<2.0)
+        for &o in &out {
+            let mut nearest = f32::INFINITY;
+            for i in 0..44 {
+                nearest = nearest.min(linalg::sq_dist(g.row(o), g.row(i)).sqrt());
+            }
+            assert!(nearest > 3.0, "outlier {o} too close ({nearest})");
+        }
+    }
+
+    #[test]
+    fn fig6_counts_and_query_disjoint() {
+        let (g, q, ranges, out) = fig6_dataset();
+        assert_eq!(g.rows(), 46);
+        assert_eq!(q.rows(), 2);
+        assert_eq!(ranges.len(), 3);
+        assert_eq!(ranges.iter().map(|r| r.len()).sum::<usize>() + out.len(), 46);
+        // queries are not ground points
+        for qi in 0..2 {
+            for i in 0..46 {
+                assert!(linalg::sq_dist(q.row(qi), g.row(i)) > 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn fig6_queries_near_distinct_clusters() {
+        let (g, q, ranges, _) = fig6_dataset();
+        let nearest_cluster = |qi: usize| -> usize {
+            let mut best = (0usize, f32::INFINITY);
+            for (c, r) in ranges.iter().enumerate() {
+                for i in r.clone() {
+                    let d = linalg::sq_dist(q.row(qi), g.row(i));
+                    if d < best.1 {
+                        best = (c, d);
+                    }
+                }
+            }
+            best.0
+        };
+        assert_eq!(nearest_cluster(0), 0);
+        assert_eq!(nearest_cluster(1), 1);
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal dataset / result I/O: CSV feature matrices in and out, and the
+//! experiment CSV dumps the `repro exp figN` commands write (DESIGN.md §7:
+//! figures are replaced by CSVs carrying the same information).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Result, SubmodError};
+use crate::linalg::Matrix;
+
+/// Write a feature matrix as headerless CSV.
+pub fn write_matrix_csv(path: impl AsRef<Path>, m: &Matrix) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..m.rows() {
+        let row: Vec<String> = m.row(i).iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a headerless CSV of floats into a matrix.
+pub fn read_matrix_csv(path: impl AsRef<Path>) -> Result<Matrix> {
+    let f = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(f);
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for (ln, line) in reader.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row: std::result::Result<Vec<f32>, _> =
+            line.split(',').map(|t| t.trim().parse::<f32>()).collect();
+        let row = row.map_err(|e| {
+            SubmodError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("line {}: {e}", ln + 1),
+            ))
+        })?;
+        if let Some(first) = rows.first() {
+            if row.len() != first.len() {
+                return Err(SubmodError::Shape(format!(
+                    "ragged csv at line {}: {} vs {}",
+                    ln + 1,
+                    row.len(),
+                    first.len()
+                )));
+            }
+        }
+        rows.push(row);
+    }
+    let r = rows.len();
+    let c = rows.first().map(|x| x.len()).unwrap_or(0);
+    Matrix::from_vec(r, c, rows.into_iter().flatten().collect())
+}
+
+/// Write a selection trace (the figure-replacement format): one row per
+/// selected element: order, element id, x, y (if 2-D), gain.
+pub fn write_selection_csv(
+    path: impl AsRef<Path>,
+    data: &Matrix,
+    order: &[(usize, f64)],
+) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "order,id,gain,coords")?;
+    for (rank, (id, gain)) in order.iter().enumerate() {
+        let coords: Vec<String> = data.row(*id).iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{rank},{id},{gain},{}", coords.join(";"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_csv_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.5, -2.0], &[0.25, 3.0], &[0.0, 0.125]]);
+        let dir = std::env::temp_dir().join("submodlib_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.csv");
+        write_matrix_csv(&p, &m).unwrap();
+        let back = read_matrix_csv(&p).unwrap();
+        assert_eq!(back.rows(), 3);
+        assert_eq!(back.cols(), 2);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert!((m.get(i, j) - back.get(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn bad_csv_rejected() {
+        let dir = std::env::temp_dir().join("submodlib_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "1,2\n3,abc\n").unwrap();
+        assert!(read_matrix_csv(&p).is_err());
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(read_matrix_csv(&p).is_err());
+    }
+
+    #[test]
+    fn selection_csv_written() {
+        let m = Matrix::from_rows(&[&[0.0, 1.0], &[2.0, 3.0]]);
+        let dir = std::env::temp_dir().join("submodlib_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("sel.csv");
+        write_selection_csv(&p, &m, &[(1, 0.5), (0, 0.25)]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("order,id,gain"));
+        assert!(text.contains("0,1,0.5,2;3"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Dataset substrate: synthetic generators reproducing the paper's
+//! evaluation workloads, controlled 2-D datasets for the qualitative
+//! figures, and simple I/O.
+
+pub mod controlled;
+pub mod io;
+pub mod synthetic;

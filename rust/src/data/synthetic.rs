@@ -1,0 +1,145 @@
+//! Synthetic dataset generators for the paper's experiments.
+//!
+//! * [`blobs`] — isotropic Gaussian clusters: the §5.3.5 optimizer-
+//!   comparison dataset is `blobs(500, 2, 10, 4.0, seed)` (Figure 3).
+//! * [`random_features`] — the §9 timing-analysis dataset: uniformly
+//!   random d-dimensional points (paper used 1024-d, n ∈ 50..10000).
+//! * [`vgg_like_features`] — the Imagenette/VGG substitution (DESIGN.md
+//!   §7): unit-normalized anisotropic clusters in high dimension standing
+//!   in for VGG fc2 features of an image collection, plus query items
+//!   drawn from designated query clusters.
+
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+
+/// `n` points in `dim` dimensions from `k` Gaussian blobs with the given
+/// standard deviation. Blob centers are spread uniformly in a box scaled
+/// to keep blobs distinguishable; points are laid out blob-major (all of
+/// blob 0, then blob 1, ...), remainder distributed round-robin.
+pub fn blobs(n: usize, dim: usize, k: usize, std_dev: f64, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed);
+    let box_side = 10.0 * std_dev.max(1.0) * (k as f64).sqrt();
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..dim).map(|_| (rng.next_f64() - 0.5) * box_side).collect())
+        .collect();
+    let mut data = Matrix::zeros(n, dim);
+    for i in 0..n {
+        let c = if n >= k { (i * k) / n.max(1) } else { i % k }.min(k - 1);
+        for j in 0..dim {
+            data.set(i, j, (centers[c][j] + rng.next_gaussian() * std_dev) as f32);
+        }
+    }
+    data
+}
+
+/// Uniformly random features in [0, 1)^dim — the Table 5 workload.
+pub fn random_features(n: usize, dim: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed);
+    Matrix::from_vec(n, dim, (0..n * dim).map(|_| rng.next_f32()).collect()).unwrap()
+}
+
+/// Imagenette/VGG substitution: returns (ground features, query features,
+/// ground-truth cluster label per ground item). Clusters are anisotropic
+/// (per-axis scales), unit-normalized like VGG fc features after L2 norm.
+/// Queries are drawn from the first `n_query_clusters` clusters.
+pub fn vgg_like_features(
+    n: usize,
+    dim: usize,
+    k: usize,
+    n_queries: usize,
+    n_query_clusters: usize,
+    seed: u64,
+) -> (Matrix, Matrix, Vec<usize>) {
+    assert!(n_query_clusters >= 1 && n_query_clusters <= k);
+    let mut rng = Pcg64::new(seed);
+    // cluster directions: random unit vectors; anisotropy: per-cluster axis scales
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| {
+            let v: Vec<f64> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            let nrm = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-9);
+            v.into_iter().map(|x| x / nrm).collect()
+        })
+        .collect();
+    let scales: Vec<f64> = (0..k).map(|_| 0.05 + 0.10 * rng.next_f64()).collect();
+
+    let sample = |c: usize, rng: &mut Pcg64| -> Vec<f32> {
+        let mut v: Vec<f64> = (0..dim)
+            .map(|j| centers[c][j] + rng.next_gaussian() * scales[c] / (dim as f64).sqrt())
+            .collect();
+        let nrm = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-9);
+        for x in &mut v {
+            *x /= nrm;
+        }
+        v.into_iter().map(|x| x as f32).collect()
+    };
+
+    let mut ground = Matrix::zeros(n, dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = (i * k) / n.max(1);
+        let c = c.min(k - 1);
+        ground.row_mut(i).copy_from_slice(&sample(c, &mut rng));
+        labels.push(c);
+    }
+    let mut queries = Matrix::zeros(n_queries, dim);
+    for q in 0..n_queries {
+        let c = q % n_query_clusters;
+        queries.row_mut(q).copy_from_slice(&sample(c, &mut rng));
+    }
+    (ground, queries, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    #[test]
+    fn blobs_shape_and_determinism() {
+        let a = blobs(500, 2, 10, 4.0, 42);
+        let b = blobs(500, 2, 10, 4.0, 42);
+        assert_eq!(a.rows(), 500);
+        assert_eq!(a.cols(), 2);
+        assert_eq!(a.as_slice(), b.as_slice());
+        let c = blobs(500, 2, 10, 4.0, 43);
+        assert_ne!(a.as_slice(), c.as_slice());
+    }
+
+    #[test]
+    fn blobs_are_clustered() {
+        // intra-blob distance should be far below inter-blob on average
+        let data = blobs(100, 2, 2, 0.5, 1);
+        let per = 50;
+        let intra = linalg::sq_dist(data.row(0), data.row(per - 1)).sqrt();
+        let inter = linalg::sq_dist(data.row(0), data.row(per + 1)).sqrt();
+        assert!(inter > intra, "inter {inter} <= intra {intra}");
+    }
+
+    #[test]
+    fn random_features_in_unit_box() {
+        let m = random_features(100, 8, 3);
+        assert!(m.as_slice().iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn vgg_like_unit_norm_and_query_alignment() {
+        let (g, q, labels) = vgg_like_features(60, 64, 6, 4, 2, 11);
+        assert_eq!(labels.len(), 60);
+        for i in 0..60 {
+            assert!((linalg::norm(g.row(i)) - 1.0).abs() < 1e-4);
+        }
+        // queries must be most similar (cosine=dot on unit vectors) to
+        // items of their own cluster
+        for qi in 0..4 {
+            let qc = qi % 2;
+            let mut best = (0usize, f32::NEG_INFINITY);
+            for i in 0..60 {
+                let s = linalg::dot(q.row(qi), g.row(i));
+                if s > best.1 {
+                    best = (i, s);
+                }
+            }
+            assert_eq!(labels[best.0], qc, "query {qi} nearest to wrong cluster");
+        }
+    }
+}

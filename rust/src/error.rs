@@ -1,0 +1,73 @@
+//! Crate-wide error type.
+//!
+//! Mirrors the validation Submodlib's Python layer performs before handing
+//! work to the C++ engine (shape checks, mode checks, budget checks), plus
+//! the runtime-layer failure modes (artifact loading, PJRT execution).
+
+use std::fmt;
+
+/// All the ways a submodlib call can fail.
+#[derive(Debug)]
+pub enum SubmodError {
+    /// Input shapes / sizes are inconsistent (e.g. kernel not n×n).
+    Shape(String),
+    /// A parameter is outside its valid domain (λ, η, ν, ε, budget...).
+    InvalidParam(String),
+    /// An element id is outside the ground set.
+    OutOfGroundSet { id: usize, n: usize },
+    /// Requested an operation a function/mode combination does not support.
+    Unsupported(String),
+    /// Artifact registry / PJRT runtime failures.
+    Runtime(String),
+    /// I/O failures (dataset load, artifact files, experiment outputs).
+    Io(std::io::Error),
+    /// Coordinator/service-level failures (channel closed, worker died).
+    Coordinator(String),
+}
+
+impl fmt::Display for SubmodError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmodError::Shape(m) => write!(f, "shape error: {m}"),
+            SubmodError::InvalidParam(m) => write!(f, "invalid parameter: {m}"),
+            SubmodError::OutOfGroundSet { id, n } => {
+                write!(f, "element {id} outside ground set of size {n}")
+            }
+            SubmodError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            SubmodError::Runtime(m) => write!(f, "runtime error: {m}"),
+            SubmodError::Io(e) => write!(f, "io error: {e}"),
+            SubmodError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmodError {}
+
+impl From<std::io::Error> for SubmodError {
+    fn from(e: std::io::Error) -> Self {
+        SubmodError::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, SubmodError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = SubmodError::OutOfGroundSet { id: 7, n: 5 };
+        assert!(e.to_string().contains('7'));
+        assert!(e.to_string().contains('5'));
+        assert!(SubmodError::Shape("bad".into()).to_string().contains("bad"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: SubmodError = io.into();
+        assert!(matches!(e, SubmodError::Io(_)));
+    }
+}

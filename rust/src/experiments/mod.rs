@@ -1,0 +1,15 @@
+//! Experiment harnesses: one per paper table / figure (DESIGN.md §4).
+//!
+//! Each harness builds the paper's workload, runs the selection, and
+//! returns a structured result the CLI prints and the benches/integration
+//! tests reuse. Figures are replaced by CSV dumps carrying the same
+//! information (ground points, query points, selection order) plus
+//! programmatic assertions of the behaviours the paper describes.
+
+pub mod figures;
+pub mod table2;
+pub mod table5;
+
+pub use figures::{fig5, fig7, fig8, fig10, Fig5Result, FigSelection};
+pub use table2::{table2, Table2Row};
+pub use table5::{table5, Table5Row};

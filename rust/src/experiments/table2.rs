@@ -1,0 +1,111 @@
+//! Table 2: running-time comparison of the four optimizers.
+//!
+//! Paper workload (§5.3.5): 500 points in 10 clusters with σ = 4,
+//! FacilityLocation, budget 100 (the snippet's `budget=100` convention),
+//! each optimizer timed.
+//!
+//! Paper numbers (their testbed):
+//!   NaiveGreedy 3.93 s · StochasticGreedy 1.17 s · LazyGreedy 417 ms ·
+//!   LazierThanLazyGreedy 405 ms
+//! The *ordering* (lazier ≤ lazy < stochastic < naive) is the claim we
+//! reproduce; absolute times differ by testbed.
+
+use std::time::Instant;
+
+use crate::data::synthetic;
+use crate::error::Result;
+use crate::functions::facility_location::FacilityLocation;
+use crate::kernel::{DenseKernel, Metric};
+use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+
+/// One row of Table 2.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub optimizer: &'static str,
+    pub kind: OptimizerKind,
+    pub seconds: f64,
+    pub value: f64,
+    pub evaluations: u64,
+}
+
+/// Run the Table 2 experiment. `repeats` = "best of N" (paper used 5).
+pub fn table2(n: usize, budget: usize, repeats: usize, seed: u64) -> Result<Vec<Table2Row>> {
+    let data = synthetic::blobs(n, 2, 10, 4.0, seed);
+    let kernel = DenseKernel::from_data(&data, Metric::Euclidean);
+    let f = FacilityLocation::new(kernel);
+    let opts = MaximizeOpts::default();
+
+    let kinds: [(&'static str, OptimizerKind); 4] = [
+        ("NaiveGreedy", OptimizerKind::NaiveGreedy),
+        ("StochasticGreedy", OptimizerKind::StochasticGreedy),
+        ("LazyGreedy", OptimizerKind::LazyGreedy),
+        ("LazierThanLazyGreedy", OptimizerKind::LazierThanLazyGreedy),
+    ];
+    let mut rows = Vec::new();
+    for (name, kind) in kinds {
+        let mut best = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..repeats.max(1) {
+            let t0 = Instant::now();
+            let sel = maximize(&f, Budget::cardinality(budget), kind, &opts)?;
+            best = best.min(t0.elapsed().as_secs_f64());
+            last = Some(sel);
+        }
+        let sel = last.unwrap();
+        rows.push(Table2Row {
+            optimizer: name,
+            kind,
+            seconds: best,
+            value: sel.value,
+            evaluations: sel.evaluations,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render rows in the paper's format.
+pub fn render(rows: &[Table2Row]) -> String {
+    let mut out = String::from("| Optimizer | Running Time | f(X) | gain evals |\n|---|---|---|---|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {:.3} s | {:.3} | {} |\n",
+            r.optimizer, r.seconds, r.value, r.evaluations
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_paper_shape() {
+        // smaller instance for test speed; the claim is relative ordering
+        let rows = table2(300, 60, 1, 42).unwrap();
+        let t = |name: &str| rows.iter().find(|r| r.optimizer == name).unwrap().seconds;
+        // paper Table 2 shape: lazy and lazier both well under naive
+        assert!(t("LazyGreedy") < t("NaiveGreedy"));
+        assert!(t("LazierThanLazyGreedy") < t("NaiveGreedy"));
+        assert!(t("StochasticGreedy") < t("NaiveGreedy"));
+    }
+
+    #[test]
+    fn quality_preserved() {
+        let rows = table2(200, 40, 1, 7).unwrap();
+        let v = |name: &str| rows.iter().find(|r| r.optimizer == name).unwrap().value;
+        let naive = v("NaiveGreedy");
+        assert!((v("LazyGreedy") - naive).abs() < 1e-6);
+        assert!(v("StochasticGreedy") >= 0.9 * naive);
+        assert!(v("LazierThanLazyGreedy") >= 0.9 * naive);
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let rows = table2(100, 10, 1, 1).unwrap();
+        let s = render(&rows);
+        for name in ["NaiveGreedy", "StochasticGreedy", "LazyGreedy", "LazierThanLazyGreedy"] {
+            assert!(s.contains(name));
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Table 5: timing analysis — FacilityLocation selection on randomly
+//! generated 1024-dimensional points, n from 50 to 10 000 (paper §9),
+//! budget 100, LazyGreedy (the paper's snippet uses the default
+//! optimizer), timed end-to-end *including* dense kernel construction
+//! (which dominates: O(n²·d)).
+//!
+//! The reproduced claim is the scaling shape: near-quadratic growth with
+//! n, tractable at n = 10⁴.
+
+use std::time::Instant;
+
+use crate::data::synthetic;
+use crate::error::Result;
+use crate::functions::facility_location::FacilityLocation;
+use crate::kernel::{builder, DenseKernel, KernelBackend, Metric};
+use crate::linalg::Matrix;
+use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+
+/// One row of Table 5.
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    pub n: usize,
+    pub kernel_seconds: f64,
+    pub select_seconds: f64,
+    pub total_seconds: f64,
+}
+
+/// The paper's n sweep.
+pub const PAPER_SIZES: &[usize] =
+    &[50, 100, 200, 500, 1000, 5000, 6000, 7000, 8000, 9000, 10000];
+
+/// Run one size point.
+pub fn run_size(
+    n: usize,
+    dim: usize,
+    budget: usize,
+    seed: u64,
+    backend: &KernelBackend,
+) -> Result<Table5Row> {
+    let data: Matrix = synthetic::random_features(n, dim, seed);
+    let t0 = Instant::now();
+    let kernel: DenseKernel = builder::build_dense(&data, Metric::Euclidean, backend)?;
+    let kernel_seconds = t0.elapsed().as_secs_f64();
+
+    let f = FacilityLocation::new(kernel);
+    let t1 = Instant::now();
+    let _sel = maximize(
+        &f,
+        Budget::cardinality(budget.min(n)),
+        OptimizerKind::LazyGreedy,
+        &MaximizeOpts::default(),
+    )?;
+    let select_seconds = t1.elapsed().as_secs_f64();
+    Ok(Table5Row {
+        n,
+        kernel_seconds,
+        select_seconds,
+        total_seconds: kernel_seconds + select_seconds,
+    })
+}
+
+/// Full sweep (sizes capped by `max_n` so tests/CI can shrink it).
+pub fn table5(
+    sizes: &[usize],
+    dim: usize,
+    budget: usize,
+    seed: u64,
+    backend: &KernelBackend,
+) -> Result<Vec<Table5Row>> {
+    sizes.iter().map(|&n| run_size(n, dim, budget, seed, backend)).collect()
+}
+
+/// Render rows in the paper's format.
+pub fn render(rows: &[Table5Row]) -> String {
+    let mut out = String::from(
+        "| n | kernel build (s) | selection (s) | total (s) |\n|---|---|---|---|\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {:.6} | {:.6} | {:.6} |\n",
+            r.n, r.kernel_seconds, r.select_seconds, r.total_seconds
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_is_superlinear_but_bounded() {
+        let rows = table5(&[50, 100, 200], 64, 10, 1, &KernelBackend::Native).unwrap();
+        assert_eq!(rows.len(), 3);
+        // 4x data → ~16x kernel work; allow generous slack but demand growth
+        assert!(rows[2].total_seconds > rows[0].total_seconds);
+    }
+
+    #[test]
+    fn render_has_all_sizes() {
+        let rows = table5(&[50, 100], 32, 5, 2, &KernelBackend::Native).unwrap();
+        let s = render(&rows);
+        assert!(s.contains("| 50 |"));
+        assert!(s.contains("| 100 |"));
+    }
+}

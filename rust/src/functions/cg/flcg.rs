@@ -1,0 +1,188 @@
+//! FLCG — Facility Location Conditional Gain (Table 1 "FL (v1)" CG):
+//!
+//! ```text
+//! f(A|P) = Σ_{i∈V} max(max_{j∈A} S_ij − ν max_{j∈P} S_ij, 0)
+//! ```
+//!
+//! ν ≥ 0 is the privacy-hardness parameter (paper §3.4/§3.7 discussion):
+//! larger ν suppresses any pick resembling the private set. Memoized like
+//! FL: `max_vec[i]`, against a precomputed private cap `ν max_{j∈P} S_ij`.
+
+use std::sync::Arc;
+
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::{DenseKernel, RectKernel};
+
+/// FLCG. See module docs.
+#[derive(Clone)]
+pub struct Flcg {
+    ground: Arc<DenseKernel>,
+    /// ν · max_{j∈P} S_ij per ground row i
+    pcap: Arc<Vec<f32>>,
+    nu: f64,
+    /// memoized max_{j∈A} S_ij
+    max_vec: Vec<f32>,
+}
+
+impl Flcg {
+    /// `ground` is V×V; `privates` is P×V; `nu ≥ 0`.
+    pub fn new(ground: DenseKernel, privates: RectKernel, nu: f64) -> Result<Self> {
+        if nu < 0.0 {
+            return Err(SubmodError::InvalidParam(format!("nu {nu} < 0")));
+        }
+        if privates.cols() != ground.n() {
+            return Err(SubmodError::Shape(format!(
+                "private kernel cols {} vs ground n {}",
+                privates.cols(),
+                ground.n()
+            )));
+        }
+        let n = ground.n();
+        let np = privates.rows();
+        let pcap: Vec<f32> = (0..n)
+            .map(|i| nu as f32 * (0..np).map(|p| privates.get(p, i)).fold(0f32, f32::max))
+            .collect();
+        Ok(Flcg { ground: Arc::new(ground), pcap: Arc::new(pcap), nu, max_vec: vec![0.0; n] })
+    }
+
+    pub fn nu(&self) -> f64 {
+        self.nu
+    }
+}
+
+impl SetFunction for Flcg {
+    fn n(&self) -> usize {
+        self.ground.n()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        (0..self.ground.n())
+            .map(|i| {
+                let ma = subset
+                    .order()
+                    .iter()
+                    .map(|&j| self.ground.get(i, j))
+                    .fold(0f32, f32::max);
+                (ma - self.pcap[i]).max(0.0) as f64
+            })
+            .sum()
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for v in &mut self.max_vec {
+            *v = 0.0;
+        }
+        let order: Vec<ElementId> = subset.order().to_vec();
+        for e in order {
+            self.update_memoization(e);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        // symmetric kernel: row e read contiguously (s_ie == s_ei)
+        let row = self.ground.row(e);
+        let mut g = 0f64;
+        for i in 0..row.len() {
+            let cap = self.pcap[i];
+            let mv = self.max_vec[i];
+            let s = row[i];
+            let before = (mv - cap).max(0.0);
+            let after = (mv.max(s) - cap).max(0.0);
+            g += (after - before) as f64;
+        }
+        g
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        let row = self.ground.row(e);
+        for (mv, &s) in self.max_vec.iter_mut().zip(row) {
+            if s > *mv {
+                *mv = s;
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "FLCG"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::controlled;
+    use crate::kernel::Metric;
+
+    fn setup(nu: f64) -> Flcg {
+        let (ground, _, _, _) = controlled::fig6_dataset();
+        let privates = controlled::private_set_for_fig6();
+        let g = DenseKernel::from_data(&ground, Metric::Euclidean);
+        let p = RectKernel::from_data(&privates, &ground, Metric::Euclidean).unwrap();
+        Flcg::new(g, p, nu).unwrap()
+    }
+
+    #[test]
+    fn empty_zero() {
+        assert_eq!(setup(1.0).evaluate(&Subset::empty(46)), 0.0);
+    }
+
+    #[test]
+    fn nu_zero_reduces_to_fl() {
+        use crate::functions::facility_location::FacilityLocation;
+        let (ground, _, _, _) = controlled::fig6_dataset();
+        let g = DenseKernel::from_data(&ground, Metric::Euclidean);
+        let fl = FacilityLocation::new(g);
+        let cg = setup(0.0);
+        for ids in [vec![0usize, 5], vec![20, 40, 44]] {
+            let s = Subset::from_ids(46, &ids);
+            assert!((cg.evaluate(&s) - fl.evaluate(&s)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup(1.0);
+        let mut s = Subset::empty(46);
+        f.init_memoization(&s);
+        for &add in &[14usize, 2, 43] {
+            for e in (0..46).step_by(7) {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-5
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn private_adjacent_elements_suppressed() {
+        // the private set sits near clusters 1 and 2 → picking inside
+        // cluster 1 (ids 14..28) should gain less under large ν than under ν=0
+        let f_strict = setup(3.0);
+        let f_free = setup(0.0);
+        let s = Subset::empty(46);
+        let g_strict = f_strict.marginal_gain(&s, 14); // cluster-1 center
+        let g_free = f_free.marginal_gain(&s, 14);
+        assert!(g_strict < g_free * 0.6, "{g_strict} vs {g_free}");
+    }
+
+    #[test]
+    fn higher_nu_monotonically_tightens() {
+        let s = Subset::from_ids(46, &[0]);
+        let mut last = f64::INFINITY;
+        for nu in [0.0, 0.5, 1.0, 2.0] {
+            let v = setup(nu).evaluate(&s);
+            assert!(v <= last + 1e-9);
+            last = v;
+        }
+    }
+}

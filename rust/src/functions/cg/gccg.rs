@@ -1,0 +1,149 @@
+//! GCCG — Graph Cut Conditional Gain (paper §3.7, Table 1):
+//!
+//! ```text
+//! f(A|P) = f_λ(A) − 2λν Σ_{i∈A, j∈P} S_ij
+//! ```
+//!
+//! i.e. the plain Graph Cut objective minus a modular privacy penalty.
+//! Memoization = GraphCut's (Table 4 row GCCG) plus the precomputed
+//! per-element private affinity.
+
+use std::sync::Arc;
+
+use crate::error::{Result, SubmodError};
+use crate::functions::graph_cut::GraphCut;
+use crate::functions::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::{DenseKernel, RectKernel};
+
+/// GCCG. See module docs.
+#[derive(Clone)]
+pub struct Gccg {
+    gc: GraphCut,
+    /// 2λν Σ_{j∈P} S_ij per ground element i
+    penalty: Arc<Vec<f64>>,
+    nu: f64,
+}
+
+impl Gccg {
+    /// `ground` V×V kernel; `privates` P×V kernel; λ the GC trade-off,
+    /// ν ≥ 0 privacy hardness.
+    pub fn new(ground: DenseKernel, privates: RectKernel, lambda: f64, nu: f64) -> Result<Self> {
+        if nu < 0.0 {
+            return Err(SubmodError::InvalidParam(format!("nu {nu} < 0")));
+        }
+        if privates.cols() != ground.n() {
+            return Err(SubmodError::Shape(format!(
+                "private kernel cols {} vs ground n {}",
+                privates.cols(),
+                ground.n()
+            )));
+        }
+        let n = ground.n();
+        let np = privates.rows();
+        let penalty: Vec<f64> = (0..n)
+            .map(|i| {
+                2.0 * lambda * nu * (0..np).map(|p| privates.get(p, i) as f64).sum::<f64>()
+            })
+            .collect();
+        Ok(Gccg { gc: GraphCut::new(ground, lambda)?, penalty: Arc::new(penalty), nu })
+    }
+
+    pub fn nu(&self) -> f64 {
+        self.nu
+    }
+}
+
+impl SetFunction for Gccg {
+    fn n(&self) -> usize {
+        self.gc.n()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        self.gc.evaluate(subset)
+            - subset.order().iter().map(|&i| self.penalty[i]).sum::<f64>()
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        self.gc.init_memoization(subset);
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        self.gc.marginal_gain_memoized(e) - self.penalty[e]
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        self.gc.update_memoization(e);
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "GCCG"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::controlled;
+    use crate::kernel::Metric;
+
+    fn setup(nu: f64) -> Gccg {
+        let (ground, _, _, _) = controlled::fig6_dataset();
+        let privates = controlled::private_set_for_fig6();
+        let g = DenseKernel::from_data(&ground, Metric::Euclidean);
+        let p = RectKernel::from_data(&privates, &ground, Metric::Euclidean).unwrap();
+        Gccg::new(g, p, 0.4, nu).unwrap()
+    }
+
+    #[test]
+    fn nu_zero_is_plain_graph_cut() {
+        let (ground, _, _, _) = controlled::fig6_dataset();
+        let g = DenseKernel::from_data(&ground, Metric::Euclidean);
+        let gc = GraphCut::new(g, 0.4).unwrap();
+        let f = setup(0.0);
+        for ids in [vec![3usize], vec![10, 25, 44]] {
+            let s = Subset::from_ids(46, &ids);
+            assert!((f.evaluate(&s) - gc.evaluate(&s)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup(1.5);
+        let mut s = Subset::empty(46);
+        f.init_memoization(&s);
+        for &add in &[8usize, 30] {
+            for e in (0..46).step_by(9) {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-6
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn penalty_reduces_private_adjacent_gain() {
+        let f0 = setup(0.0);
+        let f3 = setup(3.0);
+        let s = Subset::empty(46);
+        // cluster-1 center (id 14) is near a private point
+        assert!(f3.marginal_gain(&s, 14) < f0.marginal_gain(&s, 14));
+    }
+
+    #[test]
+    fn negative_nu_rejected() {
+        let (ground, _, _, _) = controlled::fig6_dataset();
+        let privates = controlled::private_set_for_fig6();
+        let g = DenseKernel::from_data(&ground, Metric::Euclidean);
+        let p = RectKernel::from_data(&privates, &ground, Metric::Euclidean).unwrap();
+        assert!(Gccg::new(g, p, 0.4, -1.0).is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! Specialized Conditional Gain instantiations (paper §3.1, Table 1 column
+//! "CG") — query-irrelevant / privacy-preserving selection: the chosen
+//! subset must be *different* from the private (conditioning) set P.
+//!
+//! | name | expression (Table 1) | module |
+//! |------|----------------------|--------|
+//! | FLCG | Σ_{i∈V} max(max_{j∈A} S_ij − ν max_{j∈P} S_ij, 0) | [`flcg`] |
+//! | GCCG | f_λ(A) − 2λν Σ_{i∈A, j∈P} S_ij | [`gccg`] |
+//! | LogDetCG | via generic CG over a ν-scaled extended kernel | [`logdetcg`] |
+//! | SCCG | w(γ(A) \ γ(P)) | [`sccg()`](sccg::sccg) |
+//! | PSCCG | Σ_u w_u P̄_u(A) P_u(P) | [`psccg()`](psccg::psccg) |
+
+pub mod flcg;
+pub mod gccg;
+pub mod logdetcg;
+pub mod psccg;
+pub mod sccg;
+
+pub use flcg::Flcg;
+pub use gccg::Gccg;
+pub use logdetcg::LogDetCg;
+pub use psccg::psccg;
+pub use sccg::sccg;

@@ -1,0 +1,62 @@
+//! PSCCG — Probabilistic Set Cover Conditional Gain (paper §5.2.3,
+//! Table 1):
+//!
+//! ```text
+//! f(A|P) = Σ_u w_u · P̄_u(A) · P_u(P)
+//! ```
+//!
+//! where P_u(P) = Π_{j∈P}(1 − p_ju) is the probability the private set
+//! does NOT cover concept u. Reduction: PSC with weights scaled by
+//! P_u(P) (the paper's binary special case zeroes concepts present in P).
+
+use crate::error::Result;
+use crate::functions::prob_set_cover::ProbabilisticSetCover;
+
+/// Build PSCCG from a base PSC and the private items' probability rows.
+pub fn psccg(
+    base: &ProbabilisticSetCover,
+    private_probs: &[Vec<f32>],
+) -> Result<ProbabilisticSetCover> {
+    base.with_reweighted(|u| ProbabilisticSetCover::survival_product(private_probs, u))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::traits::{SetFunction, Subset};
+
+    fn base() -> ProbabilisticSetCover {
+        ProbabilisticSetCover::new(
+            vec![vec![0.9, 0.2], vec![0.1, 0.8]],
+            vec![1.0, 2.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn matches_table1_formula() {
+        let pp = vec![vec![0.5f32, 0.0]];
+        let f = psccg(&base(), &pp).unwrap();
+        // A = {0}: u=0: 1.0·0.9·(1−0.5)=0.45 ; u=1: 2.0·0.2·1.0=0.4
+        let s = Subset::from_ids(2, &[0]);
+        assert!((f.evaluate(&s) - 0.85).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic_private_coverage_zeroes_concept() {
+        let pp = vec![vec![1.0f32, 0.0]];
+        let f = psccg(&base(), &pp).unwrap();
+        // concept 0 certainly covered by P → drops out entirely
+        let s = Subset::from_ids(2, &[0, 1]);
+        let expect = 2.0 * (1.0 - (1.0 - 0.2) * (1.0 - 0.8));
+        assert!((f.evaluate(&s) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_private_is_base() {
+        let b = base();
+        let f = psccg(&b, &[]).unwrap();
+        let s = Subset::from_ids(2, &[1]);
+        assert!((f.evaluate(&s) - b.evaluate(&s)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,55 @@
+//! SCCG — Set Cover Conditional Gain (paper §5.2.3, Table 1):
+//!
+//! ```text
+//! f(A|P) = w(γ(A) \ γ(P))
+//! ```
+//!
+//! Reduction: Set Cover with each element's cover set stripped of the
+//! concepts the private set already covers.
+
+use crate::error::Result;
+use crate::functions::set_cover::SetCover;
+
+/// Build SCCG from a base SetCover and the concepts covered by the
+/// private set, `gamma_p`.
+pub fn sccg(base: &SetCover, gamma_p: &[u32]) -> Result<SetCover> {
+    let drop: std::collections::HashSet<u32> = gamma_p.iter().copied().collect();
+    Ok(base.with_concept_filter(|u| !drop.contains(&u)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::traits::{SetFunction, Subset};
+
+    fn base() -> SetCover {
+        SetCover::new(
+            vec![vec![0, 1], vec![1, 2], vec![2, 3], vec![3]],
+            vec![1.0, 2.0, 4.0, 8.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn private_concepts_excluded() {
+        let f = sccg(&base(), &[1, 3]).unwrap();
+        // A = {0,3}: γ(A)={0,1,3}; minus γ(P)={1,3} → {0} → w=1
+        assert_eq!(f.evaluate(&Subset::from_ids(4, &[0, 3])), 1.0);
+    }
+
+    #[test]
+    fn empty_private_is_base() {
+        let b = base();
+        let f = sccg(&b, &[]).unwrap();
+        for ids in [vec![0usize], vec![1, 2], vec![0, 1, 2, 3]] {
+            let s = Subset::from_ids(4, &ids);
+            assert_eq!(f.evaluate(&s), b.evaluate(&s));
+        }
+    }
+
+    #[test]
+    fn all_private_zeroes() {
+        let f = sccg(&base(), &[0, 1, 2, 3]).unwrap();
+        assert_eq!(f.evaluate(&Subset::from_ids(4, &[0, 1, 2, 3])), 0.0);
+    }
+}

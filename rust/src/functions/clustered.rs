@@ -1,0 +1,268 @@
+//! Generic Clustered Function (paper §8, alternative 2):
+//!
+//! ```text
+//! f(A) = Σ_i f_{C_i}(A)
+//! ```
+//!
+//! where `f_{C_i}` operates on cluster `C_i` as its sub-groundset and
+//! interprets A as `A ∩ C_i`. Works for **any** inner `SetFunction` built
+//! per cluster (in cluster-local ids); this wrapper does the global↔local
+//! id translation and fans the memoization out.
+
+use super::traits::{ElementId, SetFunction, Subset};
+use crate::error::{Result, SubmodError};
+
+/// Mixture-over-clusters wrapper. See module docs.
+pub struct ClusteredFunction {
+    /// (global ids of cluster, inner function over local ids 0..len)
+    clusters: Vec<(Vec<ElementId>, Box<dyn SetFunction>)>,
+    /// global id → (cluster idx, local idx); u32::MAX = unassigned
+    lookup: Vec<(u32, u32)>,
+    n: usize,
+}
+
+impl ClusteredFunction {
+    /// `clusters[k]` = (global element ids of cluster k, function whose
+    /// ground set is exactly those ids in local order). `n` = global size.
+    pub fn new(
+        clusters: Vec<(Vec<ElementId>, Box<dyn SetFunction>)>,
+        n: usize,
+    ) -> Result<Self> {
+        let mut lookup = vec![(u32::MAX, 0u32); n];
+        for (ci, (ids, f)) in clusters.iter().enumerate() {
+            if f.n() != ids.len() {
+                return Err(SubmodError::Shape(format!(
+                    "cluster {ci}: inner n {} vs {} ids",
+                    f.n(),
+                    ids.len()
+                )));
+            }
+            for (li, &g) in ids.iter().enumerate() {
+                if g >= n {
+                    return Err(SubmodError::OutOfGroundSet { id: g, n });
+                }
+                if lookup[g].0 != u32::MAX {
+                    return Err(SubmodError::InvalidParam(format!(
+                        "element {g} assigned to two clusters"
+                    )));
+                }
+                lookup[g] = (ci as u32, li as u32);
+            }
+        }
+        Ok(ClusteredFunction { clusters, lookup, n })
+    }
+
+    /// The paper's §8 "let SUBMODLIB do the clustering internally"
+    /// convenience: k-means the data, then build one inner function per
+    /// cluster with `build` (which receives the cluster's feature rows).
+    pub fn from_data<F>(
+        data: &crate::linalg::Matrix,
+        k: usize,
+        seed: u64,
+        build: F,
+    ) -> Result<Self>
+    where
+        F: Fn(&crate::linalg::Matrix) -> Result<Box<dyn SetFunction>>,
+    {
+        let km = crate::clustering::kmeans(data, k, 50, seed);
+        let parts = crate::clustering::partition(&km.labels, k);
+        let mut clusters = Vec::new();
+        for ids in parts.into_iter().filter(|ids| !ids.is_empty()) {
+            let mut sub = crate::linalg::Matrix::zeros(ids.len(), data.cols());
+            for (li, &g) in ids.iter().enumerate() {
+                sub.row_mut(li).copy_from_slice(data.row(g));
+            }
+            clusters.push((ids, build(&sub)?));
+        }
+        ClusteredFunction::new(clusters, data.rows())
+    }
+
+    fn local_subset(&self, ci: usize, subset: &Subset) -> Subset {
+        let ids = &self.clusters[ci].0;
+        let mut local = Subset::empty(ids.len());
+        // preserve global insertion order
+        for &g in subset.order() {
+            let (c, l) = self.lookup[g];
+            if c as usize == ci {
+                local.insert(l as usize);
+            }
+        }
+        local
+    }
+}
+
+impl Clone for ClusteredFunction {
+    fn clone(&self) -> Self {
+        ClusteredFunction {
+            clusters: self
+                .clusters
+                .iter()
+                .map(|(ids, f)| (ids.clone(), f.clone_box()))
+                .collect(),
+            lookup: self.lookup.clone(),
+            n: self.n,
+        }
+    }
+}
+
+impl SetFunction for ClusteredFunction {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        (0..self.clusters.len())
+            .map(|ci| self.clusters[ci].1.evaluate(&self.local_subset(ci, subset)))
+            .sum()
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for ci in 0..self.clusters.len() {
+            let local = self.local_subset(ci, subset);
+            self.clusters[ci].1.init_memoization(&local);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        let (ci, li) = self.lookup[e];
+        if ci == u32::MAX {
+            return 0.0;
+        }
+        self.clusters[ci as usize].1.marginal_gain_memoized(li as usize)
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        let (ci, li) = self.lookup[e];
+        if ci == u32::MAX {
+            return;
+        }
+        self.clusters[ci as usize].1.update_memoization(li as usize);
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "ClusteredFunction"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::{kmeans, partition};
+    use crate::data::synthetic;
+    use crate::functions::facility_location::FacilityLocation;
+    use crate::kernel::{DenseKernel, Metric};
+    use crate::linalg::Matrix;
+
+    fn build(n: usize, k: usize, seed: u64) -> (ClusteredFunction, Matrix) {
+        let data = synthetic::blobs(n, 2, k, 0.5, seed);
+        let km = kmeans(&data, k, 30, 1);
+        let parts = partition(&km.labels, k);
+        let clusters: Vec<(Vec<usize>, Box<dyn SetFunction>)> = parts
+            .into_iter()
+            .filter(|ids| !ids.is_empty())
+            .map(|ids| {
+                let mut sub = Matrix::zeros(ids.len(), 2);
+                for (li, &g) in ids.iter().enumerate() {
+                    sub.row_mut(li).copy_from_slice(data.row(g));
+                }
+                let f: Box<dyn SetFunction> = Box::new(FacilityLocation::new(
+                    DenseKernel::from_data(&sub, Metric::Euclidean),
+                ));
+                (ids, f)
+            })
+            .collect();
+        (ClusteredFunction::new(clusters, n).unwrap(), data)
+    }
+
+    #[test]
+    fn sums_inner_functions() {
+        let (f, _) = build(20, 2, 1);
+        let s = Subset::from_ids(20, &[0, 10, 19]);
+        // evaluate is a sum of per-cluster FL evaluations by construction;
+        // sanity: strictly positive, bounded by n
+        let v = f.evaluate(&s);
+        assert!(v > 0.0 && v <= 20.0);
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let (mut f, _) = build(18, 3, 2);
+        let mut s = Subset::empty(18);
+        f.init_memoization(&s);
+        for &add in &[0usize, 9, 17] {
+            for e in 0..18 {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-6,
+                    "e={e}"
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn from_data_internal_clustering() {
+        let data = synthetic::blobs(24, 2, 3, 0.4, 9);
+        let mut f = ClusteredFunction::from_data(&data, 3, 1, |sub| {
+            Ok(Box::new(FacilityLocation::new(DenseKernel::from_data(
+                sub,
+                Metric::Euclidean,
+            ))))
+        })
+        .unwrap();
+        assert_eq!(f.n(), 24);
+        // memoized == stateless over the auto-clustered instance
+        let mut s = Subset::empty(24);
+        f.init_memoization(&s);
+        for &add in &[0usize, 12, 23] {
+            for e in (0..24).step_by(5) {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-6
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn fl_clustered_from_data_matches_manual() {
+        let data = synthetic::blobs(20, 2, 2, 0.3, 10);
+        let f = FacilityLocation::clustered_from_data(&data, 2, Metric::Euclidean, 1);
+        assert_eq!(f.n(), 20);
+        let s = Subset::from_ids(20, &[0, 10]);
+        let v = f.evaluate(&s);
+        assert!(v > 0.0 && v <= 20.0);
+    }
+
+    #[test]
+    fn validation() {
+        let data = synthetic::blobs(6, 2, 2, 1.0, 3);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        // inner n mismatch
+        let bad: Vec<(Vec<usize>, Box<dyn SetFunction>)> =
+            vec![(vec![0, 1], Box::new(FacilityLocation::new(k.clone())))];
+        assert!(ClusteredFunction::new(bad, 6).is_err());
+        // overlapping clusters
+        let k2 = {
+            let sub = Matrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0]]);
+            DenseKernel::from_data(&sub, Metric::Euclidean)
+        };
+        let overlapping: Vec<(Vec<usize>, Box<dyn SetFunction>)> = vec![
+            (vec![0, 1], Box::new(FacilityLocation::new(k2.clone()))),
+            (vec![1, 2], Box::new(FacilityLocation::new(k2))),
+        ];
+        assert!(ClusteredFunction::new(overlapping, 6).is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! FLCMI — Facility Location Conditional Mutual Information (Table 1
+//! "FL (v1)" CMI):
+//!
+//! ```text
+//! I(A;Q|P) = Σ_{i∈V} max( min(max_{j∈A} S_ij, η max_{j∈Q} S_ij)
+//!                         − ν max_{j∈P} S_ij, 0 )
+//! ```
+//!
+//! The FLVMI saturation capped from below by the private influence:
+//! η magnifies query relevance, ν tightens privacy. Memoization is the
+//! usual FL `max_vec` against two precomputed row caps.
+
+use std::sync::Arc;
+
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::{DenseKernel, RectKernel};
+
+/// FLCMI. See module docs.
+#[derive(Clone)]
+pub struct Flcmi {
+    ground: Arc<DenseKernel>,
+    /// η · max_{j∈Q} S_ij per row
+    qcap: Arc<Vec<f32>>,
+    /// ν · max_{j∈P} S_ij per row
+    pcap: Arc<Vec<f32>>,
+    eta: f64,
+    nu: f64,
+    max_vec: Vec<f32>,
+}
+
+impl Flcmi {
+    /// `ground` V×V; `queries` Q×V; `privates` P×V; η, ν ≥ 0.
+    pub fn new(
+        ground: DenseKernel,
+        queries: RectKernel,
+        privates: RectKernel,
+        eta: f64,
+        nu: f64,
+    ) -> Result<Self> {
+        if eta < 0.0 || nu < 0.0 {
+            return Err(SubmodError::InvalidParam(format!("eta {eta} / nu {nu} < 0")));
+        }
+        let n = ground.n();
+        if queries.cols() != n || privates.cols() != n {
+            return Err(SubmodError::Shape(
+                "query/private kernel cols must equal ground n".into(),
+            ));
+        }
+        let colmax = |k: &RectKernel, scale: f64| -> Vec<f32> {
+            (0..n)
+                .map(|i| {
+                    scale as f32
+                        * (0..k.rows()).map(|r| k.get(r, i)).fold(0f32, f32::max)
+                })
+                .collect()
+        };
+        Ok(Flcmi {
+            qcap: Arc::new(colmax(&queries, eta)),
+            pcap: Arc::new(colmax(&privates, nu)),
+            ground: Arc::new(ground),
+            eta,
+            nu,
+            max_vec: vec![0.0; n],
+        })
+    }
+
+    pub fn eta(&self) -> f64 {
+        self.eta
+    }
+
+    pub fn nu(&self) -> f64 {
+        self.nu
+    }
+
+    #[inline]
+    fn row_value(&self, i: usize, ma: f32) -> f32 {
+        (ma.min(self.qcap[i]) - self.pcap[i]).max(0.0)
+    }
+}
+
+impl SetFunction for Flcmi {
+    fn n(&self) -> usize {
+        self.ground.n()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        (0..self.ground.n())
+            .map(|i| {
+                let ma = subset
+                    .order()
+                    .iter()
+                    .map(|&j| self.ground.get(i, j))
+                    .fold(0f32, f32::max);
+                self.row_value(i, ma) as f64
+            })
+            .sum()
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for v in &mut self.max_vec {
+            *v = 0.0;
+        }
+        let order: Vec<ElementId> = subset.order().to_vec();
+        for e in order {
+            self.update_memoization(e);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        // symmetric kernel: row e read contiguously (s_ie == s_ei)
+        let row = self.ground.row(e);
+        let mut g = 0f64;
+        for (i, &s) in row.iter().enumerate() {
+            let mv = self.max_vec[i];
+            g += (self.row_value(i, mv.max(s)) - self.row_value(i, mv)) as f64;
+        }
+        g
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        let row = self.ground.row(e);
+        for (mv, &s) in self.max_vec.iter_mut().zip(row) {
+            if s > *mv {
+                *mv = s;
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "FLCMI"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::controlled;
+    use crate::kernel::Metric;
+
+    fn setup(eta: f64, nu: f64) -> Flcmi {
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let privates = controlled::private_set_for_fig6();
+        let g = DenseKernel::from_data(&ground, Metric::Euclidean);
+        let q = RectKernel::from_data(&queries, &ground, Metric::Euclidean).unwrap();
+        let p = RectKernel::from_data(&privates, &ground, Metric::Euclidean).unwrap();
+        Flcmi::new(g, q, p, eta, nu).unwrap()
+    }
+
+    #[test]
+    fn empty_zero() {
+        assert_eq!(setup(1.0, 1.0).evaluate(&Subset::empty(46)), 0.0);
+    }
+
+    #[test]
+    fn nu_zero_reduces_to_flvmi() {
+        use crate::functions::mi::Flvmi;
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let g = DenseKernel::from_data(&ground, Metric::Euclidean);
+        let q = RectKernel::from_data(&queries, &ground, Metric::Euclidean).unwrap();
+        let flvmi = Flvmi::new(g, q, 1.3).unwrap();
+        let cmi = setup(1.3, 0.0);
+        for ids in [vec![0usize, 9], vec![15, 30, 44]] {
+            let s = Subset::from_ids(46, &ids);
+            assert!((cmi.evaluate(&s) - flvmi.evaluate(&s)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup(1.0, 0.7);
+        let mut s = Subset::empty(46);
+        f.init_memoization(&s);
+        for &add in &[6usize, 28, 44] {
+            for e in (0..46).step_by(8) {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-5
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn query_relevant_but_private_adjacent_suppressed() {
+        // query 1 sits near cluster 1 and so does a private point; with
+        // strict ν the cluster-1 picks lose value vs nu=0
+        let free = setup(1.0, 0.0);
+        let strict = setup(1.0, 2.0);
+        let s = Subset::empty(46);
+        assert!(strict.marginal_gain(&s, 14) < free.marginal_gain(&s, 14));
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let privates = controlled::private_set_for_fig6();
+        let g = DenseKernel::from_data(&ground, Metric::Euclidean);
+        let q = RectKernel::from_data(&queries, &ground, Metric::Euclidean).unwrap();
+        let p = RectKernel::from_data(&privates, &ground, Metric::Euclidean).unwrap();
+        assert!(Flcmi::new(g, q, p, -1.0, 0.0).is_err());
+    }
+}

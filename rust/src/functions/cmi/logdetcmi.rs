@@ -1,0 +1,206 @@
+//! LogDetCMI — Log Determinant Conditional Mutual Information (paper
+//! §5.2.4): built per the paper's recipe — LogDet over the extended
+//! (V∪Q∪P) kernel, lifted through the generic CMI identity
+//! `I(A;Q|P) = f(A∪P) + f(Q∪P) − f(A∪Q∪P) − f(P)`.
+
+use crate::error::Result;
+use crate::functions::generic::ConditionalMutualInformation;
+use crate::functions::log_determinant::LogDeterminant;
+use crate::functions::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::{DenseKernel, RectKernel};
+use crate::linalg::Matrix;
+
+/// LogDetCMI as a `SetFunction` over V.
+pub struct LogDetCmi {
+    inner: ConditionalMutualInformation,
+}
+
+impl LogDetCmi {
+    /// Kernels: `ground` V×V, `queries_k` Q×Q, `privates_k` P×P,
+    /// `cross_q` Q×V, `cross_p` P×V, `cross_qp` Q×P. η scales V↔Q,
+    /// ν scales V↔P (paper §3.4; CMI presented at η=ν=1 in Table 1).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        ground: DenseKernel,
+        queries_k: DenseKernel,
+        privates_k: DenseKernel,
+        cross_q: RectKernel,
+        cross_p: RectKernel,
+        cross_qp: RectKernel,
+        eta: f64,
+        nu: f64,
+        reg: f64,
+    ) -> Result<Self> {
+        let n = ground.n();
+        let q = queries_k.n();
+        let p = privates_k.n();
+        if cross_q.rows() != q
+            || cross_q.cols() != n
+            || cross_p.rows() != p
+            || cross_p.cols() != n
+            || cross_qp.rows() != q
+            || cross_qp.cols() != p
+        {
+            return Err(crate::error::SubmodError::Shape(
+                "cross kernel shapes inconsistent with V/Q/P sizes".into(),
+            ));
+        }
+        // extended kernel layout: [V | Q | P]
+        let total = n + q + p;
+        let mut ext = Matrix::zeros(total, total);
+        for i in 0..n {
+            for j in 0..n {
+                ext.set(i, j, ground.get(i, j));
+            }
+        }
+        for a in 0..q {
+            for b in 0..q {
+                ext.set(n + a, n + b, queries_k.get(a, b));
+            }
+        }
+        for a in 0..p {
+            for b in 0..p {
+                ext.set(n + q + a, n + q + b, privates_k.get(a, b));
+            }
+        }
+        for a in 0..q {
+            for j in 0..n {
+                let v = eta as f32 * cross_q.get(a, j);
+                ext.set(n + a, j, v);
+                ext.set(j, n + a, v);
+            }
+        }
+        for a in 0..p {
+            for j in 0..n {
+                let v = nu as f32 * cross_p.get(a, j);
+                ext.set(n + q + a, j, v);
+                ext.set(j, n + q + a, v);
+            }
+        }
+        for a in 0..q {
+            for b in 0..p {
+                let v = cross_qp.get(a, b);
+                ext.set(n + a, n + q + b, v);
+                ext.set(n + q + b, n + a, v);
+            }
+        }
+        let base = LogDeterminant::with_regularization(DenseKernel::from_matrix(ext)?, reg)?;
+        let inner = ConditionalMutualInformation::new(
+            Box::new(base),
+            (n..n + q).collect(),
+            (n + q..total).collect(),
+            n,
+        )?;
+        Ok(LogDetCmi { inner })
+    }
+}
+
+impl Clone for LogDetCmi {
+    fn clone(&self) -> Self {
+        LogDetCmi { inner: self.inner.clone() }
+    }
+}
+
+impl SetFunction for LogDetCmi {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        self.inner.evaluate(subset)
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        self.inner.init_memoization(subset);
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        self.inner.marginal_gain_memoized(e)
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        self.inner.update_memoization(e);
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "LogDetCMI"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::controlled;
+    use crate::kernel::Metric;
+
+    fn setup(eta: f64, nu: f64) -> LogDetCmi {
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let privates = controlled::private_set_for_fig6();
+        let m = Metric::Rbf { gamma: 0.5 };
+        LogDetCmi::new(
+            DenseKernel::from_data(&ground, m),
+            DenseKernel::from_data(&queries, m),
+            DenseKernel::from_data(&privates, m),
+            RectKernel::from_data(&queries, &ground, m).unwrap(),
+            RectKernel::from_data(&privates, &ground, m).unwrap(),
+            RectKernel::from_data(&queries, &privates, m).unwrap(),
+            eta,
+            nu,
+            0.1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_zero() {
+        assert!(setup(1.0, 1.0).evaluate(&Subset::empty(46)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup(0.8, 0.5);
+        let mut s = Subset::empty(46);
+        f.init_memoization(&s);
+        for &add in &[3usize, 27] {
+            for e in (0..46).step_by(17) {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-4
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn fully_decoupled_query_gives_zero_cmi() {
+        // when BOTH the V↔Q and Q↔P blocks are zero, Q is independent of
+        // everything and I(A;Q|P) must vanish identically. (η=0 alone is
+        // not enough: Q and A can still be correlated *through* P.)
+        use crate::linalg::Matrix;
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let privates = controlled::private_set_for_fig6();
+        let m = Metric::Rbf { gamma: 0.5 };
+        let f = LogDetCmi::new(
+            DenseKernel::from_data(&ground, m),
+            DenseKernel::from_data(&queries, m),
+            DenseKernel::from_data(&privates, m),
+            RectKernel::from_data(&queries, &ground, m).unwrap(),
+            RectKernel::from_data(&privates, &ground, m).unwrap(),
+            RectKernel::from_matrix(Matrix::zeros(2, 2)), // Q⊥P
+            0.0,                                          // Q⊥V
+            0.5,
+            0.1,
+        )
+        .unwrap();
+        let s = Subset::from_ids(46, &[2, 18]);
+        assert!(f.evaluate(&s).abs() < 1e-4, "{}", f.evaluate(&s));
+    }
+}

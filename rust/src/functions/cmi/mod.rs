@@ -1,0 +1,24 @@
+//! Specialized Conditional Mutual Information instantiations (paper §3.3,
+//! Table 1 column "CMI") — *joint* query-focused and privacy-preserving
+//! selection: similar to Q, dissimilar from P, simultaneously.
+//!
+//! | name | expression (Table 1) | module |
+//! |------|----------------------|--------|
+//! | FLCMI | Σ_{i∈V} max(min(max_{j∈A} S_ij, η max_{j∈Q} S_ij) − ν max_{j∈P} S_ij, 0) | [`flcmi`] |
+//! | LogDetCMI | via generic CMI over the extended kernel | [`logdetcmi`] |
+//! | SCCMI | w(γ(A) ∩ γ(Q) \ γ(P)) | [`sccmi()`](sccmi::sccmi) |
+//! | PSCCMI | Σ_u w_u P̄_u(A) P̄_u(Q) P_u(P) | [`psccmi()`](psccmi::psccmi) |
+//!
+//! (GCCMI equals GCMI — the paper notes the GC CMI "does not involve the
+//! private set and is exactly the same as the MI version"; use
+//! [`crate::functions::mi::Gcmi`].)
+
+pub mod flcmi;
+pub mod logdetcmi;
+pub mod psccmi;
+pub mod sccmi;
+
+pub use flcmi::Flcmi;
+pub use logdetcmi::LogDetCmi;
+pub use psccmi::psccmi;
+pub use sccmi::sccmi;

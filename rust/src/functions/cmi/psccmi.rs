@@ -1,0 +1,73 @@
+//! PSCCMI — Probabilistic Set Cover Conditional Mutual Information (paper
+//! §5.2.4, Table 1):
+//!
+//! ```text
+//! I(A;Q|P) = Σ_u w_u · P̄_u(A) · P̄_u(Q) · P_u(P)
+//! ```
+//!
+//! Reduction: PSC with weights scaled by both the query coverage
+//! probability and the private *non*-coverage probability.
+
+use crate::error::Result;
+use crate::functions::prob_set_cover::ProbabilisticSetCover;
+
+/// Build PSCCMI from a base PSC, query probability rows and private
+/// probability rows.
+pub fn psccmi(
+    base: &ProbabilisticSetCover,
+    query_probs: &[Vec<f32>],
+    private_probs: &[Vec<f32>],
+) -> Result<ProbabilisticSetCover> {
+    base.with_reweighted(|u| {
+        let q_cov = 1.0 - ProbabilisticSetCover::survival_product(query_probs, u);
+        let p_non = ProbabilisticSetCover::survival_product(private_probs, u);
+        q_cov * p_non
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::traits::{SetFunction, Subset};
+
+    fn base() -> ProbabilisticSetCover {
+        ProbabilisticSetCover::new(
+            vec![vec![0.9, 0.2], vec![0.1, 0.8]],
+            vec![1.0, 2.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn matches_table1_formula() {
+        let qp = vec![vec![0.5f32, 1.0]];
+        let pp = vec![vec![0.0f32, 0.25]];
+        let f = psccmi(&base(), &qp, &pp).unwrap();
+        // A={1}: u=0: 1.0·0.1·0.5·1.0 = 0.05 ; u=1: 2.0·0.8·1.0·0.75 = 1.2
+        let s = Subset::from_ids(2, &[1]);
+        assert!((f.evaluate(&s) - 1.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn composes_mi_then_cg() {
+        use crate::functions::cg::psccg;
+        use crate::functions::mi::pscmi;
+        let b = base();
+        let qp = vec![vec![0.3f32, 0.6]];
+        let pp = vec![vec![0.2f32, 0.9]];
+        let direct = psccmi(&b, &qp, &pp).unwrap();
+        let composed = psccg(&pscmi(&b, &qp).unwrap(), &pp).unwrap();
+        for ids in [vec![0usize], vec![0, 1]] {
+            let s = Subset::from_ids(2, &ids);
+            assert!((direct.evaluate(&s) - composed.evaluate(&s)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn certain_private_coverage_zeroes() {
+        let qp = vec![vec![1.0f32, 1.0]];
+        let pp = vec![vec![1.0f32, 1.0]];
+        let f = psccmi(&base(), &qp, &pp).unwrap();
+        assert!(f.evaluate(&Subset::from_ids(2, &[0, 1])).abs() < 1e-12);
+    }
+}

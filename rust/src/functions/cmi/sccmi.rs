@@ -1,0 +1,64 @@
+//! SCCMI — Set Cover Conditional Mutual Information (paper §5.2.4,
+//! Table 1):
+//!
+//! ```text
+//! I(A;Q|P) = w(γ(A) ∩ γ(Q) \ γ(P))
+//! ```
+//!
+//! Reduction: Set Cover keeping only concepts in the query's cover and
+//! not in the private set's cover.
+
+use crate::error::Result;
+use crate::functions::set_cover::SetCover;
+
+/// Build SCCMI from a base SetCover, γ(Q), and γ(P).
+pub fn sccmi(base: &SetCover, gamma_q: &[u32], gamma_p: &[u32]) -> Result<SetCover> {
+    let keep: std::collections::HashSet<u32> = gamma_q.iter().copied().collect();
+    let drop: std::collections::HashSet<u32> = gamma_p.iter().copied().collect();
+    Ok(base.with_concept_filter(|u| keep.contains(&u) && !drop.contains(&u)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::traits::{SetFunction, Subset};
+
+    fn base() -> SetCover {
+        SetCover::new(
+            vec![vec![0, 1], vec![1, 2], vec![2, 3], vec![0, 3]],
+            vec![1.0, 2.0, 4.0, 8.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn intersection_minus_private() {
+        // γ(Q) = {1,2,3}, γ(P) = {3} → countable concepts {1,2}
+        let f = sccmi(&base(), &[1, 2, 3], &[3]).unwrap();
+        // A = {2,3}: γ(A) = {0,2,3} → kept: {2} → w=4
+        assert_eq!(f.evaluate(&Subset::from_ids(4, &[2, 3])), 4.0);
+    }
+
+    #[test]
+    fn consistency_with_scmi_and_sccg() {
+        use crate::functions::cg::sccg;
+        use crate::functions::mi::scmi;
+        // SCCMI = SCMI of SCCG-filtered base = SCCG of SCMI-filtered base
+        let b = base();
+        let gq = [0u32, 2];
+        let gp = [2u32, 3];
+        let direct = sccmi(&b, &gq, &gp).unwrap();
+        let via_cg = scmi(&sccg(&b, &gp).unwrap(), &gq).unwrap();
+        for ids in [vec![0usize], vec![1, 3], vec![0, 1, 2, 3]] {
+            let s = Subset::from_ids(4, &ids);
+            assert_eq!(direct.evaluate(&s), via_cg.evaluate(&s), "{ids:?}");
+        }
+    }
+
+    #[test]
+    fn disjoint_query_private_full_query_kept() {
+        let f = sccmi(&base(), &[0, 1], &[2, 3]).unwrap();
+        // A = full: γ(A) = all → kept {0,1} → 3.0
+        assert_eq!(f.evaluate(&Subset::from_ids(4, &[0, 1, 2, 3])), 3.0);
+    }
+}

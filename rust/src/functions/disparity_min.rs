@@ -1,0 +1,177 @@
+//! Disparity Min (paper §2.2.1):
+//!
+//! ```text
+//! f_DMin(X) = min_{i,j∈X, i≠j} d_ij
+//! ```
+//!
+//! **Not submodular** (the paper is explicit about this), but still
+//! efficiently optimized by the greedy algorithm (Dasgupta et al. 2013).
+//! Convention (matching Submodlib): `f(∅) = f({x}) = 0`.
+//!
+//! Memoization (Table 3 row "Dispersion Min"): the current minimum plus
+//! `min_d[j] = min_{i∈A} d_ij` per candidate, giving O(1) gains.
+//!
+//! Because the function is non-submodular, the LazyGreedy optimizer
+//! refuses it (`is_submodular() == false`).
+
+use std::sync::Arc;
+
+use super::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::DenseKernel;
+
+/// Disparity-min diversity function over a distance kernel.
+#[derive(Clone)]
+pub struct DisparityMin {
+    dist: Arc<DenseKernel>,
+    /// memoized min_{i∈A} d_ij per candidate j (∞ when A empty)
+    min_d: Vec<f64>,
+    /// memoized current f(A)
+    current: f64,
+    k: usize,
+}
+
+impl DisparityMin {
+    pub fn new(dist: DenseKernel) -> Self {
+        let n = dist.n();
+        DisparityMin {
+            dist: Arc::new(dist),
+            min_d: vec![f64::INFINITY; n],
+            current: 0.0,
+            k: 0,
+        }
+    }
+
+    /// Greedy with this function is heuristic (non-submodular); lazy
+    /// evaluation is invalid for it.
+    pub fn is_submodular(&self) -> bool {
+        false
+    }
+}
+
+impl SetFunction for DisparityMin {
+    fn n(&self) -> usize {
+        self.dist.n()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        let o = subset.order();
+        if o.len() < 2 {
+            return 0.0;
+        }
+        let mut m = f64::INFINITY;
+        for (a, &i) in o.iter().enumerate() {
+            for &j in &o[a + 1..] {
+                m = m.min(self.dist.get(i, j) as f64);
+            }
+        }
+        m
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for v in &mut self.min_d {
+            *v = f64::INFINITY;
+        }
+        self.current = 0.0;
+        self.k = 0;
+        let order: Vec<ElementId> = subset.order().to_vec();
+        for e in order {
+            self.update_memoization(e);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        match self.k {
+            0 => 0.0,                         // f({e}) − f(∅) = 0
+            1 => self.min_d[e],               // first real pair distance
+            _ => self.current.min(self.min_d[e]) - self.current,
+        }
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        if self.k >= 1 {
+            self.current = if self.k == 1 {
+                self.min_d[e]
+            } else {
+                self.current.min(self.min_d[e])
+            };
+        }
+        let row = self.dist.row(e);
+        for (j, v) in self.min_d.iter_mut().enumerate() {
+            let d = row[j] as f64;
+            if d < *v {
+                *v = d;
+            }
+        }
+        self.k += 1;
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "DisparityMin"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn small_sets_zero() {
+        let data = synthetic::blobs(6, 2, 2, 1.0, 1);
+        let f = DisparityMin::new(DenseKernel::distances_from_data(&data));
+        assert_eq!(f.evaluate(&Subset::empty(6)), 0.0);
+        assert_eq!(f.evaluate(&Subset::from_ids(6, &[2])), 0.0);
+    }
+
+    #[test]
+    fn pair_and_triple() {
+        let data = Matrix::from_rows(&[&[0.0, 0.0], &[3.0, 4.0], &[0.0, 1.0]]);
+        let f = DisparityMin::new(DenseKernel::distances_from_data(&data));
+        assert!((f.evaluate(&Subset::from_ids(3, &[0, 1])) - 5.0).abs() < 1e-5);
+        // adding point 2 (dist 1 from point 0) drops the min to 1
+        assert!((f.evaluate(&Subset::from_ids(3, &[0, 1, 2])) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let data = synthetic::blobs(12, 2, 3, 1.0, 2);
+        let mut f = DisparityMin::new(DenseKernel::distances_from_data(&data));
+        let mut s = Subset::empty(12);
+        f.init_memoization(&s);
+        for &add in &[4usize, 9, 0, 7] {
+            for e in 0..12 {
+                if s.contains(e) {
+                    continue;
+                }
+                let fast = f.marginal_gain_memoized(e);
+                let slow = f.marginal_gain(&s, e);
+                assert!((fast - slow).abs() < 1e-5, "e={e}: {fast} vs {slow}");
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn gains_nonpositive_after_two() {
+        let data = synthetic::blobs(10, 2, 2, 1.0, 3);
+        let mut f = DisparityMin::new(DenseKernel::distances_from_data(&data));
+        f.init_memoization(&Subset::empty(10));
+        f.update_memoization(0);
+        f.update_memoization(5);
+        for e in 1..5 {
+            assert!(f.marginal_gain_memoized(e) <= 1e-12);
+        }
+    }
+
+    #[test]
+    fn not_submodular_flag() {
+        let data = synthetic::blobs(4, 2, 2, 1.0, 4);
+        assert!(!DisparityMin::new(DenseKernel::distances_from_data(&data)).is_submodular());
+    }
+}

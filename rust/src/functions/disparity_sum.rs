@@ -1,0 +1,142 @@
+//! Disparity Sum (paper §2.2.1):
+//!
+//! ```text
+//! f_DSum(X) = Σ_{i,j∈X} d_ij      (unordered pairs)
+//! ```
+//!
+//! A *supermodular* diversity model — happily selects outliers (the Fig 5b
+//! behaviour). Memoization (Table 3 row "Dispersion Sum"):
+//! `sum_d[j] = Σ_{i∈A} d_ij`, so the gain of adding j is exactly `sum_d[j]`.
+
+use std::sync::Arc;
+
+use super::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::DenseKernel;
+
+/// Disparity-sum diversity function over a distance kernel.
+#[derive(Clone)]
+pub struct DisparitySum {
+    /// distance matrix (square, symmetric, zero diagonal)
+    dist: Arc<DenseKernel>,
+    /// memoized Σ_{i∈A} d_ij per element j
+    sum_d: Vec<f64>,
+}
+
+impl DisparitySum {
+    /// `dist` must be a distance kernel (`DenseKernel::distances_from_data`).
+    pub fn new(dist: DenseKernel) -> Self {
+        let n = dist.n();
+        DisparitySum { dist: Arc::new(dist), sum_d: vec![0.0; n] }
+    }
+}
+
+impl SetFunction for DisparitySum {
+    fn n(&self) -> usize {
+        self.dist.n()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        let o = subset.order();
+        let mut total = 0f64;
+        for (a, &i) in o.iter().enumerate() {
+            for &j in &o[a + 1..] {
+                total += self.dist.get(i, j) as f64;
+            }
+        }
+        total
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for v in &mut self.sum_d {
+            *v = 0.0;
+        }
+        let order: Vec<ElementId> = subset.order().to_vec();
+        for e in order {
+            self.update_memoization(e);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        self.sum_d[e]
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        let row = self.dist.row(e);
+        for (j, v) in self.sum_d.iter_mut().enumerate() {
+            *v += row[j] as f64;
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "DisparitySum"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::linalg::Matrix;
+
+    fn ds(n: usize, seed: u64) -> DisparitySum {
+        let data = synthetic::blobs(n, 2, 3, 1.0, seed);
+        DisparitySum::new(DenseKernel::distances_from_data(&data))
+    }
+
+    #[test]
+    fn empty_and_singleton_zero() {
+        let f = ds(10, 1);
+        assert_eq!(f.evaluate(&Subset::empty(10)), 0.0);
+        assert_eq!(f.evaluate(&Subset::from_ids(10, &[4])), 0.0);
+    }
+
+    #[test]
+    fn pair_is_distance() {
+        let data = Matrix::from_rows(&[&[0.0, 0.0], &[3.0, 4.0]]);
+        let f = DisparitySum::new(DenseKernel::distances_from_data(&data));
+        assert!((f.evaluate(&Subset::from_ids(2, &[0, 1])) - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = ds(15, 2);
+        let mut s = Subset::empty(15);
+        f.init_memoization(&s);
+        for &add in &[3usize, 12, 7] {
+            for e in 0..15 {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-4
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn supermodular_increasing_gains() {
+        // gains grow (not shrink) with the base set: f(e|A) ≤ f(e|B), A⊆B
+        let f = ds(12, 3);
+        let a = Subset::from_ids(12, &[1]);
+        let b = Subset::from_ids(12, &[1, 5, 9]);
+        for e in [0usize, 3, 11] {
+            assert!(f.marginal_gain(&b, e) >= f.marginal_gain(&a, e) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn prefers_distant_points() {
+        let data = Matrix::from_rows(&[&[0.0, 0.0], &[1.0, 0.0], &[100.0, 0.0]]);
+        let mut f = DisparitySum::new(DenseKernel::distances_from_data(&data));
+        f.init_memoization(&Subset::empty(3));
+        f.update_memoization(0);
+        assert!(f.marginal_gain_memoized(2) > f.marginal_gain_memoized(1));
+    }
+}

@@ -1,0 +1,468 @@
+//! Facility Location (paper §2.1.1) — the library's workhorse
+//! representation function:
+//!
+//! ```text
+//! f_FL(X) = Σ_{i∈U} max_{j∈X} s_ij
+//! ```
+//!
+//! with U the *represented set* (defaults to the ground set V). Three
+//! kernel modes, mirroring the paper's §8 usage patterns:
+//!
+//! * **dense** — N×N kernel; memoized statistic `max_vec[i] = max_{j∈A} s_ij`
+//!   (Table 3 row 1) makes each gain O(|U|).
+//! * **sparse** — kNN kernel; gains touch only stored neighbors.
+//! * **clustered** — `f(A) = Σ_l Σ_{i∈C_l} max_{j∈A∩C_l} s_ij` over a
+//!   provided clustering, kernels built per cluster.
+
+use std::sync::Arc;
+
+use super::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::{DenseKernel, RectKernel, SparseKernel};
+
+#[derive(Clone)]
+enum Mode {
+    /// represented set = ground set, square kernel
+    Dense(Arc<DenseKernel>),
+    /// represented set U ≠ V: rows = U, cols = V
+    Rect(Arc<RectKernel>),
+    /// kNN kernel (assumed symmetric metric)
+    Sparse(Arc<SparseKernel>),
+    /// per-cluster dense kernels over global-id lists
+    Clustered { clusters: Arc<Vec<(Vec<ElementId>, DenseKernel)>>, n: usize },
+}
+
+/// Facility-Location function. See module docs.
+#[derive(Clone)]
+pub struct FacilityLocation {
+    mode: Mode,
+    /// memoized: for each represented row i, max_{j∈A} s_ij
+    /// (clustered mode: concatenated per-cluster max vectors)
+    max_vec: Vec<f32>,
+    /// clustered mode: global id → (cluster idx, local idx, max_vec offset)
+    lookup: Vec<(u32, u32, u32)>,
+}
+
+impl FacilityLocation {
+    /// Dense mode over a square ground-set kernel.
+    pub fn new(kernel: DenseKernel) -> Self {
+        let n = kernel.n();
+        FacilityLocation {
+            mode: Mode::Dense(Arc::new(kernel)),
+            max_vec: vec![0.0; n],
+            lookup: Vec::new(),
+        }
+    }
+
+    /// Generic represented set: `kernel` rows are U, columns are V.
+    pub fn with_represented(kernel: RectKernel) -> Self {
+        let rows = kernel.rows();
+        FacilityLocation {
+            mode: Mode::Rect(Arc::new(kernel)),
+            max_vec: vec![0.0; rows],
+            lookup: Vec::new(),
+        }
+    }
+
+    /// Sparse (kNN) mode.
+    pub fn sparse(kernel: SparseKernel) -> Self {
+        let n = kernel.n();
+        FacilityLocation {
+            mode: Mode::Sparse(Arc::new(kernel)),
+            max_vec: vec![0.0; n],
+            lookup: Vec::new(),
+        }
+    }
+
+    /// Clustered mode with internal k-means (the paper's "let SUBMODLIB
+    /// do the clustering" path): clusters `data` into `k` groups and
+    /// builds one per-cluster kernel.
+    pub fn clustered_from_data(
+        data: &crate::linalg::Matrix,
+        k: usize,
+        metric: crate::kernel::Metric,
+        seed: u64,
+    ) -> Self {
+        let km = crate::clustering::kmeans(data, k, 50, seed);
+        let parts = crate::clustering::partition(&km.labels, k);
+        let clusters: Vec<(Vec<ElementId>, DenseKernel)> = parts
+            .into_iter()
+            .filter(|ids| !ids.is_empty())
+            .map(|ids| {
+                let mut sub = crate::linalg::Matrix::zeros(ids.len(), data.cols());
+                for (li, &g) in ids.iter().enumerate() {
+                    sub.row_mut(li).copy_from_slice(data.row(g));
+                }
+                (ids, DenseKernel::from_data(&sub, metric))
+            })
+            .collect();
+        FacilityLocation::clustered(clusters, data.rows())
+    }
+
+    /// Clustered mode: `clusters[l]` = (global ids of cluster l, kernel over
+    /// those ids). `n` is the global ground-set size.
+    pub fn clustered(clusters: Vec<(Vec<ElementId>, DenseKernel)>, n: usize) -> Self {
+        let mut lookup = vec![(u32::MAX, 0u32, 0u32); n];
+        let mut offset = 0u32;
+        let mut total = 0usize;
+        for (ci, (ids, k)) in clusters.iter().enumerate() {
+            assert_eq!(ids.len(), k.n(), "cluster {ci} ids vs kernel size");
+            for (li, &g) in ids.iter().enumerate() {
+                lookup[g] = (ci as u32, li as u32, offset);
+            }
+            offset += ids.len() as u32;
+            total += ids.len();
+        }
+        FacilityLocation {
+            mode: Mode::Clustered { clusters: Arc::new(clusters), n },
+            max_vec: vec![0.0; total],
+            lookup,
+        }
+    }
+}
+
+impl SetFunction for FacilityLocation {
+    fn n(&self) -> usize {
+        match &self.mode {
+            Mode::Dense(k) => k.n(),
+            Mode::Rect(k) => k.cols(),
+            Mode::Sparse(k) => k.n(),
+            Mode::Clustered { n, .. } => *n,
+        }
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        match &self.mode {
+            Mode::Dense(k) => (0..k.n())
+                .map(|i| {
+                    subset
+                        .order()
+                        .iter()
+                        .map(|&j| k.get(i, j))
+                        .fold(0f32, f32::max) as f64
+                })
+                .sum(),
+            Mode::Rect(k) => (0..k.rows())
+                .map(|i| {
+                    subset
+                        .order()
+                        .iter()
+                        .map(|&j| k.get(i, j))
+                        .fold(0f32, f32::max) as f64
+                })
+                .sum(),
+            Mode::Sparse(k) => (0..k.n())
+                .map(|i| {
+                    subset
+                        .order()
+                        .iter()
+                        .map(|&j| k.get(i, j))
+                        .fold(0f32, f32::max) as f64
+                })
+                .sum(),
+            Mode::Clustered { clusters, .. } => {
+                let mut total = 0f64;
+                for (ids, k) in clusters.iter() {
+                    let local: Vec<usize> = ids
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, g)| subset.contains(**g))
+                        .map(|(l, _)| l)
+                        .collect();
+                    if local.is_empty() {
+                        continue;
+                    }
+                    for i in 0..k.n() {
+                        total += local
+                            .iter()
+                            .map(|&j| k.get(i, j))
+                            .fold(0f32, f32::max) as f64;
+                    }
+                }
+                total
+            }
+        }
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for v in &mut self.max_vec {
+            *v = 0.0;
+        }
+        // replay inserts through update_memoization for a single code path
+        let order: Vec<ElementId> = subset.order().to_vec();
+        for e in order {
+            self.update_memoization(e);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        match &self.mode {
+            Mode::Dense(k) => {
+                // symmetric kernel: read row e contiguously (s_ie == s_ei)
+                // instead of striding down column e (§Perf iteration —
+                // EXPERIMENTS.md L3 hot path 2)
+                let row = k.row(e);
+                let mut g = 0f64;
+                for (&s, &mv) in row.iter().zip(self.max_vec.iter()) {
+                    if s > mv {
+                        g += (s - mv) as f64;
+                    }
+                }
+                g
+            }
+            Mode::Rect(k) => {
+                let mut g = 0f64;
+                for (i, &mv) in self.max_vec.iter().enumerate() {
+                    let s = k.get(i, e);
+                    if s > mv {
+                        g += (s - mv) as f64;
+                    }
+                }
+                g
+            }
+            Mode::Sparse(k) => {
+                // symmetric kernel: s_ie for stored neighbors i of e; all
+                // other rows see similarity 0 ≤ max_vec[i] (max_vec ≥ 0).
+                let (cols, vals) = k.row(e);
+                let mut g = 0f64;
+                for (&i, &s) in cols.iter().zip(vals) {
+                    let mv = self.max_vec[i as usize];
+                    if s > mv {
+                        g += (s - mv) as f64;
+                    }
+                }
+                g
+            }
+            Mode::Clustered { clusters, .. } => {
+                let (ci, li, off) = self.lookup[e];
+                if ci == u32::MAX {
+                    return 0.0; // element not in any cluster contributes nothing
+                }
+                let (_, k) = &clusters[ci as usize];
+                let mut g = 0f64;
+                for i in 0..k.n() {
+                    let mv = self.max_vec[off as usize + i];
+                    let s = k.get(i, li as usize);
+                    if s > mv {
+                        g += (s - mv) as f64;
+                    }
+                }
+                g
+            }
+        }
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        match &self.mode {
+            Mode::Dense(k) => {
+                let row = k.row(e); // symmetric: row e == column e
+                for (mv, &s) in self.max_vec.iter_mut().zip(row) {
+                    if s > *mv {
+                        *mv = s;
+                    }
+                }
+            }
+            Mode::Rect(k) => {
+                for (i, mv) in self.max_vec.iter_mut().enumerate() {
+                    let s = k.get(i, e);
+                    if s > *mv {
+                        *mv = s;
+                    }
+                }
+            }
+            Mode::Sparse(k) => {
+                let (cols, vals) = k.row(e);
+                for (&i, &s) in cols.iter().zip(vals) {
+                    let mv = &mut self.max_vec[i as usize];
+                    if s > *mv {
+                        *mv = s;
+                    }
+                }
+            }
+            Mode::Clustered { clusters, .. } => {
+                let (ci, li, off) = self.lookup[e];
+                if ci == u32::MAX {
+                    return;
+                }
+                let (_, k) = &clusters[ci as usize];
+                for i in 0..k.n() {
+                    let mv = &mut self.max_vec[off as usize + i];
+                    let s = k.get(i, li as usize);
+                    if s > *mv {
+                        *mv = s;
+                    }
+                }
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "FacilityLocation"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::{kmeans, partition};
+    use crate::data::synthetic;
+    use crate::kernel::Metric;
+    use crate::linalg::Matrix;
+
+    fn dense_fl(n: usize, seed: u64) -> (FacilityLocation, DenseKernel) {
+        let data = synthetic::blobs(n, 2, 3, 1.0, seed);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        (FacilityLocation::new(k.clone()), k)
+    }
+
+    #[test]
+    fn empty_set_zero() {
+        let (f, _) = dense_fl(20, 1);
+        assert_eq!(f.evaluate(&Subset::empty(20)), 0.0);
+    }
+
+    #[test]
+    fn full_set_is_row_sum_of_ones() {
+        // with euclidean similarity, max over full set includes self (=1)
+        let (f, _) = dense_fl(15, 2);
+        let full = Subset::from_ids(15, &(0..15).collect::<Vec<_>>());
+        assert!((f.evaluate(&full) - 15.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn marginal_gain_matches_evaluate_delta() {
+        let (f, _) = dense_fl(25, 3);
+        let s = Subset::from_ids(25, &[1, 7, 13]);
+        for e in [0usize, 5, 20] {
+            let delta = f.evaluate(&s.union_with(&[e])) - f.evaluate(&s);
+            assert!((f.marginal_gain(&s, e) - delta).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let (mut f, _) = dense_fl(30, 4);
+        let mut s = Subset::empty(30);
+        f.init_memoization(&s);
+        for &add in &[3usize, 17, 8, 25] {
+            for e in 0..30 {
+                if s.contains(e) {
+                    continue;
+                }
+                let fast = f.marginal_gain_memoized(e);
+                let slow = f.marginal_gain(&s, e);
+                assert!((fast - slow).abs() < 1e-6, "e={e}: {fast} vs {slow}");
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn init_memoization_mid_set() {
+        let (mut f, _) = dense_fl(20, 5);
+        let s = Subset::from_ids(20, &[2, 9]);
+        f.init_memoization(&s);
+        for e in [0usize, 14] {
+            assert!((f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rect_mode_represented_set() {
+        // U = 2 points, V = 3 points; FL should sum over U rows only
+        let u = Matrix::from_rows(&[&[0.0, 0.0], &[10.0, 0.0]]);
+        let v = Matrix::from_rows(&[&[0.0, 1.0], &[10.0, 1.0], &[5.0, 5.0]]);
+        let k = RectKernel::from_data(&u, &v, Metric::Euclidean).unwrap();
+        let mut f = FacilityLocation::with_represented(k.clone());
+        assert_eq!(f.n(), 3);
+        let s = Subset::from_ids(3, &[0]);
+        let expect = (k.get(0, 0) + k.get(1, 0)) as f64;
+        assert!((f.evaluate(&s) - expect).abs() < 1e-6);
+        f.init_memoization(&Subset::empty(3));
+        assert!((f.marginal_gain_memoized(0) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sparse_mode_matches_dense_on_gains_for_neighbors() {
+        let data = synthetic::blobs(40, 2, 4, 0.5, 6);
+        let sparse = SparseKernel::from_data(&data, Metric::Euclidean, 40).unwrap();
+        let dense = DenseKernel::from_data(&data, Metric::Euclidean);
+        // with k = n the sparse kernel is exact → functions must agree
+        let mut fs = FacilityLocation::sparse(sparse);
+        let mut fd = FacilityLocation::new(dense);
+        let empty = Subset::empty(40);
+        fs.init_memoization(&empty);
+        fd.init_memoization(&empty);
+        for step in 0..5 {
+            let mut best = (0usize, f64::MIN);
+            for e in 0..40 {
+                let g = fd.marginal_gain_memoized(e);
+                if g > best.1 {
+                    best = (e, g);
+                }
+            }
+            let gs = fs.marginal_gain_memoized(best.0);
+            assert!((gs - best.1).abs() < 1e-5, "step {step}");
+            fs.update_memoization(best.0);
+            fd.update_memoization(best.0);
+        }
+    }
+
+    #[test]
+    fn clustered_mode_matches_definition() {
+        let data = synthetic::blobs(30, 2, 3, 0.4, 7);
+        let km = kmeans(&data, 3, 30, 1);
+        let parts = partition(&km.labels, 3);
+        let clusters: Vec<(Vec<usize>, DenseKernel)> = parts
+            .iter()
+            .map(|ids| {
+                let mut sub = Matrix::zeros(ids.len(), 2);
+                for (li, &g) in ids.iter().enumerate() {
+                    sub.row_mut(li).copy_from_slice(data.row(g));
+                }
+                (ids.clone(), DenseKernel::from_data(&sub, Metric::Euclidean))
+            })
+            .collect();
+        let mut f = FacilityLocation::clustered(clusters.clone(), 30);
+        let s = Subset::from_ids(30, &[parts[0][0], parts[1][0]]);
+        // manual definition: Σ_l Σ_{i∈C_l} max_{j∈A∩C_l} s_ij
+        let mut expect = 0f64;
+        for (ids, k) in &clusters {
+            let local: Vec<usize> = ids
+                .iter()
+                .enumerate()
+                .filter(|(_, g)| s.contains(**g))
+                .map(|(l, _)| l)
+                .collect();
+            for i in 0..k.n() {
+                expect += local.iter().map(|&j| k.get(i, j)).fold(0f32, f32::max) as f64;
+            }
+        }
+        assert!((f.evaluate(&s) - expect).abs() < 1e-6);
+        // memoized path agrees with stateless
+        f.init_memoization(&s);
+        for e in 0..30 {
+            if s.contains(e) {
+                continue;
+            }
+            assert!(
+                (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-6,
+                "e={e}"
+            );
+        }
+    }
+
+    #[test]
+    fn diminishing_returns_spot_check() {
+        let (f, _) = dense_fl(20, 8);
+        let a = Subset::from_ids(20, &[1]);
+        let b = Subset::from_ids(20, &[1, 5, 9]);
+        for e in [0usize, 3, 12] {
+            assert!(f.marginal_gain(&a, e) >= f.marginal_gain(&b, e) - 1e-9);
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Feature-Based functions (paper §2.3.3): sums of concave over modular,
+//!
+//! ```text
+//! f_FB(X) = Σ_{f∈F} w_f · g(m_f(X)),   m_f(X) = Σ_{x∈X} score_f(x)
+//! ```
+//!
+//! with g a concave shape — Submodlib supports logarithmic, square-root
+//! and inverse (`x/(1+x)`); we add `pow(a)` for 0<a<1 as an extension.
+//! Memoization (Table 3 row 3): the accumulated `m_f(A)` per feature.
+
+use std::sync::Arc;
+
+use super::traits::{ElementId, SetFunction, Subset};
+use crate::error::{Result, SubmodError};
+
+/// Concave shapes for feature-based functions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConcaveShape {
+    /// g(x) = ln(1 + x)
+    Log,
+    /// g(x) = √x
+    Sqrt,
+    /// g(x) = x / (1 + x)
+    Inverse,
+    /// g(x) = x^a, 0 < a < 1
+    Pow(f64),
+}
+
+impl ConcaveShape {
+    #[inline]
+    pub fn apply(&self, x: f64) -> f64 {
+        debug_assert!(x >= 0.0);
+        match *self {
+            ConcaveShape::Log => (1.0 + x).ln(),
+            ConcaveShape::Sqrt => x.sqrt(),
+            ConcaveShape::Inverse => x / (1.0 + x),
+            ConcaveShape::Pow(a) => x.powf(a),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if let ConcaveShape::Pow(a) = *self {
+            if !(0.0 < a && a < 1.0) {
+                return Err(SubmodError::InvalidParam(format!(
+                    "pow exponent {a} outside (0,1)"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Feature-based function over sparse non-negative feature scores.
+#[derive(Clone)]
+pub struct FeatureBased {
+    /// features[i] = sparse (feature id, score ≥ 0) list for element i
+    features: Arc<Vec<Vec<(u32, f32)>>>,
+    weights: Arc<Vec<f64>>,
+    shape: ConcaveShape,
+    /// memoized m_f(A) per feature f
+    accum: Vec<f64>,
+}
+
+impl FeatureBased {
+    pub fn new(
+        features: Vec<Vec<(u32, f32)>>,
+        weights: Vec<f64>,
+        shape: ConcaveShape,
+    ) -> Result<Self> {
+        shape.validate()?;
+        let m = weights.len();
+        if weights.iter().any(|&w| w < 0.0) {
+            return Err(SubmodError::InvalidParam("negative feature weight".into()));
+        }
+        let mut features = features;
+        for (i, row) in features.iter_mut().enumerate() {
+            for &(f, v) in row.iter() {
+                if f as usize >= m {
+                    return Err(SubmodError::InvalidParam(format!(
+                        "feature id {f} in element {i} exceeds weight vector"
+                    )));
+                }
+                if v < 0.0 {
+                    return Err(SubmodError::InvalidParam(format!(
+                        "negative feature score in element {i}"
+                    )));
+                }
+            }
+            // coalesce duplicate feature ids (the memoized gain computes
+            // per-entry concave deltas, which is only correct when each
+            // feature appears at most once per element)
+            row.sort_unstable_by_key(|e| e.0);
+            let mut out: Vec<(u32, f32)> = Vec::with_capacity(row.len());
+            for &(f, v) in row.iter() {
+                match out.last_mut() {
+                    Some(last) if last.0 == f => last.1 += v,
+                    _ => out.push((f, v)),
+                }
+            }
+            *row = out;
+        }
+        Ok(FeatureBased {
+            features: Arc::new(features),
+            weights: Arc::new(weights),
+            shape,
+            accum: vec![0.0; m],
+        })
+    }
+
+    /// Dense-feature convenience constructor (e.g. ConvNet activations):
+    /// every (element, feature) score from a row-major matrix; uniform
+    /// weights.
+    pub fn from_dense(matrix: &crate::linalg::Matrix, shape: ConcaveShape) -> Result<Self> {
+        let m = matrix.cols();
+        let features: Vec<Vec<(u32, f32)>> = (0..matrix.rows())
+            .map(|i| {
+                matrix
+                    .row(i)
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, v)| **v > 0.0)
+                    .map(|(f, &v)| (f as u32, v))
+                    .collect()
+            })
+            .collect();
+        FeatureBased::new(features, vec![1.0; m], shape)
+    }
+}
+
+impl SetFunction for FeatureBased {
+    fn n(&self) -> usize {
+        self.features.len()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        let mut acc = vec![0f64; self.weights.len()];
+        for &i in subset.order() {
+            for &(f, v) in &self.features[i] {
+                acc[f as usize] += v as f64;
+            }
+        }
+        acc.iter()
+            .zip(self.weights.iter())
+            .map(|(&a, &w)| w * self.shape.apply(a))
+            .sum()
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for a in &mut self.accum {
+            *a = 0.0;
+        }
+        for &i in subset.order() {
+            for &(f, v) in &self.features[i] {
+                self.accum[f as usize] += v as f64;
+            }
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        self.features[e]
+            .iter()
+            .map(|&(f, v)| {
+                let a = self.accum[f as usize];
+                self.weights[f as usize]
+                    * (self.shape.apply(a + v as f64) - self.shape.apply(a))
+            })
+            .sum()
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        for &(f, v) in &self.features[e] {
+            self.accum[f as usize] += v as f64;
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "FeatureBased"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fb(shape: ConcaveShape) -> FeatureBased {
+        FeatureBased::new(
+            vec![
+                vec![(0, 1.0), (1, 2.0)],
+                vec![(1, 3.0)],
+                vec![(0, 2.0), (2, 1.0)],
+            ],
+            vec![1.0, 0.5, 2.0],
+            shape,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_zero_for_all_shapes() {
+        for shape in [
+            ConcaveShape::Log,
+            ConcaveShape::Sqrt,
+            ConcaveShape::Inverse,
+            ConcaveShape::Pow(0.5),
+        ] {
+            assert_eq!(fb(shape).evaluate(&Subset::empty(3)), 0.0);
+        }
+    }
+
+    #[test]
+    fn matches_formula_log() {
+        let f = fb(ConcaveShape::Log);
+        let s = Subset::from_ids(3, &[0, 1]);
+        let expect = 1.0 * (1.0 + 1.0f64).ln() + 0.5 * (1.0 + 5.0f64).ln();
+        assert!((f.evaluate(&s) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memoized_matches_stateless_all_shapes() {
+        for shape in [
+            ConcaveShape::Log,
+            ConcaveShape::Sqrt,
+            ConcaveShape::Inverse,
+            ConcaveShape::Pow(0.3),
+        ] {
+            let mut f = fb(shape);
+            let mut s = Subset::empty(3);
+            f.init_memoization(&s);
+            for &add in &[2usize, 0] {
+                for e in 0..3 {
+                    if s.contains(e) {
+                        continue;
+                    }
+                    assert!(
+                        (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs()
+                            < 1e-9,
+                        "{shape:?}"
+                    );
+                }
+                f.update_memoization(add);
+                s.insert(add);
+            }
+        }
+    }
+
+    #[test]
+    fn diminishing_returns() {
+        let f = fb(ConcaveShape::Sqrt);
+        let a = Subset::empty(3);
+        let b = Subset::from_ids(3, &[1]);
+        // element 1 hits feature 1; adding 0 (also feature 1) gains less after
+        assert!(f.marginal_gain(&a, 0) > f.marginal_gain(&b, 0));
+    }
+
+    #[test]
+    fn validation() {
+        assert!(FeatureBased::new(vec![vec![(3, 1.0)]], vec![1.0], ConcaveShape::Log).is_err());
+        assert!(FeatureBased::new(vec![vec![(0, -1.0)]], vec![1.0], ConcaveShape::Log).is_err());
+        assert!(FeatureBased::new(vec![], vec![-1.0], ConcaveShape::Log).is_err());
+        assert!(FeatureBased::new(vec![], vec![], ConcaveShape::Pow(1.5)).is_err());
+    }
+
+    #[test]
+    fn from_dense() {
+        let m = crate::linalg::Matrix::from_rows(&[&[1.0, 0.0], &[0.5, 2.0]]);
+        let f = FeatureBased::from_dense(&m, ConcaveShape::Sqrt).unwrap();
+        let s = Subset::from_ids(2, &[0, 1]);
+        let expect = (1.5f64).sqrt() + (2.0f64).sqrt();
+        assert!((f.evaluate(&s) - expect).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,174 @@
+//! Generic Conditional Gain: `f(A|P) = f(A ∪ P) − f(P)` (paper §3.1).
+//!
+//! Memoization: keep the base function's memoized state initialized with P
+//! committed; every gain / update then happens "on top of" P, so
+//! `marginal_gain_memoized` is exactly the base function's.
+
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::{check_ids, ElementId, SetFunction, Subset};
+
+/// `f(· | P)` over the selectable ground set `[0, n_v)`.
+pub struct ConditionalGain {
+    base: Box<dyn SetFunction>,
+    private: Vec<ElementId>,
+    n_v: usize,
+    f_p: f64,
+}
+
+impl ConditionalGain {
+    /// `base` is defined over the extended ground set; `private` are the
+    /// (extended) ids of P; `n_v` is the selectable prefix size.
+    pub fn new(
+        base: Box<dyn SetFunction>,
+        private: Vec<ElementId>,
+        n_v: usize,
+    ) -> Result<Self> {
+        check_ids(base.n(), &private)?;
+        if n_v > base.n() {
+            return Err(SubmodError::Shape(format!(
+                "n_v {} exceeds base ground set {}",
+                n_v,
+                base.n()
+            )));
+        }
+        if private.iter().any(|&p| p < n_v) {
+            return Err(SubmodError::InvalidParam(
+                "private ids must lie outside the selectable prefix".into(),
+            ));
+        }
+        let f_p = base.evaluate(&Subset::from_ids(base.n(), &private));
+        Ok(ConditionalGain { base, private, n_v, f_p })
+    }
+
+    fn extended(&self, subset: &Subset) -> Subset {
+        let mut s = Subset::empty(self.base.n());
+        for &p in &self.private {
+            s.insert(p);
+        }
+        for &e in subset.order() {
+            s.insert(e);
+        }
+        s
+    }
+}
+
+impl Clone for ConditionalGain {
+    fn clone(&self) -> Self {
+        ConditionalGain {
+            base: self.base.clone_box(),
+            private: self.private.clone(),
+            n_v: self.n_v,
+            f_p: self.f_p,
+        }
+    }
+}
+
+impl SetFunction for ConditionalGain {
+    fn n(&self) -> usize {
+        self.n_v
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        self.base.evaluate(&self.extended(subset)) - self.f_p
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        let ext = self.extended(subset);
+        self.base.init_memoization(&ext);
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        self.base.marginal_gain_memoized(e)
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        self.base.update_memoization(e);
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "ConditionalGain"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::functions::facility_location::FacilityLocation;
+    use crate::kernel::{DenseKernel, Metric};
+
+    /// extended FL over 12 items: first 8 = V, last 4 = P
+    fn setup() -> ConditionalGain {
+        let data = synthetic::blobs(12, 2, 3, 1.0, 7);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        ConditionalGain::new(
+            Box::new(FacilityLocation::new(k)),
+            vec![8, 9, 10, 11],
+            8,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let f = setup();
+        assert!(f.evaluate(&Subset::empty(8)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn definition_holds() {
+        let f = setup();
+        let s = Subset::from_ids(8, &[1, 5]);
+        // f(A|P) = f(A∪P) − f(P), recomputed by hand
+        let base = f.base.clone_box();
+        let a_p = Subset::from_ids(12, &[8, 9, 10, 11, 1, 5]);
+        let p = Subset::from_ids(12, &[8, 9, 10, 11]);
+        let expect = base.evaluate(&a_p) - base.evaluate(&p);
+        assert!((f.evaluate(&s) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup();
+        let mut s = Subset::empty(8);
+        f.init_memoization(&s);
+        for &add in &[2usize, 7] {
+            for e in 0..8 {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-6
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn private_overlap_with_v_rejected() {
+        let data = synthetic::blobs(10, 2, 2, 1.0, 8);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        assert!(ConditionalGain::new(
+            Box::new(FacilityLocation::new(k)),
+            vec![3],
+            8
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cg_bounded_by_plain_gain() {
+        // f(A|P) ≤ f(A) for monotone submodular f
+        let f = setup();
+        let plain = f.base.clone_box();
+        let s = Subset::from_ids(8, &[0, 4, 6]);
+        let plain_val = plain.evaluate(&Subset::from_ids(12, &[0, 4, 6]));
+        assert!(f.evaluate(&s) <= plain_val + 1e-9);
+    }
+}

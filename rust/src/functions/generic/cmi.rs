@@ -1,0 +1,226 @@
+//! Generic Conditional Mutual Information (paper §3.3):
+//!
+//! ```text
+//! I_f(A;Q|P) = f(A∪P) + f(Q∪P) − f(A∪Q∪P) − f(P)
+//! ```
+//!
+//! As a function of A the gain of adding `a` is
+//! `f(a | A∪P) − f(a | A∪Q∪P)` — two memoized base copies, one seeded
+//! with P and one with Q∪P. This mirrors the paper's own construction
+//! (§5.2.4: CMI = MI over a CG-wrapped base).
+
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::{check_ids, ElementId, SetFunction, Subset};
+
+/// `I_f(·; Q | P)` over the selectable ground set `[0, n_v)`.
+pub struct ConditionalMutualInformation {
+    /// tracks A ∪ P
+    base_ap: Box<dyn SetFunction>,
+    /// tracks A ∪ Q ∪ P
+    base_aqp: Box<dyn SetFunction>,
+    query: Vec<ElementId>,
+    private: Vec<ElementId>,
+    n_v: usize,
+    /// f(Q∪P) − f(P), the constant part
+    offset: f64,
+}
+
+impl ConditionalMutualInformation {
+    pub fn new(
+        base: Box<dyn SetFunction>,
+        query: Vec<ElementId>,
+        private: Vec<ElementId>,
+        n_v: usize,
+    ) -> Result<Self> {
+        check_ids(base.n(), &query)?;
+        check_ids(base.n(), &private)?;
+        if n_v > base.n() {
+            return Err(SubmodError::Shape(format!(
+                "n_v {} exceeds base ground set {}",
+                n_v,
+                base.n()
+            )));
+        }
+        if query.iter().chain(private.iter()).any(|&x| x < n_v) {
+            return Err(SubmodError::InvalidParam(
+                "query/private ids must lie outside the selectable prefix".into(),
+            ));
+        }
+        if query.iter().any(|q| private.contains(q)) {
+            return Err(SubmodError::InvalidParam("query ∩ private must be empty".into()));
+        }
+        let p = Subset::from_ids(base.n(), &private);
+        let qp = p.union_with(&query);
+        let offset = base.evaluate(&qp) - base.evaluate(&p);
+        let base_aqp = base.clone_box();
+        Ok(ConditionalMutualInformation {
+            base_ap: base,
+            base_aqp,
+            query,
+            private,
+            n_v,
+            offset,
+        })
+    }
+
+    fn seed(&self, subset: &Subset, with_q: bool) -> Subset {
+        let mut s = Subset::empty(self.base_ap.n());
+        for &p in &self.private {
+            s.insert(p);
+        }
+        if with_q {
+            for &q in &self.query {
+                s.insert(q);
+            }
+        }
+        for &e in subset.order() {
+            s.insert(e);
+        }
+        s
+    }
+}
+
+impl Clone for ConditionalMutualInformation {
+    fn clone(&self) -> Self {
+        ConditionalMutualInformation {
+            base_ap: self.base_ap.clone_box(),
+            base_aqp: self.base_aqp.clone_box(),
+            query: self.query.clone(),
+            private: self.private.clone(),
+            n_v: self.n_v,
+            offset: self.offset,
+        }
+    }
+}
+
+impl SetFunction for ConditionalMutualInformation {
+    fn n(&self) -> usize {
+        self.n_v
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        // I = f(A∪P) + f(Q∪P) − f(A∪Q∪P) − f(P)
+        //   = f(A∪P) − f(A∪Q∪P) + offset
+        let ap = self.seed(subset, false);
+        let aqp = self.seed(subset, true);
+        self.base_ap.evaluate(&ap) - self.base_ap.evaluate(&aqp) + self.offset
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        let ap = self.seed(subset, false);
+        let aqp = self.seed(subset, true);
+        self.base_ap.init_memoization(&ap);
+        self.base_aqp.init_memoization(&aqp);
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        self.base_ap.marginal_gain_memoized(e) - self.base_aqp.marginal_gain_memoized(e)
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        self.base_ap.update_memoization(e);
+        self.base_aqp.update_memoization(e);
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "ConditionalMutualInformation"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::functions::facility_location::FacilityLocation;
+    use crate::kernel::{DenseKernel, Metric};
+
+    /// extended FL over 14 items: V = 0..9, Q = {9,10}, P = {11,12,13}
+    fn setup() -> ConditionalMutualInformation {
+        let data = synthetic::blobs(14, 2, 3, 1.0, 12);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        ConditionalMutualInformation::new(
+            Box::new(FacilityLocation::new(k)),
+            vec![9, 10],
+            vec![11, 12, 13],
+            9,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let f = setup();
+        assert!(f.evaluate(&Subset::empty(9)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn definition_holds() {
+        let f = setup();
+        let s = Subset::from_ids(9, &[0, 5]);
+        let base = f.base_ap.clone_box();
+        let e = |ids: &[usize]| base.evaluate(&Subset::from_ids(14, ids));
+        let expect = e(&[0, 5, 11, 12, 13]) + e(&[9, 10, 11, 12, 13])
+            - e(&[0, 5, 9, 10, 11, 12, 13])
+            - e(&[11, 12, 13]);
+        assert!((f.evaluate(&s) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup();
+        let mut s = Subset::empty(9);
+        f.init_memoization(&s);
+        for &add in &[4usize, 8] {
+            for e in 0..9 {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-6
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn overlapping_q_p_rejected() {
+        let data = synthetic::blobs(12, 2, 2, 1.0, 13);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        assert!(ConditionalMutualInformation::new(
+            Box::new(FacilityLocation::new(k)),
+            vec![9, 10],
+            vec![10, 11],
+            9
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reduces_to_mi_with_empty_private() {
+        let data = synthetic::blobs(12, 2, 3, 1.0, 14);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        let cmi = ConditionalMutualInformation::new(
+            Box::new(FacilityLocation::new(k.clone())),
+            vec![9, 10, 11],
+            vec![],
+            9,
+        )
+        .unwrap();
+        let mi = super::super::mi::MutualInformation::new(
+            Box::new(FacilityLocation::new(k)),
+            vec![9, 10, 11],
+            9,
+        )
+        .unwrap();
+        for ids in [vec![], vec![0], vec![2, 7], vec![1, 3, 8]] {
+            let s = Subset::from_ids(9, &ids);
+            assert!((cmi.evaluate(&s) - mi.evaluate(&s)).abs() < 1e-9, "{ids:?}");
+        }
+    }
+}

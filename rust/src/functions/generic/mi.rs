@@ -1,0 +1,209 @@
+//! Generic Submodular Mutual Information:
+//! `I_f(A;Q) = f(A) + f(Q) − f(A∪Q)` (paper §3.2).
+//!
+//! As a function of A this is `f(Q) + [f(A) − f(A∪Q)]`, so the marginal
+//! gain of adding `a` is `f(a|A) − f(a|A∪Q)` — we maintain **two** copies
+//! of the base memoization, one tracking A and one tracking A∪Q, and
+//! subtract. Monotone for submodular f (gains ≥ 0 by submodularity since
+//! A ⊆ A∪Q).
+
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::{check_ids, ElementId, SetFunction, Subset};
+
+/// `I_f(·; Q)` over the selectable ground set `[0, n_v)`.
+pub struct MutualInformation {
+    /// tracks A
+    base_a: Box<dyn SetFunction>,
+    /// tracks A ∪ Q
+    base_aq: Box<dyn SetFunction>,
+    query: Vec<ElementId>,
+    n_v: usize,
+    f_q: f64,
+}
+
+impl MutualInformation {
+    /// `base` over the extended ground set; `query` = extended ids of Q.
+    pub fn new(base: Box<dyn SetFunction>, query: Vec<ElementId>, n_v: usize) -> Result<Self> {
+        check_ids(base.n(), &query)?;
+        if n_v > base.n() {
+            return Err(SubmodError::Shape(format!(
+                "n_v {} exceeds base ground set {}",
+                n_v,
+                base.n()
+            )));
+        }
+        if query.iter().any(|&q| q < n_v) {
+            return Err(SubmodError::InvalidParam(
+                "query ids must lie outside the selectable prefix".into(),
+            ));
+        }
+        let f_q = base.evaluate(&Subset::from_ids(base.n(), &query));
+        let base_aq = base.clone_box();
+        Ok(MutualInformation { base_a: base, base_aq, query, n_v, f_q })
+    }
+
+    fn extend_with_q(&self, subset: &Subset) -> Subset {
+        let mut s = Subset::empty(self.base_a.n());
+        for &q in &self.query {
+            s.insert(q);
+        }
+        for &e in subset.order() {
+            s.insert(e);
+        }
+        s
+    }
+
+    fn lift(&self, subset: &Subset) -> Subset {
+        let mut s = Subset::empty(self.base_a.n());
+        for &e in subset.order() {
+            s.insert(e);
+        }
+        s
+    }
+}
+
+impl Clone for MutualInformation {
+    fn clone(&self) -> Self {
+        MutualInformation {
+            base_a: self.base_a.clone_box(),
+            base_aq: self.base_aq.clone_box(),
+            query: self.query.clone(),
+            n_v: self.n_v,
+            f_q: self.f_q,
+        }
+    }
+}
+
+impl SetFunction for MutualInformation {
+    fn n(&self) -> usize {
+        self.n_v
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        let a = self.lift(subset);
+        let aq = self.extend_with_q(subset);
+        self.base_a.evaluate(&a) + self.f_q - self.base_a.evaluate(&aq)
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        let a = self.lift(subset);
+        let aq = self.extend_with_q(subset);
+        self.base_a.init_memoization(&a);
+        self.base_aq.init_memoization(&aq);
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        self.base_a.marginal_gain_memoized(e) - self.base_aq.marginal_gain_memoized(e)
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        self.base_a.update_memoization(e);
+        self.base_aq.update_memoization(e);
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "MutualInformation"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::functions::facility_location::FacilityLocation;
+    use crate::functions::log_determinant::LogDeterminant;
+    use crate::kernel::{DenseKernel, Metric};
+
+    /// extended FL over 12 items: first 9 = V, last 3 = Q
+    fn setup() -> MutualInformation {
+        let data = synthetic::blobs(12, 2, 3, 1.0, 9);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        MutualInformation::new(Box::new(FacilityLocation::new(k)), vec![9, 10, 11], 9)
+            .unwrap()
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let f = setup();
+        assert!(f.evaluate(&Subset::empty(9)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn definition_holds() {
+        let f = setup();
+        let s = Subset::from_ids(9, &[2, 6]);
+        let base = f.base_a.clone_box();
+        let a = Subset::from_ids(12, &[2, 6]);
+        let q = Subset::from_ids(12, &[9, 10, 11]);
+        let aq = Subset::from_ids(12, &[2, 6, 9, 10, 11]);
+        let expect = base.evaluate(&a) + base.evaluate(&q) - base.evaluate(&aq);
+        assert!((f.evaluate(&s) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mi_gains_nonnegative_for_submodular_base() {
+        let f = setup();
+        let s = Subset::from_ids(9, &[1]);
+        for e in 0..9 {
+            if !s.contains(e) {
+                assert!(f.marginal_gain(&s, e) >= -1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup();
+        let mut s = Subset::empty(9);
+        f.init_memoization(&s);
+        for &add in &[0usize, 8, 4] {
+            for e in 0..9 {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-6
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn works_with_logdet_base() {
+        // LogDetMI is built exactly this way in Submodlib (§5.2.2)
+        let data = synthetic::blobs(10, 2, 2, 1.0, 10);
+        let k = DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 });
+        let ld = LogDeterminant::with_regularization(k, 0.1).unwrap();
+        let mut f = MutualInformation::new(Box::new(ld), vec![8, 9], 8).unwrap();
+        let mut s = Subset::empty(8);
+        f.init_memoization(&s);
+        for &add in &[3usize, 6] {
+            for e in 0..8 {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-4,
+                    "e={e}"
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn query_in_prefix_rejected() {
+        let data = synthetic::blobs(10, 2, 2, 1.0, 11);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        assert!(
+            MutualInformation::new(Box::new(FacilityLocation::new(k)), vec![2], 8).is_err()
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Generic submodular information measures (paper §3): lift **any**
+//! `SetFunction` defined over an *extended* ground set (V ∪ Q ∪ P) into
+//!
+//! * conditional gain       `f(A|P) = f(A∪P) − f(P)`            ([`cg::ConditionalGain`])
+//! * mutual information     `I_f(A;Q) = f(A) + f(Q) − f(A∪Q)`   ([`mi::MutualInformation`])
+//! * conditional MI         `I_f(A;Q|P) = f(A∪P) + f(Q∪P) − f(A∪Q∪P) − f(P)`
+//!                                                              ([`cmi::ConditionalMutualInformation`])
+//!
+//! This is exactly how the paper says Submodlib builds LogDetMI, FLCG,
+//! LogDetCG, FLCMI, LogDetCMI (§5.2.2–5.2.4: "first a <base> function is
+//! instantiated with appropriate kernel and then a \<wrapper\> function is
+//! instantiated using it"). The specialized closed forms in
+//! `functions::{mi,cg,cmi}` are the fast paths; these wrappers are the
+//! semantics of record the proptest suite checks them against.
+//!
+//! Convention: the base function's ground set is laid out as
+//! `[0, n_v)` = V, then query ids, then private ids (any ids ≥ n_v work —
+//! the wrappers only need them disjoint from V and each other).
+
+pub mod cg;
+pub mod cmi;
+pub mod mi;
+
+pub use cg::ConditionalGain;
+pub use cmi::ConditionalMutualInformation;
+pub use mi::MutualInformation;

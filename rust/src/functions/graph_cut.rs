@@ -1,0 +1,233 @@
+//! Graph Cut family (paper §2.1.2):
+//!
+//! ```text
+//! f_GC(X) = Σ_{i∈U, j∈X} s_ij − λ Σ_{i,j∈X} s_ij
+//! ```
+//!
+//! λ trades representation against diversity; monotone submodular for
+//! λ ≤ 0.5, non-monotone submodular for λ > 0.5. U defaults to V.
+//!
+//! Memoization (Table 3 row 2): `total[j] = Σ_{i∈U} s_ij` precomputed and
+//! `sum_in[j] = Σ_{i∈A} s_ij` maintained, so each gain is O(1) and each
+//! update O(n).
+
+use std::sync::Arc;
+
+use super::traits::{ElementId, SetFunction, Subset};
+use crate::error::{Result, SubmodError};
+use crate::kernel::{DenseKernel, RectKernel};
+
+/// Graph-Cut function. See module docs.
+#[derive(Clone)]
+pub struct GraphCut {
+    /// V×V kernel for the diversity (second) term.
+    ground: Arc<DenseKernel>,
+    /// Precomputed Σ_{i∈U} s_ij per ground element j.
+    total: Arc<Vec<f64>>,
+    lambda: f64,
+    /// memoized Σ_{i∈A} s_ij per ground element j.
+    sum_in: Vec<f64>,
+}
+
+impl GraphCut {
+    /// U = V: both terms over the same square kernel.
+    pub fn new(kernel: DenseKernel, lambda: f64) -> Result<Self> {
+        if !(0.0..=1.0).contains(&lambda) {
+            return Err(SubmodError::InvalidParam(format!("lambda {lambda} outside [0,1]")));
+        }
+        let n = kernel.n();
+        let total: Vec<f64> =
+            (0..n).map(|j| (0..n).map(|i| kernel.get(i, j) as f64).sum()).collect();
+        Ok(GraphCut {
+            ground: Arc::new(kernel),
+            total: Arc::new(total),
+            lambda,
+            sum_in: vec![0.0; n],
+        })
+    }
+
+    /// Generic represented set U ≠ V: `master` rows are U, cols are V;
+    /// `ground` is the V×V kernel for the diversity term.
+    pub fn with_represented(master: RectKernel, ground: DenseKernel, lambda: f64) -> Result<Self> {
+        if !(0.0..=1.0).contains(&lambda) {
+            return Err(SubmodError::InvalidParam(format!("lambda {lambda} outside [0,1]")));
+        }
+        if master.cols() != ground.n() {
+            return Err(SubmodError::Shape(format!(
+                "master cols {} vs ground n {}",
+                master.cols(),
+                ground.n()
+            )));
+        }
+        let n = ground.n();
+        let total: Vec<f64> = (0..n)
+            .map(|j| (0..master.rows()).map(|i| master.get(i, j) as f64).sum())
+            .collect();
+        Ok(GraphCut {
+            ground: Arc::new(ground),
+            total: Arc::new(total),
+            lambda,
+            sum_in: vec![0.0; n],
+        })
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+}
+
+impl SetFunction for GraphCut {
+    fn n(&self) -> usize {
+        self.ground.n()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        let rep: f64 = subset.order().iter().map(|&j| self.total[j]).sum();
+        let mut div = 0f64;
+        for &i in subset.order() {
+            for &j in subset.order() {
+                div += self.ground.get(i, j) as f64;
+            }
+        }
+        rep - self.lambda * div
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for v in &mut self.sum_in {
+            *v = 0.0;
+        }
+        let order: Vec<ElementId> = subset.order().to_vec();
+        for e in order {
+            self.update_memoization(e);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        // Δ = total[e] − λ (2 Σ_{i∈A} s_ie + s_ee)   [symmetric kernel]
+        self.total[e]
+            - self.lambda * (2.0 * self.sum_in[e] + self.ground.get(e, e) as f64)
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        let row = self.ground.row(e);
+        for (i, v) in self.sum_in.iter_mut().enumerate() {
+            *v += row[i] as f64;
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "GraphCut"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::kernel::Metric;
+    use crate::linalg::Matrix;
+
+    fn gc(n: usize, lambda: f64, seed: u64) -> GraphCut {
+        let data = synthetic::blobs(n, 2, 3, 1.0, seed);
+        GraphCut::new(DenseKernel::from_data(&data, Metric::Euclidean), lambda).unwrap()
+    }
+
+    #[test]
+    fn empty_zero() {
+        assert_eq!(gc(10, 0.3, 1).evaluate(&Subset::empty(10)), 0.0);
+    }
+
+    #[test]
+    fn invalid_lambda_rejected() {
+        let data = synthetic::blobs(5, 2, 2, 1.0, 1);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        assert!(GraphCut::new(k.clone(), -0.1).is_err());
+        assert!(GraphCut::new(k, 1.5).is_err());
+    }
+
+    #[test]
+    fn singleton_value() {
+        let f = gc(8, 0.4, 2);
+        let s = Subset::from_ids(8, &[3]);
+        // f({3}) = total[3] − λ s_33 = total[3] − λ·1
+        let expect = f.total[3] - 0.4;
+        assert!((f.evaluate(&s) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn marginal_gain_matches_delta() {
+        let f = gc(15, 0.45, 3);
+        let s = Subset::from_ids(15, &[2, 11]);
+        for e in [0usize, 7, 14] {
+            let delta = f.evaluate(&s.union_with(&[e])) - f.evaluate(&s);
+            assert!((f.marginal_gain(&s, e) - delta).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = gc(20, 0.5, 4);
+        let mut s = Subset::empty(20);
+        f.init_memoization(&s);
+        for &add in &[5usize, 0, 19, 10] {
+            for e in 0..20 {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-6
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn monotone_for_small_lambda() {
+        let f = gc(12, 0.2, 5);
+        let s = Subset::from_ids(12, &[1, 6]);
+        for e in 0..12 {
+            if !s.contains(e) {
+                assert!(f.marginal_gain(&s, e) > -1e-9, "gain({e}) negative");
+            }
+        }
+    }
+
+    #[test]
+    fn high_lambda_can_go_negative() {
+        // duplicate points → adding the twin of a selected point should
+        // hurt at λ close to 1
+        let data = Matrix::from_rows(&[&[0.0, 0.0], &[0.0, 0.0], &[100.0, 100.0]]);
+        let f =
+            GraphCut::new(DenseKernel::from_data(&data, Metric::Euclidean), 1.0).unwrap();
+        let s = Subset::from_ids(3, &[0]);
+        assert!(f.marginal_gain(&s, 1) < 0.0);
+    }
+
+    #[test]
+    fn represented_set_variant() {
+        let u = Matrix::from_rows(&[&[0.0, 0.0]]);
+        let v = Matrix::from_rows(&[&[0.0, 1.0], &[3.0, 4.0]]);
+        let master = RectKernel::from_data(&u, &v, Metric::Euclidean).unwrap();
+        let ground = DenseKernel::from_data(&v, Metric::Euclidean);
+        let f = GraphCut::with_represented(master.clone(), ground.clone(), 0.3).unwrap();
+        let s = Subset::from_ids(2, &[1]);
+        let expect = master.get(0, 1) as f64 - 0.3 * ground.get(1, 1) as f64;
+        assert!((f.evaluate(&s) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn diminishing_returns_spot_check() {
+        let f = gc(15, 0.5, 6);
+        let a = Subset::from_ids(15, &[2]);
+        let b = Subset::from_ids(15, &[2, 8, 12]);
+        for e in [0usize, 5, 14] {
+            assert!(f.marginal_gain(&a, e) >= f.marginal_gain(&b, e) - 1e-9);
+        }
+    }
+}

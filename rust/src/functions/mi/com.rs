@@ -1,0 +1,184 @@
+//! COM — Concave Over Modular mutual information (paper §3.6, Table 1):
+//!
+//! ```text
+//! I(A;Q) = η Σ_{i∈A} ψ(Σ_{j∈Q} S_ij) + Σ_{j∈Q} ψ(Σ_{i∈A} S_ij)
+//! ```
+//!
+//! ψ concave (log / sqrt / inverse, as in FeatureBased). The first term is
+//! modular (precomputed); the second term's memoization (Table 4 row 4)
+//! is the per-query accumulated sum `Σ_{i∈A} S_ij`.
+
+use std::sync::Arc;
+
+use crate::error::{Result, SubmodError};
+use crate::functions::feature_based::ConcaveShape;
+use crate::functions::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::RectKernel;
+
+/// COM mutual-information function. See module docs.
+#[derive(Clone)]
+pub struct ConcaveOverModular {
+    /// Q × V kernel
+    kernel: Arc<RectKernel>,
+    /// η ψ(Σ_{j∈Q} S_ij) per ground element (modular term, precomputed)
+    modular: Arc<Vec<f64>>,
+    shape: ConcaveShape,
+    eta: f64,
+    /// memoized Σ_{i∈A} S_qi per query q
+    qsum: Vec<f64>,
+}
+
+impl ConcaveOverModular {
+    /// `kernel` rows are queries, cols are ground elements. Kernel values
+    /// must be non-negative (similarities), as ψ's domain is [0, ∞).
+    pub fn new(kernel: RectKernel, eta: f64, shape: ConcaveShape) -> Result<Self> {
+        if eta < 0.0 {
+            return Err(SubmodError::InvalidParam(format!("eta {eta} < 0")));
+        }
+        let nq = kernel.rows();
+        let n = kernel.cols();
+        for q in 0..nq {
+            if kernel.row(q).iter().any(|&s| s < 0.0) {
+                return Err(SubmodError::InvalidParam(
+                    "COM requires non-negative similarities".into(),
+                ));
+            }
+        }
+        let modular: Vec<f64> = (0..n)
+            .map(|i| {
+                let s: f64 = (0..nq).map(|q| kernel.get(q, i) as f64).sum();
+                eta * shape.apply(s)
+            })
+            .collect();
+        Ok(ConcaveOverModular {
+            kernel: Arc::new(kernel),
+            modular: Arc::new(modular),
+            shape,
+            eta,
+            qsum: vec![0.0; nq],
+        })
+    }
+
+    pub fn eta(&self) -> f64 {
+        self.eta
+    }
+}
+
+impl SetFunction for ConcaveOverModular {
+    fn n(&self) -> usize {
+        self.kernel.cols()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        let first: f64 = subset.order().iter().map(|&i| self.modular[i]).sum();
+        let second: f64 = (0..self.kernel.rows())
+            .map(|q| {
+                let s: f64 =
+                    subset.order().iter().map(|&i| self.kernel.get(q, i) as f64).sum();
+                self.shape.apply(s)
+            })
+            .sum();
+        first + second
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for v in &mut self.qsum {
+            *v = 0.0;
+        }
+        let order: Vec<ElementId> = subset.order().to_vec();
+        for e in order {
+            self.update_memoization(e);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        let mut g = self.modular[e];
+        for (q, &acc) in self.qsum.iter().enumerate() {
+            let s = self.kernel.get(q, e) as f64;
+            g += self.shape.apply(acc + s) - self.shape.apply(acc);
+        }
+        g
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        for (q, acc) in self.qsum.iter_mut().enumerate() {
+            *acc += self.kernel.get(q, e) as f64;
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "ConcaveOverModular"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::controlled;
+    use crate::kernel::Metric;
+
+    fn setup(eta: f64, shape: ConcaveShape) -> ConcaveOverModular {
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let k = RectKernel::from_data(&queries, &ground, Metric::Euclidean).unwrap();
+        ConcaveOverModular::new(k, eta, shape).unwrap()
+    }
+
+    #[test]
+    fn empty_zero() {
+        for shape in [ConcaveShape::Log, ConcaveShape::Sqrt, ConcaveShape::Inverse] {
+            assert_eq!(setup(1.0, shape).evaluate(&Subset::empty(46)), 0.0);
+        }
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup(0.6, ConcaveShape::Sqrt);
+        let mut s = Subset::empty(46);
+        f.init_memoization(&s);
+        for &add in &[4usize, 19, 33] {
+            for e in (0..46).step_by(6) {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-9
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn diminishing_returns() {
+        let f = setup(0.0, ConcaveShape::Log);
+        let a = Subset::empty(46);
+        let b = Subset::from_ids(46, &[1, 2, 3]);
+        for e in [0usize, 10, 30] {
+            assert!(f.marginal_gain(&a, e) >= f.marginal_gain(&b, e) - 1e-12);
+        }
+    }
+
+    #[test]
+    fn negative_similarity_rejected() {
+        use crate::linalg::Matrix;
+        let m = Matrix::from_rows(&[&[0.5, -0.1]]);
+        let k = RectKernel::from_matrix(m);
+        assert!(ConcaveOverModular::new(k, 1.0, ConcaveShape::Log).is_err());
+    }
+
+    #[test]
+    fn eta_scales_modular_term() {
+        let f1 = setup(1.0, ConcaveShape::Log);
+        let f2 = setup(2.0, ConcaveShape::Log);
+        let s = Subset::from_ids(46, &[7]);
+        let d1 = f1.evaluate(&s);
+        let d2 = f2.evaluate(&s);
+        // doubling η doubles the modular part only → d2 − d1 = modular(7)
+        assert!((d2 - d1 - f1.modular[7]).abs() < 1e-9);
+    }
+}

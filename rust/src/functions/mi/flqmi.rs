@@ -1,0 +1,212 @@
+//! FLQMI — Facility Location *Variant* Mutual Information (paper §3.5,
+//! Table 1 "FL (v2)"):
+//!
+//! ```text
+//! I(A;Q) = Σ_{i∈Q} max_{j∈A} S_ij + η Σ_{i∈A} max_{j∈Q} S_ij
+//! ```
+//!
+//! Only needs a Q × V kernel, which makes it the cheapest targeted
+//! selection objective in the suite. Unlike FLVMI it never saturates:
+//! the second (modular) term keeps rewarding query-similar picks, with η
+//! trading query coverage against query relevance (Fig 7/10 behaviour:
+//! η = 0 picks one element per query then plateaus; large η turns it into
+//! pure retrieval).
+//!
+//! Memoization (Table 4 row 2): `max_per_query[q] = max_{j∈A} S_qj`; the
+//! modular term's per-element value is precomputed.
+
+use std::sync::Arc;
+
+use crate::functions::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::RectKernel;
+
+/// FLQMI. See module docs.
+#[derive(Clone)]
+pub struct Flqmi {
+    /// Q × V kernel
+    kernel: Arc<RectKernel>,
+    /// η Σ-side modular values: eta * max_{q∈Q} S_qi per ground element i
+    modular: Arc<Vec<f64>>,
+    eta: f64,
+    /// memoized max_{j∈A} S_qj per query q
+    max_per_query: Vec<f32>,
+}
+
+impl Flqmi {
+    /// `kernel` rows are queries, columns are ground elements;
+    /// `eta ≥ 0` is the paper's queryDiversityEta.
+    pub fn new(kernel: RectKernel, eta: f64) -> crate::error::Result<Self> {
+        if eta < 0.0 {
+            return Err(crate::error::SubmodError::InvalidParam(format!(
+                "eta {eta} < 0"
+            )));
+        }
+        let nq = kernel.rows();
+        let n = kernel.cols();
+        let modular: Vec<f64> = (0..n)
+            .map(|i| {
+                eta * (0..nq).map(|q| kernel.get(q, i)).fold(0f32, f32::max) as f64
+            })
+            .collect();
+        Ok(Flqmi {
+            kernel: Arc::new(kernel),
+            modular: Arc::new(modular),
+            eta,
+            max_per_query: vec![0.0; nq],
+        })
+    }
+
+    pub fn eta(&self) -> f64 {
+        self.eta
+    }
+}
+
+impl SetFunction for Flqmi {
+    fn n(&self) -> usize {
+        self.kernel.cols()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        let nq = self.kernel.rows();
+        let mut total = 0f64;
+        for q in 0..nq {
+            total += subset
+                .order()
+                .iter()
+                .map(|&j| self.kernel.get(q, j))
+                .fold(0f32, f32::max) as f64;
+        }
+        total + subset.order().iter().map(|&i| self.modular[i]).sum::<f64>()
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for v in &mut self.max_per_query {
+            *v = 0.0;
+        }
+        let order: Vec<ElementId> = subset.order().to_vec();
+        for e in order {
+            self.update_memoization(e);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        let mut g = self.modular[e];
+        for (q, &mv) in self.max_per_query.iter().enumerate() {
+            let s = self.kernel.get(q, e);
+            if s > mv {
+                g += (s - mv) as f64;
+            }
+        }
+        g
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        for (q, mv) in self.max_per_query.iter_mut().enumerate() {
+            let s = self.kernel.get(q, e);
+            if s > *mv {
+                *mv = s;
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "FLQMI"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::controlled;
+    use crate::kernel::Metric;
+
+    fn setup(eta: f64) -> Flqmi {
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let k = RectKernel::from_data(&queries, &ground, Metric::Euclidean).unwrap();
+        Flqmi::new(k, eta).unwrap()
+    }
+
+    #[test]
+    fn empty_zero() {
+        assert_eq!(setup(1.0).evaluate(&Subset::empty(46)), 0.0);
+    }
+
+    #[test]
+    fn negative_eta_rejected() {
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let k = RectKernel::from_data(&queries, &ground, Metric::Euclidean).unwrap();
+        assert!(Flqmi::new(k, -0.5).is_err());
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup(0.8);
+        let mut s = Subset::empty(46);
+        f.init_memoization(&s);
+        for &add in &[0usize, 20, 44] {
+            for e in (0..46).step_by(5) {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-6
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn eta_zero_saturates_after_one_per_query() {
+        // paper Fig 7: at η=0, one query-relevant pick per query, then all
+        // remaining gains are (near) zero
+        let mut f = setup(0.0);
+        f.init_memoization(&Subset::empty(46));
+        // greedily take 2 elements (= number of queries)
+        for _ in 0..2 {
+            let best = (0..46)
+                .max_by(|&a, &b| {
+                    f.marginal_gain_memoized(a)
+                        .partial_cmp(&f.marginal_gain_memoized(b))
+                        .unwrap()
+                })
+                .unwrap();
+            f.update_memoization(best);
+        }
+        let residual = (0..46)
+            .map(|e| f.marginal_gain_memoized(e))
+            .fold(f64::MIN, f64::max);
+        assert!(residual < 0.05, "not saturated: residual max gain {residual}");
+    }
+
+    #[test]
+    fn higher_eta_boosts_query_relevant_gains() {
+        let f0 = setup(0.0);
+        let f2 = setup(2.0);
+        let s = Subset::empty(46);
+        // element 0 is a cluster-0 center, near query 0
+        assert!(f2.marginal_gain(&s, 0) > f0.marginal_gain(&s, 0));
+    }
+
+    #[test]
+    fn matches_definition_by_hand() {
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let k = RectKernel::from_data(&queries, &ground, Metric::Euclidean).unwrap();
+        let f = Flqmi::new(k.clone(), 0.7).unwrap();
+        let ids = [3usize, 17, 40];
+        let s = Subset::from_ids(46, &ids);
+        let mut expect = 0f64;
+        for q in 0..2 {
+            expect += ids.iter().map(|&j| k.get(q, j)).fold(0f32, f32::max) as f64;
+        }
+        for &i in &ids {
+            expect += 0.7 * (0..2).map(|q| k.get(q, i)).fold(0f32, f32::max) as f64;
+        }
+        assert!((f.evaluate(&s) - expect).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,237 @@
+//! FLVMI — Facility Location Mutual Information over V (paper §3.5,
+//! Table 1 "FL (v1)"):
+//!
+//! ```text
+//! I(A;Q) = Σ_{i∈V} min(max_{j∈A} S_ij, η max_{j∈Q} S_ij)
+//! ```
+//!
+//! Saturating behaviour: once the query influence is matched
+//! (max_{j∈A} ≥ η max_{j∈Q}) a ground row contributes nothing more — the
+//! qualitative contrast with FLQMI in the paper's Fig 7 discussion.
+//!
+//! Memoization (Table 4 row 1): `max_vec[i] = max_{j∈A} S_ij`; the query
+//! side `η max_{j∈Q} S_ij` is a precomputed constant vector.
+
+use std::sync::Arc;
+
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::{DenseKernel, RectKernel};
+
+/// FLVMI. See module docs.
+#[derive(Clone)]
+pub struct Flvmi {
+    /// V × V kernel
+    ground: Arc<DenseKernel>,
+    /// η · max_{j∈Q} S_ij per ground row i (precomputed)
+    qcap: Arc<Vec<f32>>,
+    eta: f64,
+    /// memoized max_{j∈A} S_ij
+    max_vec: Vec<f32>,
+}
+
+impl Flvmi {
+    /// `ground` is the V×V kernel; `queries` is the Q×V kernel;
+    /// `eta ≥ 0` (paper's magnificationEta).
+    pub fn new(ground: DenseKernel, queries: RectKernel, eta: f64) -> Result<Self> {
+        if eta < 0.0 {
+            return Err(SubmodError::InvalidParam(format!("eta {eta} < 0")));
+        }
+        if queries.cols() != ground.n() {
+            return Err(SubmodError::Shape(format!(
+                "query kernel cols {} vs ground n {}",
+                queries.cols(),
+                ground.n()
+            )));
+        }
+        let n = ground.n();
+        let nq = queries.rows();
+        let qcap: Vec<f32> = (0..n)
+            .map(|i| {
+                eta as f32 * (0..nq).map(|q| queries.get(q, i)).fold(0f32, f32::max)
+            })
+            .collect();
+        Ok(Flvmi {
+            ground: Arc::new(ground),
+            qcap: Arc::new(qcap),
+            eta,
+            max_vec: vec![0.0; n],
+        })
+    }
+
+    pub fn eta(&self) -> f64 {
+        self.eta
+    }
+}
+
+impl SetFunction for Flvmi {
+    fn n(&self) -> usize {
+        self.ground.n()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        (0..self.ground.n())
+            .map(|i| {
+                let ma = subset
+                    .order()
+                    .iter()
+                    .map(|&j| self.ground.get(i, j))
+                    .fold(0f32, f32::max);
+                ma.min(self.qcap[i]) as f64
+            })
+            .sum()
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for v in &mut self.max_vec {
+            *v = 0.0;
+        }
+        let order: Vec<ElementId> = subset.order().to_vec();
+        for e in order {
+            self.update_memoization(e);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        // symmetric kernel: row e read contiguously (s_ie == s_ei)
+        let row = self.ground.row(e);
+        let mut g = 0f64;
+        for i in 0..row.len() {
+            let mv = self.max_vec[i];
+            let cap = self.qcap[i];
+            let s = row[i];
+            let before = mv.min(cap);
+            let after = mv.max(s).min(cap);
+            g += (after - before) as f64;
+        }
+        g
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        let row = self.ground.row(e);
+        for (mv, &s) in self.max_vec.iter_mut().zip(row) {
+            if s > *mv {
+                *mv = s;
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "FLVMI"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::controlled;
+    use crate::kernel::Metric;
+
+    fn setup(eta: f64) -> Flvmi {
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let g = DenseKernel::from_data(&ground, Metric::Euclidean);
+        let q = RectKernel::from_data(&queries, &ground, Metric::Euclidean).unwrap();
+        Flvmi::new(g, q, eta).unwrap()
+    }
+
+    #[test]
+    fn empty_zero() {
+        assert_eq!(setup(1.0).evaluate(&Subset::empty(46)), 0.0);
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup(1.0);
+        let mut s = Subset::empty(46);
+        f.init_memoization(&s);
+        for &add in &[5usize, 30, 43] {
+            for e in (0..46).step_by(7) {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-5
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn value_capped_by_eta_query_term() {
+        // f(A) ≤ Σ_i η max_q S_iq for any A
+        let f = setup(0.5);
+        let cap: f64 = f.qcap.iter().map(|&c| c as f64).sum();
+        let all = Subset::from_ids(46, &(0..46).collect::<Vec<_>>());
+        assert!(f.evaluate(&all) <= cap + 1e-6);
+    }
+
+    #[test]
+    fn eta_zero_is_identically_zero() {
+        let f = setup(0.0);
+        let s = Subset::from_ids(46, &[0, 10, 20]);
+        assert!(f.evaluate(&s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_gains_nonnegative() {
+        let mut f = setup(1.0);
+        f.init_memoization(&Subset::empty(46));
+        f.update_memoization(3);
+        for e in (0..46).step_by(5) {
+            assert!(f.marginal_gain_memoized(e) >= -1e-9);
+        }
+    }
+
+    #[test]
+    fn matches_generic_mi_on_extended_kernel() {
+        // FLVMI(A;Q) with η=1 must equal generic MI over FL on V∪Q with
+        // the concatenated kernel (paper: FLVMI *is* FL's MI; [25])
+        use crate::functions::facility_location::FacilityLocation;
+        use crate::functions::generic::MutualInformation;
+        use crate::linalg::Matrix;
+
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let n = ground.rows();
+        let nq = queries.rows();
+        // stacked data → extended kernel
+        let mut all = Matrix::zeros(n + nq, 2);
+        for i in 0..n {
+            all.row_mut(i).copy_from_slice(ground.row(i));
+        }
+        for q in 0..nq {
+            all.row_mut(n + q).copy_from_slice(queries.row(q));
+        }
+        let ext = DenseKernel::from_data(&all, Metric::Euclidean);
+        // generic MI over FL restricted to represented set V:
+        // FL's represented set must stay V for the identity to hold
+        let rect = crate::kernel::RectKernel::from_matrix({
+            let mut m = Matrix::zeros(n, n + nq);
+            for i in 0..n {
+                for j in 0..n + nq {
+                    m.set(i, j, ext.get(i, j));
+                }
+            }
+            m
+        });
+        let base = FacilityLocation::with_represented(rect);
+        let gen = MutualInformation::new(
+            Box::new(base),
+            (n..n + nq).collect(),
+            n,
+        )
+        .unwrap();
+        let fast = setup(1.0);
+        for ids in [vec![], vec![0usize], vec![3, 17], vec![1, 20, 40]] {
+            let s = Subset::from_ids(n, &ids);
+            let a = gen.evaluate(&s);
+            let b = fast.evaluate(&s);
+            assert!((a - b).abs() < 1e-5, "{ids:?}: generic {a} vs fast {b}");
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! GCMI — Graph Cut Mutual Information (paper §3.7, Table 1 row GC):
+//!
+//! ```text
+//! I(A;Q) = 2λ Σ_{i∈A} Σ_{j∈Q} S_ij
+//! ```
+//!
+//! A purely *modular* retrieval objective: maximizing it picks the
+//! elements most similar to the query set with no diversity pressure
+//! (Fig 8 behaviour). Memoization (Table 4 row 3) is the running sum —
+//! each per-element query affinity is precomputed once.
+
+use std::sync::Arc;
+
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::{ElementId, SetFunction, Subset};
+use crate::kernel::RectKernel;
+
+/// GCMI. See module docs.
+#[derive(Clone)]
+pub struct Gcmi {
+    /// 2λ Σ_{j∈Q} S_ij per ground element i
+    affinity: Arc<Vec<f64>>,
+    lambda: f64,
+    /// memoized running Σ over A (only needed for evaluate-of-state)
+    total: f64,
+}
+
+impl Gcmi {
+    /// `kernel` rows are queries, columns are ground elements.
+    pub fn new(kernel: RectKernel, lambda: f64) -> Result<Self> {
+        if lambda <= 0.0 {
+            return Err(SubmodError::InvalidParam(format!("lambda {lambda} must be > 0")));
+        }
+        let n = kernel.cols();
+        let nq = kernel.rows();
+        let affinity: Vec<f64> = (0..n)
+            .map(|i| 2.0 * lambda * (0..nq).map(|q| kernel.get(q, i) as f64).sum::<f64>())
+            .collect();
+        Ok(Gcmi { affinity: Arc::new(affinity), lambda, total: 0.0 })
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+}
+
+impl SetFunction for Gcmi {
+    fn n(&self) -> usize {
+        self.affinity.len()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        subset.order().iter().map(|&i| self.affinity[i]).sum()
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        self.total = self.evaluate(subset);
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        self.affinity[e]
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        self.total += self.affinity[e];
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "GCMI"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::controlled;
+    use crate::kernel::Metric;
+
+    fn setup() -> Gcmi {
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let k = RectKernel::from_data(&queries, &ground, Metric::Euclidean).unwrap();
+        Gcmi::new(k, 0.5).unwrap()
+    }
+
+    #[test]
+    fn modular_additivity() {
+        let f = setup();
+        let a = Subset::from_ids(46, &[1]);
+        let b = Subset::from_ids(46, &[2]);
+        let ab = Subset::from_ids(46, &[1, 2]);
+        assert!((f.evaluate(&ab) - f.evaluate(&a) - f.evaluate(&b)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gain_is_independent_of_set() {
+        let f = setup();
+        let empty = Subset::empty(46);
+        let big = Subset::from_ids(46, &[0, 10, 20, 30]);
+        for e in [5usize, 15, 40] {
+            assert!((f.marginal_gain(&empty, e) - f.marginal_gain(&big, e)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = setup();
+        f.init_memoization(&Subset::empty(46));
+        for e in (0..46).step_by(9) {
+            assert!(
+                (f.marginal_gain_memoized(e) - f.marginal_gain(&Subset::empty(46), e)).abs()
+                    < 1e-9
+            );
+        }
+    }
+
+    #[test]
+    fn prefers_query_adjacent_elements() {
+        // element 0 (cluster-0 center, near query 0) must beat an outlier
+        let f = setup();
+        let s = Subset::empty(46);
+        assert!(f.marginal_gain(&s, 0) > f.marginal_gain(&s, 42));
+    }
+
+    #[test]
+    fn invalid_lambda_rejected() {
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        let k = RectKernel::from_data(&queries, &ground, Metric::Euclidean).unwrap();
+        assert!(Gcmi::new(k, 0.0).is_err());
+    }
+}

@@ -1,0 +1,29 @@
+//! Specialized Submodular Mutual Information instantiations (paper §3.4–
+//! §3.7 and Table 1, column "MI"), used for query-focused / targeted
+//! subset selection and summarization.
+//!
+//! | name | expression (Table 1) | module |
+//! |------|----------------------|--------|
+//! | FLVMI | Σ_{i∈V} min(max_{j∈A} S_ij, η max_{j∈Q} S_ij) | [`flvmi`] |
+//! | FLQMI | Σ_{i∈Q} max_{j∈A} S_ij + η Σ_{i∈A} max_{j∈Q} S_ij | [`flqmi`] |
+//! | GCMI  | 2λ Σ_{i∈A} Σ_{j∈Q} S_ij | [`gcmi`] |
+//! | COM   | η Σ_{i∈A} ψ(Σ_{j∈Q} S_ij) + Σ_{j∈Q} ψ(Σ_{i∈A} S_ij) | [`com`] |
+//! | LogDetMI | via generic MI over an η-scaled extended kernel | [`logdetmi`] |
+//! | SCMI  | w(γ(A) ∩ γ(Q)) — Set Cover with filtered concepts | [`scmi()`](scmi::scmi) |
+//! | PSCMI | PSC with query-restricted weights | [`pscmi()`](pscmi::pscmi) |
+
+pub mod com;
+pub mod flqmi;
+pub mod flvmi;
+pub mod gcmi;
+pub mod logdetmi;
+pub mod pscmi;
+pub mod scmi;
+
+pub use com::ConcaveOverModular;
+pub use flqmi::Flqmi;
+pub use flvmi::Flvmi;
+pub use gcmi::Gcmi;
+pub use logdetmi::LogDetMi;
+pub use pscmi::pscmi;
+pub use scmi::scmi;

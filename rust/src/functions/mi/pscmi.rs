@@ -1,0 +1,66 @@
+//! PSCMI — Probabilistic Set Cover Mutual Information (paper §5.2.2,
+//! Table 1):
+//!
+//! ```text
+//! I(A;Q) = Σ_u w_u · P̄_u(A) · P̄_u(Q)
+//! ```
+//!
+//! where P̄_u(X) = 1 − Π_{x∈X}(1 − p_xu). Reduction: PSC with weights
+//! scaled by the query coverage probability `P̄_u(Q)` (generalizing the
+//! paper's binary "zero the weights of concepts not in the query set").
+
+use crate::error::Result;
+use crate::functions::prob_set_cover::ProbabilisticSetCover;
+
+/// Build PSCMI from a base PSC and the query items' probability rows
+/// (`query_probs[j][u]` = probability query item j covers concept u).
+pub fn pscmi(
+    base: &ProbabilisticSetCover,
+    query_probs: &[Vec<f32>],
+) -> Result<ProbabilisticSetCover> {
+    base.with_reweighted(|u| {
+        1.0 - ProbabilisticSetCover::survival_product(query_probs, u)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::traits::{SetFunction, Subset};
+
+    fn base() -> ProbabilisticSetCover {
+        ProbabilisticSetCover::new(
+            vec![vec![0.9, 0.2], vec![0.1, 0.8]],
+            vec![1.0, 2.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn matches_table1_formula() {
+        let qp = vec![vec![0.5f32, 0.0]];
+        let f = pscmi(&base(), &qp).unwrap();
+        // A = {0}: Σ_u w_u P̄_u(A) P̄_u(Q)
+        // u=0: 1.0 · 0.9 · 0.5 ; u=1: 2.0 · 0.2 · 0.0
+        let s = Subset::from_ids(2, &[0]);
+        assert!((f.evaluate(&s) - 0.45).abs() < 1e-6);
+    }
+
+    #[test]
+    fn binary_query_matches_paper_reduction() {
+        // query covering concept 1 with p=1 (binary): weights of concepts
+        // not in the query drop to zero
+        let qp = vec![vec![0.0f32, 1.0]];
+        let f = pscmi(&base(), &qp).unwrap();
+        let s = Subset::from_ids(2, &[0, 1]);
+        // only concept 1 counts: w=2, P̄_1(A) = 1 − (1−0.2)(1−0.8) = 0.84
+        assert!((f.evaluate(&s) - 2.0 * 0.84).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_query_zeroes() {
+        let f = pscmi(&base(), &[]).unwrap();
+        let s = Subset::from_ids(2, &[0, 1]);
+        assert!(f.evaluate(&s).abs() < 1e-12);
+    }
+}

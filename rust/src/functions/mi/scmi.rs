@@ -1,0 +1,67 @@
+//! SCMI — Set Cover Mutual Information (paper §5.2.2, Table 1):
+//!
+//! ```text
+//! I(A;Q) = w(γ(A) ∩ γ(Q))
+//! ```
+//!
+//! "essentially the same as Set Cover with [each element's] cover set
+//! modified to contain only those concepts which are in the query set" —
+//! implemented as exactly that reduction via
+//! [`SetCover::with_concept_filter`].
+
+use crate::error::Result;
+use crate::functions::set_cover::SetCover;
+
+/// Build SCMI from a base SetCover and the concept set covered by the
+/// query, `gamma_q` (concept ids).
+pub fn scmi(base: &SetCover, gamma_q: &[u32]) -> Result<SetCover> {
+    let keep: std::collections::HashSet<u32> = gamma_q.iter().copied().collect();
+    Ok(base.with_concept_filter(|u| keep.contains(&u)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::traits::{SetFunction, Subset};
+
+    fn base() -> SetCover {
+        SetCover::new(
+            vec![vec![0, 1], vec![1, 2], vec![2, 3], vec![3]],
+            vec![1.0, 2.0, 4.0, 8.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn only_query_concepts_count() {
+        let f = scmi(&base(), &[1, 2]).unwrap();
+        // A = {0, 3}: γ(A) = {0,1,3}; ∩ γ(Q)={1,2} → {1} → w=2
+        let s = Subset::from_ids(4, &[0, 3]);
+        assert_eq!(f.evaluate(&s), 2.0);
+    }
+
+    #[test]
+    fn equals_definition_for_all_singletons() {
+        let b = base();
+        let gq = [0u32, 2];
+        let f = scmi(&b, &gq).unwrap();
+        for e in 0..4 {
+            let s = Subset::from_ids(4, &[e]);
+            // w(γ({e}) ∩ γ(Q)) by hand
+            let concepts = b.concepts_of(&[e]).unwrap();
+            let expect: f64 = concepts
+                .iter()
+                .filter(|u| gq.contains(u))
+                .map(|&u| [1.0, 2.0, 4.0, 8.0][u as usize])
+                .sum();
+            assert_eq!(f.evaluate(&s), expect);
+        }
+    }
+
+    #[test]
+    fn empty_query_zeroes_function() {
+        let f = scmi(&base(), &[]).unwrap();
+        let s = Subset::from_ids(4, &[0, 1, 2, 3]);
+        assert_eq!(f.evaluate(&s), 0.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Weighted mixtures of set functions — submodular mixtures in the sense
+//! of Lin & Bilmes 2012 / Gygli et al. 2015 (both cited by the paper as
+//! primary applications): `f(X) = Σ_k w_k f_k(X)`, w_k ≥ 0.
+//!
+//! A nonnegative combination of submodular functions is submodular, so the
+//! mixture composes with every optimizer; its memoization simply fans out.
+
+use super::traits::{ElementId, SetFunction, Subset};
+use crate::error::{Result, SubmodError};
+
+/// `Σ_k w_k f_k` over a shared ground set.
+pub struct Mixture {
+    parts: Vec<(f64, Box<dyn SetFunction>)>,
+    n: usize,
+}
+
+impl Mixture {
+    pub fn new(parts: Vec<(f64, Box<dyn SetFunction>)>) -> Result<Self> {
+        if parts.is_empty() {
+            return Err(SubmodError::InvalidParam("empty mixture".into()));
+        }
+        if parts.iter().any(|(w, _)| *w < 0.0) {
+            return Err(SubmodError::InvalidParam("negative mixture weight".into()));
+        }
+        let n = parts[0].1.n();
+        if parts.iter().any(|(_, f)| f.n() != n) {
+            return Err(SubmodError::Shape("mixture components disagree on n".into()));
+        }
+        Ok(Mixture { parts, n })
+    }
+}
+
+impl Clone for Mixture {
+    fn clone(&self) -> Self {
+        Mixture {
+            parts: self.parts.iter().map(|(w, f)| (*w, f.clone_box())).collect(),
+            n: self.n,
+        }
+    }
+}
+
+impl SetFunction for Mixture {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        self.parts.iter().map(|(w, f)| w * f.evaluate(subset)).sum()
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for (_, f) in &mut self.parts {
+            f.init_memoization(subset);
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        self.parts.iter().map(|(w, f)| w * f.marginal_gain_memoized(e)).sum()
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        for (_, f) in &mut self.parts {
+            f.update_memoization(e);
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "Mixture"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::functions::facility_location::FacilityLocation;
+    use crate::functions::graph_cut::GraphCut;
+    use crate::kernel::{DenseKernel, Metric};
+
+    fn mix(n: usize, seed: u64) -> Mixture {
+        let data = synthetic::blobs(n, 2, 3, 1.0, seed);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        Mixture::new(vec![
+            (0.7, Box::new(FacilityLocation::new(k.clone()))),
+            (0.3, Box::new(GraphCut::new(k, 0.4).unwrap())),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn weighted_sum_of_parts() {
+        let data = synthetic::blobs(10, 2, 2, 1.0, 1);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        let fl = FacilityLocation::new(k.clone());
+        let gc = GraphCut::new(k.clone(), 0.4).unwrap();
+        let m = Mixture::new(vec![(0.7, fl.clone_box()), (0.3, gc.clone_box())]).unwrap();
+        let s = Subset::from_ids(10, &[2, 7]);
+        let expect = 0.7 * fl.evaluate(&s) + 0.3 * gc.evaluate(&s);
+        assert!((m.evaluate(&s) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut m = mix(12, 2);
+        let mut s = Subset::empty(12);
+        m.init_memoization(&s);
+        for &add in &[1usize, 8] {
+            for e in 0..12 {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (m.marginal_gain_memoized(e) - m.marginal_gain(&s, e)).abs() < 1e-6
+                );
+            }
+            m.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn validation() {
+        let data = synthetic::blobs(5, 2, 2, 1.0, 3);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        assert!(Mixture::new(vec![]).is_err());
+        assert!(Mixture::new(vec![(
+            -0.5,
+            Box::new(FacilityLocation::new(k.clone())) as Box<dyn SetFunction>
+        )])
+        .is_err());
+        let data2 = synthetic::blobs(6, 2, 2, 1.0, 3);
+        let k2 = DenseKernel::from_data(&data2, Metric::Euclidean);
+        assert!(Mixture::new(vec![
+            (0.5, Box::new(FacilityLocation::new(k)) as Box<dyn SetFunction>),
+            (0.5, Box::new(FacilityLocation::new(k2)) as Box<dyn SetFunction>),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn clone_box_independent_state() {
+        let mut m = mix(8, 4);
+        m.init_memoization(&Subset::empty(8));
+        let mut c = m.clone_box();
+        m.update_memoization(0);
+        // clone's memoization unaffected by original's update
+        c.init_memoization(&Subset::empty(8));
+        assert!((c.marginal_gain_memoized(0) - {
+            let fresh = mix(8, 4);
+            fresh.marginal_gain(&Subset::empty(8), 0)
+        })
+        .abs()
+            < 1e-9);
+    }
+}

@@ -1,0 +1,29 @@
+//! The function suite (paper §2, §3, §5.2 and Table 1).
+//!
+//! * Regular submodular functions: [`facility_location`], [`graph_cut`],
+//!   [`log_determinant`], [`set_cover`], [`prob_set_cover`],
+//!   [`feature_based`], [`disparity_sum`], [`disparity_min`], plus the
+//!   [`clustered`] wrapper and weighted [`mixture`]s.
+//! * Submodular information measures: specialized MI / CG / CMI
+//!   instantiations in [`mi`], [`cg`], [`cmi`], and the [`generic`]
+//!   wrappers that lift *any* `SetFunction` into I_f(A;Q), f(A|P),
+//!   I_f(A;Q|P) exactly as §3 defines them.
+
+pub mod cg;
+pub mod clustered;
+pub mod cmi;
+pub mod disparity_min;
+pub mod disparity_min_sum;
+pub mod disparity_sum;
+pub mod facility_location;
+pub mod feature_based;
+pub mod generic;
+pub mod graph_cut;
+pub mod log_determinant;
+pub mod mi;
+pub mod mixture;
+pub mod prob_set_cover;
+pub mod set_cover;
+pub mod traits;
+
+pub use traits::{ElementId, SetFunction, Subset};

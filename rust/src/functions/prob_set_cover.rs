@@ -1,0 +1,226 @@
+//! Probabilistic Set Cover (paper §2.3.2):
+//!
+//! ```text
+//! f_PSC(X) = Σ_{u∈C} w_u (1 − Π_{x∈X} (1 − p_xu))
+//! ```
+//!
+//! The stochastic softening of Set Cover. Memoization (Table 3 row 5):
+//! `prod[u] = Π_{x∈A} (1 − p_xu)` maintained per concept.
+//!
+//! The MI / CG / CMI instantiations (Table 1 row 2) reduce to PSC with
+//! reweighted concepts:
+//! * PSCMI  — `w_u ← w_u · P̄_u(Q)`··· implemented by zeroing concepts not
+//!   in the query per §5.2.2 (binary query coverage), or generally by
+//!   scaling with `1 − Π_{j∈Q}(1−p_ju)`;
+//! * PSCCG  — `w_u ← w_u · Π_{j∈P}(1−p_ju)`;
+//! * PSCCMI — both.
+//! [`ProbabilisticSetCover::with_reweighted`] provides the scaling hook.
+
+use std::sync::Arc;
+
+use super::traits::{ElementId, SetFunction, Subset};
+use crate::error::{Result, SubmodError};
+
+/// Probabilistic set cover over dense per-item concept probabilities.
+#[derive(Clone)]
+pub struct ProbabilisticSetCover {
+    /// probs[i][u] = probability element i covers concept u
+    probs: Arc<Vec<Vec<f32>>>,
+    weights: Arc<Vec<f64>>,
+    /// memoized Π_{x∈A}(1 − p_xu) per concept u
+    prod: Vec<f64>,
+}
+
+impl ProbabilisticSetCover {
+    pub fn new(probs: Vec<Vec<f32>>, weights: Vec<f64>) -> Result<Self> {
+        let m = weights.len();
+        if weights.iter().any(|&w| w < 0.0) {
+            return Err(SubmodError::InvalidParam("negative concept weight".into()));
+        }
+        for (i, row) in probs.iter().enumerate() {
+            if row.len() != m {
+                return Err(SubmodError::Shape(format!(
+                    "probs[{i}] has {} entries, expected {m}",
+                    row.len()
+                )));
+            }
+            if row.iter().any(|&p| !(0.0..=1.0).contains(&p)) {
+                return Err(SubmodError::InvalidParam(format!("probs[{i}] outside [0,1]")));
+            }
+        }
+        Ok(ProbabilisticSetCover {
+            probs: Arc::new(probs),
+            weights: Arc::new(weights),
+            prod: vec![1.0; m],
+        })
+    }
+
+    /// Reweight concepts (the PSCMI / PSCCG / PSCCMI reduction).
+    pub fn with_reweighted(&self, scale: impl Fn(usize) -> f64) -> Result<Self> {
+        let weights: Vec<f64> =
+            (0..self.weights.len()).map(|u| self.weights[u] * scale(u)).collect();
+        if weights.iter().any(|&w| w < 0.0) {
+            return Err(SubmodError::InvalidParam("reweight produced negative weight".into()));
+        }
+        Ok(ProbabilisticSetCover {
+            probs: self.probs.clone(),
+            weights: Arc::new(weights),
+            prod: vec![1.0; self.weights.len()],
+        })
+    }
+
+    /// `Π_{j∈ids}(1 − p_ju)` for an external item set with the given probs
+    /// — helper for building the CG/CMI reweightings from private/query
+    /// item probability rows.
+    pub fn survival_product(rows: &[Vec<f32>], u: usize) -> f64 {
+        rows.iter().map(|r| (1.0 - r[u] as f64).max(0.0)).product()
+    }
+
+    pub fn n_concepts(&self) -> usize {
+        self.weights.len()
+    }
+}
+
+impl SetFunction for ProbabilisticSetCover {
+    fn n(&self) -> usize {
+        self.probs.len()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        let m = self.weights.len();
+        let mut total = 0f64;
+        for u in 0..m {
+            let surv: f64 =
+                subset.order().iter().map(|&i| 1.0 - self.probs[i][u] as f64).product();
+            total += self.weights[u] * (1.0 - surv);
+        }
+        total
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for p in &mut self.prod {
+            *p = 1.0;
+        }
+        for &i in subset.order() {
+            for (u, p) in self.prod.iter_mut().enumerate() {
+                *p *= 1.0 - self.probs[i][u] as f64;
+            }
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        // Δ = Σ_u w_u · prod[u] · p_eu
+        let row = &self.probs[e];
+        self.prod
+            .iter()
+            .zip(self.weights.iter())
+            .zip(row.iter())
+            .map(|((pr, w), p)| w * pr * *p as f64)
+            .sum()
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        let row = &self.probs[e];
+        for (p, pe) in self.prod.iter_mut().zip(row.iter()) {
+            *p *= 1.0 - *pe as f64;
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "ProbabilisticSetCover"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn psc() -> ProbabilisticSetCover {
+        ProbabilisticSetCover::new(
+            vec![
+                vec![0.9, 0.1, 0.0],
+                vec![0.2, 0.8, 0.3],
+                vec![0.0, 0.0, 1.0],
+            ],
+            vec![1.0, 2.0, 3.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_zero() {
+        assert_eq!(psc().evaluate(&Subset::empty(3)), 0.0);
+    }
+
+    #[test]
+    fn deterministic_coverage() {
+        // element 2 covers concept 2 with p=1 → value includes full w=3
+        let f = psc();
+        let s = Subset::from_ids(3, &[2]);
+        assert!((f.evaluate(&s) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_formula() {
+        let f = psc();
+        let s = Subset::from_ids(3, &[0, 1]);
+        let expect = 1.0 * (1.0 - (1.0 - 0.9) * (1.0 - 0.2))
+            + 2.0 * (1.0 - (1.0 - 0.1) * (1.0 - 0.8))
+            + 3.0 * (1.0 - (1.0 - 0.0) * (1.0 - 0.3));
+        assert!((f.evaluate(&s) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = psc();
+        let mut s = Subset::empty(3);
+        f.init_memoization(&s);
+        for &add in &[1usize, 0] {
+            for e in 0..3 {
+                if s.contains(e) {
+                    continue;
+                }
+                assert!(
+                    (f.marginal_gain_memoized(e) - f.marginal_gain(&s, e)).abs() < 1e-9
+                );
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn validation() {
+        assert!(ProbabilisticSetCover::new(vec![vec![0.5]], vec![-1.0]).is_err());
+        assert!(ProbabilisticSetCover::new(vec![vec![1.5]], vec![1.0]).is_err());
+        assert!(ProbabilisticSetCover::new(vec![vec![0.5, 0.5]], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn reweighting_scales_value() {
+        let f = psc();
+        let g = f.with_reweighted(|u| if u == 2 { 0.0 } else { 1.0 }).unwrap();
+        let s = Subset::from_ids(3, &[2]);
+        assert!(g.evaluate(&s).abs() < 1e-9); // only covered concept zeroed
+    }
+
+    #[test]
+    fn survival_product_helper() {
+        let rows = vec![vec![0.5f32, 0.0], vec![0.5, 1.0]];
+        assert!((ProbabilisticSetCover::survival_product(&rows, 0) - 0.25).abs() < 1e-9);
+        assert!(ProbabilisticSetCover::survival_product(&rows, 1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_submodular_spot() {
+        let f = psc();
+        let a = Subset::from_ids(3, &[0]);
+        let b = Subset::from_ids(3, &[0, 2]);
+        assert!(f.marginal_gain(&a, 1) >= f.marginal_gain(&b, 1) - 1e-12);
+        assert!(f.marginal_gain(&b, 1) >= 0.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Set Cover (paper §2.3.1):
+//!
+//! ```text
+//! f_SC(X) = w(γ(X)) = Σ_{u∈C} w_u · min(c_u(X), 1)
+//! ```
+//!
+//! Each ground element covers a set of concepts; the function value is the
+//! total weight of covered concepts. Memoization (Table 3 row 4): the set
+//! of covered concepts, as a bitmap.
+//!
+//! The MI / CG / CMI instantiations (SCMI, SCCG, SCCMI — Table 1 row 1)
+//! reduce to Set Cover with *filtered cover sets* (paper §5.2.2–5.2.4);
+//! [`SetCover::with_concept_filter`] implements that reduction.
+
+use std::sync::Arc;
+
+use super::traits::{check_ids, ElementId, SetFunction, Subset};
+use crate::error::{Result, SubmodError};
+
+/// Weighted set-cover function.
+#[derive(Clone)]
+pub struct SetCover {
+    /// cover[i] = concepts covered by ground element i (sorted, deduped)
+    cover: Arc<Vec<Vec<u32>>>,
+    /// concept weights
+    weights: Arc<Vec<f64>>,
+    /// memoized: concept → already covered?
+    covered: Vec<bool>,
+}
+
+impl SetCover {
+    /// `cover[i]` lists the concept ids covered by element i; `weights[u]`
+    /// is the weight of concept u.
+    pub fn new(cover: Vec<Vec<u32>>, weights: Vec<f64>) -> Result<Self> {
+        let n_concepts = weights.len();
+        if weights.iter().any(|&w| w < 0.0) {
+            return Err(SubmodError::InvalidParam("negative concept weight".into()));
+        }
+        let mut cover = cover;
+        for c in &mut cover {
+            c.sort_unstable();
+            c.dedup();
+            if c.iter().any(|&u| u as usize >= n_concepts) {
+                return Err(SubmodError::InvalidParam(format!(
+                    "concept id exceeds weight vector ({n_concepts})"
+                )));
+            }
+        }
+        Ok(SetCover {
+            cover: Arc::new(cover),
+            weights: Arc::new(weights),
+            covered: vec![false; n_concepts],
+        })
+    }
+
+    /// The SCMI / SCCG / SCCMI reduction: keep only concepts for which
+    /// `keep(u)` is true (e.g. `u ∈ γ(Q)`, `u ∉ γ(P)`, or both), zeroing
+    /// the rest out of every cover set.
+    pub fn with_concept_filter(&self, keep: impl Fn(u32) -> bool) -> SetCover {
+        let cover: Vec<Vec<u32>> = self
+            .cover
+            .iter()
+            .map(|cs| cs.iter().copied().filter(|&u| keep(u)).collect())
+            .collect();
+        SetCover {
+            cover: Arc::new(cover),
+            weights: self.weights.clone(),
+            covered: vec![false; self.weights.len()],
+        }
+    }
+
+    /// Concepts covered by a set of elements (γ of a subset given as ids).
+    pub fn concepts_of(&self, ids: &[ElementId]) -> Result<Vec<u32>> {
+        check_ids(self.n(), ids)?;
+        let mut out: Vec<u32> = ids.iter().flat_map(|&i| self.cover[i].iter().copied()).collect();
+        out.sort_unstable();
+        out.dedup();
+        Ok(out)
+    }
+
+    pub fn n_concepts(&self) -> usize {
+        self.weights.len()
+    }
+}
+
+impl SetFunction for SetCover {
+    fn n(&self) -> usize {
+        self.cover.len()
+    }
+
+    fn evaluate(&self, subset: &Subset) -> f64 {
+        let mut seen = vec![false; self.weights.len()];
+        let mut total = 0f64;
+        for &i in subset.order() {
+            for &u in &self.cover[i] {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    total += self.weights[u as usize];
+                }
+            }
+        }
+        total
+    }
+
+    fn init_memoization(&mut self, subset: &Subset) {
+        for c in &mut self.covered {
+            *c = false;
+        }
+        for &i in subset.order() {
+            for &u in &self.cover[i] {
+                self.covered[u as usize] = true;
+            }
+        }
+    }
+
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        self.cover[e]
+            .iter()
+            .filter(|&&u| !self.covered[u as usize])
+            .map(|&u| self.weights[u as usize])
+            .sum()
+    }
+
+    fn update_memoization(&mut self, e: ElementId) {
+        for &u in &self.cover[e] {
+            self.covered[u as usize] = true;
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SetFunction> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &'static str {
+        "SetCover"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sc() -> SetCover {
+        SetCover::new(
+            vec![vec![0, 1], vec![1, 2], vec![3], vec![0, 1, 2, 3], vec![]],
+            vec![1.0, 2.0, 4.0, 8.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_zero_and_full() {
+        let f = sc();
+        assert_eq!(f.evaluate(&Subset::empty(5)), 0.0);
+        let full = Subset::from_ids(5, &[0, 1, 2, 3, 4]);
+        assert_eq!(f.evaluate(&full), 15.0);
+    }
+
+    #[test]
+    fn covering_counted_once() {
+        let f = sc();
+        let s = Subset::from_ids(5, &[0, 1]); // covers {0,1,2} = 1+2+4
+        assert_eq!(f.evaluate(&s), 7.0);
+    }
+
+    #[test]
+    fn memoized_matches_stateless() {
+        let mut f = sc();
+        let mut s = Subset::empty(5);
+        f.init_memoization(&s);
+        for &add in &[0usize, 2, 1] {
+            for e in 0..5 {
+                if s.contains(e) {
+                    continue;
+                }
+                assert_eq!(f.marginal_gain_memoized(e), f.marginal_gain(&s, e));
+            }
+            f.update_memoization(add);
+            s.insert(add);
+        }
+    }
+
+    #[test]
+    fn element_with_no_concepts_zero_gain() {
+        let mut f = sc();
+        f.init_memoization(&Subset::empty(5));
+        assert_eq!(f.marginal_gain_memoized(4), 0.0);
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        assert!(SetCover::new(vec![vec![5]], vec![1.0]).is_err());
+        assert!(SetCover::new(vec![vec![0]], vec![-1.0]).is_err());
+    }
+
+    #[test]
+    fn concept_filter_reduction() {
+        let f = sc();
+        // keep only concepts {1, 3} (as SCMI with γ(Q)={1,3})
+        let g = f.with_concept_filter(|u| u == 1 || u == 3);
+        let s = Subset::from_ids(5, &[0, 2]); // covers {0,1} ∪ {3} → kept: {1,3}
+        assert_eq!(g.evaluate(&s), 2.0 + 8.0);
+    }
+
+    #[test]
+    fn concepts_of_unions() {
+        let f = sc();
+        assert_eq!(f.concepts_of(&[0, 2]).unwrap(), vec![0, 1, 3]);
+        assert!(f.concepts_of(&[9]).is_err());
+    }
+
+    #[test]
+    fn monotone_and_submodular_spot() {
+        let f = sc();
+        let a = Subset::from_ids(5, &[0]);
+        let b = Subset::from_ids(5, &[0, 1]);
+        for e in [2usize, 3] {
+            assert!(f.marginal_gain(&a, e) >= f.marginal_gain(&b, e));
+            assert!(f.marginal_gain(&b, e) >= 0.0);
+        }
+    }
+}

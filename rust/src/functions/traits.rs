@@ -1,0 +1,194 @@
+//! The `SetFunction` abstraction — the paper's de-coupled
+//! function / optimizer paradigm (§5.1): "an appropriate function is first
+//! instantiated and then maximize() is called on it".
+//!
+//! Every function exposes two evaluation paths:
+//!
+//! * **stateless** — `evaluate` / `marginal_gain` compute from scratch;
+//!   used by tests, the generic information-measure wrappers, and anywhere
+//!   correctness matters more than speed.
+//! * **memoized** — `init_memoization` / `marginal_gain_memoized` /
+//!   `update_memoization` implement the paper's §6 pre-computed statistics
+//!   (Tables 3–4). This is the path the greedy optimizers drive; the
+//!   proptest suite asserts memoized gains equal stateless gains after any
+//!   update sequence.
+
+use crate::error::Result;
+
+/// Index of an element within the ground set `{0, 1, …, n−1}`.
+pub type ElementId = usize;
+
+/// An ordered subset of the ground set with O(1) membership tests.
+#[derive(Debug, Clone, Default)]
+pub struct Subset {
+    order: Vec<ElementId>,
+    member: Vec<bool>,
+}
+
+impl Subset {
+    /// Empty subset over a ground set of size `n`.
+    pub fn empty(n: usize) -> Self {
+        Subset { order: Vec::new(), member: vec![false; n] }
+    }
+
+    /// Subset from explicit ids (panics on duplicates / out-of-range).
+    pub fn from_ids(n: usize, ids: &[ElementId]) -> Self {
+        let mut s = Subset::empty(n);
+        for &id in ids {
+            s.insert(id);
+        }
+        s
+    }
+
+    /// Add an element (panics if already present or out of range).
+    pub fn insert(&mut self, id: ElementId) {
+        assert!(id < self.member.len(), "element {id} out of range");
+        assert!(!self.member[id], "element {id} already in subset");
+        self.member[id] = true;
+        self.order.push(id);
+    }
+
+    #[inline]
+    pub fn contains(&self, id: ElementId) -> bool {
+        self.member[id]
+    }
+
+    /// Elements in insertion order.
+    #[inline]
+    pub fn order(&self) -> &[ElementId] {
+        &self.order
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Ground-set size this subset indexes into.
+    #[inline]
+    pub fn ground_n(&self) -> usize {
+        self.member.len()
+    }
+
+    /// Union with additional ids (panics on overlap).
+    pub fn union_with(&self, ids: &[ElementId]) -> Subset {
+        let mut s = self.clone();
+        for &id in ids {
+            if !s.contains(id) {
+                s.insert(id);
+            }
+        }
+        s
+    }
+}
+
+/// A set function over a fixed ground set, with the dual stateless /
+/// memoized interface described in the module docs.
+///
+/// Contract the optimizers rely on (and the proptests verify):
+///
+/// 1. `marginal_gain(X, e) == evaluate(X ∪ e) − evaluate(X)` up to float
+///    tolerance;
+/// 2. after `init_memoization(X)` and any sequence of
+///    `update_memoization(e_i)`, `marginal_gain_memoized(e)` equals
+///    `marginal_gain(X ∪ {e_i…}, e)`;
+/// 3. `clone_box` yields an independent instance (memoization state is
+///    *not* shared).
+pub trait SetFunction: Send {
+    /// Ground-set size n.
+    fn n(&self) -> usize;
+
+    /// f(X), computed from scratch.
+    fn evaluate(&self, subset: &Subset) -> f64;
+
+    /// f(X ∪ {e}) − f(X), computed from scratch.
+    fn marginal_gain(&self, subset: &Subset, e: ElementId) -> f64 {
+        let with = subset.union_with(&[e]);
+        self.evaluate(&with) - self.evaluate(subset)
+    }
+
+    /// Reset memoized statistics to represent `subset`.
+    fn init_memoization(&mut self, subset: &Subset);
+
+    /// Marginal gain of `e` w.r.t. the memoized subset.
+    fn marginal_gain_memoized(&self, e: ElementId) -> f64;
+
+    /// Commit `e` into the memoized subset.
+    fn update_memoization(&mut self, e: ElementId);
+
+    /// Independent clone (for optimizers that fork state, the generic
+    /// wrappers, and the coordinator's per-worker copies).
+    fn clone_box(&self) -> Box<dyn SetFunction>;
+
+    /// Human-readable name (metrics, verbose optimizer traces).
+    fn name(&self) -> &'static str {
+        "SetFunction"
+    }
+}
+
+impl Clone for Box<dyn SetFunction> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// Validate that ids fit the ground set (shared constructor helper).
+pub fn check_ids(n: usize, ids: &[ElementId]) -> Result<()> {
+    for &id in ids {
+        if id >= n {
+            return Err(crate::error::SubmodError::OutOfGroundSet { id, n });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_basics() {
+        let mut s = Subset::empty(5);
+        assert!(s.is_empty());
+        s.insert(3);
+        s.insert(1);
+        assert_eq!(s.order(), &[3, 1]);
+        assert!(s.contains(3));
+        assert!(!s.contains(0));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.ground_n(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn subset_duplicate_panics() {
+        let mut s = Subset::empty(3);
+        s.insert(1);
+        s.insert(1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn subset_out_of_range_panics() {
+        let mut s = Subset::empty(3);
+        s.insert(3);
+    }
+
+    #[test]
+    fn union_with_dedups() {
+        let s = Subset::from_ids(6, &[0, 2]);
+        let u = s.union_with(&[2, 4]);
+        assert_eq!(u.order(), &[0, 2, 4]);
+    }
+
+    #[test]
+    fn check_ids_rejects() {
+        assert!(check_ids(3, &[0, 1, 2]).is_ok());
+        assert!(check_ids(3, &[3]).is_err());
+    }
+}

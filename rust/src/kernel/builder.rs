@@ -1,0 +1,53 @@
+//! Backend-dispatching kernel construction (paper §8 usage patterns):
+//! the user can have the kernel built "in C++" (here: natively in Rust,
+//! threaded) or through the compiled L1/L2 artifact stack (PJRT).
+
+use std::sync::Arc;
+
+use super::dense::DenseKernel;
+use super::metric::Metric;
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::runtime::{tiled, Engine};
+
+/// Which engine computes the O(n²·d) kernel build.
+#[derive(Clone)]
+pub enum KernelBackend {
+    /// Blocked + threaded Rust (default; always available).
+    Native,
+    /// AOT Pallas→HLO artifacts executed via PJRT.
+    Pjrt(Arc<Engine>),
+}
+
+impl std::fmt::Debug for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelBackend::Native => write!(f, "Native"),
+            KernelBackend::Pjrt(_) => write!(f, "Pjrt"),
+        }
+    }
+}
+
+/// Build a dense similarity kernel with the selected backend.
+pub fn build_dense(data: &Matrix, metric: Metric, backend: &KernelBackend) -> Result<DenseKernel> {
+    match backend {
+        KernelBackend::Native => Ok(DenseKernel::from_data(data, metric)),
+        KernelBackend::Pjrt(engine) => {
+            let mat = tiled::build_dense_kernel(engine, data, metric)?;
+            DenseKernel::from_matrix(mat)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_builds() {
+        let data = Matrix::from_rows(&[&[0.0, 0.0], &[1.0, 0.0], &[0.0, 1.0]]);
+        let k = build_dense(&data, Metric::Euclidean, &KernelBackend::Native).unwrap();
+        assert_eq!(k.n(), 3);
+        assert!((k.get(0, 0) - 1.0).abs() < 1e-6);
+    }
+}

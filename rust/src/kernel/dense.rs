@@ -1,0 +1,218 @@
+//! Dense N×N similarity kernel (paper mode `"dense"`).
+//!
+//! Construction is the O(n²·d) hot-spot of Table 5; the native path uses
+//! the gram expansion (one blocked X·Xᵀ + an O(n²) metric transform)
+//! parallelized across row blocks with scoped threads. The PJRT path
+//! (`runtime::tiled::build_dense_kernel`) runs the same math through the
+//! AOT-compiled Pallas artifact.
+
+use super::metric::Metric;
+use crate::error::{Result, SubmodError};
+use crate::linalg::{self, Matrix};
+
+/// Dense similarity kernel over a ground set of `n` items.
+#[derive(Debug, Clone)]
+pub struct DenseKernel {
+    mat: Matrix,
+}
+
+impl DenseKernel {
+    /// Build from a feature matrix (rows = items), threaded gram path.
+    pub fn from_data(data: &Matrix, metric: Metric) -> Self {
+        let mat = build_pairwise(data, data, metric, false);
+        DenseKernel { mat }
+    }
+
+    /// Build a euclidean *distance* matrix (for the disparity functions).
+    pub fn distances_from_data(data: &Matrix) -> Self {
+        let mat = build_pairwise(data, data, Metric::Euclidean, true);
+        DenseKernel { mat }
+    }
+
+    /// Wrap a precomputed square kernel ("create kernel in Python" mode).
+    pub fn from_matrix(mat: Matrix) -> Result<Self> {
+        if mat.rows() != mat.cols() {
+            return Err(SubmodError::Shape(format!(
+                "dense kernel must be square, got {}x{}",
+                mat.rows(),
+                mat.cols()
+            )));
+        }
+        Ok(DenseKernel { mat })
+    }
+
+    /// Ground-set size.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.mat.rows()
+    }
+
+    /// Similarity s_ij.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.mat.get(i, j)
+    }
+
+    /// Row i as a contiguous slice (all similarities of item i).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.mat.row(i)
+    }
+
+    /// Underlying matrix (tests, LogDet factorizations).
+    pub fn matrix(&self) -> &Matrix {
+        &self.mat
+    }
+}
+
+/// Shared blocked + threaded pairwise builder. `distances=true` emits the
+/// raw euclidean distance instead of the metric similarity.
+pub(crate) fn build_pairwise(a: &Matrix, b: &Matrix, metric: Metric, distances: bool) -> Matrix {
+    let m = a.rows();
+    let n = b.rows();
+    let mut out = Matrix::zeros(m, n);
+    let sq_a: Vec<f32> = (0..m).map(|i| linalg::dot(a.row(i), a.row(i))).collect();
+    let sq_b: Vec<f32> = (0..n).map(|j| linalg::dot(b.row(j), b.row(j))).collect();
+
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let chunk = m.div_ceil(threads).max(1);
+    let out_slice = out.as_mut_slice();
+
+    std::thread::scope(|scope| {
+        let mut rest = out_slice;
+        let mut start = 0usize;
+        while start < m {
+            let rows_here = chunk.min(m - start);
+            let (this, tail) = rest.split_at_mut(rows_here * n);
+            rest = tail;
+            let (sq_a, sq_b) = (&sq_a, &sq_b);
+            scope.spawn(move || {
+                for (bi, i) in (start..start + rows_here).enumerate() {
+                    let arow = a.row(i);
+                    let orow = &mut this[bi * n..(bi + 1) * n];
+                    // register-blocked: 8 then 4 B rows per pass over
+                    // arow (§Perf iterations 1–2 — EXPERIMENTS.md)
+                    let mut j = 0;
+                    while j + 8 <= n {
+                        let g = linalg::dot8(
+                            arow,
+                            [
+                                b.row(j),
+                                b.row(j + 1),
+                                b.row(j + 2),
+                                b.row(j + 3),
+                                b.row(j + 4),
+                                b.row(j + 5),
+                                b.row(j + 6),
+                                b.row(j + 7),
+                            ],
+                        );
+                        for t in 0..8 {
+                            orow[j + t] = if distances {
+                                (sq_a[i] + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
+                            } else {
+                                metric.from_gram(g[t], sq_a[i], sq_b[j + t])
+                            };
+                        }
+                        j += 8;
+                    }
+                    while j + 4 <= n {
+                        let g = linalg::dot4(
+                            arow,
+                            b.row(j),
+                            b.row(j + 1),
+                            b.row(j + 2),
+                            b.row(j + 3),
+                        );
+                        for t in 0..4 {
+                            orow[j + t] = if distances {
+                                (sq_a[i] + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
+                            } else {
+                                metric.from_gram(g[t], sq_a[i], sq_b[j + t])
+                            };
+                        }
+                        j += 4;
+                    }
+                    for (jj, o) in orow.iter_mut().enumerate().skip(j) {
+                        let g = linalg::dot(arow, b.row(jj));
+                        *o = if distances {
+                            (sq_a[i] + sq_b[jj] - 2.0 * g).max(0.0).sqrt()
+                        } else {
+                            metric.from_gram(g, sq_a[i], sq_b[jj])
+                        };
+                    }
+                }
+            });
+            start += rows_here;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_data(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::from_vec(n, d, (0..n * d).map(|_| rng.next_gaussian() as f32).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn matches_direct_pairwise() {
+        let data = rand_data(23, 7, 1);
+        for metric in [Metric::Euclidean, Metric::Cosine, Metric::Dot, Metric::Rbf { gamma: 0.3 }] {
+            let k = DenseKernel::from_data(&data, metric);
+            for i in (0..23).step_by(5) {
+                for j in (0..23).step_by(3) {
+                    let direct = metric.similarity(data.row(i), data.row(j));
+                    assert!(
+                        (k.get(i, j) - direct).abs() < 1e-4,
+                        "{metric:?} ({i},{j}): {} vs {direct}",
+                        k.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_and_unit_diagonal() {
+        let data = rand_data(17, 5, 2);
+        let k = DenseKernel::from_data(&data, Metric::Euclidean);
+        for i in 0..17 {
+            assert!((k.get(i, i) - 1.0).abs() < 1e-5);
+            for j in 0..17 {
+                assert!((k.get(i, j) - k.get(j, i)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn distances_kernel() {
+        let data = Matrix::from_rows(&[&[0.0, 0.0], &[3.0, 4.0], &[6.0, 8.0]]);
+        let d = DenseKernel::distances_from_data(&data);
+        assert!((d.get(0, 1) - 5.0).abs() < 1e-5);
+        assert!((d.get(0, 2) - 10.0).abs() < 1e-5);
+        assert!(d.get(1, 1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn from_matrix_rejects_rect() {
+        assert!(DenseKernel::from_matrix(Matrix::zeros(3, 4)).is_err());
+        assert!(DenseKernel::from_matrix(Matrix::zeros(4, 4)).is_ok());
+    }
+
+    #[test]
+    fn threaded_build_matches_single_row_math_large() {
+        // Exercise the multi-chunk threading path (n > typical core count).
+        let data = rand_data(97, 16, 3);
+        let k = DenseKernel::from_data(&data, Metric::Rbf { gamma: 1.0 });
+        for &(i, j) in &[(0, 96), (50, 51), (96, 0), (13, 77)] {
+            let direct = Metric::Rbf { gamma: 1.0 }.similarity(data.row(i), data.row(j));
+            assert!((k.get(i, j) - direct).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Similarity metrics, matching `python/compile/kernels/ref.py` exactly so
+//! the native and PJRT kernel-construction paths are interchangeable.
+
+use crate::linalg;
+
+const EPS: f32 = 1e-12;
+
+/// Similarity metric between feature vectors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Metric {
+    /// `1 / (1 + ||x − y||)` — Submodlib's euclidean-similarity convention.
+    Euclidean,
+    /// Cosine similarity.
+    Cosine,
+    /// Raw inner product.
+    Dot,
+    /// `exp(−γ ||x − y||²)`.
+    Rbf { gamma: f32 },
+}
+
+impl Metric {
+    /// Artifact-name tag (must match aot.py's entry naming).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Metric::Euclidean => "euclidean",
+            Metric::Cosine => "cosine",
+            Metric::Dot => "dot",
+            Metric::Rbf { .. } => "rbf",
+        }
+    }
+
+    /// Direct pairwise similarity.
+    pub fn similarity(&self, a: &[f32], b: &[f32]) -> f32 {
+        match *self {
+            Metric::Dot => linalg::dot(a, b),
+            Metric::Cosine => {
+                let na = linalg::norm(a);
+                let nb = linalg::norm(b);
+                linalg::dot(a, b) / (na * nb).max(EPS)
+            }
+            Metric::Euclidean => 1.0 / (1.0 + linalg::sq_dist(a, b).max(0.0).sqrt()),
+            Metric::Rbf { gamma } => (-gamma * linalg::sq_dist(a, b).max(0.0)).exp(),
+        }
+    }
+
+    /// Transform a gram entry `g = <x_i, y_j>` into a similarity, given the
+    /// squared norms of the two vectors (the gram-expansion fast path used
+    /// by the blocked builders; mirrors model.similarity_block).
+    #[inline]
+    pub fn from_gram(&self, g: f32, sq_ni: f32, sq_nj: f32) -> f32 {
+        match *self {
+            Metric::Dot => g,
+            Metric::Cosine => g / (sq_ni.sqrt() * sq_nj.sqrt()).max(EPS),
+            Metric::Euclidean => {
+                let d2 = (sq_ni + sq_nj - 2.0 * g).max(0.0);
+                1.0 / (1.0 + d2.sqrt())
+            }
+            Metric::Rbf { gamma } => {
+                let d2 = (sq_ni + sq_nj - 2.0 * g).max(0.0);
+                (-gamma * d2).exp()
+            }
+        }
+    }
+
+    /// Euclidean distance (for the disparity functions, which work with
+    /// distances rather than similarities).
+    pub fn distance(a: &[f32], b: &[f32]) -> f32 {
+        linalg::sq_dist(a, b).max(0.0).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn euclidean_self_is_one() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert!((Metric::Euclidean.similarity(&a, &a) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_range() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        let c = [-1.0f32, 0.0];
+        assert!(Metric::Cosine.similarity(&a, &b).abs() < 1e-6);
+        assert!((Metric::Cosine.similarity(&a, &c) + 1.0).abs() < 1e-6);
+        assert!((Metric::Cosine.similarity(&a, &a) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rbf_decays() {
+        let a = [0.0f32; 4];
+        let b = [1.0f32; 4];
+        let m = Metric::Rbf { gamma: 1.0 };
+        assert!((m.similarity(&a, &a) - 1.0).abs() < 1e-6);
+        assert!((m.similarity(&a, &b) - (-4.0f32).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_gram_matches_direct() {
+        let a = [0.3f32, -1.2, 0.7, 2.0];
+        let b = [1.1f32, 0.4, -0.5, 0.9];
+        let g = crate::linalg::dot(&a, &b);
+        let (na, nb) = (crate::linalg::dot(&a, &a), crate::linalg::dot(&b, &b));
+        for m in [
+            Metric::Euclidean,
+            Metric::Cosine,
+            Metric::Dot,
+            Metric::Rbf { gamma: 0.5 },
+        ] {
+            let direct = m.similarity(&a, &b);
+            let via = m.from_gram(g, na, nb);
+            assert!((direct - via).abs() < 1e-5, "{m:?}: {direct} vs {via}");
+        }
+    }
+
+    #[test]
+    fn distance_basic() {
+        assert!((Metric::distance(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,25 @@
+//! Similarity / distance kernels — the data substrate every
+//! similarity-based set function consumes (paper §8 "usage patterns").
+//!
+//! * [`metric::Metric`] — euclidean (`1/(1+d)`), cosine, dot, RBF.
+//! * [`dense::DenseKernel`] — N×N dense kernel (paper mode `"dense"`),
+//!   built natively (threaded, gram-based) or via the PJRT artifact path
+//!   (`runtime::tiled`).
+//! * [`sparse::SparseKernel`] — k-nearest-neighbor CSR kernel (paper mode
+//!   `"sparse"`): similarity beyond `num_neighbors` treated as zero.
+//! * [`rect::RectKernel`] — rectangular kernels (represented set × ground
+//!   set, query × ground, private × ground) for the generic-U functions
+//!   and the MI / CG / CMI instantiations.
+//! * [`builder`] — backend-dispatching construction helpers.
+
+pub mod builder;
+pub mod dense;
+pub mod metric;
+pub mod rect;
+pub mod sparse;
+
+pub use builder::{build_dense, KernelBackend};
+pub use dense::DenseKernel;
+pub use metric::Metric;
+pub use rect::RectKernel;
+pub use sparse::SparseKernel;

@@ -1,0 +1,110 @@
+//! Rectangular kernels: similarities between two *different* sets.
+//!
+//! Used by (paper §2.1.1, §3): the generic represented-set U ≠ V variants
+//! of FacilityLocation / GraphCut, and every query (Q × V) / private
+//! (P × V) kernel in the MI / CG / CMI instantiations. FLQMI in particular
+//! only ever needs a Q × V kernel (paper §3.5), which is what makes it
+//! cheap.
+
+use super::dense::build_pairwise;
+use super::metric::Metric;
+use crate::error::{Result, SubmodError};
+use crate::linalg::Matrix;
+
+/// Dense rows × cols similarity kernel between set R (rows) and set C
+/// (cols).
+#[derive(Debug, Clone)]
+pub struct RectKernel {
+    mat: Matrix,
+}
+
+impl RectKernel {
+    /// Build from two feature matrices: `rows_data` (set R) × `cols_data`
+    /// (set C).
+    pub fn from_data(rows_data: &Matrix, cols_data: &Matrix, metric: Metric) -> Result<Self> {
+        if rows_data.cols() != cols_data.cols() {
+            return Err(SubmodError::Shape(format!(
+                "feature dims {} vs {}",
+                rows_data.cols(),
+                cols_data.cols()
+            )));
+        }
+        Ok(RectKernel { mat: build_pairwise(rows_data, cols_data, metric, false) })
+    }
+
+    /// Wrap a precomputed kernel.
+    pub fn from_matrix(mat: Matrix) -> Self {
+        RectKernel { mat }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.mat.rows()
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.mat.cols()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.mat.get(i, j)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.mat.row(i)
+    }
+
+    /// Transposed copy (Q×V → V×Q), needed by FLQMI's second term.
+    pub fn transpose(&self) -> RectKernel {
+        RectKernel { mat: self.mat.transpose() }
+    }
+
+    pub fn matrix(&self) -> &Matrix {
+        &self.mat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_matches_direct() {
+        let a = Matrix::from_rows(&[&[0.0, 0.0], &[1.0, 1.0]]);
+        let b = Matrix::from_rows(&[&[0.0, 1.0], &[1.0, 0.0], &[2.0, 2.0]]);
+        let k = RectKernel::from_data(&a, &b, Metric::Euclidean).unwrap();
+        assert_eq!(k.rows(), 2);
+        assert_eq!(k.cols(), 3);
+        for i in 0..2 {
+            for j in 0..3 {
+                let direct = Metric::Euclidean.similarity(a.row(i), b.row(j));
+                assert!((k.get(i, j) - direct).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 4);
+        assert!(RectKernel::from_data(&a, &b, Metric::Dot).is_err());
+    }
+
+    #[test]
+    fn transpose_swaps() {
+        let a = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        let b = Matrix::from_rows(&[&[3.0], &[4.0], &[5.0]]);
+        let k = RectKernel::from_data(&a, &b, Metric::Dot).unwrap();
+        let t = k.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.cols(), 2);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert_eq!(k.get(i, j), t.get(j, i));
+            }
+        }
+    }
+}

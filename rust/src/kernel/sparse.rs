@@ -1,0 +1,174 @@
+//! Sparse k-nearest-neighbor kernel (paper mode `"sparse"`, §8):
+//! similarity with points beyond `num_neighbors` is treated as zero.
+//! Stored CSR; rows sorted by column id for O(log k) lookup.
+//!
+//! As in Submodlib (following Wei, Iyer, Bilmes 2014 "Fast multi-stage
+//! submodular maximization", cited in paper §2.1.1), this trades accuracy
+//! for memory/time on large ground sets.
+
+use super::dense::build_pairwise;
+use super::metric::Metric;
+use crate::error::{Result, SubmodError};
+use crate::linalg::Matrix;
+
+/// CSR kNN similarity kernel.
+#[derive(Debug, Clone)]
+pub struct SparseKernel {
+    n: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl SparseKernel {
+    /// Build from a feature matrix keeping the `k` most similar neighbors
+    /// per row (the row's own diagonal entry always counts as one of them,
+    /// matching Submodlib's `num_neighbors` semantics).
+    pub fn from_data(data: &Matrix, metric: Metric, k: usize) -> Result<Self> {
+        let n = data.rows();
+        if k == 0 || k > n {
+            return Err(SubmodError::InvalidParam(format!(
+                "num_neighbors {k} for ground set of {n}"
+            )));
+        }
+        // Dense pass, then top-k per row. For n where dense is infeasible
+        // the coordinator shards first (coordinator::shard), so the dense
+        // intermediate here is bounded by shard size.
+        let dense = build_pairwise(data, data, metric, false);
+        Ok(Self::from_dense_rows(n, k, |i| dense.row(i)))
+    }
+
+    /// Build from precomputed dense rows (used by tests and the shard path).
+    pub(crate) fn from_dense_rows<'a, F>(n: usize, k: usize, row: F) -> Self
+    where
+        F: Fn(usize) -> &'a [f32],
+    {
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut col_idx = Vec::with_capacity(n * k);
+        let mut vals = Vec::with_capacity(n * k);
+        row_ptr.push(0);
+        let mut scratch: Vec<(u32, f32)> = Vec::with_capacity(n);
+        for i in 0..n {
+            scratch.clear();
+            scratch.extend(row(i).iter().enumerate().map(|(j, &s)| (j as u32, s)));
+            // partial select of the k largest by similarity
+            scratch.select_nth_unstable_by(k - 1, |a, b| {
+                b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut top: Vec<(u32, f32)> = scratch[..k].to_vec();
+            top.sort_unstable_by_key(|e| e.0);
+            for (j, s) in top {
+                col_idx.push(j);
+                vals.push(s);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        SparseKernel { n, row_ptr, col_idx, vals }
+    }
+
+    /// Ground-set size.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored neighbors per row.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Similarity s_ij — zero when j is outside i's neighbor list.
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&(j as u32)) {
+            Ok(pos) => vals[pos],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Row i as parallel (columns, values) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[s..e], &self.vals[s..e])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_data(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::from_vec(n, d, (0..n * d).map(|_| rng.next_gaussian() as f32).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn keeps_k_per_row() {
+        let data = rand_data(20, 4, 1);
+        let k = SparseKernel::from_data(&data, Metric::Euclidean, 5).unwrap();
+        assert_eq!(k.nnz(), 20 * 5);
+        for i in 0..20 {
+            let (cols, _) = k.row(i);
+            assert_eq!(cols.len(), 5);
+        }
+    }
+
+    #[test]
+    fn self_neighbor_retained() {
+        // With euclidean similarity the diagonal is the max (=1), so it
+        // must always be among the top-k.
+        let data = rand_data(15, 3, 2);
+        let k = SparseKernel::from_data(&data, Metric::Euclidean, 3).unwrap();
+        for i in 0..15 {
+            assert!((k.get(i, i) - 1.0).abs() < 1e-5, "row {i} missing diagonal");
+        }
+    }
+
+    #[test]
+    fn topk_values_match_dense() {
+        let data = rand_data(12, 4, 3);
+        let dense = crate::kernel::DenseKernel::from_data(&data, Metric::Euclidean);
+        let sparse = SparseKernel::from_data(&data, Metric::Euclidean, 4).unwrap();
+        for i in 0..12 {
+            let mut drow: Vec<(usize, f32)> =
+                dense.row(i).iter().cloned().enumerate().collect();
+            drow.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let expect: std::collections::HashSet<usize> =
+                drow[..4].iter().map(|e| e.0).collect();
+            let (cols, vals) = sparse.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                assert!(expect.contains(&(*c as usize)) || {
+                    // ties at the cut boundary are acceptable either way
+                    (drow[3].1 - v).abs() < 1e-6
+                });
+                assert!((dense.get(i, *c as usize) - v).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn absent_entries_zero() {
+        let data = rand_data(30, 4, 4);
+        let k = SparseKernel::from_data(&data, Metric::Euclidean, 2).unwrap();
+        let mut zeros = 0;
+        for i in 0..30 {
+            for j in 0..30 {
+                if k.get(i, j) == 0.0 {
+                    zeros += 1;
+                }
+            }
+        }
+        assert_eq!(zeros, 30 * 30 - k.nnz());
+    }
+
+    #[test]
+    fn invalid_k_rejected() {
+        let data = rand_data(5, 2, 5);
+        assert!(SparseKernel::from_data(&data, Metric::Euclidean, 0).is_err());
+        assert!(SparseKernel::from_data(&data, Metric::Euclidean, 6).is_err());
+        assert!(SparseKernel::from_data(&data, Metric::Euclidean, 5).is_ok());
+    }
+}

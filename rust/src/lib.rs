@@ -1,0 +1,80 @@
+//! # submodlib-rs
+//!
+//! A reproduction of *"Submodlib: A Submodular Optimization Library"*
+//! (Kaushal, Ramakrishnan, Iyer — cs.LG 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the optimization engine the paper wrote in
+//!   C++: the full suite of submodular set functions, the PRISM submodular
+//!   information measures (MI / CG / CMI instantiations), four greedy
+//!   maximizers with per-function memoization, dense / sparse / clustered
+//!   similarity-kernel modes, and a streaming subset-selection coordinator.
+//! * **Layer 2 (python/compile/model.py, build-time only)** — the JAX
+//!   compute graph for kernel creation and batched marginal gains, lowered
+//!   once by `make artifacts` to HLO text.
+//! * **Layer 1 (python/compile/kernels/, build-time only)** — Pallas
+//!   kernels for the tiled gram contraction and the FacilityLocation gain
+//!   reduction, called from L2 so they lower into the same HLO modules.
+//!
+//! The Rust binary loads the artifacts via PJRT ([`runtime`]) and never
+//! touches Python at run time.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use submodlib::prelude::*;
+//!
+//! // 1. Build (or load) a feature matrix.
+//! let data = submodlib::data::synthetic::blobs(500, 2, 10, 4.0, 42);
+//! // 2. Instantiate a function object.
+//! let kernel = DenseKernel::from_data(&data, Metric::Euclidean);
+//! let f = FacilityLocation::new(kernel);
+//! // 3. Maximize.
+//! let sel = maximize(&f, Budget::cardinality(10), OptimizerKind::LazyGreedy,
+//!                    &MaximizeOpts::default()).unwrap();
+//! println!("{:?}", sel.order);
+//! ```
+//!
+//! See `examples/` for the paper's experiment drivers and DESIGN.md for the
+//! experiment index.
+
+pub mod cli;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod functions;
+pub mod kernel;
+pub mod linalg;
+pub mod optimizers;
+pub mod rng;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports covering the common "instantiate a function,
+/// call maximize on it" workflow from the paper's §7.
+pub mod prelude {
+    pub use crate::error::{Result, SubmodError};
+    pub use crate::functions::traits::{ElementId, SetFunction, Subset};
+    pub use crate::functions::{
+        clustered::ClusteredFunction,
+        disparity_min::DisparityMin,
+        disparity_min_sum::DisparityMinSum,
+        disparity_sum::DisparitySum,
+        facility_location::FacilityLocation,
+        feature_based::{ConcaveShape, FeatureBased},
+        graph_cut::GraphCut,
+        log_determinant::LogDeterminant,
+        mixture::Mixture,
+        prob_set_cover::ProbabilisticSetCover,
+        set_cover::SetCover,
+    };
+    pub use crate::kernel::{
+        dense::DenseKernel, metric::Metric, rect::RectKernel, sparse::SparseKernel,
+    };
+    pub use crate::optimizers::{
+        maximize, Budget, MaximizeOpts, OptimizerKind, Selection,
+    };
+}

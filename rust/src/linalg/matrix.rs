@@ -1,0 +1,245 @@
+//! Row-major dense matrix with the handful of operations the library
+//! needs: blocked products for kernel construction, transpose, row views,
+//! and small-matrix utilities for tests.
+
+use crate::error::{Result, SubmodError};
+
+/// Row-major `f32` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(SubmodError::Shape(format!(
+                "buffer of {} for {}x{}",
+                data.len(),
+                rows,
+                cols
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from nested slices (tests / small literals).
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Matrix { rows: r, cols: c, data }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Contiguous row view.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row view.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Whole backing buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Whole backing buffer, mutable.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// `self · otherᵀ`, cache-blocked. This is the native fallback for the
+    /// gram stage of kernel construction (the runtime path uses the Pallas
+    /// HLO artifact instead — see `runtime::tiled`).
+    pub fn matmul_nt(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.cols {
+            return Err(SubmodError::Shape(format!(
+                "matmul_nt: inner dims {} vs {}",
+                self.cols, other.cols
+            )));
+        }
+        let m = self.rows;
+        let n = other.rows;
+        let mut out = Matrix::zeros(m, n);
+        const BI: usize = 32;
+        const BJ: usize = 32;
+        for ib in (0..m).step_by(BI) {
+            let ie = (ib + BI).min(m);
+            for jb in (0..n).step_by(BJ) {
+                let je = (jb + BJ).min(n);
+                for i in ib..ie {
+                    let a = self.row(i);
+                    let orow = &mut out.data[i * n..(i + 1) * n];
+                    for j in jb..je {
+                        orow[j] = super::dot(a, other.row(j));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Extract the principal submatrix indexed by `idx` (for LogDet tests).
+    pub fn principal_submatrix(&self, idx: &[usize]) -> Matrix {
+        let k = idx.len();
+        let mut out = Matrix::zeros(k, k);
+        for (a, &i) in idx.iter().enumerate() {
+            for (b, &j) in idx.iter().enumerate() {
+                out.data[a * k + b] = self.get(i, j);
+            }
+        }
+        out
+    }
+
+    /// Frobenius-norm distance to another matrix (test helper).
+    pub fn frob_dist(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_checks_shape() {
+        assert!(Matrix::from_vec(2, 2, vec![0.0; 3]).is_err());
+        assert!(Matrix::from_vec(2, 2, vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn eye_diag() {
+        let m = Matrix::eye(3);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(m.get(i, j), if i == j { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn matmul_nt_small() {
+        // A (2x3) · B (2x3)^T = (2x2)
+        let a = Matrix::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let b = Matrix::from_rows(&[&[1.0, 0.0, 1.0], &[0.0, 1.0, 0.0]]);
+        let c = a.matmul_nt(&b).unwrap();
+        assert_eq!(c.get(0, 0), 4.0);
+        assert_eq!(c.get(0, 1), 2.0);
+        assert_eq!(c.get(1, 0), 10.0);
+        assert_eq!(c.get(1, 1), 5.0);
+    }
+
+    #[test]
+    fn matmul_nt_blocked_matches_naive_large() {
+        let mut rng = crate::rng::Pcg64::new(17);
+        let m = 70;
+        let k = 45;
+        let n = 53;
+        let a = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.next_f32()).collect()).unwrap();
+        let b = Matrix::from_vec(n, k, (0..n * k).map(|_| rng.next_f32()).collect()).unwrap();
+        let c = a.matmul_nt(&b).unwrap();
+        for i in (0..m).step_by(13) {
+            for j in (0..n).step_by(11) {
+                let naive: f32 = (0..k).map(|t| a.get(i, t) * b.get(j, t)).sum();
+                assert!((c.get(i, j) - naive).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_shape_mismatch() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 4);
+        assert!(a.matmul_nt(&b).is_err());
+    }
+
+    #[test]
+    fn principal_submatrix_picks() {
+        let m = Matrix::from_rows(&[
+            &[1.0, 2.0, 3.0],
+            &[4.0, 5.0, 6.0],
+            &[7.0, 8.0, 9.0],
+        ]);
+        let s = m.principal_submatrix(&[0, 2]);
+        assert_eq!(s.get(0, 0), 1.0);
+        assert_eq!(s.get(0, 1), 3.0);
+        assert_eq!(s.get(1, 0), 7.0);
+        assert_eq!(s.get(1, 1), 9.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Dense linear-algebra substrate built from scratch.
+//!
+//! Submodlib's LogDeterminant family needs incremental Cholesky machinery
+//! (the "Fast Greedy MAP Inference" of Chen et al. 2018 the paper cites in
+//! §5.2.1); the kernel builders need blocked matrix products. Everything
+//! here is row-major `f32`/`f64`, no external BLAS.
+
+pub mod cholesky;
+pub mod matrix;
+
+pub use cholesky::{Cholesky, IncrementalLogDet};
+pub use matrix::Matrix;
+
+/// Dot product with 4-way unrolling (the compiler auto-vectorizes this
+/// shape reliably; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Four simultaneous dot products of `a` against rows `b0..b3`
+/// (register blocking: `a` is loaded once per lane instead of four
+/// times — the §Perf kernel-build iteration, EXPERIMENTS.md).
+#[inline]
+pub fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    debug_assert!(b0.len() == a.len() && b1.len() == a.len());
+    debug_assert!(b2.len() == a.len() && b3.len() == a.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..a.len() {
+        let x = a[i];
+        s0 += x * b0[i];
+        s1 += x * b1[i];
+        s2 += x * b2[i];
+        s3 += x * b3[i];
+    }
+    [s0, s1, s2, s3]
+}
+
+/// Eight simultaneous dot products (see [`dot4`]; §Perf iteration 2).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn dot8(
+    a: &[f32],
+    b: [&[f32]; 8],
+) -> [f32; 8] {
+    let mut s = [0f32; 8];
+    for i in 0..a.len() {
+        let x = a[i];
+        for t in 0..8 {
+            s[t] += x * b[t][i];
+        }
+    }
+    s
+}
+
+/// Squared euclidean distance, fused single pass.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dot_empty() {
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn sq_dist_symmetric_and_zero_on_self() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 6.0, 8.0];
+        assert_eq!(sq_dist(&a, &a), 0.0);
+        assert!((sq_dist(&a, &b) - sq_dist(&b, &a)).abs() < 1e-6);
+        assert!((sq_dist(&a, &b) - (9.0 + 16.0 + 25.0)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn norm_unit() {
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+}

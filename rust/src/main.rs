@@ -1,0 +1,291 @@
+//! Leader entrypoint: CLI dispatch over the library (see cli.rs for the
+//! command surface and DESIGN.md §4 for the experiment index).
+
+use submodlib::cli::{Cli, Command, USAGE};
+use submodlib::config::Config;
+use submodlib::coordinator::{Coordinator, SelectRequest};
+use submodlib::data::{controlled, io, synthetic};
+use submodlib::error::{Result, SubmodError};
+use submodlib::experiments::{fig10, fig5, fig7, fig8, table2, table5};
+use submodlib::functions::disparity_min::DisparityMin;
+use submodlib::functions::disparity_sum::DisparitySum;
+use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::functions::feature_based::{ConcaveShape, FeatureBased};
+use submodlib::functions::graph_cut::GraphCut;
+use submodlib::functions::log_determinant::LogDeterminant;
+use submodlib::functions::traits::SetFunction;
+use submodlib::kernel::{DenseKernel, KernelBackend, Metric};
+use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use submodlib::runtime::Engine;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    let cfg = match &cli.config {
+        Some(p) => Config::load(p)?,
+        None => Config::default(),
+    };
+    cfg.validate()?;
+    match cli.command {
+        Command::Help => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Command::Select { data, function, budget, optimizer, metric, param, out } => {
+            cmd_select(&data, &function, budget, &optimizer, &metric, param, out.as_deref())
+        }
+        Command::Exp { target, quick } => cmd_exp(&cfg, &target, quick),
+        Command::Serve { items, dim, requests, budget } => {
+            cmd_serve(&cfg, items, dim, requests, budget)
+        }
+        Command::Runtime { n, dim, artifacts } => cmd_runtime(n, dim, &artifacts),
+        Command::Cover { data, function, fraction, metric } => {
+            cmd_cover(&data, &function, fraction, &metric)
+        }
+    }
+}
+
+fn cmd_cover(data_path: &str, function: &str, fraction: f64, metric: &str) -> Result<()> {
+    if !(0.0 < fraction && fraction <= 1.0) {
+        return Err(SubmodError::InvalidParam(format!("fraction {fraction} outside (0,1]")));
+    }
+    let data = io::read_matrix_csv(data_path)?;
+    let metric = parse_metric(metric)?;
+    let n = data.rows();
+    let f: Box<dyn SetFunction> = match function.to_ascii_lowercase().as_str() {
+        "fl" => Box::new(FacilityLocation::new(DenseKernel::from_data(&data, metric))),
+        "gc" => Box::new(GraphCut::new(DenseKernel::from_data(&data, metric), 0.4)?),
+        "fb" => Box::new(FeatureBased::from_dense(&data, ConcaveShape::Sqrt)?),
+        other => {
+            return Err(SubmodError::Unsupported(format!(
+                "cover supports monotone functions fl|gc|fb, not {other:?}"
+            )))
+        }
+    };
+    let full = f.evaluate(&submodlib::functions::traits::Subset::from_ids(
+        n,
+        &(0..n).collect::<Vec<_>>(),
+    ));
+    let target = fraction * full;
+    let r = submodlib::optimizers::submodular_cover(f.as_ref(), target, None)?;
+    println!(
+        "coverage target {target:.4} ({:.0}% of f(V)={full:.4}): {} of {n} elements, f(X) = {:.4}, satisfied = {}",
+        fraction * 100.0,
+        r.order.len(),
+        r.value,
+        r.satisfied
+    );
+    for (rank, (e, gain)) in r.order.iter().enumerate() {
+        println!("  {rank:>3}: element {e:>6}  gain {gain:.6}");
+    }
+    Ok(())
+}
+
+fn parse_metric(s: &str) -> Result<Metric> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "euclidean" => Metric::Euclidean,
+        "cosine" => Metric::Cosine,
+        "dot" => Metric::Dot,
+        "rbf" => Metric::Rbf { gamma: 1.0 },
+        other => return Err(SubmodError::InvalidParam(format!("unknown metric {other:?}"))),
+    })
+}
+
+fn cmd_select(
+    data_path: &str,
+    function: &str,
+    budget: usize,
+    optimizer: &str,
+    metric: &str,
+    param: f64,
+    out: Option<&str>,
+) -> Result<()> {
+    let data = io::read_matrix_csv(data_path)?;
+    let metric = parse_metric(metric)?;
+    let kind: OptimizerKind = optimizer.parse()?;
+    let f: Box<dyn SetFunction> = match function.to_ascii_lowercase().as_str() {
+        "fl" => Box::new(FacilityLocation::new(DenseKernel::from_data(&data, metric))),
+        "gc" => Box::new(GraphCut::new(DenseKernel::from_data(&data, metric), param)?),
+        "logdet" => Box::new(LogDeterminant::with_regularization(
+            DenseKernel::from_data(&data, Metric::Rbf { gamma: 1.0 }),
+            param.max(1e-3),
+        )?),
+        "dsum" => Box::new(DisparitySum::new(DenseKernel::distances_from_data(&data))),
+        "dmin" => Box::new(DisparityMin::new(DenseKernel::distances_from_data(&data))),
+        "fb" => Box::new(FeatureBased::from_dense(&data, ConcaveShape::Sqrt)?),
+        other => {
+            return Err(SubmodError::InvalidParam(format!("unknown function {other:?}")))
+        }
+    };
+    // DisparityMin/DisparitySum are non-submodular → naive + relaxed stops
+    let (kind, opts) = if matches!(function, "dmin" | "dsum") {
+        (
+            OptimizerKind::NaiveGreedy,
+            MaximizeOpts {
+                stop_if_zero_gain: false,
+                stop_if_negative_gain: false,
+                ..Default::default()
+            },
+        )
+    } else {
+        (kind, MaximizeOpts::default())
+    };
+    let t0 = std::time::Instant::now();
+    let sel = maximize(f.as_ref(), Budget::cardinality(budget), kind, &opts)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("selected {} elements in {dt:.4}s  f(X) = {:.6}", sel.order.len(), sel.value);
+    for (rank, (e, gain)) in sel.order.iter().enumerate() {
+        println!("  {rank:>3}: element {e:>6}  gain {gain:.6}");
+    }
+    if let Some(path) = out {
+        io::write_selection_csv(path, &data, &sel.order)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_exp(cfg: &Config, target: &str, quick: bool) -> Result<()> {
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let out = |name: &str| format!("{}/{name}", cfg.out_dir);
+    let all = target == "all";
+    let mut matched = all;
+    if all || target == "table2" {
+        matched = true;
+        let (n, b, reps) = if quick { (300, 60, 1) } else { (500, 100, 5) };
+        let rows = table2(n, b, reps, 42)?;
+        println!("== Table 2 (optimizer comparison, n={n}, budget={b}, best of {reps}) ==");
+        print!("{}", submodlib::experiments::table2::render(&rows));
+    }
+    if all || target == "table5" {
+        matched = true;
+        let sizes: &[usize] = if quick {
+            &[50, 100, 200, 500, 1000]
+        } else {
+            submodlib::experiments::table5::PAPER_SIZES
+        };
+        let rows = table5(sizes, 1024, 100, 7, &KernelBackend::Native)?;
+        println!("== Table 5 (FL timing vs n, 1024-d random) ==");
+        print!("{}", submodlib::experiments::table5::render(&rows));
+    }
+    if all || target == "fig3" {
+        matched = true;
+        let data = synthetic::blobs(500, 2, 10, 4.0, 42);
+        io::write_matrix_csv(out("fig3_points.csv"), &data)?;
+        println!("fig3: wrote {}", out("fig3_points.csv"));
+    }
+    if all || target == "fig5" {
+        matched = true;
+        let r = fig5(10)?;
+        let (ground, rep, _) = controlled::fig4_dataset();
+        io::write_matrix_csv(out("fig5_ground.csv"), &ground)?;
+        io::write_matrix_csv(out("fig5_represented.csv"), &rep)?;
+        io::write_selection_csv(out("fig5_fl.csv"), &ground, &r.fl.order)?;
+        io::write_selection_csv(out("fig5_dsum.csv"), &ground, &r.dsum.order)?;
+        println!(
+            "fig5: FL first-outlier rank {:?}, DisparitySum first-outlier rank {:?}",
+            r.fl_first_outlier_rank, r.dsum_first_outlier_rank
+        );
+    }
+    if all || target == "fig7" {
+        matched = true;
+        let etas = [0.0, 0.4, 0.8, 1.0, 1.4, 1.8, 2.2, 2.6, 3.0, 10.0, 50.0, 100.0];
+        let (ground, queries, _, _) = controlled::fig6_dataset();
+        io::write_matrix_csv(out("fig7_ground.csv"), &ground)?;
+        io::write_matrix_csv(out("fig7_queries.csv"), &queries)?;
+        for (eta, sel) in fig7(&etas, 10)? {
+            io::write_selection_csv(out(&format!("fig7_eta{eta}.csv")), &ground, &sel.order)?;
+        }
+        println!("fig7: wrote selections for {} eta values", etas.len());
+    }
+    if all || target == "fig8" {
+        matched = true;
+        let (ground, _, _, _) = controlled::fig6_dataset();
+        let sel = fig8(10)?;
+        io::write_selection_csv(out("fig8_gcmi.csv"), &ground, &sel.order)?;
+        println!("fig8: GCMI selection written (pure retrieval behaviour)");
+    }
+    if all || target == "fig10" {
+        matched = true;
+        let (n, dim) = if quick { (120, 256) } else { (500, 4096) };
+        let rs = fig10(n, dim, 10, &[0.0, 0.1, 1.0, 3.0], 10)?;
+        println!("== Fig 10 (FLQMI on simulated Imagenette/VGG features, n={n}, d={dim}) ==");
+        for r in &rs {
+            println!(
+                "  eta={:<5} query-cluster fraction {:.2}  pick clusters {:?}",
+                r.eta, r.query_cluster_fraction, r.pick_clusters
+            );
+        }
+    }
+    if !matched {
+        return Err(SubmodError::InvalidParam(format!("unknown exp target {target:?}")));
+    }
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config, items: usize, dim: usize, requests: usize, budget: usize) -> Result<()> {
+    let coordinator = Coordinator::new(cfg.coordinator.clone());
+    let data = synthetic::blobs(items, dim, 10, 2.0, 123);
+    let handle = coordinator.ingest_handle();
+    println!("ingesting {items} items of dim {dim}...");
+    let t0 = std::time::Instant::now();
+    // producer threads stream the data in while selections are served
+    let producer = std::thread::spawn(move || -> Result<()> {
+        for i in 0..items {
+            handle.ingest(data.row(i).to_vec())?;
+        }
+        Ok(())
+    });
+    producer.join().map_err(|_| SubmodError::Coordinator("producer panicked".into()))??;
+    let ingest_s = t0.elapsed().as_secs_f64();
+    println!("ingest done in {ingest_s:.3}s ({:.0} items/s)", items as f64 / ingest_s);
+    for r in 0..requests {
+        let resp = coordinator.select(SelectRequest { budget, ..Default::default() })?;
+        println!(
+            "request {r}: {} ids from {} shards ({} stage-1 candidates) in {:.1} ms — f(X) = {:.4}",
+            resp.ids.len(),
+            resp.shards,
+            resp.stage1_candidates,
+            resp.elapsed_ms,
+            resp.value
+        );
+    }
+    println!("metrics: {}", coordinator.metrics());
+    Ok(())
+}
+
+fn cmd_runtime(n: usize, dim: usize, artifacts: &str) -> Result<()> {
+    let data = synthetic::random_features(n, dim.min(1024), 3);
+    let t0 = std::time::Instant::now();
+    let native = DenseKernel::from_data(&data, Metric::Euclidean);
+    let t_native = t0.elapsed().as_secs_f64();
+    println!("native kernel build ({n}x{n}, d={}): {t_native:.4}s", data.cols());
+
+    let engine = Engine::load(artifacts)?;
+    println!("PJRT platform: {}", engine.platform());
+    let t1 = std::time::Instant::now();
+    let mat = submodlib::runtime::tiled::build_dense_kernel(&engine, &data, Metric::Euclidean)?;
+    let t_pjrt = t1.elapsed().as_secs_f64();
+    println!("pjrt artifact kernel build: {t_pjrt:.4}s");
+
+    // numerics must agree between the two paths
+    let mut max_err = 0f32;
+    let step = (n / 16).max(1);
+    for i in (0..n).step_by(step) {
+        for j in (0..n).step_by(step) {
+            max_err = max_err.max((native.get(i, j) - mat.get(i, j)).abs());
+        }
+    }
+    println!("max |native − pjrt| over probe grid: {max_err:.2e}");
+    if max_err > 1e-3 {
+        return Err(SubmodError::Runtime(format!("kernel mismatch {max_err}")));
+    }
+    println!("runtime check OK");
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Submodular Cover (paper Problem 2; Wolsey 1982):
+//!
+//! ```text
+//! min s(X)  subject to  f(X) ≥ c
+//! ```
+//!
+//! Greedy by gain-per-cost until the coverage constraint is met. For
+//! integral monotone submodular f the greedy solution is within
+//! `H(max_j f(j))` of optimal; the paper presents it as the dual of
+//! Problem 1.
+
+use super::Budget;
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::{SetFunction, Subset};
+
+/// Result of a submodular-cover run.
+#[derive(Debug, Clone)]
+pub struct CoverResult {
+    /// Picked elements in order with their gains.
+    pub order: Vec<(usize, f64)>,
+    /// Achieved f(X).
+    pub value: f64,
+    /// Total cost s(X).
+    pub cost: f64,
+    /// Whether f(X) ≥ c was reached (false = coverage infeasible or
+    /// gains exhausted first).
+    pub satisfied: bool,
+}
+
+/// Greedy submodular cover: grow X by best gain/cost until `f(X) ≥ c`.
+/// `costs = None` means unit costs.
+pub fn submodular_cover(
+    f: &dyn SetFunction,
+    coverage: f64,
+    costs: Option<Vec<f64>>,
+) -> Result<CoverResult> {
+    if coverage <= 0.0 {
+        return Err(SubmodError::InvalidParam(format!("coverage {coverage} must be > 0")));
+    }
+    let n = f.n();
+    let budget = match costs {
+        None => Budget::cardinality(n),
+        Some(c) => Budget::knapsack(f64::INFINITY, c)?,
+    };
+    let mut work = f.clone_box();
+    work.init_memoization(&Subset::empty(n));
+    let mut in_set = vec![false; n];
+    let mut order = Vec::new();
+    let mut value = 0f64;
+    let mut cost = 0f64;
+
+    while value < coverage {
+        let mut best: Option<(usize, f64, f64)> = None;
+        for e in 0..n {
+            if in_set[e] {
+                continue;
+            }
+            let gain = work.marginal_gain_memoized(e);
+            let key = gain / budget.cost(e);
+            if best.map(|(_, _, bk)| key > bk).unwrap_or(true) {
+                best = Some((e, gain, key));
+            }
+        }
+        let Some((e, gain, _)) = best else { break };
+        if gain <= super::ZERO_GAIN_EPS {
+            break; // cannot make progress
+        }
+        work.update_memoization(e);
+        in_set[e] = true;
+        value += gain;
+        cost += budget.cost(e);
+        order.push((e, gain));
+    }
+    Ok(CoverResult { order, value, cost, satisfied: value >= coverage })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::set_cover::SetCover;
+
+    fn sc() -> SetCover {
+        SetCover::new(
+            vec![vec![0, 1], vec![2, 3], vec![0, 2], vec![4], vec![0, 1, 2, 3, 4]],
+            vec![1.0; 5],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn covers_with_minimum_elements() {
+        // element 4 covers everything alone
+        let r = submodular_cover(&sc(), 5.0, None).unwrap();
+        assert!(r.satisfied);
+        assert_eq!(r.order.len(), 1);
+        assert_eq!(r.order[0].0, 4);
+    }
+
+    #[test]
+    fn partial_coverage_stops() {
+        // demand more than attainable
+        let r = submodular_cover(&sc(), 10.0, None).unwrap();
+        assert!(!r.satisfied);
+        assert_eq!(r.value, 5.0);
+    }
+
+    #[test]
+    fn cost_sensitive_choice() {
+        // make the all-covering element prohibitively expensive: greedy
+        // should assemble coverage from cheap elements instead
+        let costs = vec![1.0, 1.0, 1.0, 1.0, 100.0];
+        let r = submodular_cover(&sc(), 5.0, Some(costs)).unwrap();
+        assert!(r.satisfied);
+        assert!(r.cost < 100.0);
+        assert!(!r.order.iter().any(|&(e, _)| e == 4));
+    }
+
+    #[test]
+    fn invalid_coverage_rejected() {
+        assert!(submodular_cover(&sc(), 0.0, None).is_err());
+        assert!(submodular_cover(&sc(), -1.0, None).is_err());
+    }
+
+    #[test]
+    fn duality_with_problem1() {
+        // the cover solution's cost, used as a Problem-1 budget, recovers
+        // at least the same value (paper: Problem 2 is the dual of 1)
+        use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+        let f = sc();
+        let r = submodular_cover(&f, 4.0, None).unwrap();
+        let sel = maximize(
+            &f,
+            Budget::cardinality(r.order.len()),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        assert!(sel.value >= r.value - 1e-9);
+    }
+}

@@ -1,0 +1,212 @@
+//! LazierThanLazyGreedy (paper §5.3.4; Mirzasoleiman et al. 2015):
+//! "random sampling with lazy evaluation" — StochasticGreedy's subsampling
+//! combined with LazyGreedy's stale upper bounds. Within each iteration's
+//! random sample, elements are examined in descending stale-bound order
+//! and only re-evaluated until a fresh bound tops the rest — typically a
+//! handful of evaluations per pick.
+//!
+//! Cardinality budgets only (inherits StochasticGreedy's sample formula).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::stochastic::sample_size;
+use super::{should_stop, Budget, MaximizeOpts, Selection};
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::SetFunction;
+use crate::rng::Pcg64;
+
+struct Entry {
+    bound: f64,
+    e: usize,
+    fresh: bool,
+}
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound && self.e == other.e
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.bound
+            .partial_cmp(&other.bound)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.e.cmp(&self.e))
+    }
+}
+
+pub(crate) fn run(
+    f: &mut dyn SetFunction,
+    budget: &Budget,
+    opts: &MaximizeOpts,
+) -> Result<Selection> {
+    let Some(k) = budget.as_count() else {
+        return Err(SubmodError::Unsupported(
+            "LazierThanLazyGreedy requires a cardinality budget".into(),
+        ));
+    };
+    if !(0.0 < opts.epsilon && opts.epsilon < 1.0) {
+        return Err(SubmodError::InvalidParam(format!(
+            "epsilon {} outside (0,1)",
+            opts.epsilon
+        )));
+    }
+    let n = f.n();
+    let k = k.min(n);
+    let s = sample_size(n, k, opts.epsilon);
+    let mut rng = Pcg64::new(opts.seed);
+
+    // persistent stale upper bounds (∞ = never evaluated)
+    let mut upper = vec![f64::INFINITY; n];
+    let mut pool: Vec<usize> = (0..n).collect();
+    let mut order = Vec::new();
+    let mut value = 0f64;
+    let mut evaluations = 0u64;
+
+    for it in 0..k {
+        if pool.is_empty() {
+            break;
+        }
+        let take = s.min(pool.len());
+        for i in 0..take {
+            let j = i + rng.next_below(pool.len() - i);
+            pool.swap(i, j);
+        }
+        // lazy evaluation *within the sample*
+        let mut heap: BinaryHeap<Entry> = pool[..take]
+            .iter()
+            .map(|&e| Entry { bound: upper[e], e, fresh: false })
+            .collect();
+        let mut picked: Option<(usize, f64)> = None;
+        while let Some(top) = heap.pop() {
+            if top.fresh {
+                picked = Some((top.e, top.bound));
+                break;
+            }
+            let gain = f.marginal_gain_memoized(top.e);
+            evaluations += 1;
+            upper[top.e] = gain;
+            heap.push(Entry { bound: gain, e: top.e, fresh: true });
+        }
+        let Some((e, gain)) = picked else { break };
+        if should_stop(gain, opts) {
+            break;
+        }
+        f.update_memoization(e);
+        value += gain;
+        if opts.verbose {
+            eprintln!("[lazier {it}] pick {e} gain {gain:.6} sample {take}");
+        }
+        order.push((e, gain));
+        let pos = pool[..take].iter().position(|&x| x == e).unwrap();
+        pool.swap_remove(pos);
+    }
+    Ok(Selection { order, value, evaluations })
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::data::synthetic;
+    use crate::functions::facility_location::FacilityLocation;
+    use crate::kernel::{DenseKernel, Metric};
+    use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+
+    fn fl(n: usize, seed: u64) -> FacilityLocation {
+        let data = synthetic::blobs(n, 2, 8, 2.0, seed);
+        FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean))
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let f = fl(90, 31);
+        let opts = MaximizeOpts { seed: 3, ..Default::default() };
+        let a = maximize(&f, Budget::cardinality(9), OptimizerKind::LazierThanLazyGreedy, &opts)
+            .unwrap();
+        let b = maximize(&f, Budget::cardinality(9), OptimizerKind::LazierThanLazyGreedy, &opts)
+            .unwrap();
+        assert_eq!(a.ids(), b.ids());
+    }
+
+    #[test]
+    fn near_naive_quality() {
+        let f = fl(200, 32);
+        let naive = maximize(
+            &f,
+            Budget::cardinality(15),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        let lazier = maximize(
+            &f,
+            Budget::cardinality(15),
+            OptimizerKind::LazierThanLazyGreedy,
+            &MaximizeOpts { epsilon: 0.01, ..Default::default() },
+        )
+        .unwrap();
+        assert!(lazier.value >= 0.9 * naive.value);
+    }
+
+    #[test]
+    fn fewer_evaluations_than_stochastic() {
+        // the lazy-within-sample trick should cut evaluations vs plain
+        // stochastic at the same ε
+        let f = fl(400, 33);
+        let opts = MaximizeOpts { epsilon: 0.05, ..Default::default() };
+        let stoch = maximize(
+            &f,
+            Budget::cardinality(40),
+            OptimizerKind::StochasticGreedy,
+            &opts,
+        )
+        .unwrap();
+        let lazier = maximize(
+            &f,
+            Budget::cardinality(40),
+            OptimizerKind::LazierThanLazyGreedy,
+            &opts,
+        )
+        .unwrap();
+        assert!(
+            lazier.evaluations < stoch.evaluations,
+            "lazier {} vs stochastic {}",
+            lazier.evaluations,
+            stoch.evaluations
+        );
+    }
+
+    #[test]
+    fn budget_sized_output() {
+        let f = fl(60, 34);
+        let sel = maximize(
+            &f,
+            Budget::cardinality(12),
+            OptimizerKind::LazierThanLazyGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(sel.order.len(), 12);
+        let ids = sel.ids();
+        let set: std::collections::HashSet<_> = ids.iter().collect();
+        assert_eq!(set.len(), 12);
+    }
+
+    #[test]
+    fn knapsack_rejected() {
+        let f = fl(20, 35);
+        let b = Budget::knapsack(4.0, vec![1.0; 20]).unwrap();
+        assert!(maximize(
+            &f,
+            b,
+            OptimizerKind::LazierThanLazyGreedy,
+            &MaximizeOpts::default()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! LazyGreedy / Accelerated Greedy (paper §5.3.2; Minoux 1978).
+//!
+//! Maintains a max-heap of stale upper bounds on each element's marginal
+//! gain. Submodularity guarantees gains only shrink as the set grows, so a
+//! popped element whose bound was computed this iteration is guaranteed
+//! optimal — no full scan. Several times faster than NaiveGreedy (paper
+//! Table 2: 3.93 s → 417 ms on the 500-point workload).
+//!
+//! Only valid for submodular functions (the paper is explicit); for
+//! non-submodular ones (DisparityMin, DisparitySum) the solution may
+//! differ from NaiveGreedy's — callers choose accordingly.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::{should_stop, Budget, MaximizeOpts, Selection};
+use crate::error::Result;
+use crate::functions::traits::SetFunction;
+
+/// Heap entry ordered by upper bound (gain/cost key under knapsack).
+struct Entry {
+    key: f64,
+    gain: f64,
+    e: usize,
+    /// iteration at which `key` was computed; fresh == current iteration
+    iter: u64,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.e == other.e
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key
+            .partial_cmp(&other.key)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.e.cmp(&self.e)) // deterministic tie-break: lower id first
+    }
+}
+
+pub(crate) fn run(
+    f: &mut dyn SetFunction,
+    budget: &Budget,
+    opts: &MaximizeOpts,
+) -> Result<Selection> {
+    let n = f.n();
+    let mut evaluations = 0u64;
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(n);
+    // iteration 0: seed the heap with exact first-iteration gains
+    for e in 0..n {
+        let gain = f.marginal_gain_memoized(e);
+        evaluations += 1;
+        heap.push(Entry { key: gain / budget.cost(e), gain, e, iter: 0 });
+    }
+
+    let mut order = Vec::new();
+    let mut value = 0f64;
+    let mut spent = 0f64;
+    let mut iter = 0u64;
+    let mut skipped: Vec<Entry> = Vec::new(); // over-budget entries, retried next iter
+
+    while let Some(top) = heap.pop() {
+        let remaining = budget.max_cost - spent;
+        if budget.cost(top.e) > remaining + 1e-12 {
+            // cannot afford now; keep for later iterations (smaller budgets
+            // never reopen under unit costs, but knapsack costs can)
+            skipped.push(top);
+            if heap.is_empty() {
+                break;
+            }
+            continue;
+        }
+        if top.iter == iter {
+            // fresh bound → guaranteed best by submodularity
+            if should_stop(top.gain, opts) {
+                break;
+            }
+            f.update_memoization(top.e);
+            spent += budget.cost(top.e);
+            value += top.gain;
+            if opts.verbose {
+                eprintln!(
+                    "[lazy {}] pick {} gain {:.6} value {value:.6} heap {}",
+                    order.len(),
+                    top.e,
+                    top.gain,
+                    heap.len()
+                );
+            }
+            order.push((top.e, top.gain));
+            iter += 1;
+            // over-budget entries may fit again after... no: spent only grows.
+            // Under knapsack, cheaper items may still fit even as the
+            // remaining budget shrinks — re-add previously skipped ones
+            // whose cost now exceeds remaining is pointless; only re-add
+            // ones that still fit.
+            let rem = budget.max_cost - spent;
+            skipped.retain(|s| {
+                if budget.cost(s.e) <= rem + 1e-12 {
+                    heap.push(Entry { key: s.key, gain: s.gain, e: s.e, iter: s.iter });
+                    false
+                } else {
+                    true
+                }
+            });
+            if spent + 1e-12 >= budget.max_cost && budget.is_cardinality() {
+                break;
+            }
+        } else {
+            // stale → recompute and reinsert
+            let gain = f.marginal_gain_memoized(top.e);
+            evaluations += 1;
+            heap.push(Entry { key: gain / budget.cost(top.e), gain, e: top.e, iter });
+        }
+    }
+    Ok(Selection { order, value, evaluations })
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::data::synthetic;
+    use crate::functions::facility_location::FacilityLocation;
+    use crate::functions::graph_cut::GraphCut;
+    use crate::functions::log_determinant::LogDeterminant;
+    use crate::functions::set_cover::SetCover;
+    use crate::functions::traits::SetFunction;
+    use crate::kernel::{DenseKernel, Metric};
+    use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+
+    fn check_matches_naive(f: &dyn SetFunction, k: usize) {
+        let a = maximize(
+            f,
+            Budget::cardinality(k),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        let b = maximize(
+            f,
+            Budget::cardinality(k),
+            OptimizerKind::LazyGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        assert!((a.value - b.value).abs() < 1e-6, "{} vs {}", a.value, b.value);
+        assert_eq!(a.ids(), b.ids());
+    }
+
+    #[test]
+    fn matches_naive_on_fl() {
+        let data = synthetic::blobs(70, 2, 5, 1.5, 11);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        check_matches_naive(&f, 10);
+    }
+
+    #[test]
+    fn matches_naive_on_gc() {
+        let data = synthetic::blobs(50, 2, 4, 1.0, 12);
+        let f =
+            GraphCut::new(DenseKernel::from_data(&data, Metric::Euclidean), 0.4).unwrap();
+        check_matches_naive(&f, 8);
+    }
+
+    #[test]
+    fn matches_naive_on_logdet() {
+        let data = synthetic::blobs(30, 3, 3, 1.0, 13);
+        let k = DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 });
+        let f = LogDeterminant::with_regularization(k, 0.1).unwrap();
+        check_matches_naive(&f, 6);
+    }
+
+    #[test]
+    fn matches_naive_on_set_cover() {
+        let f = SetCover::new(
+            vec![vec![0, 1, 2], vec![3, 4], vec![0, 3], vec![5], vec![1, 5]],
+            vec![1.0, 2.0, 1.0, 3.0, 1.0, 2.0],
+        )
+        .unwrap();
+        check_matches_naive(&f, 4);
+    }
+
+    #[test]
+    fn far_fewer_evaluations_than_naive() {
+        let data = synthetic::blobs(200, 2, 10, 2.0, 14);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let a = maximize(
+            &f,
+            Budget::cardinality(20),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        let b = maximize(
+            &f,
+            Budget::cardinality(20),
+            OptimizerKind::LazyGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        assert!(
+            (b.evaluations as f64) < 0.5 * a.evaluations as f64,
+            "lazy {} vs naive {}",
+            b.evaluations,
+            a.evaluations
+        );
+    }
+
+    #[test]
+    fn knapsack_respected() {
+        let data = synthetic::blobs(40, 2, 4, 1.0, 15);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let costs: Vec<f64> = (0..40).map(|i| 1.0 + (i % 4) as f64 * 0.5).collect();
+        let sel = maximize(
+            &f,
+            Budget::knapsack(5.0, costs.clone()).unwrap(),
+            OptimizerKind::LazyGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        let total: f64 = sel.ids().iter().map(|&e| costs[e]).sum();
+        assert!(total <= 5.0 + 1e-9);
+    }
+}

@@ -1,0 +1,290 @@
+//! The optimizer suite (paper §5.3): NaiveGreedy, LazyGreedy (Minoux's
+//! accelerated greedy), StochasticGreedy (Mirzasoleiman et al.), and
+//! LazierThanLazyGreedy ("random sampling with lazy evaluation"), plus the
+//! Submodular Cover solver for Problem 2 (Wolsey).
+//!
+//! The de-coupled paradigm (paper §5.1): any [`SetFunction`] is first
+//! instantiated, then [`maximize`] is called on it with a [`Budget`], an
+//! [`OptimizerKind`] and [`MaximizeOpts`]. The optimizers drive only the
+//! memoized interface (`init_memoization` / `marginal_gain_memoized` /
+//! `update_memoization`), so every function's Table 3/4 statistics are
+//! exercised on the hot path.
+
+pub mod cover;
+pub mod lazier;
+pub mod lazy;
+pub mod naive;
+pub mod stochastic;
+
+use std::sync::Arc;
+
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::{ElementId, SetFunction, Subset};
+
+pub use cover::submodular_cover;
+
+/// Positive gains below this threshold count as zero for the
+/// `stop_if_zero_gain` rule (float noise guard).
+pub const ZERO_GAIN_EPS: f64 = 1e-12;
+
+/// Selection budget: cardinality or knapsack (paper Problem 1).
+#[derive(Debug, Clone)]
+pub struct Budget {
+    /// Maximum total cost.
+    pub max_cost: f64,
+    /// Per-element costs; `None` = unit costs (cardinality constraint).
+    pub costs: Option<Arc<Vec<f64>>>,
+}
+
+impl Budget {
+    /// Cardinality constraint |X| ≤ k.
+    pub fn cardinality(k: usize) -> Budget {
+        Budget { max_cost: k as f64, costs: None }
+    }
+
+    /// Knapsack constraint Σ_{i∈X} c_i ≤ b.
+    pub fn knapsack(b: f64, costs: Vec<f64>) -> Result<Budget> {
+        if costs.iter().any(|&c| c <= 0.0) {
+            return Err(SubmodError::InvalidParam("knapsack costs must be > 0".into()));
+        }
+        Ok(Budget { max_cost: b, costs: Some(Arc::new(costs)) })
+    }
+
+    #[inline]
+    pub fn cost(&self, e: ElementId) -> f64 {
+        match &self.costs {
+            None => 1.0,
+            Some(c) => c[e],
+        }
+    }
+
+    pub fn is_cardinality(&self) -> bool {
+        self.costs.is_none()
+    }
+
+    /// Budget as an integer element count (cardinality budgets only).
+    pub fn as_count(&self) -> Option<usize> {
+        self.is_cardinality().then_some(self.max_cost as usize)
+    }
+}
+
+/// Options shared by all optimizers, mirroring Submodlib's maximize()
+/// keyword arguments.
+#[derive(Debug, Clone)]
+pub struct MaximizeOpts {
+    /// Stop when the best available gain is ≤ [`ZERO_GAIN_EPS`].
+    pub stop_if_zero_gain: bool,
+    /// Stop when the best available gain is negative.
+    pub stop_if_negative_gain: bool,
+    /// Stochastic/Lazier sample-size parameter ε (sample size
+    /// ⌈(n/k)·ln(1/ε)⌉).
+    pub epsilon: f64,
+    /// RNG seed for the stochastic optimizers.
+    pub seed: u64,
+    /// Print per-iteration traces.
+    pub verbose: bool,
+}
+
+impl Default for MaximizeOpts {
+    fn default() -> Self {
+        MaximizeOpts {
+            stop_if_zero_gain: true,
+            stop_if_negative_gain: true,
+            epsilon: 0.1,
+            seed: 1,
+            verbose: false,
+        }
+    }
+}
+
+/// Result of a greedy maximization.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// (element, marginal gain at pick time), in pick order — the
+    /// "greedyList" of the paper's sample code.
+    pub order: Vec<(ElementId, f64)>,
+    /// Final objective value f(X) (= Σ gains, since f(∅) = 0 for every
+    /// function in the suite).
+    pub value: f64,
+    /// Number of marginal-gain evaluations performed (the quantity the
+    /// lazy variants reduce; reported by the optimizer benches).
+    pub evaluations: u64,
+}
+
+impl Selection {
+    /// Selected ids only.
+    pub fn ids(&self) -> Vec<ElementId> {
+        self.order.iter().map(|&(e, _)| e).collect()
+    }
+
+    /// As a [`Subset`] over ground size n.
+    pub fn subset(&self, n: usize) -> Subset {
+        Subset::from_ids(n, &self.ids())
+    }
+}
+
+/// The four greedy maximizers (paper §5.3.1–§5.3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    NaiveGreedy,
+    LazyGreedy,
+    StochasticGreedy,
+    LazierThanLazyGreedy,
+}
+
+impl std::str::FromStr for OptimizerKind {
+    type Err = SubmodError;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "naivegreedy" | "naive" => Ok(OptimizerKind::NaiveGreedy),
+            "lazygreedy" | "lazy" => Ok(OptimizerKind::LazyGreedy),
+            "stochasticgreedy" | "stochastic" => Ok(OptimizerKind::StochasticGreedy),
+            "lazierthanlazygreedy" | "lazier" => Ok(OptimizerKind::LazierThanLazyGreedy),
+            other => Err(SubmodError::InvalidParam(format!("unknown optimizer {other:?}"))),
+        }
+    }
+}
+
+/// Maximize `f` under `budget` with the chosen optimizer. The function's
+/// memoization state is cloned, not mutated — repeated calls on the same
+/// instance are independent (matching Submodlib's maximize()).
+pub fn maximize(
+    f: &dyn SetFunction,
+    budget: Budget,
+    kind: OptimizerKind,
+    opts: &MaximizeOpts,
+) -> Result<Selection> {
+    if budget.max_cost <= 0.0 {
+        return Err(SubmodError::InvalidParam(format!(
+            "budget {} must be > 0",
+            budget.max_cost
+        )));
+    }
+    if let Some(costs) = &budget.costs {
+        if costs.len() != f.n() {
+            return Err(SubmodError::Shape(format!(
+                "{} costs for ground set of {}",
+                costs.len(),
+                f.n()
+            )));
+        }
+    }
+    let mut work = f.clone_box();
+    work.init_memoization(&Subset::empty(f.n()));
+    match kind {
+        OptimizerKind::NaiveGreedy => naive::run(work.as_mut(), &budget, opts),
+        OptimizerKind::LazyGreedy => lazy::run(work.as_mut(), &budget, opts),
+        OptimizerKind::StochasticGreedy => stochastic::run(work.as_mut(), &budget, opts),
+        OptimizerKind::LazierThanLazyGreedy => lazier::run(work.as_mut(), &budget, opts),
+    }
+}
+
+/// Shared stop-rule check: should the loop halt given the best gain found?
+pub(crate) fn should_stop(best_gain: f64, opts: &MaximizeOpts) -> bool {
+    (opts.stop_if_negative_gain && best_gain < 0.0)
+        || (opts.stop_if_zero_gain && best_gain <= ZERO_GAIN_EPS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::functions::facility_location::FacilityLocation;
+    use crate::kernel::{DenseKernel, Metric};
+
+    fn fl(n: usize, seed: u64) -> FacilityLocation {
+        let data = synthetic::blobs(n, 2, 4, 1.0, seed);
+        FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean))
+    }
+
+    #[test]
+    fn budget_validation() {
+        let f = fl(10, 1);
+        assert!(maximize(
+            &f,
+            Budget::cardinality(0),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default()
+        )
+        .is_err());
+        assert!(Budget::knapsack(3.0, vec![1.0, -2.0]).is_err());
+        let b = Budget::knapsack(3.0, vec![1.0; 5]).unwrap(); // wrong len
+        assert!(maximize(&f, b, OptimizerKind::NaiveGreedy, &MaximizeOpts::default())
+            .is_err());
+    }
+
+    #[test]
+    fn all_optimizers_return_budget_sized_sets() {
+        let f = fl(60, 2);
+        for kind in [
+            OptimizerKind::NaiveGreedy,
+            OptimizerKind::LazyGreedy,
+            OptimizerKind::StochasticGreedy,
+            OptimizerKind::LazierThanLazyGreedy,
+        ] {
+            let sel =
+                maximize(&f, Budget::cardinality(8), kind, &MaximizeOpts::default())
+                    .unwrap();
+            assert_eq!(sel.order.len(), 8, "{kind:?}");
+            // ids distinct
+            let ids = sel.ids();
+            let set: std::collections::HashSet<_> = ids.iter().collect();
+            assert_eq!(set.len(), 8);
+            // value equals evaluate() of the returned set
+            let v = f.evaluate(&sel.subset(60));
+            assert!((v - sel.value).abs() < 1e-6, "{kind:?}: {v} vs {}", sel.value);
+        }
+    }
+
+    #[test]
+    fn lazy_matches_naive_exactly() {
+        let f = fl(80, 3);
+        let a = maximize(
+            &f,
+            Budget::cardinality(12),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        let b = maximize(
+            &f,
+            Budget::cardinality(12),
+            OptimizerKind::LazyGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(a.ids(), b.ids());
+        assert!((a.value - b.value).abs() < 1e-9);
+        assert!(b.evaluations < a.evaluations, "lazy should evaluate less");
+    }
+
+    #[test]
+    fn stochastic_near_naive_value() {
+        let f = fl(100, 4);
+        let a = maximize(
+            &f,
+            Budget::cardinality(10),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        let b = maximize(
+            &f,
+            Budget::cardinality(10),
+            OptimizerKind::StochasticGreedy,
+            &MaximizeOpts { epsilon: 0.01, ..Default::default() },
+        )
+        .unwrap();
+        assert!(b.value >= 0.9 * a.value, "{} vs {}", b.value, a.value);
+    }
+
+    #[test]
+    fn optimizer_kind_parse() {
+        assert_eq!("lazy".parse::<OptimizerKind>().unwrap(), OptimizerKind::LazyGreedy);
+        assert_eq!(
+            "NaiveGreedy".parse::<OptimizerKind>().unwrap(),
+            OptimizerKind::NaiveGreedy
+        );
+        assert!("fancy".parse::<OptimizerKind>().is_err());
+    }
+}

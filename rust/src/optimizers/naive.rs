@@ -1,0 +1,172 @@
+//! NaiveGreedy (paper §5.3.1): the standard greedy algorithm [Nemhauser
+//! et al. 1978] — every iteration scans the whole remaining ground set for
+//! the element with maximum marginal gain (gain/cost ratio under knapsack
+//! budgets, per Sviridenko 2004) and adds it, until the budget is met or
+//! the stop rules fire.
+//!
+//! Ties: the first best element encountered wins (matching the paper's
+//! §5.3.1 note on non-unique greedy solutions; our ground-set scan order
+//! is ascending id, so unlike Submodlib's unordered sets it IS
+//! deterministic).
+
+use super::{should_stop, Budget, MaximizeOpts, Selection};
+use crate::error::Result;
+use crate::functions::traits::SetFunction;
+
+pub(crate) fn run(
+    f: &mut dyn SetFunction,
+    budget: &Budget,
+    opts: &MaximizeOpts,
+) -> Result<Selection> {
+    let n = f.n();
+    let mut in_set = vec![false; n];
+    let mut order = Vec::new();
+    let mut value = 0f64;
+    let mut spent = 0f64;
+    let mut evaluations = 0u64;
+
+    loop {
+        let remaining = budget.max_cost - spent;
+        let mut best: Option<(usize, f64, f64)> = None; // (e, gain, key)
+        for e in 0..n {
+            if in_set[e] || budget.cost(e) > remaining + 1e-12 {
+                continue;
+            }
+            let gain = f.marginal_gain_memoized(e);
+            evaluations += 1;
+            let key = gain / budget.cost(e);
+            if best.map(|(_, _, bk)| key > bk).unwrap_or(true) {
+                best = Some((e, gain, key));
+            }
+        }
+        let Some((e, gain, _)) = best else { break };
+        if should_stop(gain, opts) {
+            break;
+        }
+        f.update_memoization(e);
+        in_set[e] = true;
+        spent += budget.cost(e);
+        value += gain;
+        if opts.verbose {
+            eprintln!(
+                "[naive {}] pick {e} gain {gain:.6} value {value:.6} cost {spent}",
+                order.len()
+            );
+        }
+        order.push((e, gain));
+    }
+    Ok(Selection { order, value, evaluations })
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::data::synthetic;
+    use crate::functions::set_cover::SetCover;
+    use crate::functions::traits::{SetFunction, Subset};
+    use crate::functions::facility_location::FacilityLocation;
+    use crate::kernel::{DenseKernel, Metric};
+    use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+
+    #[test]
+    fn greedy_set_cover_is_optimal_here() {
+        // classic instance where greedy finds the optimum
+        let f = SetCover::new(
+            vec![vec![0, 1, 2], vec![3, 4], vec![0, 3], vec![5]],
+            vec![1.0; 6],
+        )
+        .unwrap();
+        let sel = maximize(
+            &f,
+            Budget::cardinality(3),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(sel.ids(), vec![0, 1, 3]);
+        assert_eq!(sel.value, 6.0);
+    }
+
+    #[test]
+    fn stops_on_zero_gain() {
+        // after covering everything, gains are 0 → must stop early
+        let f = SetCover::new(vec![vec![0], vec![0], vec![0]], vec![1.0]).unwrap();
+        let sel = maximize(
+            &f,
+            Budget::cardinality(3),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(sel.order.len(), 1);
+    }
+
+    #[test]
+    fn no_stop_flags_fills_budget() {
+        let f = SetCover::new(vec![vec![0], vec![0], vec![0]], vec![1.0]).unwrap();
+        let sel = maximize(
+            &f,
+            Budget::cardinality(3),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts {
+                stop_if_zero_gain: false,
+                stop_if_negative_gain: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(sel.order.len(), 3);
+    }
+
+    #[test]
+    fn knapsack_budget_respected() {
+        let data = synthetic::blobs(30, 2, 3, 1.0, 5);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let costs: Vec<f64> = (0..30).map(|i| 1.0 + (i % 3) as f64).collect();
+        let budget = Budget::knapsack(6.0, costs.clone()).unwrap();
+        let sel = maximize(
+            &f,
+            budget,
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        let total: f64 = sel.ids().iter().map(|&e| costs[e]).sum();
+        assert!(total <= 6.0 + 1e-9);
+        assert!(!sel.order.is_empty());
+    }
+
+    #[test]
+    fn gains_weakly_decreasing_for_submodular_f() {
+        let data = synthetic::blobs(50, 2, 5, 1.0, 6);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let sel = maximize(
+            &f,
+            Budget::cardinality(10),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        for w in sel.order.windows(2) {
+            assert!(w[0].1 >= w[1].1 - 1e-9, "gains must not increase");
+        }
+    }
+
+    #[test]
+    fn first_pick_maximizes_singleton_value() {
+        let data = synthetic::blobs(40, 2, 4, 1.0, 7);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let sel = maximize(
+            &f,
+            Budget::cardinality(1),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        let picked = sel.order[0].0;
+        let best = (0..40)
+            .map(|e| f.evaluate(&Subset::from_ids(40, &[e])))
+            .fold(f64::MIN, f64::max);
+        let got = f.evaluate(&Subset::from_ids(40, &[picked]));
+        assert!((got - best).abs() < 1e-9);
+    }
+}

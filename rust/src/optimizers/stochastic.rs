@@ -1,0 +1,172 @@
+//! StochasticGreedy (paper §5.3.3; Mirzasoleiman et al. 2015, "Lazier
+//! than lazy greedy"'s non-lazy half): each iteration samples
+//! `s = ⌈(n/k)·ln(1/ε)⌉` elements uniformly at random from the remaining
+//! ground set and picks the best of the sample. Linear total running time
+//! independent of the budget, (1 − 1/e − ε) guarantee in expectation.
+//!
+//! Cardinality budgets only (the sample-size formula needs k).
+
+use super::{should_stop, Budget, MaximizeOpts, Selection};
+use crate::error::{Result, SubmodError};
+use crate::functions::traits::SetFunction;
+use crate::rng::Pcg64;
+
+/// Sample size for one stochastic-greedy iteration.
+pub(crate) fn sample_size(n: usize, k: usize, epsilon: f64) -> usize {
+    let s = ((n as f64 / k as f64) * (1.0 / epsilon).ln()).ceil() as usize;
+    s.clamp(1, n)
+}
+
+pub(crate) fn run(
+    f: &mut dyn SetFunction,
+    budget: &Budget,
+    opts: &MaximizeOpts,
+) -> Result<Selection> {
+    let Some(k) = budget.as_count() else {
+        return Err(SubmodError::Unsupported(
+            "StochasticGreedy requires a cardinality budget".into(),
+        ));
+    };
+    if !(0.0 < opts.epsilon && opts.epsilon < 1.0) {
+        return Err(SubmodError::InvalidParam(format!(
+            "epsilon {} outside (0,1)",
+            opts.epsilon
+        )));
+    }
+    let n = f.n();
+    let k = k.min(n);
+    let s = sample_size(n, k, opts.epsilon);
+    let mut rng = Pcg64::new(opts.seed);
+    // remaining elements as a swap-removable pool
+    let mut pool: Vec<usize> = (0..n).collect();
+    let mut order = Vec::new();
+    let mut value = 0f64;
+    let mut evaluations = 0u64;
+
+    for it in 0..k {
+        if pool.is_empty() {
+            break;
+        }
+        let take = s.min(pool.len());
+        // sample `take` distinct pool positions via partial Fisher–Yates
+        for i in 0..take {
+            let j = i + rng.next_below(pool.len() - i);
+            pool.swap(i, j);
+        }
+        let mut best: Option<(usize, usize, f64)> = None; // (pool pos, e, gain)
+        for (pos, &e) in pool[..take].iter().enumerate() {
+            let gain = f.marginal_gain_memoized(e);
+            evaluations += 1;
+            if best.map(|(_, _, bg)| gain > bg).unwrap_or(true) {
+                best = Some((pos, e, gain));
+            }
+        }
+        let Some((pos, e, gain)) = best else { break };
+        if should_stop(gain, opts) {
+            break;
+        }
+        f.update_memoization(e);
+        value += gain;
+        if opts.verbose {
+            eprintln!("[stochastic {it}] pick {e} gain {gain:.6} sample {take}");
+        }
+        order.push((e, gain));
+        pool.swap_remove(pos);
+    }
+    Ok(Selection { order, value, evaluations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::functions::facility_location::FacilityLocation;
+    use crate::kernel::{DenseKernel, Metric};
+    use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+
+    #[test]
+    fn sample_size_formula() {
+        // n=500, k=100, ε=0.1 → (5)·ln(10) ≈ 11.5 → 12
+        assert_eq!(sample_size(500, 100, 0.1), 12);
+        assert_eq!(sample_size(10, 10, 0.5), 1);
+        assert!(sample_size(100, 1, 1e-9) <= 100);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let data = synthetic::blobs(80, 2, 4, 1.0, 21);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let opts = MaximizeOpts { seed: 7, ..Default::default() };
+        let a = maximize(&f, Budget::cardinality(10), OptimizerKind::StochasticGreedy, &opts)
+            .unwrap();
+        let b = maximize(&f, Budget::cardinality(10), OptimizerKind::StochasticGreedy, &opts)
+            .unwrap();
+        assert_eq!(a.ids(), b.ids());
+    }
+
+    #[test]
+    fn different_seeds_usually_differ() {
+        let data = synthetic::blobs(100, 2, 5, 2.0, 22);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let a = maximize(
+            &f,
+            Budget::cardinality(10),
+            OptimizerKind::StochasticGreedy,
+            &MaximizeOpts { seed: 1, epsilon: 0.5, ..Default::default() },
+        )
+        .unwrap();
+        let b = maximize(
+            &f,
+            Budget::cardinality(10),
+            OptimizerKind::StochasticGreedy,
+            &MaximizeOpts { seed: 2, epsilon: 0.5, ..Default::default() },
+        )
+        .unwrap();
+        assert_ne!(a.ids(), b.ids());
+    }
+
+    #[test]
+    fn fewer_evaluations_than_naive() {
+        let data = synthetic::blobs(300, 2, 10, 2.0, 23);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let naive = maximize(
+            &f,
+            Budget::cardinality(30),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        let stoch = maximize(
+            &f,
+            Budget::cardinality(30),
+            OptimizerKind::StochasticGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        assert!(stoch.evaluations < naive.evaluations / 4);
+    }
+
+    #[test]
+    fn knapsack_rejected() {
+        let data = synthetic::blobs(20, 2, 2, 1.0, 24);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let b = Budget::knapsack(5.0, vec![1.0; 20]).unwrap();
+        assert!(maximize(&f, b, OptimizerKind::StochasticGreedy, &MaximizeOpts::default())
+            .is_err());
+    }
+
+    #[test]
+    fn invalid_epsilon_rejected() {
+        let data = synthetic::blobs(20, 2, 2, 1.0, 25);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        for eps in [0.0, 1.0, -0.5] {
+            assert!(maximize(
+                &f,
+                Budget::cardinality(5),
+                OptimizerKind::StochasticGreedy,
+                &MaximizeOpts { epsilon: eps, ..Default::default() }
+            )
+            .is_err());
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! PJRT CPU client wrapper + artifact registry.
+//!
+//! Pattern follows /opt/xla-example/src/bin/load_hlo.rs:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`, unwrapping the 1-tuple the AOT path
+//! produces (`return_tuple=True`). The manifest is parsed with the
+//! crate's own JSON substrate (util::json).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Result, SubmodError};
+use crate::util::json::Json;
+
+/// Tile geometry block of `manifest.json` (shared with aot.py).
+#[derive(Debug, Clone)]
+pub struct TileGeometry {
+    pub tm: usize,
+    pub tn: usize,
+    pub d: usize,
+    pub gn: usize,
+    pub gc: usize,
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub kind: String,
+    pub file: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub tile: TileGeometry,
+    pub entries: HashMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let tile = v
+            .get("tile")
+            .ok_or_else(|| SubmodError::Runtime("manifest: missing tile".into()))?;
+        let tile = TileGeometry {
+            tm: tile.req_usize("tm")?,
+            tn: tile.req_usize("tn")?,
+            d: tile.req_usize("d")?,
+            gn: tile.req_usize("gn")?,
+            gc: tile.req_usize("gc")?,
+        };
+        let mut entries = HashMap::new();
+        let obj = v
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| SubmodError::Runtime("manifest: missing entries".into()))?;
+        for (name, e) in obj {
+            entries.insert(
+                name.clone(),
+                ManifestEntry {
+                    kind: e.req_str("kind")?.to_string(),
+                    file: e.req_str("file")?.to_string(),
+                },
+            );
+        }
+        Ok(Manifest { tile, entries })
+    }
+}
+
+fn rt<E: std::fmt::Display>(what: &'static str) -> impl Fn(E) -> SubmodError {
+    move |e| SubmodError::Runtime(format!("{what}: {e}"))
+}
+
+/// PJRT engine: one compiled executable per artifact, compile-once cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    exes: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create the CPU client and parse the manifest. Executables compile
+    /// lazily on first use and are cached for the process lifetime.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(rt("pjrt cpu client"))?;
+        Ok(Engine { client, manifest, dir, exes: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.entries.get(name).ok_or_else(|| {
+            SubmodError::Runtime(format!("artifact {name} not in manifest"))
+        })?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| SubmodError::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(rt("parse hlo text"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp).map_err(rt("compile"))?);
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a 2-input → 1-output (tupled) artifact with f32 buffers.
+    fn run2(
+        &self,
+        name: &str,
+        a: (&[f32], &[usize]),
+        b: (&[f32], &[usize]),
+    ) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let to_lit = |buf: &[f32], shape: &[usize]| -> Result<xla::Literal> {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(buf).reshape(&dims).map_err(rt("reshape literal"))
+        };
+        let la = to_lit(a.0, a.1)?;
+        let lb = to_lit(b.0, b.1)?;
+        let result = exe.execute::<xla::Literal>(&[la, lb]).map_err(rt("execute"))?[0][0]
+            .to_literal_sync()
+            .map_err(rt("to_literal"))?;
+        let out = result.to_tuple1().map_err(rt("untuple"))?;
+        out.to_vec::<f32>().map_err(rt("literal to vec"))
+    }
+
+    /// Run a similarity tile: x (TM×D), y (TN×D) → (TM×TN) row-major.
+    pub fn similarity_tile(&self, metric_tag: &str, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        let t = &self.manifest.tile;
+        if x.len() != t.tm * t.d || y.len() != t.tn * t.d {
+            return Err(SubmodError::Shape(format!(
+                "similarity tile buffers {}/{} vs {}x{}/{}x{}",
+                x.len(),
+                y.len(),
+                t.tm,
+                t.d,
+                t.tn,
+                t.d
+            )));
+        }
+        let name = format!("similarity_{}_{}x{}x{}", metric_tag, t.tm, t.tn, t.d);
+        self.run2(&name, (x, &[t.tm, t.d]), (y, &[t.tn, t.d]))
+    }
+
+    /// Run the FL-gains artifact: s (GN×GC), max_vec (GN,) → gains (GC,).
+    pub fn fl_gains(&self, s: &[f32], max_vec: &[f32]) -> Result<Vec<f32>> {
+        let t = &self.manifest.tile;
+        if s.len() != t.gn * t.gc || max_vec.len() != t.gn {
+            return Err(SubmodError::Shape(format!(
+                "fl_gains buffers {}/{} vs {}x{}/{}",
+                s.len(),
+                max_vec.len(),
+                t.gn,
+                t.gc,
+                t.gn
+            )));
+        }
+        let name = format!("fl_gains_{}x{}", t.gn, t.gc);
+        self.run2(&name, (s, &[t.gn, t.gc]), (max_vec, &[t.gn]))
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("dir", &self.dir)
+            .field("entries", &self.manifest.entries.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+            "tile": {"tm": 256, "tn": 256, "d": 1024, "gn": 1024, "gc": 256},
+            "entries": {
+                "similarity_euclidean_256x256x1024": {
+                    "kind": "similarity", "metric": "euclidean",
+                    "tm": 256, "tn": 256, "d": 1024,
+                    "file": "similarity_euclidean_256x256x1024.hlo.txt"
+                }
+            }
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.tile.tm, 256);
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(
+            m.entries["similarity_euclidean_256x256x1024"].kind,
+            "similarity"
+        );
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"tile": {"tm": 1}}"#).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `make artifacts` (python/compile/aot.py) and executes them from the
+//! Rust hot path. Python is never involved at run time.
+//!
+//! * [`client::Engine`] — PJRT CPU client + compiled-executable registry,
+//!   keyed by the entries in `artifacts/manifest.json`.
+//! * [`tiled`] — padding/tiling drivers that stitch fixed-shape artifact
+//!   invocations into arbitrary-shape kernel builds.
+//!
+//! Interchange format is HLO *text* (see aot.py's docstring for why
+//! serialized protos don't work against xla_extension 0.5.1).
+
+pub mod client;
+pub mod tiled;
+
+pub use client::{Engine, Manifest};

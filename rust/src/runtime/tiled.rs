@@ -1,0 +1,126 @@
+//! Tiling drivers: stitch fixed-shape artifact invocations into
+//! arbitrary-shape kernel builds.
+//!
+//! The AOT artifacts are compiled at one tile geometry (manifest `tile`):
+//! similarity tiles of (TM×D)·(TN×D) and FL-gain blocks of (GN×GC). Real
+//! ground sets are any size, so we zero-pad features up to D, pad item
+//! counts up to tile multiples, loop tile pairs, and copy out only the
+//! valid region. Zero-padding the *feature* axis is exact for every metric
+//! (dot, norms and distances are unchanged by appended zeros); padded
+//! *items* produce garbage rows/cols that are simply never copied out.
+
+use super::client::Engine;
+use crate::error::{Result, SubmodError};
+use crate::kernel::metric::Metric;
+use crate::linalg::Matrix;
+
+/// Pad `data` (n×d) into a (rows_padded × d_padded) row-major buffer.
+fn pad_features(data: &Matrix, rows_padded: usize, d_padded: usize) -> Vec<f32> {
+    let mut out = vec![0f32; rows_padded * d_padded];
+    for i in 0..data.rows() {
+        out[i * d_padded..i * d_padded + data.cols()].copy_from_slice(data.row(i));
+    }
+    out
+}
+
+/// Build a dense similarity kernel through the PJRT artifact path.
+///
+/// Functionally identical to `DenseKernel::from_data` (native); exists so
+/// the whole L1→L2→L3 stack is exercised end-to-end and so the headline
+/// kernel build can run on a real accelerator when one is present.
+pub fn build_dense_kernel(engine: &Engine, data: &Matrix, metric: Metric) -> Result<Matrix> {
+    build_rect_kernel(engine, data, data, metric)
+}
+
+/// Build a rectangular similarity kernel (rows set × cols set) via PJRT.
+pub fn build_rect_kernel(
+    engine: &Engine,
+    rows_data: &Matrix,
+    cols_data: &Matrix,
+    metric: Metric,
+) -> Result<Matrix> {
+    if rows_data.cols() != cols_data.cols() {
+        return Err(SubmodError::Shape(format!(
+            "feature dims {} vs {}",
+            rows_data.cols(),
+            cols_data.cols()
+        )));
+    }
+    let t = engine.manifest().tile.clone();
+    if rows_data.cols() > t.d {
+        return Err(SubmodError::Unsupported(format!(
+            "feature dim {} exceeds compiled tile depth {}; recompile artifacts",
+            rows_data.cols(),
+            t.d
+        )));
+    }
+    let (m, n) = (rows_data.rows(), cols_data.rows());
+    let mp = m.div_ceil(t.tm) * t.tm;
+    let np = n.div_ceil(t.tn) * t.tn;
+    let a = pad_features(rows_data, mp, t.d);
+    let b = pad_features(cols_data, np, t.d);
+
+    let mut out = Matrix::zeros(m, n);
+    for ti in 0..mp / t.tm {
+        let arow = &a[ti * t.tm * t.d..(ti + 1) * t.tm * t.d];
+        for tj in 0..np / t.tn {
+            let brow = &b[tj * t.tn * t.d..(tj + 1) * t.tn * t.d];
+            let tile = engine.similarity_tile(metric.tag(), arow, brow)?;
+            // copy the valid region of this (tm × tn) tile
+            let i0 = ti * t.tm;
+            let j0 = tj * t.tn;
+            let ih = t.tm.min(m - i0.min(m));
+            let jw = t.tn.min(n - j0.min(n));
+            if i0 >= m || j0 >= n {
+                continue;
+            }
+            for di in 0..ih {
+                let src = &tile[di * t.tn..di * t.tn + jw];
+                out.row_mut(i0 + di)[j0..j0 + jw].copy_from_slice(src);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Batched FL marginal gains via the PJRT artifact: pads (n × c) similarity
+/// columns and the memoized max-vector up to (GN × GC) and unpads gains.
+///
+/// Padding correctness: padded *rows* get max_vec = +inf so their relu
+/// contribution is 0; padded *columns* produce gains we drop.
+pub fn fl_gains(
+    engine: &Engine,
+    s_cols: &Matrix, // n × c
+    max_vec: &[f32],
+) -> Result<Vec<f32>> {
+    let t = engine.manifest().tile.clone();
+    let (n, c) = (s_cols.rows(), s_cols.cols());
+    if max_vec.len() != n {
+        return Err(SubmodError::Shape(format!("max_vec {} vs n {}", max_vec.len(), n)));
+    }
+    if c > t.gc {
+        return Err(SubmodError::Unsupported(format!(
+            "candidate batch {c} exceeds compiled width {}; split the batch",
+            t.gc
+        )));
+    }
+    let mut gains = vec![0f32; c];
+    // loop row blocks of GN, accumulating
+    let blocks = n.div_ceil(t.gn);
+    for bi in 0..blocks {
+        let r0 = bi * t.gn;
+        let rh = t.gn.min(n - r0);
+        let mut s_pad = vec![0f32; t.gn * t.gc];
+        let mut mv_pad = vec![f32::INFINITY; t.gn];
+        for di in 0..rh {
+            s_pad[di * t.gc..di * t.gc + c].copy_from_slice(s_cols.row(r0 + di));
+        }
+        mv_pad[..rh].copy_from_slice(&max_vec[r0..r0 + rh]);
+        // padded rows: s=0, mv=+inf → relu(0 − inf) = 0 contribution ✓
+        let block_gains = engine.fl_gains(&s_pad, &mv_pad)?;
+        for (g, bg) in gains.iter_mut().zip(&block_gains[..c]) {
+            *g += bg;
+        }
+    }
+    Ok(gains)
+}

@@ -1,0 +1,138 @@
+//! Criterion-style micro-bench harness (criterion is unavailable in the
+//! offline registry). Each `rust/benches/*.rs` binary builds a
+//! [`BenchRunner`], registers closures, and gets a mean/median/stddev
+//! table plus machine-readable CSV lines on stdout.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn csv_header() -> &'static str {
+        "name,samples,mean_s,median_s,stddev_s,min_s,max_s"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{:.9},{:.9},{:.9},{:.9},{:.9}",
+            self.name,
+            self.samples,
+            self.mean.as_secs_f64(),
+            self.median.as_secs_f64(),
+            self.stddev.as_secs_f64(),
+            self.min.as_secs_f64(),
+            self.max.as_secs_f64()
+        )
+    }
+}
+
+/// Harness: `warmup` untimed runs then `samples` timed runs per bench.
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl BenchRunner {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        BenchRunner { warmup, samples: samples.max(1), results: Vec::new() }
+    }
+
+    /// Quick-mode scaling via env var (used by `make bench SAMPLES=..`).
+    pub fn from_env() -> Self {
+        let samples = std::env::var("BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(5);
+        BenchRunner::new(1, samples)
+    }
+
+    /// Time `f` (which should do one full unit of work per call).
+    /// A `black_box`-style sink: have `f` return something and it is
+    /// consumed here to stop the optimizer deleting the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let total: Duration = times.iter().sum();
+        let mean = total / self.samples as u32;
+        let median = times[self.samples / 2];
+        let mean_s = mean.as_secs_f64();
+        let var = times
+            .iter()
+            .map(|t| {
+                let d = t.as_secs_f64() - mean_s;
+                d * d
+            })
+            .sum::<f64>()
+            / self.samples as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: self.samples,
+            mean,
+            median,
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: times[0],
+            max: *times.last().unwrap(),
+        };
+        eprintln!(
+            "  {name:<44} mean {:>10.4?}  median {:>10.4?}  ±{:>9.4?}",
+            stats.mean, stats.median, stats.stddev
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Emit the CSV block (stdout) — `cargo bench | tee bench_output.txt`
+    /// captures it.
+    pub fn finish(self, title: &str) {
+        println!("== {title} ==");
+        println!("{}", BenchStats::csv_header());
+        for r in &self.results {
+            println!("{}", r.to_csv());
+        }
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut b = BenchRunner::new(0, 5);
+        let s = b.bench("noop", || 1 + 1);
+        assert_eq!(s.samples, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut b = BenchRunner::new(0, 3);
+        b.bench("x", || std::thread::sleep(Duration::from_micros(10)));
+        let csv = b.results()[0].to_csv();
+        assert_eq!(csv.split(',').count(), 7);
+        assert!(csv.starts_with("x,3,"));
+    }
+}

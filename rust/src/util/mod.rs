@@ -1,0 +1,16 @@
+//! Dependency-free utility substrates.
+//!
+//! The offline build environment carries only the `xla` crate closure, so
+//! the pieces a library like this would normally take from crates.io are
+//! implemented here from scratch:
+//!
+//! * [`json`]  — a small recursive-descent JSON parser + writer (replaces
+//!   serde_json for the artifact manifest and the config file).
+//! * [`mod bench`](self::bench) — a criterion-style timing harness used by every
+//!   `rust/benches/*.rs` binary (warmup + N samples, mean/median/stddev).
+//! * [`prop`]  — a proptest-style randomized-property helper driven by the
+//!   crate's own [`crate::rng::Pcg64`].
+
+pub mod bench;
+pub mod json;
+pub mod prop;

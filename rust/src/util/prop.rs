@@ -1,0 +1,91 @@
+//! Proptest-style randomized property checking (proptest is unavailable
+//! offline). [`check`] runs a property over `iters` generated cases from a
+//! seeded [`Pcg64`] and panics with the failing seed + case index on
+//! violation — enough to reproduce deterministically.
+
+use crate::rng::Pcg64;
+
+/// Run `prop(case_rng)` for `iters` cases. Each case gets an independent,
+/// deterministic RNG stream. On failure, panics with the case number so
+/// `Pcg64::new_stream(seed, case)` reproduces it.
+pub fn check(name: &str, seed: u64, iters: usize, mut prop: impl FnMut(&mut Pcg64) -> Result<(), String>) {
+    for case in 0..iters {
+        let mut rng = Pcg64::new_stream(seed, case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Generators used by the property suites.
+pub mod gen {
+    use crate::linalg::Matrix;
+    use crate::rng::Pcg64;
+
+    /// Random feature matrix, n in [n_lo, n_hi], dim in [d_lo, d_hi].
+    pub fn matrix(rng: &mut Pcg64, n_lo: usize, n_hi: usize, d_lo: usize, d_hi: usize) -> Matrix {
+        let n = n_lo + rng.next_below(n_hi - n_lo + 1);
+        let d = d_lo + rng.next_below(d_hi - d_lo + 1);
+        Matrix::from_vec(n, d, (0..n * d).map(|_| rng.next_gaussian() as f32 * 2.0).collect())
+            .unwrap()
+    }
+
+    /// Random subset ids of size ≤ max_k over [0, n).
+    pub fn subset_ids(rng: &mut Pcg64, n: usize, max_k: usize) -> Vec<usize> {
+        let k = rng.next_below(max_k.min(n) + 1);
+        rng.sample_indices(n, k)
+    }
+
+    /// A random element NOT in `ids`.
+    pub fn fresh_element(rng: &mut Pcg64, n: usize, ids: &[usize]) -> Option<usize> {
+        if ids.len() >= n {
+            return None;
+        }
+        loop {
+            let e = rng.next_below(n);
+            if !ids.contains(&e) {
+                return Some(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u32 parity", 1, 50, |rng| {
+            let x = rng.next_u32();
+            if (x % 2 == 0) == (x & 1 == 0) {
+                Ok(())
+            } else {
+                Err("parity mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn reports_failures() {
+        check("always false", 2, 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = crate::rng::Pcg64::new(3);
+        for _ in 0..20 {
+            let m = gen::matrix(&mut rng, 2, 10, 1, 5);
+            assert!((2..=10).contains(&m.rows()));
+            assert!((1..=5).contains(&m.cols()));
+            let ids = gen::subset_ids(&mut rng, m.rows(), 4);
+            assert!(ids.len() <= 4);
+            let set: std::collections::HashSet<_> = ids.iter().collect();
+            assert_eq!(set.len(), ids.len());
+            if let Some(e) = gen::fresh_element(&mut rng, m.rows(), &ids) {
+                assert!(!ids.contains(&e));
+            }
+        }
+    }
+}

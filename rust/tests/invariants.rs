@@ -1,0 +1,403 @@
+//! Property-based invariant suite (util::prop, seeded PCG streams):
+//!
+//! For every function in the library:
+//!  P1 marginal_gain(X,e) == evaluate(X∪e) − evaluate(X)
+//!  P2 memoized gains == stateless gains after arbitrary update sequences
+//!  P3 diminishing returns (submodular functions only): A⊆B ⇒ f(e|A) ≥ f(e|B)
+//!  P4 monotonicity (monotone functions only): gains ≥ 0
+//! For the optimizers:
+//!  P5 LazyGreedy solution == NaiveGreedy solution (submodular f)
+//!  P6 greedy value ≥ value of a random same-size subset
+//! For the information measures:
+//!  P7 generic-wrapper identities (MI/CG/CMI definitions) hold exactly
+
+use submodlib::data::synthetic;
+use submodlib::functions::cg::Flcg;
+use submodlib::functions::disparity_min::DisparityMin;
+use submodlib::functions::disparity_min_sum::DisparityMinSum;
+use submodlib::functions::disparity_sum::DisparitySum;
+use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::functions::feature_based::{ConcaveShape, FeatureBased};
+use submodlib::functions::generic::{ConditionalGain, ConditionalMutualInformation, MutualInformation};
+use submodlib::functions::graph_cut::GraphCut;
+use submodlib::functions::log_determinant::LogDeterminant;
+use submodlib::functions::mi::{Flqmi, Flvmi, Gcmi};
+use submodlib::functions::prob_set_cover::ProbabilisticSetCover;
+use submodlib::functions::set_cover::SetCover;
+use submodlib::functions::traits::{SetFunction, Subset};
+use submodlib::kernel::{DenseKernel, Metric, RectKernel};
+use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use submodlib::rng::Pcg64;
+use submodlib::util::prop::{check, gen};
+
+/// Random instance of each function family over a random matrix.
+fn random_function(rng: &mut Pcg64) -> Box<dyn SetFunction> {
+    let data = gen::matrix(rng, 8, 24, 2, 6);
+    let n = data.rows();
+    match rng.next_below(9) {
+        0 => Box::new(FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean))),
+        8 => Box::new(DisparityMinSum::new(DenseKernel::distances_from_data(&data))),
+        1 => Box::new(
+            GraphCut::new(
+                DenseKernel::from_data(&data, Metric::Euclidean),
+                0.1 + 0.8 * rng.next_f64(),
+            )
+            .unwrap(),
+        ),
+        2 => Box::new(
+            LogDeterminant::with_regularization(
+                DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 }),
+                0.2,
+            )
+            .unwrap(),
+        ),
+        3 => {
+            let m = 12;
+            let cover: Vec<Vec<u32>> = (0..n)
+                .map(|_| (0..3).map(|_| rng.next_below(m) as u32).collect())
+                .collect();
+            let weights: Vec<f64> = (0..m).map(|_| rng.next_f64() * 4.0).collect();
+            Box::new(SetCover::new(cover, weights).unwrap())
+        }
+        4 => {
+            let m = 10;
+            let probs: Vec<Vec<f32>> =
+                (0..n).map(|_| (0..m).map(|_| rng.next_f32()).collect()).collect();
+            let weights: Vec<f64> = (0..m).map(|_| rng.next_f64() * 4.0).collect();
+            Box::new(ProbabilisticSetCover::new(probs, weights).unwrap())
+        }
+        5 => {
+            let m = 8;
+            let feats: Vec<Vec<(u32, f32)>> = (0..n)
+                .map(|_| (0..3).map(|_| (rng.next_below(m) as u32, rng.next_f32())).collect())
+                .collect();
+            let shape = match rng.next_below(3) {
+                0 => ConcaveShape::Log,
+                1 => ConcaveShape::Sqrt,
+                _ => ConcaveShape::Inverse,
+            };
+            Box::new(FeatureBased::new(feats, vec![1.0; m], shape).unwrap())
+        }
+        6 => Box::new(DisparitySum::new(DenseKernel::distances_from_data(&data))),
+        _ => Box::new(DisparityMin::new(DenseKernel::distances_from_data(&data))),
+    }
+}
+
+#[test]
+fn p1_marginal_gain_is_evaluate_delta() {
+    check("P1 gain == Δevaluate", 101, 60, |rng| {
+        let f = random_function(rng);
+        let n = f.n();
+        let ids = gen::subset_ids(rng, n, n / 2);
+        let s = Subset::from_ids(n, &ids);
+        let Some(e) = gen::fresh_element(rng, n, &ids) else { return Ok(()) };
+        let delta = f.evaluate(&s.union_with(&[e])) - f.evaluate(&s);
+        let gain = f.marginal_gain(&s, e);
+        if (delta - gain).abs() > 1e-4 * (1.0 + delta.abs()) {
+            return Err(format!("{}: gain {gain} vs delta {delta}", f.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p2_memoized_equals_stateless_after_updates() {
+    check("P2 memoized == stateless", 202, 40, |rng| {
+        let mut f = random_function(rng);
+        let n = f.n();
+        let init_ids = gen::subset_ids(rng, n, n / 3);
+        let mut s = Subset::from_ids(n, &init_ids);
+        f.init_memoization(&s);
+        for _ in 0..3 {
+            // probe a few candidates
+            for _ in 0..4 {
+                let Some(e) = gen::fresh_element(rng, n, s.order()) else { break };
+                let fast = f.marginal_gain_memoized(e);
+                let slow = f.marginal_gain(&s, e);
+                // −∞ == −∞ allowed (singular logdet candidates)
+                if fast == f64::NEG_INFINITY && slow == f64::NEG_INFINITY {
+                    continue;
+                }
+                if (fast - slow).abs() > 1e-4 * (1.0 + slow.abs()) {
+                    return Err(format!("{}: memoized {fast} vs stateless {slow}", f.name()));
+                }
+            }
+            let Some(add) = gen::fresh_element(rng, n, s.order()) else { break };
+            f.update_memoization(add);
+            s.insert(add);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p3_diminishing_returns_for_submodular_functions() {
+    check("P3 diminishing returns", 303, 50, |rng| {
+        // submodular families only (skip DisparitySum/Min)
+        let data = gen::matrix(rng, 8, 20, 2, 5);
+        let n = data.rows();
+        let f: Box<dyn SetFunction> = match rng.next_below(4) {
+            0 => Box::new(FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean))),
+            1 => Box::new(
+                GraphCut::new(DenseKernel::from_data(&data, Metric::Euclidean), 0.5).unwrap(),
+            ),
+            2 => Box::new(
+                LogDeterminant::with_regularization(
+                    DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 }),
+                    0.3,
+                )
+                .unwrap(),
+            ),
+            _ => {
+                let m = 10;
+                let cover: Vec<Vec<u32>> = (0..n)
+                    .map(|_| (0..3).map(|_| rng.next_below(m) as u32).collect())
+                    .collect();
+                Box::new(SetCover::new(cover, vec![1.0; m]).unwrap())
+            }
+        };
+        let a_ids = gen::subset_ids(rng, n, n / 3);
+        let a = Subset::from_ids(n, &a_ids);
+        // B ⊇ A
+        let mut b = a.clone();
+        for _ in 0..3 {
+            if let Some(x) = gen::fresh_element(rng, n, b.order()) {
+                b.insert(x);
+            }
+        }
+        let Some(e) = gen::fresh_element(rng, n, b.order()) else { return Ok(()) };
+        let ga = f.marginal_gain(&a, e);
+        let gb = f.marginal_gain(&b, e);
+        if gb > ga + 1e-5 * (1.0 + ga.abs()) {
+            return Err(format!("{}: f(e|A)={ga} < f(e|B)={gb}", f.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p4_monotone_functions_have_nonnegative_gains() {
+    check("P4 monotonicity", 404, 50, |rng| {
+        let data = gen::matrix(rng, 8, 20, 2, 5);
+        let n = data.rows();
+        // monotone families: FL, SC, PSC, FB, GC(λ≤0.5)
+        let f: Box<dyn SetFunction> = match rng.next_below(3) {
+            0 => Box::new(FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean))),
+            1 => Box::new(
+                GraphCut::new(DenseKernel::from_data(&data, Metric::Euclidean), 0.4).unwrap(),
+            ),
+            _ => {
+                let m = 10;
+                let probs: Vec<Vec<f32>> =
+                    (0..n).map(|_| (0..m).map(|_| rng.next_f32()).collect()).collect();
+                Box::new(ProbabilisticSetCover::new(probs, vec![1.0; m]).unwrap())
+            }
+        };
+        let ids = gen::subset_ids(rng, n, n / 2);
+        let s = Subset::from_ids(n, &ids);
+        let Some(e) = gen::fresh_element(rng, n, &ids) else { return Ok(()) };
+        let g = f.marginal_gain(&s, e);
+        if g < -1e-6 {
+            return Err(format!("{}: negative gain {g}", f.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p5_lazy_equals_naive_on_submodular() {
+    check("P5 lazy == naive", 505, 15, |rng| {
+        let data = gen::matrix(rng, 20, 50, 2, 4);
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let k = 3 + rng.next_below(8);
+        let a = maximize(&f, Budget::cardinality(k), OptimizerKind::NaiveGreedy, &MaximizeOpts::default())
+            .map_err(|e| e.to_string())?;
+        let b = maximize(&f, Budget::cardinality(k), OptimizerKind::LazyGreedy, &MaximizeOpts::default())
+            .map_err(|e| e.to_string())?;
+        if (a.value - b.value).abs() > 1e-6 {
+            return Err(format!("values differ: {} vs {}", a.value, b.value));
+        }
+        if a.ids() != b.ids() {
+            return Err(format!("sets differ: {:?} vs {:?}", a.ids(), b.ids()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p6_greedy_beats_random_subsets() {
+    check("P6 greedy ≥ random", 606, 20, |rng| {
+        let data = gen::matrix(rng, 20, 40, 2, 4);
+        let n = data.rows();
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        let k = 3 + rng.next_below(5);
+        let sel = maximize(&f, Budget::cardinality(k), OptimizerKind::LazyGreedy, &MaximizeOpts::default())
+            .map_err(|e| e.to_string())?;
+        for _ in 0..5 {
+            let ids = rng.sample_indices(n, k);
+            let v = f.evaluate(&Subset::from_ids(n, &ids));
+            if v > sel.value + 1e-6 {
+                return Err(format!("random {v} beats greedy {}", sel.value));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p7_information_measure_identities() {
+    check("P7 MI/CG/CMI identities", 707, 12, |rng| {
+        let data = gen::matrix(rng, 14, 22, 2, 4);
+        let total = data.rows();
+        let nq = 2 + rng.next_below(2);
+        let np = 2 + rng.next_below(2);
+        let n = total - nq - np;
+        let kernel = DenseKernel::from_data(&data, Metric::Euclidean);
+        let base = FacilityLocation::new(kernel.clone());
+        let q_ids: Vec<usize> = (n..n + nq).collect();
+        let p_ids: Vec<usize> = (n + nq..total).collect();
+
+        let e = |ids: &[usize]| base.evaluate(&Subset::from_ids(total, ids));
+
+        let mi = MutualInformation::new(base.clone_box(), q_ids.clone(), n)
+            .map_err(|x| x.to_string())?;
+        let cg = ConditionalGain::new(base.clone_box(), p_ids.clone(), n)
+            .map_err(|x| x.to_string())?;
+        let cmi = ConditionalMutualInformation::new(
+            base.clone_box(),
+            q_ids.clone(),
+            p_ids.clone(),
+            n,
+        )
+        .map_err(|x| x.to_string())?;
+
+        let a_ids = gen::subset_ids(rng, n, n / 2);
+        let s = Subset::from_ids(n, &a_ids);
+
+        // MI identity
+        let aq: Vec<usize> = a_ids.iter().copied().chain(q_ids.iter().copied()).collect();
+        let want_mi = e(&a_ids) + e(&q_ids) - e(&aq);
+        if (mi.evaluate(&s) - want_mi).abs() > 1e-6 {
+            return Err(format!("MI identity: {} vs {want_mi}", mi.evaluate(&s)));
+        }
+        // CG identity
+        let ap: Vec<usize> = a_ids.iter().copied().chain(p_ids.iter().copied()).collect();
+        let want_cg = e(&ap) - e(&p_ids);
+        if (cg.evaluate(&s) - want_cg).abs() > 1e-6 {
+            return Err(format!("CG identity: {} vs {want_cg}", cg.evaluate(&s)));
+        }
+        // CMI identity
+        let qp: Vec<usize> = q_ids.iter().copied().chain(p_ids.iter().copied()).collect();
+        let aqp: Vec<usize> = a_ids.iter().copied().chain(qp.iter().copied()).collect();
+        let want_cmi = e(&ap) + e(&qp) - e(&aqp) - e(&p_ids);
+        if (cmi.evaluate(&s) - want_cmi).abs() > 1e-6 {
+            return Err(format!("CMI identity: {} vs {want_cmi}", cmi.evaluate(&s)));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p8_specialized_mi_cg_match_generic() {
+    check("P8 specialized == generic", 808, 10, |rng| {
+        // build ground + query sets, compare FLVMI / FLCG fast paths with
+        // the generic wrappers over the stacked kernel (η = ν = 1)
+        let ground = gen::matrix(rng, 10, 18, 2, 3);
+        let n = ground.rows();
+        let queries = gen::matrix(rng, 2, 4, ground.cols(), ground.cols());
+        let nq = queries.rows();
+        let mut all = submodlib::linalg::Matrix::zeros(n + nq, ground.cols());
+        for i in 0..n {
+            all.row_mut(i).copy_from_slice(ground.row(i));
+        }
+        for q in 0..nq {
+            all.row_mut(n + q).copy_from_slice(queries.row(q));
+        }
+        let ext = DenseKernel::from_data(&all, Metric::Euclidean);
+        let gk = DenseKernel::from_data(&ground, Metric::Euclidean);
+        let qk = RectKernel::from_data(&queries, &ground, Metric::Euclidean)
+            .map_err(|e| e.to_string())?;
+
+        // FLVMI == generic MI over FL with represented set V
+        let mut rect = submodlib::linalg::Matrix::zeros(n, n + nq);
+        for i in 0..n {
+            for j in 0..n + nq {
+                rect.set(i, j, ext.get(i, j));
+            }
+        }
+        let gen_mi = MutualInformation::new(
+            Box::new(FacilityLocation::with_represented(RectKernel::from_matrix(rect))),
+            (n..n + nq).collect(),
+            n,
+        )
+        .map_err(|e| e.to_string())?;
+        let flvmi = Flvmi::new(gk.clone(), qk.clone(), 1.0).map_err(|e| e.to_string())?;
+
+        // FLCG == generic CG over FL on the extended ground set
+        let gen_cg = ConditionalGain::new(
+            Box::new(FacilityLocation::new(ext.clone())),
+            (n..n + nq).collect(),
+            n,
+        )
+        .map_err(|e| e.to_string())?;
+        let flcg = Flcg::new(gk.clone(), qk.clone(), 1.0).map_err(|e| e.to_string())?;
+
+        let ids = gen::subset_ids(rng, n, n / 2);
+        let s = Subset::from_ids(n, &ids);
+        let (a, b) = (flvmi.evaluate(&s), gen_mi.evaluate(&s));
+        if (a - b).abs() > 1e-4 {
+            return Err(format!("FLVMI {a} vs generic MI {b}"));
+        }
+        let (c, d) = (flcg.evaluate(&s), gen_cg.evaluate(&s));
+        if (c - d).abs() > 1e-4 {
+            return Err(format!("FLCG {c} vs generic CG {d}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p9_mi_functions_are_monotone_nonneg() {
+    check("P9 MI monotone", 909, 20, |rng| {
+        let ground = gen::matrix(rng, 10, 20, 2, 3);
+        let queries = gen::matrix(rng, 2, 3, ground.cols(), ground.cols());
+        let n = ground.rows();
+        let qk = RectKernel::from_data(&queries, &ground, Metric::Euclidean)
+            .map_err(|e| e.to_string())?;
+        let f: Box<dyn SetFunction> = match rng.next_below(2) {
+            0 => Box::new(Flqmi::new(qk, 0.5 + rng.next_f64()).map_err(|e| e.to_string())?),
+            _ => Box::new(Gcmi::new(qk, 0.5).map_err(|e| e.to_string())?),
+        };
+        let ids = gen::subset_ids(rng, n, n / 2);
+        let s = Subset::from_ids(n, &ids);
+        let Some(e) = gen::fresh_element(rng, n, &ids) else { return Ok(()) };
+        if f.marginal_gain(&s, e) < -1e-8 {
+            return Err(format!("{} negative MI gain", f.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stochastic_quality_in_expectation() {
+    // over several seeds, stochastic greedy averages ≥ 85% of naive
+    let data = synthetic::blobs(150, 2, 6, 2.0, 4242);
+    let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+    let naive =
+        maximize(&f, Budget::cardinality(12), OptimizerKind::NaiveGreedy, &MaximizeOpts::default())
+            .unwrap();
+    let mut total = 0.0;
+    let trials = 10;
+    for seed in 0..trials {
+        let sel = maximize(
+            &f,
+            Budget::cardinality(12),
+            OptimizerKind::StochasticGreedy,
+            &MaximizeOpts { seed, ..Default::default() },
+        )
+        .unwrap();
+        total += sel.value;
+    }
+    let avg = total / trials as f64;
+    assert!(avg >= 0.85 * naive.value, "avg {avg} vs naive {}", naive.value);
+}

@@ -1,0 +1,124 @@
+//! Integration: the AOT artifact path (L1 Pallas → L2 JAX → HLO text →
+//! Rust PJRT runtime). Requires `make artifacts`; tests are skipped (with
+//! a loud message) when artifacts/ is missing so `cargo test` stays green
+//! in a fresh checkout.
+
+use submodlib::data::synthetic;
+use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::functions::traits::{SetFunction, Subset};
+use submodlib::kernel::{build_dense, DenseKernel, KernelBackend, Metric};
+use submodlib::linalg::Matrix;
+use submodlib::runtime::{tiled, Engine};
+
+fn engine() -> Option<std::sync::Arc<Engine>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        return None;
+    }
+    Some(std::sync::Arc::new(Engine::load("artifacts").expect("engine load")))
+}
+
+#[test]
+fn artifact_kernel_matches_native_exact_tile() {
+    let Some(engine) = engine() else { return };
+    // exactly one tile (256 × 1024): no padding path
+    let data = synthetic::random_features(256, 1024, 1);
+    let native = DenseKernel::from_data(&data, Metric::Euclidean);
+    let pjrt = tiled::build_dense_kernel(&engine, &data, Metric::Euclidean).unwrap();
+    for i in (0..256).step_by(31) {
+        for j in (0..256).step_by(17) {
+            assert!(
+                (native.get(i, j) - pjrt.get(i, j)).abs() < 1e-3,
+                "({i},{j}): {} vs {}",
+                native.get(i, j),
+                pjrt.get(i, j)
+            );
+        }
+    }
+}
+
+#[test]
+fn artifact_kernel_matches_native_with_padding() {
+    let Some(engine) = engine() else { return };
+    // 300 rows, 40 dims → row padding AND feature padding exercised
+    let data = synthetic::random_features(300, 40, 2);
+    for metric in [Metric::Euclidean, Metric::Cosine, Metric::Dot] {
+        let native = DenseKernel::from_data(&data, metric);
+        let pjrt = tiled::build_dense_kernel(&engine, &data, metric).unwrap();
+        let mut max_err = 0f32;
+        for i in (0..300).step_by(23) {
+            for j in (0..300).step_by(19) {
+                max_err = max_err.max((native.get(i, j) - pjrt.get(i, j)).abs());
+            }
+        }
+        assert!(max_err < 1e-3, "{metric:?}: max err {max_err}");
+    }
+}
+
+#[test]
+fn artifact_rect_kernel_for_queries() {
+    let Some(engine) = engine() else { return };
+    let ground = synthetic::random_features(120, 64, 3);
+    let queries = synthetic::random_features(5, 64, 4);
+    let rect = tiled::build_rect_kernel(&engine, &queries, &ground, Metric::Euclidean).unwrap();
+    assert_eq!(rect.rows(), 5);
+    assert_eq!(rect.cols(), 120);
+    for q in 0..5 {
+        for j in (0..120).step_by(13) {
+            let direct = Metric::Euclidean.similarity(queries.row(q), ground.row(j));
+            assert!((rect.get(q, j) - direct).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn artifact_fl_gains_match_memoized_gains() {
+    let Some(engine) = engine() else { return };
+    // FL marginal gains through the Pallas fl_gains artifact vs the
+    // memoized L3 implementation
+    let data = synthetic::random_features(200, 32, 5);
+    let kernel = DenseKernel::from_data(&data, Metric::Euclidean);
+    let mut f = FacilityLocation::new(kernel.clone());
+    let current = [3usize, 77, 150];
+    f.init_memoization(&Subset::from_ids(200, &current));
+
+    // memoized max_vec reconstruction
+    let max_vec: Vec<f32> = (0..200)
+        .map(|i| current.iter().map(|&j| kernel.get(i, j)).fold(0f32, f32::max))
+        .collect();
+    let cands = [0usize, 10, 42, 99, 199];
+    let mut cols = Matrix::zeros(200, cands.len());
+    for (c, &cand) in cands.iter().enumerate() {
+        for i in 0..200 {
+            cols.set(i, c, kernel.get(i, cand));
+        }
+    }
+    let gains = tiled::fl_gains(&engine, &cols, &max_vec).unwrap();
+    for (c, &cand) in cands.iter().enumerate() {
+        let expect = f.marginal_gain_memoized(cand);
+        assert!(
+            (gains[c] as f64 - expect).abs() < 1e-3,
+            "cand {cand}: pjrt {} vs memoized {expect}",
+            gains[c]
+        );
+    }
+}
+
+#[test]
+fn backend_dispatch_builds_equivalent_functions() {
+    let Some(engine) = engine() else { return };
+    let data = synthetic::random_features(100, 16, 6);
+    let native = build_dense(&data, Metric::Euclidean, &KernelBackend::Native).unwrap();
+    let pjrt = build_dense(&data, Metric::Euclidean, &KernelBackend::Pjrt(engine)).unwrap();
+    let fa = FacilityLocation::new(native);
+    let fb = FacilityLocation::new(pjrt);
+    let s = Subset::from_ids(100, &[5, 50, 95]);
+    assert!((fa.evaluate(&s) - fb.evaluate(&s)).abs() < 1e-2);
+}
+
+#[test]
+fn oversized_feature_dim_rejected() {
+    let Some(engine) = engine() else { return };
+    let data = synthetic::random_features(10, 2048, 7); // > compiled D=1024
+    assert!(tiled::build_dense_kernel(&engine, &data, Metric::Euclidean).is_err());
+}
