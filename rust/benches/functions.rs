@@ -16,7 +16,8 @@ use submodlib::kernel::{DenseKernel, Metric};
 use submodlib::rng::Pcg64;
 use submodlib::util::bench::BenchRunner;
 
-/// Time a full memoized greedy sweep of `k` picks (init + k×(scan+update)).
+/// Time a full memoized greedy sweep of `k` picks (init + k×(scan+update)),
+/// one `marginal_gain_memoized` call per candidate (the pre-ISSUE-1 shape).
 fn sweep(f: &dyn SetFunction, k: usize) -> f64 {
     let mut w = f.clone_box();
     w.init_memoization(&Subset::empty(f.n()));
@@ -29,6 +30,35 @@ fn sweep(f: &dyn SetFunction, k: usize) -> f64 {
                 continue;
             }
             let g = w.marginal_gain_memoized(e);
+            if g > best.1 {
+                best = (e, g);
+            }
+        }
+        w.update_memoization(best.0);
+        picked[best.0] = true;
+        total += best.1;
+    }
+    total
+}
+
+/// Same sweep through `marginal_gains_batch` (single-threaded: this bench
+/// isolates the batch-locality win; the threaded fan-out on top of it is
+/// measured by benches/optimizers.rs).
+fn sweep_batch(f: &dyn SetFunction, k: usize) -> f64 {
+    let mut w = f.clone_box();
+    w.init_memoization(&Subset::empty(f.n()));
+    let mut picked = vec![false; f.n()];
+    let mut candidates: Vec<usize> = Vec::with_capacity(f.n());
+    let mut gains: Vec<f64> = Vec::with_capacity(f.n());
+    let mut total = 0.0;
+    for _ in 0..k {
+        candidates.clear();
+        candidates.extend((0..f.n()).filter(|&e| !picked[e]));
+        gains.clear();
+        gains.resize(candidates.len(), 0.0);
+        w.marginal_gains_batch(&candidates, &mut gains);
+        let mut best = (usize::MAX, f64::MIN);
+        for (&e, &g) in candidates.iter().zip(gains.iter()) {
             if g > best.1 {
                 best = (e, g);
             }
@@ -65,8 +95,10 @@ fn main() {
 
     let fl = FacilityLocation::new(euclid.clone());
     runner.bench("FacilityLocation", || sweep(&fl, k));
+    runner.bench("FacilityLocation/batch", || sweep_batch(&fl, k));
     let gc = GraphCut::new(euclid.clone(), 0.4).unwrap();
     runner.bench("GraphCut", || sweep(&gc, k));
+    runner.bench("GraphCut/batch", || sweep_batch(&gc, k));
     let ld = LogDeterminant::with_regularization(rbf, 0.1).unwrap();
     runner.bench("LogDeterminant", || sweep(&ld, k));
     let sc = SetCover::new(cover, vec![1.0; n_concepts]).unwrap();

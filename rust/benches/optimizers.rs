@@ -2,17 +2,37 @@
 //! on the §5.3.5 workload (500 points, 10 clusters, σ=4, FacilityLocation,
 //! budget 100). Reproduced claim: LazierThanLazy ≤ Lazy < Stochastic <
 //! Naive. (`BENCH_SAMPLES` env var controls sample count.)
+//!
+//! Additionally emits `BENCH_optimizers.json`, the perf-trajectory
+//! snapshot future PRs compare against:
+//!
+//! * `table2`: wall-clock + `evaluations` + value for the Table 2
+//!   workload at n=500, k=50, for FL / GraphCut / LogDet × naive / lazy /
+//!   stochastic;
+//! * `parallel_scaling`: NaiveGreedy on FacilityLocation at n=2000,
+//!   k=100, batched-parallel gain scan vs the serial per-element path
+//!   (`MaximizeOpts::parallel = false`) — the ISSUE 1 headline number.
+
+use std::collections::BTreeMap;
 
 use submodlib::data::synthetic;
 use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::functions::graph_cut::GraphCut;
+use submodlib::functions::log_determinant::LogDeterminant;
+use submodlib::functions::traits::SetFunction;
 use submodlib::kernel::{DenseKernel, Metric};
 use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
 use submodlib::util::bench::BenchRunner;
+use submodlib::util::json::Json;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
 
 fn main() {
     let data = synthetic::blobs(500, 2, 10, 4.0, 42);
     let kernel = DenseKernel::from_data(&data, Metric::Euclidean);
-    let f = FacilityLocation::new(kernel);
+    let f = FacilityLocation::new(kernel.clone());
     let opts = MaximizeOpts::default();
     let budget = Budget::cardinality(100);
 
@@ -47,5 +67,128 @@ fn main() {
         t("NaiveGreedy") / t("LazierThanLazyGreedy"),
         t("NaiveGreedy") / t("StochasticGreedy"),
     );
+
+    // ---- snapshot: FL / GC / LogDet × naive / lazy / stochastic ---------
+    eprintln!("snapshot workload: n=500, k=50, FL/GC/LogDet x naive/lazy/stochastic");
+    let snap_budget = Budget::cardinality(50);
+    let functions: Vec<(&str, Box<dyn SetFunction>)> = vec![
+        ("FacilityLocation", Box::new(FacilityLocation::new(kernel.clone()))),
+        ("GraphCut", Box::new(GraphCut::new(kernel.clone(), 0.4).unwrap())),
+        (
+            "LogDeterminant",
+            Box::new(
+                LogDeterminant::with_regularization(
+                    DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 }),
+                    0.1,
+                )
+                .unwrap(),
+            ),
+        ),
+    ];
+    let mut snapshot_rows: Vec<Json> = Vec::new();
+    for (fname, func) in &functions {
+        for (oname, kind) in [
+            ("NaiveGreedy", OptimizerKind::NaiveGreedy),
+            ("LazyGreedy", OptimizerKind::LazyGreedy),
+            ("StochasticGreedy", OptimizerKind::StochasticGreedy),
+        ] {
+            let label = format!("{fname}/{oname}");
+            let stats = runner.bench(&label, || {
+                maximize(func.as_ref(), snap_budget.clone(), kind, &opts).unwrap().value
+            });
+            let (median_s, mean_s) =
+                (stats.median.as_secs_f64(), stats.mean.as_secs_f64());
+            let sel =
+                maximize(func.as_ref(), snap_budget.clone(), kind, &opts).unwrap();
+            snapshot_rows.push(obj(vec![
+                ("function", Json::Str(fname.to_string())),
+                ("optimizer", Json::Str(oname.to_string())),
+                ("median_s", Json::Num(median_s)),
+                ("mean_s", Json::Num(mean_s)),
+                ("evaluations", Json::Num(sel.evaluations as f64)),
+                ("value", Json::Num(sel.value)),
+                ("selected", Json::Num(sel.order.len() as f64)),
+            ]));
+        }
+    }
+
+    // ---- parallel scaling: n=2000, k=100, FL, naive ---------------------
+    let threads =
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    eprintln!("parallel scaling: n=2000, k=100, FL NaiveGreedy ({threads} threads)");
+    let big = synthetic::blobs(2000, 2, 10, 4.0, 43);
+    let big_fl = FacilityLocation::new(DenseKernel::from_data(&big, Metric::Euclidean));
+    let big_budget = Budget::cardinality(100);
+    let serial_stats = runner
+        .bench("FL2000/NaiveGreedy/serial", || {
+            maximize(
+                &big_fl,
+                big_budget.clone(),
+                OptimizerKind::NaiveGreedy,
+                &MaximizeOpts { parallel: false, ..Default::default() },
+            )
+            .unwrap()
+            .value
+        })
+        .median
+        .as_secs_f64();
+    let parallel_stats = runner
+        .bench("FL2000/NaiveGreedy/parallel", || {
+            maximize(
+                &big_fl,
+                big_budget.clone(),
+                OptimizerKind::NaiveGreedy,
+                &MaximizeOpts::default(),
+            )
+            .unwrap()
+            .value
+        })
+        .median
+        .as_secs_f64();
+    let speedup = serial_stats / parallel_stats;
+    eprintln!(
+        "  parallel gain scan speedup: {speedup:.2}x (serial {serial_stats:.3}s, parallel {parallel_stats:.3}s)"
+    );
+
+    let snapshot = obj(vec![
+        ("schema", Json::Str("bench_optimizers/v1".to_string())),
+        (
+            "table2",
+            obj(vec![
+                (
+                    "workload",
+                    obj(vec![
+                        ("n", Json::Num(500.0)),
+                        ("k", Json::Num(50.0)),
+                        ("clusters", Json::Num(10.0)),
+                        ("sigma", Json::Num(4.0)),
+                    ]),
+                ),
+                ("results", Json::Arr(snapshot_rows)),
+            ]),
+        ),
+        (
+            "parallel_scaling",
+            obj(vec![
+                (
+                    "workload",
+                    obj(vec![
+                        ("n", Json::Num(2000.0)),
+                        ("k", Json::Num(100.0)),
+                        ("function", Json::Str("FacilityLocation".to_string())),
+                        ("optimizer", Json::Str("NaiveGreedy".to_string())),
+                    ]),
+                ),
+                ("threads", Json::Num(threads as f64)),
+                ("serial_median_s", Json::Num(serial_stats)),
+                ("parallel_median_s", Json::Num(parallel_stats)),
+                ("speedup", Json::Num(speedup)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_optimizers.json", snapshot.to_string())
+        .expect("write BENCH_optimizers.json");
+    eprintln!("wrote BENCH_optimizers.json");
+
     runner.finish("table2_optimizers");
 }

@@ -131,6 +131,38 @@ impl SetFunction for ClusteredFunction {
         self.clusters[ci as usize].1.marginal_gain_memoized(li as usize)
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        // group candidates per cluster so each inner function sees one
+        // contiguous batch (and its specialized implementation applies);
+        // out[i] slots are independent, so regrouping cannot change values
+        debug_assert_eq!(candidates.len(), out.len());
+        let mut groups: Vec<Vec<(usize, usize)>> = // (out index, local id)
+            vec![Vec::new(); self.clusters.len()];
+        for (i, &e) in candidates.iter().enumerate() {
+            let (ci, li) = self.lookup[e];
+            if ci == u32::MAX {
+                out[i] = 0.0;
+            } else {
+                groups[ci as usize].push((i, li as usize));
+            }
+        }
+        let mut locals: Vec<usize> = Vec::new();
+        let mut gains: Vec<f64> = Vec::new();
+        for (ci, group) in groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            locals.clear();
+            locals.extend(group.iter().map(|&(_, li)| li));
+            gains.clear();
+            gains.resize(locals.len(), 0.0);
+            self.clusters[ci].1.marginal_gains_batch(&locals, &mut gains);
+            for (&(i, _), &g) in group.iter().zip(gains.iter()) {
+                out[i] = g;
+            }
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         let (ci, li) = self.lookup[e];
         if ci == u32::MAX {

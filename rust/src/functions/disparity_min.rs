@@ -87,6 +87,23 @@ impl SetFunction for DisparityMin {
         }
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        match self.k {
+            0 => out.fill(0.0),
+            1 => {
+                for (o, &e) in out.iter_mut().zip(candidates) {
+                    *o = self.min_d[e];
+                }
+            }
+            _ => {
+                for (o, &e) in out.iter_mut().zip(candidates) {
+                    *o = self.current.min(self.min_d[e]) - self.current;
+                }
+            }
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         if self.k >= 1 {
             self.current = if self.k == 1 {

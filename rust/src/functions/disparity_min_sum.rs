@@ -97,6 +97,48 @@ impl SetFunction for DisparityMinSum {
         }
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        if self.selected.len() < 2 {
+            for (o, &e) in out.iter_mut().zip(candidates) {
+                *o = self.marginal_gain_memoized(e);
+            }
+            return;
+        }
+        // blocked across candidates: each member's distance row is read
+        // once per 4 candidates. Per-candidate accumulation stays in
+        // member order — bit-identical to the scalar path.
+        let mut c = 0;
+        while c + 4 <= candidates.len() {
+            let es = [
+                candidates[c],
+                candidates[c + 1],
+                candidates[c + 2],
+                candidates[c + 3],
+            ];
+            let mut delta = [
+                self.min_d[es[0]],
+                self.min_d[es[1]],
+                self.min_d[es[2]],
+                self.min_d[es[3]],
+            ];
+            for (k, &m) in self.selected.iter().enumerate() {
+                let row = self.dist.row(m);
+                for t in 0..4 {
+                    let d = row[es[t]] as f64;
+                    if d < self.nn[k] {
+                        delta[t] += d - self.nn[k];
+                    }
+                }
+            }
+            out[c..c + 4].copy_from_slice(&delta);
+            c += 4;
+        }
+        for (o, &e) in out[c..].iter_mut().zip(&candidates[c..]) {
+            *o = self.marginal_gain_memoized(e);
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         // update members' nearest-neighbor distances
         for (k, &m) in self.selected.iter().enumerate() {

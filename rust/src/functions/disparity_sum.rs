@@ -60,6 +60,13 @@ impl SetFunction for DisparitySum {
         self.sum_d[e]
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(candidates) {
+            *o = self.sum_d[e];
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         let row = self.dist.row(e);
         for (j, v) in self.sum_d.iter_mut().enumerate() {

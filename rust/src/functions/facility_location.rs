@@ -251,6 +251,79 @@ impl SetFunction for FacilityLocation {
         }
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        match &self.mode {
+            Mode::Dense(k) => {
+                // Register-blocked across candidates: stream max_vec once
+                // per 4 contiguous kernel rows (same shape as
+                // linalg::dot4 / build_pairwise). Each candidate's f64
+                // accumulation runs in ascending-i order exactly like the
+                // scalar path, so the results are bit-identical.
+                let mv = &self.max_vec;
+                let mut c = 0;
+                while c + 4 <= candidates.len() {
+                    let rows = [
+                        k.row(candidates[c]),
+                        k.row(candidates[c + 1]),
+                        k.row(candidates[c + 2]),
+                        k.row(candidates[c + 3]),
+                    ];
+                    let mut g = [0f64; 4];
+                    for (i, &m) in mv.iter().enumerate() {
+                        for t in 0..4 {
+                            let s = rows[t][i];
+                            if s > m {
+                                g[t] += (s - m) as f64;
+                            }
+                        }
+                    }
+                    out[c..c + 4].copy_from_slice(&g);
+                    c += 4;
+                }
+                for (o, &e) in out[c..].iter_mut().zip(&candidates[c..]) {
+                    *o = self.marginal_gain_memoized(e);
+                }
+            }
+            Mode::Rect(k) => {
+                // Blocked across candidates so each kernel row is read
+                // once per 4 candidates instead of striding down 4 full
+                // columns.
+                let mut c = 0;
+                while c + 4 <= candidates.len() {
+                    let es = [
+                        candidates[c],
+                        candidates[c + 1],
+                        candidates[c + 2],
+                        candidates[c + 3],
+                    ];
+                    let mut g = [0f64; 4];
+                    for (i, &m) in self.max_vec.iter().enumerate() {
+                        let row = k.row(i);
+                        for t in 0..4 {
+                            let s = row[es[t]];
+                            if s > m {
+                                g[t] += (s - m) as f64;
+                            }
+                        }
+                    }
+                    out[c..c + 4].copy_from_slice(&g);
+                    c += 4;
+                }
+                for (o, &e) in out[c..].iter_mut().zip(&candidates[c..]) {
+                    *o = self.marginal_gain_memoized(e);
+                }
+            }
+            // sparse / clustered gains touch candidate-specific index sets
+            // (neighbor lists, per-cluster blocks); no shared streaming win
+            Mode::Sparse(_) | Mode::Clustered { .. } => {
+                for (o, &e) in out.iter_mut().zip(candidates) {
+                    *o = self.marginal_gain_memoized(e);
+                }
+            }
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         match &self.mode {
             Mode::Dense(k) => {

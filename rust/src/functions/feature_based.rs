@@ -167,6 +167,23 @@ impl SetFunction for FeatureBased {
             .sum()
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        // each candidate touches only its own sparse feature list; the
+        // shared reads (accum, weights) already hit cache — inline the
+        // scalar formula to skip per-candidate dyn dispatch
+        debug_assert_eq!(candidates.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(candidates) {
+            *o = self.features[e]
+                .iter()
+                .map(|&(f, v)| {
+                    let a = self.accum[f as usize];
+                    self.weights[f as usize]
+                        * (self.shape.apply(a + v as f64) - self.shape.apply(a))
+                })
+                .sum();
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         for &(f, v) in &self.features[e] {
             self.accum[f as usize] += v as f64;

@@ -108,6 +108,16 @@ impl SetFunction for GraphCut {
             - self.lambda * (2.0 * self.sum_in[e] + self.ground.get(e, e) as f64)
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        // gains are O(1) reads of the memoized statistics; the batch win
+        // is simply skipping a dyn dispatch per candidate
+        debug_assert_eq!(candidates.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(candidates) {
+            *o = self.total[e]
+                - self.lambda * (2.0 * self.sum_in[e] + self.ground.get(e, e) as f64);
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         let row = self.ground.row(e);
         for (i, v) in self.sum_in.iter_mut().enumerate() {

@@ -58,6 +58,21 @@ impl SetFunction for Mixture {
         self.parts.iter().map(|(w, f)| w * f.marginal_gain_memoized(e)).sum()
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        // fan the batch out to each component so their specialized
+        // implementations kick in; per-element accumulation runs in part
+        // order starting from 0.0, exactly like the scalar sum()
+        debug_assert_eq!(candidates.len(), out.len());
+        out.fill(0.0);
+        let mut scratch = vec![0f64; candidates.len()];
+        for (w, f) in &self.parts {
+            f.marginal_gains_batch(candidates, &mut scratch);
+            for (o, &g) in out.iter_mut().zip(scratch.iter()) {
+                *o += w * g;
+            }
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         for (_, f) in &mut self.parts {
             f.update_memoization(e);

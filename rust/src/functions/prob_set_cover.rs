@@ -119,6 +119,34 @@ impl SetFunction for ProbabilisticSetCover {
             .sum()
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        // blocked across candidates: prod/weights stream once per 4
+        // probability rows. Per-candidate accumulation stays in ascending
+        // concept order with the same `w * pr * p` expression, so results
+        // are bit-identical to the scalar path.
+        let mut c = 0;
+        while c + 4 <= candidates.len() {
+            let rows = [
+                &self.probs[candidates[c]],
+                &self.probs[candidates[c + 1]],
+                &self.probs[candidates[c + 2]],
+                &self.probs[candidates[c + 3]],
+            ];
+            let mut g = [0f64; 4];
+            for (u, (pr, w)) in self.prod.iter().zip(self.weights.iter()).enumerate() {
+                for t in 0..4 {
+                    g[t] += w * pr * rows[t][u] as f64;
+                }
+            }
+            out[c..c + 4].copy_from_slice(&g);
+            c += 4;
+        }
+        for (o, &e) in out[c..].iter_mut().zip(&candidates[c..]) {
+            *o = self.marginal_gain_memoized(e);
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         let row = &self.probs[e];
         for (p, pe) in self.prod.iter_mut().zip(row.iter()) {

@@ -121,6 +121,17 @@ impl SetFunction for SetCover {
             .sum()
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(candidates) {
+            *o = self.cover[e]
+                .iter()
+                .filter(|&&u| !self.covered[u as usize])
+                .map(|&u| self.weights[u as usize])
+                .sum();
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         for &u in &self.cover[e] {
             self.covered[u as usize] = true;

@@ -12,6 +12,31 @@
 //!   (Tables 3–4). This is the path the greedy optimizers drive; the
 //!   proptest suite asserts memoized gains equal stateless gains after any
 //!   update sequence.
+//!
+//! ## Batched evaluation
+//!
+//! On top of the memoized path sits [`SetFunction::marginal_gains_batch`]:
+//! one call evaluates the gains of many candidates against the *same*
+//! memoized state. Two things make this the hot-path entry point:
+//!
+//! 1. **Locality.** The memoized statistics (FL's `max_vec`, GraphCut's
+//!    `sum_in`, PSC's `prod`, …) are shared across all candidates of an
+//!    iteration; a batch implementation streams them once per candidate
+//!    block instead of once per candidate. The specialized overrides use
+//!    the same register-blocking shape as `kernel::dense::build_pairwise`.
+//! 2. **Parallelism.** The trait requires `Sync`, so the optimizers can
+//!    hand one `&dyn SetFunction` to several scoped threads, each calling
+//!    `marginal_gains_batch` on a disjoint candidate chunk (gain
+//!    evaluation never mutates state — only `update_memoization` does).
+//!
+//! **Determinism contract for implementors:** batch results must be
+//! *identical* to per-element `marginal_gain_memoized` calls — not merely
+//! close. The parallel optimizers reproduce the serial selection
+//! bit-for-bit by scanning the gathered gains in candidate order, which is
+//! only sound when the numbers themselves are unchanged. Vectorized
+//! overrides must therefore keep each element's floating-point
+//! accumulation order exactly as in the scalar path (block across
+//! *candidates*, never across a single candidate's reduction).
 
 use crate::error::Result;
 
@@ -98,8 +123,14 @@ impl Subset {
 ///    `update_memoization(e_i)`, `marginal_gain_memoized(e)` equals
 ///    `marginal_gain(X ∪ {e_i…}, e)`;
 /// 3. `clone_box` yields an independent instance (memoization state is
-///    *not* shared).
-pub trait SetFunction: Send {
+///    *not* shared);
+/// 4. `marginal_gains_batch` returns exactly the same numbers as
+///    per-element `marginal_gain_memoized` calls (see the module docs'
+///    determinism contract).
+///
+/// `Send + Sync` is required so optimizers can fan gain evaluation out
+/// across scoped threads sharing one `&dyn SetFunction`.
+pub trait SetFunction: Send + Sync {
     /// Ground-set size n.
     fn n(&self) -> usize;
 
@@ -117,6 +148,24 @@ pub trait SetFunction: Send {
 
     /// Marginal gain of `e` w.r.t. the memoized subset.
     fn marginal_gain_memoized(&self, e: ElementId) -> f64;
+
+    /// Batch variant of [`marginal_gain_memoized`]: writes the gain of
+    /// `candidates[i]` into `out[i]` (slices must have equal length).
+    ///
+    /// Results must be identical — bit-for-bit, not approximately — to
+    /// calling `marginal_gain_memoized` on each candidate; the parallel
+    /// optimizers rely on this to reproduce serial selections exactly.
+    /// Override when candidates can share reads of the memoized
+    /// statistics (contiguous kernel rows, common accumulators); the
+    /// default simply loops.
+    ///
+    /// [`marginal_gain_memoized`]: SetFunction::marginal_gain_memoized
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(candidates) {
+            *o = self.marginal_gain_memoized(e);
+        }
+    }
 
     /// Commit `e` into the memoized subset.
     fn update_memoization(&mut self, e: ElementId);

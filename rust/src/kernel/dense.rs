@@ -67,9 +67,19 @@ impl DenseKernel {
 
 /// Shared blocked + threaded pairwise builder. `distances=true` emits the
 /// raw euclidean distance instead of the metric similarity.
+///
+/// When `a` and `b` are the *same* matrix (detected by reference
+/// identity, which is how [`DenseKernel::from_data`] and the sparse
+/// builder call it), every supported metric is symmetric in its inputs,
+/// so only the upper triangle (j ≥ i) is computed — the lower triangle is
+/// mirrored afterwards. That halves the O(n²·d) dot-product work, the
+/// dominant cost of Table 5's kernel construction.
 pub(crate) fn build_pairwise(a: &Matrix, b: &Matrix, metric: Metric, distances: bool) -> Matrix {
     let m = a.rows();
     let n = b.rows();
+    if std::ptr::eq(a, b) {
+        return build_symmetric(a, metric, distances);
+    }
     let mut out = Matrix::zeros(m, n);
     let sq_a: Vec<f32> = (0..m).map(|i| linalg::dot(a.row(i), a.row(i))).collect();
     let sq_b: Vec<f32> = (0..n).map(|j| linalg::dot(b.row(j), b.row(j))).collect();
@@ -149,6 +159,107 @@ pub(crate) fn build_pairwise(a: &Matrix, b: &Matrix, metric: Metric, distances: 
     out
 }
 
+/// Symmetric specialization of [`build_pairwise`]: upper triangle only,
+/// then mirror. Thread chunks are balanced by *triangle area* (row i
+/// carries n−i entries), not by row count, so early rows don't serialize
+/// the build.
+fn build_symmetric(a: &Matrix, metric: Metric, distances: bool) -> Matrix {
+    let n = a.rows();
+    let mut out = Matrix::zeros(n, n);
+    let sq: Vec<f32> = (0..n).map(|i| linalg::dot(a.row(i), a.row(i))).collect();
+
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    // row ranges with roughly equal Σ(n−i) workloads
+    let total: u64 = (n as u64) * (n as u64 + 1) / 2;
+    let target = total.div_ceil(threads as u64).max(1);
+    let mut bounds: Vec<(usize, usize)> = Vec::with_capacity(threads);
+    let mut row = 0usize;
+    while row < n {
+        let mut acc = 0u64;
+        let start = row;
+        while row < n && acc < target {
+            acc += (n - row) as u64;
+            row += 1;
+        }
+        bounds.push((start, row));
+    }
+
+    let out_slice = out.as_mut_slice();
+    std::thread::scope(|scope| {
+        let mut rest = out_slice;
+        for &(start, end) in &bounds {
+            let (this, tail) = rest.split_at_mut((end - start) * n);
+            rest = tail;
+            let sq = &sq;
+            scope.spawn(move || {
+                for (bi, i) in (start..end).enumerate() {
+                    let arow = a.row(i);
+                    let orow = &mut this[bi * n..(bi + 1) * n];
+                    // same register blocking as the rectangular path,
+                    // starting at the diagonal
+                    let mut j = i;
+                    while j + 8 <= n {
+                        let g = linalg::dot8(
+                            arow,
+                            [
+                                a.row(j),
+                                a.row(j + 1),
+                                a.row(j + 2),
+                                a.row(j + 3),
+                                a.row(j + 4),
+                                a.row(j + 5),
+                                a.row(j + 6),
+                                a.row(j + 7),
+                            ],
+                        );
+                        for t in 0..8 {
+                            orow[j + t] = if distances {
+                                (sq[i] + sq[j + t] - 2.0 * g[t]).max(0.0).sqrt()
+                            } else {
+                                metric.from_gram(g[t], sq[i], sq[j + t])
+                            };
+                        }
+                        j += 8;
+                    }
+                    while j + 4 <= n {
+                        let g = linalg::dot4(
+                            arow,
+                            a.row(j),
+                            a.row(j + 1),
+                            a.row(j + 2),
+                            a.row(j + 3),
+                        );
+                        for t in 0..4 {
+                            orow[j + t] = if distances {
+                                (sq[i] + sq[j + t] - 2.0 * g[t]).max(0.0).sqrt()
+                            } else {
+                                metric.from_gram(g[t], sq[i], sq[j + t])
+                            };
+                        }
+                        j += 4;
+                    }
+                    for jj in j..n {
+                        let g = linalg::dot(arow, a.row(jj));
+                        orow[jj] = if distances {
+                            (sq[i] + sq[jj] - 2.0 * g).max(0.0).sqrt()
+                        } else {
+                            metric.from_gram(g, sq[i], sq[jj])
+                        };
+                    }
+                }
+            });
+        }
+    });
+    // mirror the lower triangle (exact symmetry by construction)
+    let s = out.as_mut_slice();
+    for i in 1..n {
+        for j in 0..i {
+            s[i * n + j] = s[j * n + i];
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +314,37 @@ mod tests {
     fn from_matrix_rejects_rect() {
         assert!(DenseKernel::from_matrix(Matrix::zeros(3, 4)).is_err());
         assert!(DenseKernel::from_matrix(Matrix::zeros(4, 4)).is_ok());
+    }
+
+    #[test]
+    fn symmetric_build_mirrors_exactly() {
+        // the symmetric path computes the upper triangle and mirrors it,
+        // so s_ij == s_ji bitwise — for similarities and distances alike
+        let data = rand_data(61, 9, 7);
+        for k in [
+            DenseKernel::from_data(&data, Metric::Cosine),
+            DenseKernel::distances_from_data(&data),
+        ] {
+            for i in 0..61 {
+                for j in 0..61 {
+                    assert_eq!(k.get(i, j).to_bits(), k.get(j, i).to_bits(), "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_build_matches_rect_path() {
+        // same math as the two-argument (rectangular) builder
+        let data = rand_data(33, 6, 8);
+        let copy = data.clone();
+        let sym = build_pairwise(&data, &data, Metric::Rbf { gamma: 0.7 }, false);
+        let rect = build_pairwise(&data, &copy, Metric::Rbf { gamma: 0.7 }, false);
+        for i in 0..33 {
+            for j in 0..33 {
+                assert!((sym.get(i, j) - rect.get(i, j)).abs() < 1e-5, "({i},{j})");
+            }
+        }
     }
 
     #[test]

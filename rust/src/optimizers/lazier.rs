@@ -11,7 +11,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::stochastic::sample_size;
-use super::{should_stop, Budget, MaximizeOpts, Selection};
+use super::{batch_gains, should_stop, Budget, MaximizeOpts, Selection};
 use crate::error::{Result, SubmodError};
 use crate::functions::traits::SetFunction;
 use crate::rng::Pcg64;
@@ -34,9 +34,11 @@ impl PartialOrd for Entry {
 }
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
+        // total order even for non-finite bounds (the +∞ never-evaluated
+        // sentinel is routine here); see lazy.rs on why
+        // partial_cmp().unwrap_or(Equal) corrupts the heap on NaN.
         self.bound
-            .partial_cmp(&other.bound)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&other.bound)
             .then_with(|| other.e.cmp(&self.e))
     }
 }
@@ -68,6 +70,9 @@ pub(crate) fn run(
     let mut order = Vec::new();
     let mut value = 0f64;
     let mut evaluations = 0u64;
+    let mut unseen: Vec<usize> = Vec::with_capacity(s);
+    let mut unseen_gains: Vec<f64> = Vec::with_capacity(s);
+    let mut seen_before: Vec<bool> = Vec::with_capacity(s);
 
     for it in 0..k {
         if pool.is_empty() {
@@ -78,11 +83,37 @@ pub(crate) fn run(
             let j = i + rng.next_below(pool.len() - i);
             pool.swap(i, j);
         }
-        // lazy evaluation *within the sample*
-        let mut heap: BinaryHeap<Entry> = pool[..take]
-            .iter()
-            .map(|&e| Entry { bound: upper[e], e, fresh: false })
-            .collect();
+        // Batch-evaluate the sample members that have never been touched.
+        // Behavior-identical to the serial loop: their ∞ sentinel bounds
+        // outrank every finite fresh bound, so the serial heap would have
+        // popped and evaluated all of them (in ascending-id order, with no
+        // memoization updates in between) before accepting any pick —
+        // same evaluations, same values, one parallel batch instead.
+        unseen.clear();
+        seen_before.clear();
+        for &e in &pool[..take] {
+            let inf = upper[e] == f64::INFINITY;
+            seen_before.push(!inf);
+            if inf {
+                unseen.push(e);
+            }
+        }
+        if !unseen.is_empty() {
+            unseen_gains.clear();
+            unseen_gains.resize(unseen.len(), 0.0);
+            batch_gains(&*f, &unseen, &mut unseen_gains, opts.parallel);
+            evaluations += unseen.len() as u64;
+            for (&e, &g) in unseen.iter().zip(unseen_gains.iter()) {
+                debug_assert!(!g.is_nan(), "NaN gain for element {e}");
+                upper[e] = g;
+            }
+        }
+        // lazy evaluation *within the sample*: just-evaluated members
+        // enter fresh, previously-seen ones enter with their stale bound
+        let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(take);
+        for (i, &e) in pool[..take].iter().enumerate() {
+            heap.push(Entry { bound: upper[e], e, fresh: !seen_before[i] });
+        }
         let mut picked: Option<(usize, f64)> = None;
         while let Some(top) = heap.pop() {
             if top.fresh {
@@ -90,6 +121,7 @@ pub(crate) fn run(
                 break;
             }
             let gain = f.marginal_gain_memoized(top.e);
+            debug_assert!(!gain.is_nan(), "NaN gain for element {}", top.e);
             evaluations += 1;
             upper[top.e] = gain;
             heap.push(Entry { bound: gain, e: top.e, fresh: true });

@@ -13,7 +13,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use super::{should_stop, Budget, MaximizeOpts, Selection};
+use super::{batch_gains, should_stop, Budget, MaximizeOpts, Selection};
 use crate::error::Result;
 use crate::functions::traits::SetFunction;
 
@@ -39,11 +39,31 @@ impl PartialOrd for Entry {
 }
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
+        // total_cmp, NOT partial_cmp().unwrap_or(Equal): a NaN key under
+        // the old scheme compared Equal to *everything*, which violates
+        // Ord's transitivity and silently corrupts the heap. total_cmp is
+        // a total order (NaN sorts above +∞), so even a NaN-producing
+        // function (e.g. LogDeterminant on a near-singular kernel) leaves
+        // the heap structurally sound. For finite keys the order is
+        // unchanged.
         self.key
-            .partial_cmp(&other.key)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&other.key)
             .then_with(|| other.e.cmp(&self.e)) // deterministic tie-break: lower id first
     }
+}
+
+/// All heap insertions funnel through here: a NaN upper bound means the
+/// function produced a poisoned gain and lazy pruning is meaningless —
+/// catch it loudly in debug builds (−∞ is legitimate: LogDeterminant
+/// yields it for singular minors, and it orders fine under `total_cmp`).
+fn push(heap: &mut BinaryHeap<Entry>, entry: Entry) {
+    debug_assert!(
+        !entry.key.is_nan(),
+        "NaN lazy-greedy key for element {} (gain {})",
+        entry.e,
+        entry.gain
+    );
+    heap.push(entry);
 }
 
 pub(crate) fn run(
@@ -54,11 +74,16 @@ pub(crate) fn run(
     let n = f.n();
     let mut evaluations = 0u64;
     let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(n);
-    // iteration 0: seed the heap with exact first-iteration gains
-    for e in 0..n {
-        let gain = f.marginal_gain_memoized(e);
-        evaluations += 1;
-        heap.push(Entry { key: gain / budget.cost(e), gain, e, iter: 0 });
+    // iteration 0: seed the heap with exact first-iteration gains, batch
+    // evaluated (this full scan is LazyGreedy's only O(n) gain sweep)
+    {
+        let ids: Vec<usize> = (0..n).collect();
+        let mut gains = vec![0f64; n];
+        batch_gains(&*f, &ids, &mut gains, opts.parallel);
+        evaluations += n as u64;
+        for (e, &gain) in gains.iter().enumerate() {
+            push(&mut heap, Entry { key: gain / budget.cost(e), gain, e, iter: 0 });
+        }
     }
 
     let mut order = Vec::new();
@@ -105,7 +130,7 @@ pub(crate) fn run(
             let rem = budget.max_cost - spent;
             skipped.retain(|s| {
                 if budget.cost(s.e) <= rem + 1e-12 {
-                    heap.push(Entry { key: s.key, gain: s.gain, e: s.e, iter: s.iter });
+                    push(&mut heap, Entry { key: s.key, gain: s.gain, e: s.e, iter: s.iter });
                     false
                 } else {
                     true
@@ -118,7 +143,7 @@ pub(crate) fn run(
             // stale → recompute and reinsert
             let gain = f.marginal_gain_memoized(top.e);
             evaluations += 1;
-            heap.push(Entry { key: gain / budget.cost(top.e), gain, e: top.e, iter });
+            push(&mut heap, Entry { key: gain / budget.cost(top.e), gain, e: top.e, iter });
         }
     }
     Ok(Selection { order, value, evaluations })

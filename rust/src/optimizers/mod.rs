@@ -9,6 +9,25 @@
 //! memoized interface (`init_memoization` / `marginal_gain_memoized` /
 //! `update_memoization`), so every function's Table 3/4 statistics are
 //! exercised on the hot path.
+//!
+//! ## Batched, parallel gain scans
+//!
+//! Full-scan steps — every NaiveGreedy iteration, StochasticGreedy's
+//! per-iteration sample sweep, LazyGreedy's iteration-0 heap seeding, and
+//! LazierThanLazy's first touch of each sampled element — no longer call
+//! `marginal_gain_memoized` one element at a time. They collect the
+//! candidate ids and hand them to [`SetFunction::marginal_gains_batch`]
+//! via [`batch_gains`], which chunks the candidates across scoped threads
+//! (`SetFunction: Sync` makes the shared read-only fan-out safe).
+//!
+//! **Determinism is preserved exactly:** the gains a batch produces are
+//! bit-identical to the serial per-element path (the trait contract), and
+//! the subsequent argmax is a single serial scan in ascending candidate
+//! order where only a *strictly greater* key replaces the incumbent — so
+//! ties resolve to the lowest id, within and across chunks, exactly as
+//! the old one-at-a-time loop did. `MaximizeOpts::parallel = false`
+//! forces the serial per-element path (used by the determinism tests and
+//! the bench baseline); selections are identical either way.
 
 pub mod cover;
 pub mod lazier;
@@ -83,6 +102,11 @@ pub struct MaximizeOpts {
     pub seed: u64,
     /// Print per-iteration traces.
     pub verbose: bool,
+    /// Evaluate full-scan marginal gains via the batched, multi-threaded
+    /// path (default). `false` forces the serial per-element loop; the
+    /// selection is identical either way (see the module docs), so this
+    /// exists for baselining and determinism tests, not correctness.
+    pub parallel: bool,
 }
 
 impl Default for MaximizeOpts {
@@ -93,6 +117,7 @@ impl Default for MaximizeOpts {
             epsilon: 0.1,
             seed: 1,
             verbose: false,
+            parallel: true,
         }
     }
 }
@@ -183,6 +208,50 @@ pub fn maximize(
 pub(crate) fn should_stop(best_gain: f64, opts: &MaximizeOpts) -> bool {
     (opts.stop_if_negative_gain && best_gain < 0.0)
         || (opts.stop_if_zero_gain && best_gain <= ZERO_GAIN_EPS)
+}
+
+/// Below this candidate count a gain scan stays on one thread: spawning
+/// costs more than the saved work (each gain is at most O(n) and usually
+/// far less).
+pub const PARALLEL_MIN_CANDIDATES: usize = 256;
+
+/// Evaluate the memoized gains of `candidates` into `out`, fanning the
+/// batch out across scoped threads when it is large enough (same pattern
+/// as `kernel::dense::build_pairwise`). With `parallel = false` this is
+/// the plain serial per-element loop.
+///
+/// Chunking cannot change results: each element's gain is computed by the
+/// same `marginal_gains_batch` code against the same (read-only) memoized
+/// state regardless of which thread owns its chunk, and the trait contract
+/// guarantees batch == per-element bit-for-bit.
+pub fn batch_gains(
+    f: &dyn SetFunction,
+    candidates: &[ElementId],
+    out: &mut [f64],
+    parallel: bool,
+) {
+    debug_assert_eq!(candidates.len(), out.len());
+    if !parallel {
+        for (o, &e) in out.iter_mut().zip(candidates) {
+            *o = f.marginal_gain_memoized(e);
+        }
+        return;
+    }
+    let len = candidates.len();
+    let threads =
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    if len < PARALLEL_MIN_CANDIDATES || threads < 2 {
+        f.marginal_gains_batch(candidates, out);
+        return;
+    }
+    let chunk = len.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (cand_chunk, out_chunk) in
+            candidates.chunks(chunk).zip(out.chunks_mut(chunk))
+        {
+            scope.spawn(move || f.marginal_gains_batch(cand_chunk, out_chunk));
+        }
+    });
 }
 
 #[cfg(test)]

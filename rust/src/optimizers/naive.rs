@@ -8,8 +8,14 @@
 //! §5.3.1 note on non-unique greedy solutions; our ground-set scan order
 //! is ascending id, so unlike Submodlib's unordered sets it IS
 //! deterministic).
+//!
+//! The per-iteration scan gathers the eligible candidates and evaluates
+//! their gains through [`super::batch_gains`] (multi-threaded batch path);
+//! the argmax then runs serially in ascending-id order accepting only
+//! strictly greater keys, so the selection is bit-identical to the old
+//! one-element-at-a-time loop.
 
-use super::{should_stop, Budget, MaximizeOpts, Selection};
+use super::{batch_gains, should_stop, Budget, MaximizeOpts, Selection};
 use crate::error::Result;
 use crate::functions::traits::SetFunction;
 
@@ -24,16 +30,23 @@ pub(crate) fn run(
     let mut value = 0f64;
     let mut spent = 0f64;
     let mut evaluations = 0u64;
+    let mut candidates: Vec<usize> = Vec::with_capacity(n);
+    let mut gains: Vec<f64> = Vec::with_capacity(n);
 
     loop {
         let remaining = budget.max_cost - spent;
+        candidates.clear();
+        candidates
+            .extend((0..n).filter(|&e| !in_set[e] && budget.cost(e) <= remaining + 1e-12));
+        if candidates.is_empty() {
+            break;
+        }
+        gains.clear();
+        gains.resize(candidates.len(), 0.0);
+        batch_gains(&*f, &candidates, &mut gains, opts.parallel);
+        evaluations += candidates.len() as u64;
         let mut best: Option<(usize, f64, f64)> = None; // (e, gain, key)
-        for e in 0..n {
-            if in_set[e] || budget.cost(e) > remaining + 1e-12 {
-                continue;
-            }
-            let gain = f.marginal_gain_memoized(e);
-            evaluations += 1;
+        for (&e, &gain) in candidates.iter().zip(gains.iter()) {
             let key = gain / budget.cost(e);
             if best.map(|(_, _, bk)| key > bk).unwrap_or(true) {
                 best = Some((e, gain, key));

@@ -5,8 +5,13 @@
 //! independent of the budget, (1 − 1/e − ε) guarantee in expectation.
 //!
 //! Cardinality budgets only (the sample-size formula needs k).
+//!
+//! The per-iteration sample sweep evaluates gains through
+//! [`super::batch_gains`]; the argmax scans the sample in sampled order
+//! accepting only strictly greater gains, so selections are bit-identical
+//! to the serial loop for any fixed seed.
 
-use super::{should_stop, Budget, MaximizeOpts, Selection};
+use super::{batch_gains, should_stop, Budget, MaximizeOpts, Selection};
 use crate::error::{Result, SubmodError};
 use crate::functions::traits::SetFunction;
 use crate::rng::Pcg64;
@@ -42,6 +47,7 @@ pub(crate) fn run(
     let mut order = Vec::new();
     let mut value = 0f64;
     let mut evaluations = 0u64;
+    let mut gains: Vec<f64> = Vec::with_capacity(s);
 
     for it in 0..k {
         if pool.is_empty() {
@@ -53,10 +59,12 @@ pub(crate) fn run(
             let j = i + rng.next_below(pool.len() - i);
             pool.swap(i, j);
         }
+        gains.clear();
+        gains.resize(take, 0.0);
+        batch_gains(&*f, &pool[..take], &mut gains, opts.parallel);
+        evaluations += take as u64;
         let mut best: Option<(usize, usize, f64)> = None; // (pool pos, e, gain)
-        for (pos, &e) in pool[..take].iter().enumerate() {
-            let gain = f.marginal_gain_memoized(e);
-            evaluations += 1;
+        for (pos, (&e, &gain)) in pool[..take].iter().zip(gains.iter()).enumerate() {
             if best.map(|(_, _, bg)| gain > bg).unwrap_or(true) {
                 best = Some((pos, e, gain));
             }

@@ -7,7 +7,9 @@
 //! crate's own JSON substrate (util::json).
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 use crate::error::{Result, SubmodError};
 use crate::util::json::Json;
@@ -72,11 +74,19 @@ impl Manifest {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn rt<E: std::fmt::Display>(what: &'static str) -> impl Fn(E) -> SubmodError {
     move |e| SubmodError::Runtime(format!("{what}: {e}"))
 }
 
 /// PJRT engine: one compiled executable per artifact, compile-once cache.
+///
+/// Real implementation requires the `pjrt` cargo feature *and* an `xla`
+/// dependency added to Cargo.toml (the crate is not vendorable in the
+/// offline environment — see the manifest's comments). Without the
+/// feature, the stub below keeps every call site compiling: `load`
+/// returns a `Runtime` error and the tile entry points are unreachable.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -84,6 +94,7 @@ pub struct Engine {
     exes: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create the CPU client and parse the manifest. Executables compile
     /// lazily on first use and are cached for the process lifetime.
@@ -177,11 +188,70 @@ impl Engine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl std::fmt::Debug for Engine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Engine")
             .field("dir", &self.dir)
             .field("entries", &self.manifest.entries.len())
+            .finish()
+    }
+}
+
+/// Stub engine (no `pjrt` feature): same public surface, but `load`
+/// fails after validating the manifest, so the native kernel paths stay
+/// the only ones reachable. `runtime_pjrt.rs` tests already skip when
+/// artifacts are absent; `submodlib runtime` reports the load error.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Parses the manifest (surface-checking the artifacts dir), then
+    /// reports that no PJRT client can be created in this build.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let _manifest = Manifest::load(artifacts_dir.as_ref())?;
+        Err(SubmodError::Runtime(
+            "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+             (the `xla` crate is not present in this environment; see Cargo.toml)"
+                .into(),
+        ))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature disabled)".to_string()
+    }
+
+    pub fn similarity_tile(
+        &self,
+        _metric_tag: &str,
+        _x: &[f32],
+        _y: &[f32],
+    ) -> Result<Vec<f32>> {
+        Err(Self::unavailable())
+    }
+
+    pub fn fl_gains(&self, _s: &[f32], _max_vec: &[f32]) -> Result<Vec<f32>> {
+        Err(Self::unavailable())
+    }
+
+    fn unavailable() -> SubmodError {
+        SubmodError::Runtime("PJRT runtime unavailable (pjrt feature disabled)".into())
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("entries", &self.manifest.entries.len())
+            .field("stub", &true)
             .finish()
     }
 }

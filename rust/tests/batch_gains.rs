@@ -1,0 +1,282 @@
+//! Batch-gain contract suite (ISSUE 1):
+//!
+//!  B1 `marginal_gains_batch` == per-element `marginal_gain_memoized`,
+//!     bit-for-bit, for every function after arbitrary
+//!     `update_memoization` sequences (randomized per util::prop's seeded
+//!     stream design);
+//!  B2 the parallel optimizers return selections identical to the serial
+//!     per-element path (`MaximizeOpts::parallel = false`) — same order,
+//!     same value, same evaluation count;
+//!  B3 parallel NaiveGreedy matches a hand-rolled replica of the serial
+//!     seed implementation (scan ascending, first best wins).
+
+use submodlib::functions::clustered::ClusteredFunction;
+use submodlib::functions::disparity_min::DisparityMin;
+use submodlib::functions::disparity_min_sum::DisparityMinSum;
+use submodlib::functions::disparity_sum::DisparitySum;
+use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::functions::feature_based::{ConcaveShape, FeatureBased};
+use submodlib::functions::graph_cut::GraphCut;
+use submodlib::functions::log_determinant::LogDeterminant;
+use submodlib::functions::mixture::Mixture;
+use submodlib::functions::prob_set_cover::ProbabilisticSetCover;
+use submodlib::functions::set_cover::SetCover;
+use submodlib::functions::traits::{SetFunction, Subset};
+use submodlib::kernel::{DenseKernel, Metric, RectKernel, SparseKernel};
+use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use submodlib::rng::Pcg64;
+use submodlib::util::prop::{check, gen};
+
+/// Every function family over a random instance (sizes chosen to hit the
+/// 4-wide blocked paths *and* their scalar remainders).
+fn random_function(rng: &mut Pcg64) -> Box<dyn SetFunction> {
+    let data = gen::matrix(rng, 9, 31, 2, 6);
+    let n = data.rows();
+    match rng.next_below(12) {
+        0 => Box::new(FacilityLocation::new(DenseKernel::from_data(
+            &data,
+            Metric::Euclidean,
+        ))),
+        1 => {
+            // rect mode: a smaller represented set U against ground V
+            let u = gen::matrix(rng, 4, 12, data.cols(), data.cols());
+            Box::new(FacilityLocation::with_represented(
+                RectKernel::from_data(&u, &data, Metric::Euclidean).unwrap(),
+            ))
+        }
+        2 => {
+            let k = 2 + rng.next_below(n - 1);
+            Box::new(FacilityLocation::sparse(
+                SparseKernel::from_data(&data, Metric::Euclidean, k).unwrap(),
+            ))
+        }
+        3 => Box::new(FacilityLocation::clustered_from_data(
+            &data,
+            2 + rng.next_below(3),
+            Metric::Euclidean,
+            7,
+        )),
+        4 => Box::new(
+            GraphCut::new(
+                DenseKernel::from_data(&data, Metric::Euclidean),
+                0.1 + 0.8 * rng.next_f64(),
+            )
+            .unwrap(),
+        ),
+        5 => {
+            let m = 16;
+            let feats: Vec<Vec<(u32, f32)>> = (0..n)
+                .map(|_| {
+                    (0..4)
+                        .map(|_| (rng.next_below(m) as u32, rng.next_f32()))
+                        .collect()
+                })
+                .collect();
+            Box::new(
+                FeatureBased::new(feats, vec![1.0; m], ConcaveShape::Sqrt).unwrap(),
+            )
+        }
+        6 => {
+            let m = 12;
+            let cover: Vec<Vec<u32>> = (0..n)
+                .map(|_| (0..3).map(|_| rng.next_below(m) as u32).collect())
+                .collect();
+            Box::new(SetCover::new(cover, vec![1.0; m]).unwrap())
+        }
+        7 => {
+            let m = 10;
+            let probs: Vec<Vec<f32>> =
+                (0..n).map(|_| (0..m).map(|_| rng.next_f32()).collect()).collect();
+            Box::new(ProbabilisticSetCover::new(probs, vec![1.0; m]).unwrap())
+        }
+        8 => Box::new(DisparityMin::new(DenseKernel::distances_from_data(&data))),
+        9 => Box::new(DisparitySum::new(DenseKernel::distances_from_data(&data))),
+        10 => Box::new(DisparityMinSum::new(DenseKernel::distances_from_data(&data))),
+        _ => {
+            let k = DenseKernel::from_data(&data, Metric::Euclidean);
+            Box::new(
+                Mixture::new(vec![
+                    (0.7, Box::new(FacilityLocation::new(k.clone()))
+                        as Box<dyn SetFunction>),
+                    (0.3, Box::new(GraphCut::new(k, 0.4).unwrap())
+                        as Box<dyn SetFunction>),
+                ])
+                .unwrap(),
+            )
+        }
+    }
+}
+
+/// B1 core: after each random update, the batch over all remaining
+/// candidates must equal the per-element scalar path bit-for-bit (the
+/// determinism contract in functions::traits).
+fn assert_batch_matches(f: &mut dyn SetFunction, rng: &mut Pcg64) -> Result<(), String> {
+    let n = f.n();
+    f.init_memoization(&Subset::empty(n));
+    let mut selected = vec![false; n];
+    for step in 0..5usize {
+        let candidates: Vec<usize> = (0..n).filter(|&e| !selected[e]).collect();
+        if candidates.is_empty() {
+            break;
+        }
+        let mut out = vec![0f64; candidates.len()];
+        f.marginal_gains_batch(&candidates, &mut out);
+        for (&e, &g) in candidates.iter().zip(&out) {
+            let scalar = f.marginal_gain_memoized(e);
+            if g.to_bits() != scalar.to_bits() {
+                return Err(format!(
+                    "{} step {step} e={e}: batch {g} != scalar {scalar}",
+                    f.name()
+                ));
+            }
+        }
+        let e = candidates[rng.next_below(candidates.len())];
+        f.update_memoization(e);
+        selected[e] = true;
+    }
+    Ok(())
+}
+
+#[test]
+fn batch_equals_scalar_all_functions_randomized() {
+    check("batch == scalar gains", 0xBA7C4, 60, |rng| {
+        let mut f = random_function(rng);
+        assert_batch_matches(f.as_mut(), rng)
+    });
+}
+
+#[test]
+fn batch_equals_scalar_log_determinant_default_path() {
+    // LogDeterminant has no override — pins the trait's default batch
+    check("logdet default batch", 0x10DE7, 10, |rng| {
+        let data = gen::matrix(rng, 8, 20, 2, 4);
+        let mut f = LogDeterminant::with_regularization(
+            DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 }),
+            0.2,
+        )
+        .unwrap();
+        assert_batch_matches(&mut f, rng)
+    });
+}
+
+#[test]
+fn batch_equals_scalar_clustered_wrapper() {
+    check("clustered wrapper batch", 0xC1057, 10, |rng| {
+        let data = gen::matrix(rng, 12, 28, 2, 4);
+        let mut f = ClusteredFunction::from_data(&data, 3, 5, |sub| {
+            Ok(Box::new(FacilityLocation::new(DenseKernel::from_data(
+                sub,
+                Metric::Euclidean,
+            ))))
+        })
+        .unwrap();
+        assert_batch_matches(&mut f, rng)
+    });
+}
+
+/// B2: identical selections from the parallel and serial scan paths.
+/// n = 400 clears PARALLEL_MIN_CANDIDATES, so the threaded fan-out is
+/// genuinely exercised.
+fn assert_parallel_matches_serial(f: &dyn SetFunction, kind: OptimizerKind, k: usize) {
+    let par = maximize(
+        f,
+        Budget::cardinality(k),
+        kind,
+        &MaximizeOpts::default(),
+    )
+    .unwrap();
+    let ser = maximize(
+        f,
+        Budget::cardinality(k),
+        kind,
+        &MaximizeOpts { parallel: false, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(par.ids(), ser.ids(), "{kind:?}: order diverged");
+    assert!((par.value - ser.value).abs() < 1e-9, "{kind:?}: value diverged");
+    assert_eq!(par.evaluations, ser.evaluations, "{kind:?}: evaluations diverged");
+}
+
+#[test]
+fn optimizers_deterministic_under_parallelism() {
+    let data = submodlib::data::synthetic::blobs(400, 3, 8, 2.0, 99);
+    let fl = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+    let gc = GraphCut::new(DenseKernel::from_data(&data, Metric::Euclidean), 0.4).unwrap();
+    for kind in [
+        OptimizerKind::NaiveGreedy,
+        OptimizerKind::LazyGreedy,
+        OptimizerKind::StochasticGreedy,
+        OptimizerKind::LazierThanLazyGreedy,
+    ] {
+        assert_parallel_matches_serial(&fl, kind, 15);
+        assert_parallel_matches_serial(&gc, kind, 15);
+    }
+}
+
+#[test]
+fn knapsack_naive_deterministic_under_parallelism() {
+    let data = submodlib::data::synthetic::blobs(300, 2, 6, 1.5, 41);
+    let fl = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+    let costs: Vec<f64> = (0..300).map(|i| 1.0 + (i % 5) as f64 * 0.5).collect();
+    let budget = Budget::knapsack(20.0, costs).unwrap();
+    let par = maximize(
+        &fl,
+        budget.clone(),
+        OptimizerKind::NaiveGreedy,
+        &MaximizeOpts::default(),
+    )
+    .unwrap();
+    let ser = maximize(
+        &fl,
+        budget,
+        OptimizerKind::NaiveGreedy,
+        &MaximizeOpts { parallel: false, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(par.ids(), ser.ids());
+    assert!((par.value - ser.value).abs() < 1e-9);
+}
+
+/// B3: hand-rolled replica of the pre-batch serial NaiveGreedy (ascending
+/// scan, strictly-greater replacement, unit costs) — the parallel
+/// implementation must reproduce it element for element.
+#[test]
+fn parallel_naive_matches_serial_seed_replica() {
+    let data = submodlib::data::synthetic::blobs(350, 2, 7, 2.0, 17);
+    let fl = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+    let k = 12;
+
+    let mut reference = fl.clone_box();
+    reference.init_memoization(&Subset::empty(350));
+    let mut in_set = vec![false; 350];
+    let mut expect: Vec<(usize, f64)> = Vec::new();
+    for _ in 0..k {
+        let mut best: Option<(usize, f64)> = None;
+        for e in 0..350 {
+            if in_set[e] {
+                continue;
+            }
+            let gain = reference.marginal_gain_memoized(e);
+            if best.map(|(_, bg)| gain > bg).unwrap_or(true) {
+                best = Some((e, gain));
+            }
+        }
+        let (e, gain) = best.unwrap();
+        reference.update_memoization(e);
+        in_set[e] = true;
+        expect.push((e, gain));
+    }
+
+    let sel = maximize(
+        &fl,
+        Budget::cardinality(k),
+        OptimizerKind::NaiveGreedy,
+        &MaximizeOpts::default(),
+    )
+    .unwrap();
+    assert_eq!(sel.order.len(), expect.len());
+    for (got, want) in sel.order.iter().zip(&expect) {
+        assert_eq!(got.0, want.0, "picked element diverged");
+        assert_eq!(got.1.to_bits(), want.1.to_bits(), "gain diverged");
+    }
+}

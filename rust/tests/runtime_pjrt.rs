@@ -11,6 +11,10 @@ use submodlib::linalg::Matrix;
 use submodlib::runtime::{tiled, Engine};
 
 fn engine() -> Option<std::sync::Arc<Engine>> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature — Engine is a stub");
+        return None;
+    }
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
         return None;
