@@ -11,16 +11,26 @@
 //!   stochastic;
 //! * `parallel_scaling`: NaiveGreedy on FacilityLocation at n=2000,
 //!   k=100, batched-parallel gain scan vs the serial per-element path
-//!   (`MaximizeOpts::parallel = false`) — the ISSUE 1 headline number.
+//!   (`MaximizeOpts::parallel = false`) — the ISSUE 1 headline number;
+//! * `lazy_stale_block`: LazyGreedy on the Table 2 FL workload with the
+//!   Minoux-blocked stale re-evaluation (ISSUE 2 tentpole) — wall-clock,
+//!   evaluation count, and the block cap, to compare against the PR 1
+//!   one-pop-at-a-time snapshot;
+//! * `mi_family`: FLQMI / FLVMI / GCMI / COM / LogDetMI at n=500 with 10
+//!   queries, naive vs lazy — the targeted-selection stack that newly
+//!   rides the batched gain path (ISSUE 2).
 
 use std::collections::BTreeMap;
 
 use submodlib::data::synthetic;
 use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::functions::feature_based::ConcaveShape;
 use submodlib::functions::graph_cut::GraphCut;
 use submodlib::functions::log_determinant::LogDeterminant;
+use submodlib::functions::mi::{ConcaveOverModular, Flqmi, Flvmi, Gcmi, LogDetMi};
 use submodlib::functions::traits::SetFunction;
-use submodlib::kernel::{DenseKernel, Metric};
+use submodlib::kernel::{DenseKernel, Metric, RectKernel};
+use submodlib::optimizers::lazy::LAZY_STALE_BLOCK;
 use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
 use submodlib::util::bench::BenchRunner;
 use submodlib::util::json::Json;
@@ -86,6 +96,10 @@ fn main() {
         ),
     ];
     let mut snapshot_rows: Vec<Json> = Vec::new();
+    // FL/LazyGreedy numbers double as the `lazy_stale_block` entry (the
+    // ISSUE 2 acceptance comparison vs the PR 1 one-pop-at-a-time
+    // snapshot) — captured here rather than re-benched
+    let mut fl_lazy: Option<(f64, u64, f64)> = None;
     for (fname, func) in &functions {
         for (oname, kind) in [
             ("NaiveGreedy", OptimizerKind::NaiveGreedy),
@@ -100,7 +114,87 @@ fn main() {
                 (stats.median.as_secs_f64(), stats.mean.as_secs_f64());
             let sel =
                 maximize(func.as_ref(), snap_budget.clone(), kind, &opts).unwrap();
+            if *fname == "FacilityLocation" && oname == "LazyGreedy" {
+                fl_lazy = Some((median_s, sel.evaluations, sel.value));
+            }
             snapshot_rows.push(obj(vec![
+                ("function", Json::Str(fname.to_string())),
+                ("optimizer", Json::Str(oname.to_string())),
+                ("median_s", Json::Num(median_s)),
+                ("mean_s", Json::Num(mean_s)),
+                ("evaluations", Json::Num(sel.evaluations as f64)),
+                ("value", Json::Num(sel.value)),
+                ("selected", Json::Num(sel.order.len() as f64)),
+            ]));
+        }
+    }
+
+    // ---- lazy stale-block: Table 2 FL workload, n=500, k=50 -------------
+    let (lazy_median_s, lazy_evals, lazy_value) =
+        fl_lazy.expect("FL/LazyGreedy row collected above");
+    eprintln!(
+        "lazy stale-block: n=500, k=50, FL LazyGreedy (block cap {LAZY_STALE_BLOCK}): \
+         {lazy_median_s:.4}s, {lazy_evals} evaluations"
+    );
+    let lazy_stale_block = obj(vec![
+        (
+            "workload",
+            obj(vec![
+                ("n", Json::Num(500.0)),
+                ("k", Json::Num(50.0)),
+                ("function", Json::Str("FacilityLocation".to_string())),
+            ]),
+        ),
+        ("block_max", Json::Num(LAZY_STALE_BLOCK as f64)),
+        ("median_s", Json::Num(lazy_median_s)),
+        ("evaluations", Json::Num(lazy_evals as f64)),
+        ("value", Json::Num(lazy_value)),
+    ]);
+
+    // ---- MI family: n=500 ground, 10 queries, k=50 ----------------------
+    eprintln!("mi family: n=500, 10 queries, k=50, naive vs lazy");
+    let queries = synthetic::blobs(10, 2, 2, 1.0, 44);
+    let qrect = RectKernel::from_data(&queries, &data, Metric::Euclidean).unwrap();
+    let mi_functions: Vec<(&str, Box<dyn SetFunction>)> = vec![
+        ("FLQMI", Box::new(Flqmi::new(qrect.clone(), 1.0).unwrap())),
+        ("FLVMI", Box::new(Flvmi::new(kernel.clone(), qrect.clone(), 1.0).unwrap())),
+        ("GCMI", Box::new(Gcmi::new(qrect.clone(), 0.5).unwrap())),
+        (
+            "COM",
+            Box::new(
+                ConcaveOverModular::new(qrect.clone(), 0.5, ConcaveShape::Sqrt).unwrap(),
+            ),
+        ),
+        (
+            "LogDetMI",
+            Box::new(
+                LogDetMi::new(
+                    DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 }),
+                    DenseKernel::from_data(&queries, Metric::Rbf { gamma: 0.5 }),
+                    RectKernel::from_data(&queries, &data, Metric::Rbf { gamma: 0.5 })
+                        .unwrap(),
+                    0.7,
+                    0.1,
+                )
+                .unwrap(),
+            ),
+        ),
+    ];
+    let mut mi_rows: Vec<Json> = Vec::new();
+    for (fname, func) in &mi_functions {
+        for (oname, kind) in [
+            ("NaiveGreedy", OptimizerKind::NaiveGreedy),
+            ("LazyGreedy", OptimizerKind::LazyGreedy),
+        ] {
+            let label = format!("MI/{fname}/{oname}");
+            let stats = runner.bench(&label, || {
+                maximize(func.as_ref(), snap_budget.clone(), kind, &opts).unwrap().value
+            });
+            let (median_s, mean_s) =
+                (stats.median.as_secs_f64(), stats.mean.as_secs_f64());
+            let sel =
+                maximize(func.as_ref(), snap_budget.clone(), kind, &opts).unwrap();
+            mi_rows.push(obj(vec![
                 ("function", Json::Str(fname.to_string())),
                 ("optimizer", Json::Str(oname.to_string())),
                 ("median_s", Json::Num(median_s)),
@@ -151,7 +245,22 @@ fn main() {
     );
 
     let snapshot = obj(vec![
-        ("schema", Json::Str("bench_optimizers/v1".to_string())),
+        ("schema", Json::Str("bench_optimizers/v2".to_string())),
+        ("lazy_stale_block", lazy_stale_block),
+        (
+            "mi_family",
+            obj(vec![
+                (
+                    "workload",
+                    obj(vec![
+                        ("n", Json::Num(500.0)),
+                        ("queries", Json::Num(10.0)),
+                        ("k", Json::Num(50.0)),
+                    ]),
+                ),
+                ("results", Json::Arr(mi_rows)),
+            ]),
+        ),
         (
             "table2",
             obj(vec![

@@ -7,6 +7,11 @@
 //! ν ≥ 0 is the privacy-hardness parameter (paper §3.4/§3.7 discussion):
 //! larger ν suppresses any pick resembling the private set. Memoized like
 //! FL: `max_vec[i]`, against a precomputed private cap `ν max_{j∈P} S_ij`.
+//!
+//! Empty maxima use the `−∞` sentinel (see `mi::flqmi`'s module docs) so
+//! negative similarities are not clamped at zero; the definition's outer
+//! `max(·, 0)` maps the empty row term to 0 (f(∅|P) = 0) without a
+//! special case, and non-negative kernels are unchanged.
 
 use std::sync::Arc;
 
@@ -41,9 +46,22 @@ impl Flcg {
         let n = ground.n();
         let np = privates.rows();
         let pcap: Vec<f32> = (0..n)
-            .map(|i| nu as f32 * (0..np).map(|p| privates.get(p, i)).fold(0f32, f32::max))
+            .map(|i| {
+                if np == 0 {
+                    return 0.0; // empty P exerts no influence
+                }
+                nu as f32
+                    * (0..np)
+                        .map(|p| privates.get(p, i))
+                        .fold(f32::NEG_INFINITY, f32::max)
+            })
             .collect();
-        Ok(Flcg { ground: Arc::new(ground), pcap: Arc::new(pcap), nu, max_vec: vec![0.0; n] })
+        Ok(Flcg {
+            ground: Arc::new(ground),
+            pcap: Arc::new(pcap),
+            nu,
+            max_vec: vec![f32::NEG_INFINITY; n],
+        })
     }
 
     pub fn nu(&self) -> f64 {
@@ -59,11 +77,13 @@ impl SetFunction for Flcg {
     fn evaluate(&self, subset: &Subset) -> f64 {
         (0..self.ground.n())
             .map(|i| {
+                // −∞ fold base: the outer max(·, 0) maps an empty subset's
+                // row term to 0, matching f(∅|P) = 0
                 let ma = subset
                     .order()
                     .iter()
                     .map(|&j| self.ground.get(i, j))
-                    .fold(0f32, f32::max);
+                    .fold(f32::NEG_INFINITY, f32::max);
                 (ma - self.pcap[i]).max(0.0) as f64
             })
             .sum()
@@ -71,7 +91,7 @@ impl SetFunction for Flcg {
 
     fn init_memoization(&mut self, subset: &Subset) {
         for v in &mut self.max_vec {
-            *v = 0.0;
+            *v = f32::NEG_INFINITY; // empty-set sentinel (module docs)
         }
         let order: Vec<ElementId> = subset.order().to_vec();
         for e in order {
@@ -92,6 +112,39 @@ impl SetFunction for Flcg {
             g += (after - before) as f64;
         }
         g
+    }
+
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        // Blocked across candidates: max_vec / pcap stream once per 4
+        // contiguous kernel rows, "before" computed once per row.
+        // Ascending-i accumulation per candidate is bit-identical to the
+        // scalar path.
+        let mut c = 0;
+        while c + 4 <= candidates.len() {
+            let rows = [
+                self.ground.row(candidates[c]),
+                self.ground.row(candidates[c + 1]),
+                self.ground.row(candidates[c + 2]),
+                self.ground.row(candidates[c + 3]),
+            ];
+            let mut g = [0f64; 4];
+            for i in 0..self.max_vec.len() {
+                let cap = self.pcap[i];
+                let mv = self.max_vec[i];
+                let before = (mv - cap).max(0.0);
+                for t in 0..4 {
+                    let s = rows[t][i];
+                    let after = (mv.max(s) - cap).max(0.0);
+                    g[t] += (after - before) as f64;
+                }
+            }
+            out[c..c + 4].copy_from_slice(&g);
+            c += 4;
+        }
+        for (o, &e) in out[c..].iter_mut().zip(&candidates[c..]) {
+            *o = self.marginal_gain_memoized(e);
+        }
     }
 
     fn update_memoization(&mut self, e: ElementId) {

@@ -60,6 +60,12 @@ impl SetFunction for LogDetCg {
         self.inner.marginal_gain_memoized(e)
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        // forwards to generic CG → LogDeterminant's blocked forward
+        // substitution over the shared incremental factor
+        self.inner.marginal_gains_batch(candidates, out);
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         self.inner.update_memoization(e);
     }

@@ -9,6 +9,11 @@
 //! The FLVMI saturation capped from below by the private influence:
 //! η magnifies query relevance, ν tightens privacy. Memoization is the
 //! usual FL `max_vec` against two precomputed row caps.
+//!
+//! Empty maxima use the `−∞` sentinel (see `mi::flqmi`'s module docs) so
+//! negative similarities are not clamped at zero; the outer `max(·, 0)`
+//! of the definition maps the `−∞` row term to 0, so I(∅;Q|P) = 0 falls
+//! out without a special case, and non-negative kernels are unchanged.
 
 use std::sync::Arc;
 
@@ -47,21 +52,31 @@ impl Flcmi {
                 "query/private kernel cols must equal ground n".into(),
             ));
         }
-        let colmax = |k: &RectKernel, scale: f64| -> Vec<f32> {
+        // `empty` is the cap for a kernel with no rows. Q = ∅ ⇒ qcap −∞:
+        // min(ma, −∞) feeds the outer max(·, 0) and zeroes every row —
+        // I(A;∅|P) = 0 even on negative kernels (the sentinel is applied
+        // unscaled; η·(−∞) would be NaN at η = 0). P = ∅ ⇒ pcap 0: no
+        // private influence to subtract.
+        let colmax = |k: &RectKernel, scale: f64, empty: f32| -> Vec<f32> {
             (0..n)
                 .map(|i| {
+                    if k.rows() == 0 {
+                        return empty;
+                    }
                     scale as f32
-                        * (0..k.rows()).map(|r| k.get(r, i)).fold(0f32, f32::max)
+                        * (0..k.rows())
+                            .map(|r| k.get(r, i))
+                            .fold(f32::NEG_INFINITY, f32::max)
                 })
                 .collect()
         };
         Ok(Flcmi {
-            qcap: Arc::new(colmax(&queries, eta)),
-            pcap: Arc::new(colmax(&privates, nu)),
+            qcap: Arc::new(colmax(&queries, eta, f32::NEG_INFINITY)),
+            pcap: Arc::new(colmax(&privates, nu, 0.0)),
             ground: Arc::new(ground),
             eta,
             nu,
-            max_vec: vec![0.0; n],
+            max_vec: vec![f32::NEG_INFINITY; n],
         })
     }
 
@@ -87,11 +102,13 @@ impl SetFunction for Flcmi {
     fn evaluate(&self, subset: &Subset) -> f64 {
         (0..self.ground.n())
             .map(|i| {
+                // −∞ fold base: row_value's outer max(·, 0) maps an empty
+                // subset's −∞ to 0, matching I(∅;Q|P) = 0
                 let ma = subset
                     .order()
                     .iter()
                     .map(|&j| self.ground.get(i, j))
-                    .fold(0f32, f32::max);
+                    .fold(f32::NEG_INFINITY, f32::max);
                 self.row_value(i, ma) as f64
             })
             .sum()
@@ -99,7 +116,7 @@ impl SetFunction for Flcmi {
 
     fn init_memoization(&mut self, subset: &Subset) {
         for v in &mut self.max_vec {
-            *v = 0.0;
+            *v = f32::NEG_INFINITY; // empty-set sentinel (module docs)
         }
         let order: Vec<ElementId> = subset.order().to_vec();
         for e in order {
@@ -116,6 +133,38 @@ impl SetFunction for Flcmi {
             g += (self.row_value(i, mv.max(s)) - self.row_value(i, mv)) as f64;
         }
         g
+    }
+
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        // Blocked across candidates: max_vec and the two caps stream once
+        // per 4 contiguous kernel rows, and the "before" row value —
+        // identical for every candidate — is computed once per row.
+        // Ascending-i accumulation per candidate is bit-identical to the
+        // scalar path.
+        let mut c = 0;
+        while c + 4 <= candidates.len() {
+            let rows = [
+                self.ground.row(candidates[c]),
+                self.ground.row(candidates[c + 1]),
+                self.ground.row(candidates[c + 2]),
+                self.ground.row(candidates[c + 3]),
+            ];
+            let mut g = [0f64; 4];
+            for i in 0..self.max_vec.len() {
+                let mv = self.max_vec[i];
+                let before = self.row_value(i, mv);
+                for t in 0..4 {
+                    let s = rows[t][i];
+                    g[t] += (self.row_value(i, mv.max(s)) - before) as f64;
+                }
+            }
+            out[c..c + 4].copy_from_slice(&g);
+            c += 4;
+        }
+        for (o, &e) in out[c..].iter_mut().zip(&candidates[c..]) {
+            *o = self.marginal_gain_memoized(e);
+        }
     }
 
     fn update_memoization(&mut self, e: ElementId) {
@@ -187,6 +236,27 @@ mod tests {
             f.update_memoization(add);
             s.insert(add);
         }
+    }
+
+    #[test]
+    fn empty_query_set_is_identically_zero() {
+        use crate::linalg::Matrix;
+        // I(A;∅|P) = 0 for every A, even on negative-similarity kernels
+        // with a negative private cap: the −∞ query sentinel zeroes every
+        // row through the outer max(·, 0)
+        let ground = Matrix::from_rows(&[&[1.0f32], &[-1.0]]);
+        let gk = DenseKernel::from_data(&ground, Metric::Dot);
+        let qk = RectKernel::from_matrix(Matrix::zeros(0, 2));
+        let pk = RectKernel::from_data(
+            &Matrix::from_rows(&[&[-0.5f32]]),
+            &ground,
+            Metric::Dot,
+        )
+        .unwrap();
+        let mut f = Flcmi::new(gk, qk, pk, 1.0, 1.0).unwrap();
+        assert_eq!(f.evaluate(&Subset::from_ids(2, &[0, 1])), 0.0);
+        f.init_memoization(&Subset::empty(2));
+        assert_eq!(f.marginal_gain_memoized(0), 0.0);
     }
 
     #[test]

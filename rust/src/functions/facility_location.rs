@@ -13,6 +13,13 @@
 //! * **sparse** — kNN kernel; gains touch only stored neighbors.
 //! * **clustered** — `f(A) = Σ_l Σ_{i∈C_l} max_{j∈A∩C_l} s_ij` over a
 //!   provided clustering, kernels built per cluster.
+//!
+//! Like Submodlib, FL assumes *non-negative* similarities: empty maxima
+//! are represented as 0, so a kernel with negative entries is silently
+//! clamped at zero per row. This is load-bearing for the sparse mode
+//! (absent CSR entries read as 0 and must never beat a stored max) and is
+//! deliberately NOT the empty-set sentinel the MI family uses (see
+//! `functions::mi::flqmi` for the contrast).
 
 use std::sync::Arc;
 
@@ -314,11 +321,107 @@ impl SetFunction for FacilityLocation {
                     *o = self.marginal_gain_memoized(e);
                 }
             }
-            // sparse / clustered gains touch candidate-specific index sets
-            // (neighbor lists, per-cluster blocks); no shared streaming win
-            Mode::Sparse(_) | Mode::Clustered { .. } => {
-                for (o, &e) in out.iter_mut().zip(candidates) {
+            Mode::Sparse(k) => {
+                // CSR-transpose-style merge: 4 candidates' neighbor lists
+                // are walked front-to-front in ascending column order, so
+                // `max_vec[i]` is read once per distinct row i the block
+                // touches instead of once per (candidate, neighbor) pair.
+                // Each candidate still accumulates over *its own* stored
+                // neighbors in ascending-column order — exactly the scalar
+                // path's order — so results are bit-identical.
+                let mv = &self.max_vec;
+                let mut c = 0;
+                while c + 4 <= candidates.len() {
+                    let rows = [
+                        k.row(candidates[c]),
+                        k.row(candidates[c + 1]),
+                        k.row(candidates[c + 2]),
+                        k.row(candidates[c + 3]),
+                    ];
+                    let mut cur = [0usize; 4];
+                    let mut g = [0f64; 4];
+                    loop {
+                        let mut next = u32::MAX;
+                        let mut any = false;
+                        for t in 0..4 {
+                            if cur[t] < rows[t].0.len() {
+                                let col = rows[t].0[cur[t]];
+                                if !any || col < next {
+                                    next = col;
+                                }
+                                any = true;
+                            }
+                        }
+                        if !any {
+                            break;
+                        }
+                        let m = mv[next as usize];
+                        for t in 0..4 {
+                            if cur[t] < rows[t].0.len() && rows[t].0[cur[t]] == next {
+                                let s = rows[t].1[cur[t]];
+                                if s > m {
+                                    g[t] += (s - m) as f64;
+                                }
+                                cur[t] += 1;
+                            }
+                        }
+                    }
+                    out[c..c + 4].copy_from_slice(&g);
+                    c += 4;
+                }
+                for (o, &e) in out[c..].iter_mut().zip(&candidates[c..]) {
                     *o = self.marginal_gain_memoized(e);
+                }
+            }
+            Mode::Clustered { clusters, .. } => {
+                // Per-cluster grouping (ROADMAP open item): candidates of
+                // the same cluster share that cluster's kernel rows and
+                // max_vec segment, so group first, then stream the
+                // cluster's rows once per 4 same-cluster candidates (same
+                // shape as Dense). Ascending-i accumulation per candidate
+                // keeps results bit-identical to the scalar path.
+                let mut by_cluster: Vec<Vec<usize>> = vec![Vec::new(); clusters.len()];
+                for (idx, &e) in candidates.iter().enumerate() {
+                    let (ci, _, _) = self.lookup[e];
+                    if ci == u32::MAX {
+                        out[idx] = 0.0; // not in any cluster: no contribution
+                    } else {
+                        by_cluster[ci as usize].push(idx);
+                    }
+                }
+                for (ci, members) in by_cluster.iter().enumerate() {
+                    if members.is_empty() {
+                        continue;
+                    }
+                    let (_, k) = &clusters[ci];
+                    let off = self.lookup[candidates[members[0]]].2 as usize;
+                    let mut c = 0;
+                    while c + 4 <= members.len() {
+                        let lis = [
+                            self.lookup[candidates[members[c]]].1 as usize,
+                            self.lookup[candidates[members[c + 1]]].1 as usize,
+                            self.lookup[candidates[members[c + 2]]].1 as usize,
+                            self.lookup[candidates[members[c + 3]]].1 as usize,
+                        ];
+                        let mut g = [0f64; 4];
+                        for i in 0..k.n() {
+                            let m = self.max_vec[off + i];
+                            let row = k.row(i);
+                            for t in 0..4 {
+                                let s = row[lis[t]];
+                                if s > m {
+                                    g[t] += (s - m) as f64;
+                                }
+                            }
+                        }
+                        for t in 0..4 {
+                            out[members[c + t]] = g[t];
+                        }
+                        c += 4;
+                    }
+                    for &idx in &members[c..] {
+                        out[idx] = self.marginal_gain_memoized(candidates[idx]);
+                    }
                 }
             }
         }

@@ -81,6 +81,12 @@ impl SetFunction for ConditionalGain {
         self.base.marginal_gain_memoized(e)
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        // gains "on top of P" are exactly the base's — forward the whole
+        // batch so the base's vectorized override is reached
+        self.base.marginal_gains_batch(candidates, out);
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         self.base.update_memoization(e);
     }

@@ -117,6 +117,19 @@ impl SetFunction for ConditionalMutualInformation {
         self.base_ap.marginal_gain_memoized(e) - self.base_aqp.marginal_gain_memoized(e)
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        // same shape as generic MI: one batch per tracked state,
+        // subtracted elementwise — bit-identical to the scalar path by
+        // the bases' batch == scalar contract
+        self.base_ap.marginal_gains_batch(candidates, out);
+        let mut aqp = vec![0f64; candidates.len()];
+        self.base_aqp.marginal_gains_batch(candidates, &mut aqp);
+        for (o, g) in out.iter_mut().zip(&aqp) {
+            *o -= g;
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         self.base_ap.update_memoization(e);
         self.base_aqp.update_memoization(e);

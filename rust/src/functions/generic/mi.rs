@@ -96,6 +96,19 @@ impl SetFunction for MutualInformation {
         self.base_a.marginal_gain_memoized(e) - self.base_aq.marginal_gain_memoized(e)
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        // one batch against each tracked state, subtracted elementwise;
+        // both bases honor the batch == scalar contract, so f(a|A) −
+        // f(a|A∪Q) comes out bit-identical to the scalar path
+        self.base_a.marginal_gains_batch(candidates, out);
+        let mut aq = vec![0f64; candidates.len()];
+        self.base_aq.marginal_gains_batch(candidates, &mut aq);
+        for (o, g) in out.iter_mut().zip(&aq) {
+            *o -= g;
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         self.base_a.update_memoization(e);
         self.base_aq.update_memoization(e);

@@ -8,7 +8,9 @@
 //! (§5.2.1): greedy maximization uses *Fast Greedy MAP Inference* (Chen et
 //! al. 2018) — an incrementally maintained Cholesky factor
 //! ([`crate::linalg::IncrementalLogDet`], Table 3 "DPP: SVD(S_A)" row in
-//! spirit) so each marginal gain is one forward substitution.
+//! spirit) so each marginal gain is one forward substitution; batched
+//! gain scans run one *blocked* forward substitution over K candidate
+//! columns against the shared factor (`IncrementalLogDet::gains_batch`).
 //!
 //! An optional diagonal regularizer `reg` evaluates `log det(L_X + reg·I)`,
 //! which keeps near-duplicate ground sets numerically PD (Submodlib's
@@ -29,6 +31,13 @@ pub struct LogDeterminant {
     /// memoized incremental factor + the insertion order it reflects
     inc: IncrementalLogDet,
     committed: Vec<ElementId>,
+    /// set when `update_memoization` was driven onto a singular candidate
+    /// (one whose gain is −∞). The factor cannot represent that set, and
+    /// f of it — and of every superset — is −∞, so all subsequent gains
+    /// report −∞ rather than silently answering for a *different* set
+    /// than the caller committed. The optimizers never trip this: they
+    /// refuse to accept a −∞ gain (see `optimizers::should_stop`).
+    singular: bool,
 }
 
 impl LogDeterminant {
@@ -46,6 +55,7 @@ impl LogDeterminant {
             reg,
             inc: IncrementalLogDet::new(),
             committed: Vec::new(),
+            singular: false,
         })
     }
 
@@ -83,22 +93,46 @@ impl SetFunction for LogDeterminant {
     fn init_memoization(&mut self, subset: &Subset) {
         self.inc = IncrementalLogDet::new();
         self.committed.clear();
+        self.singular = false;
         for &e in subset.order() {
             self.update_memoization(e);
         }
     }
 
     fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        if self.singular {
+            return f64::NEG_INFINITY;
+        }
         self.inc.gain(&self.col(e, &self.committed), self.diag(e))
+    }
+
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        if self.singular {
+            out.fill(f64::NEG_INFINITY);
+            return;
+        }
+        // One blocked forward substitution over all candidate columns
+        // against the shared factor (IncrementalLogDet::gains_batch reads
+        // each packed L row once per 4 candidates); bit-identical to
+        // per-candidate `gain` calls by its contract.
+        let cols: Vec<Vec<f32>> =
+            candidates.iter().map(|&e| self.col(e, &self.committed)).collect();
+        let diags: Vec<f32> = candidates.iter().map(|&e| self.diag(e)).collect();
+        self.inc.gains_batch(&cols, &diags, out);
     }
 
     fn update_memoization(&mut self, e: ElementId) {
         let col = self.col(e, &self.committed);
-        // A failed push means the candidate makes the kernel singular;
-        // record it as committed with no factor update so subsequent gains
-        // stay −∞-consistent (greedy never picks such elements anyway).
+        // A failed push means the candidate makes the kernel singular:
+        // f(committed ∪ {e}) = −∞. The factor cannot absorb the element,
+        // so poison the memoized state instead of silently dropping it —
+        // every further gain reports −∞, consistent with `evaluate` of
+        // the set the caller actually built.
         if self.inc.push(&col, self.diag(e)).is_ok() {
             self.committed.push(e);
+        } else {
+            self.singular = true;
         }
     }
 
@@ -175,6 +209,61 @@ mod tests {
         f.update_memoization(0);
         assert_eq!(f.marginal_gain_memoized(1), f64::NEG_INFINITY);
         assert!(f.marginal_gain_memoized(2) > f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn optimizer_never_accepts_singular_candidate() {
+        use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+        // Duplicate rows, no regularization: once one duplicate is picked
+        // the other's gain is −∞ forever. Even with every stop rule
+        // disabled the optimizer must terminate instead of committing it,
+        // so the reported selection's evaluate() equals the reported value
+        // (the pre-fix behavior dropped the element from the memoized
+        // state but still recorded it as selected).
+        let data = Matrix::from_rows(&[
+            &[1.0, 2.0],
+            &[1.0, 2.0],
+            &[5.0, 5.0],
+            &[0.0, 1.0],
+        ]);
+        let k = DenseKernel::from_data(&data, Metric::Rbf { gamma: 1.0 });
+        let f = LogDeterminant::new(k);
+        let opts = MaximizeOpts {
+            stop_if_zero_gain: false,
+            stop_if_negative_gain: false,
+            ..Default::default()
+        };
+        for kind in [OptimizerKind::NaiveGreedy, OptimizerKind::LazyGreedy] {
+            let sel = maximize(&f, Budget::cardinality(4), kind, &opts).unwrap();
+            assert!(sel.order.len() < 4, "{kind:?} accepted a singular candidate");
+            assert!(sel.order.iter().all(|&(_, g)| g.is_finite()), "{kind:?}");
+            let v = f.evaluate(&sel.subset(4));
+            assert!(
+                (v - sel.value).abs() < 1e-6,
+                "{kind:?}: evaluate {v} vs accumulated {}",
+                sel.value
+            );
+        }
+    }
+
+    #[test]
+    fn forced_singular_update_poisons_memoized_state() {
+        let data = Matrix::from_rows(&[&[1.0, 2.0], &[1.0, 2.0], &[5.0, 5.0]]);
+        let k = DenseKernel::from_data(&data, Metric::Rbf { gamma: 1.0 });
+        let mut f = LogDeterminant::new(k);
+        f.init_memoization(&Subset::empty(3));
+        f.update_memoization(0);
+        f.update_memoization(1); // duplicate of 0 → committed set singular
+        // f({0,1}) = −∞, so every further gain must report −∞ too instead
+        // of silently answering for {0} (the old dropped-element behavior)
+        assert_eq!(f.marginal_gain_memoized(2), f64::NEG_INFINITY);
+        let mut out = vec![0f64; 1];
+        f.marginal_gains_batch(&[2], &mut out);
+        assert_eq!(out[0], f64::NEG_INFINITY);
+        assert_eq!(f.evaluate(&Subset::from_ids(3, &[0, 1])), f64::NEG_INFINITY);
+        // re-initializing clears the poisoned state
+        f.init_memoization(&Subset::empty(3));
+        assert!(f.marginal_gain_memoized(2).is_finite());
     }
 
     #[test]

@@ -14,6 +14,24 @@
 //!
 //! Memoization (Table 4 row 2): `max_per_query[q] = max_{j∈A} S_qj`; the
 //! modular term's per-element value is precomputed.
+//!
+//! ## Empty-set sentinel
+//!
+//! `max_{j∈A}` over the empty set is represented as `−∞`, not `0`: with
+//! `0` a kernel whose similarities can be negative (e.g. dot-product
+//! features) had `max_{j∈A} S_qj` silently clamped at zero, diverging
+//! from the paper's I(A;Q) definition. The empty *set's* contribution is
+//! still 0 (I(∅;Q) = 0); the sentinel only marks "no element yet", so
+//! the first element's contribution is its true — possibly negative —
+//! similarity. For the non-negative kernels of the paper's experiments
+//! both conventions produce identical values.
+//!
+//! Caveat: on kernels with negative similarities the definition itself
+//! (and hence this implementation — same for FLVMI/FLCMI/FLCG) is no
+//! longer submodular: a row's first-element contribution can be negative
+//! and *grow* toward zero as the set expands. LazyGreedy's stale-bound
+//! pruning assumes diminishing gains, so on such kernels use NaiveGreedy
+//! (see `optimizers::lazy`'s module docs).
 
 use std::sync::Arc;
 
@@ -43,16 +61,23 @@ impl Flqmi {
         }
         let nq = kernel.rows();
         let n = kernel.cols();
+        // max over the (nonempty) query set; −∞ fold base so negative
+        // similarities survive. An empty query set contributes nothing.
         let modular: Vec<f64> = (0..n)
             .map(|i| {
-                eta * (0..nq).map(|q| kernel.get(q, i)).fold(0f32, f32::max) as f64
+                if nq == 0 {
+                    return 0.0;
+                }
+                eta * (0..nq)
+                    .map(|q| kernel.get(q, i))
+                    .fold(f32::NEG_INFINITY, f32::max) as f64
             })
             .collect();
         Ok(Flqmi {
             kernel: Arc::new(kernel),
             modular: Arc::new(modular),
             eta,
-            max_per_query: vec![0.0; nq],
+            max_per_query: vec![f32::NEG_INFINITY; nq],
         })
     }
 
@@ -67,6 +92,9 @@ impl SetFunction for Flqmi {
     }
 
     fn evaluate(&self, subset: &Subset) -> f64 {
+        if subset.is_empty() {
+            return 0.0; // I(∅;Q) = 0, not Σ_q (empty max)
+        }
         let nq = self.kernel.rows();
         let mut total = 0f64;
         for q in 0..nq {
@@ -74,14 +102,14 @@ impl SetFunction for Flqmi {
                 .order()
                 .iter()
                 .map(|&j| self.kernel.get(q, j))
-                .fold(0f32, f32::max) as f64;
+                .fold(f32::NEG_INFINITY, f32::max) as f64;
         }
         total + subset.order().iter().map(|&i| self.modular[i]).sum::<f64>()
     }
 
     fn init_memoization(&mut self, subset: &Subset) {
         for v in &mut self.max_per_query {
-            *v = 0.0;
+            *v = f32::NEG_INFINITY; // empty-set sentinel (module docs)
         }
         let order: Vec<ElementId> = subset.order().to_vec();
         for e in order {
@@ -93,11 +121,52 @@ impl SetFunction for Flqmi {
         let mut g = self.modular[e];
         for (q, &mv) in self.max_per_query.iter().enumerate() {
             let s = self.kernel.get(q, e);
-            if s > mv {
+            if mv == f32::NEG_INFINITY {
+                // first element: the query row's term goes 0 → s
+                g += s as f64;
+            } else if s > mv {
                 g += (s - mv) as f64;
             }
         }
         g
+    }
+
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        // Blocked across candidates: each query row is streamed once per
+        // 4 candidates instead of strided down 4 full columns. Ascending-q
+        // accumulation per candidate matches the scalar path bit-for-bit.
+        let mut c = 0;
+        while c + 4 <= candidates.len() {
+            let es = [
+                candidates[c],
+                candidates[c + 1],
+                candidates[c + 2],
+                candidates[c + 3],
+            ];
+            let mut g = [
+                self.modular[es[0]],
+                self.modular[es[1]],
+                self.modular[es[2]],
+                self.modular[es[3]],
+            ];
+            for (q, &mv) in self.max_per_query.iter().enumerate() {
+                let row = self.kernel.row(q);
+                for t in 0..4 {
+                    let s = row[es[t]];
+                    if mv == f32::NEG_INFINITY {
+                        g[t] += s as f64;
+                    } else if s > mv {
+                        g[t] += (s - mv) as f64;
+                    }
+                }
+            }
+            out[c..c + 4].copy_from_slice(&g);
+            c += 4;
+        }
+        for (o, &e) in out[c..].iter_mut().zip(&candidates[c..]) {
+            *o = self.marginal_gain_memoized(e);
+        }
     }
 
     fn update_memoization(&mut self, e: ElementId) {
@@ -182,6 +251,34 @@ mod tests {
             .map(|e| f.marginal_gain_memoized(e))
             .fold(f64::MIN, f64::max);
         assert!(residual < 0.05, "not saturated: residual max gain {residual}");
+    }
+
+    #[test]
+    fn negative_similarities_follow_definition() {
+        use crate::linalg::Matrix;
+        // dot-product kernel with all-negative similarities: the paper's
+        // I(A;Q) is negative here; the old 0-initialized maxima clamped
+        // every term at zero.
+        let q = Matrix::from_rows(&[&[1.0f32]]);
+        let ground = Matrix::from_rows(&[&[-2.0f32], &[-1.0]]);
+        let k = RectKernel::from_data(&q, &ground, Metric::Dot).unwrap();
+        let f = Flqmi::new(k, 0.5).unwrap();
+        assert_eq!(f.evaluate(&Subset::empty(2)), 0.0);
+        // A = {1}: max term = −1, modular term = η·max_q S_q1 = 0.5·(−1)
+        let s1 = Subset::from_ids(2, &[1]);
+        assert!((f.evaluate(&s1) - (-1.0 + 0.5 * -1.0)).abs() < 1e-6);
+        // memoized path agrees, including the first (negative) pick
+        let mut m = f.clone();
+        m.init_memoization(&Subset::empty(2));
+        for e in 0..2 {
+            let fast = m.marginal_gain_memoized(e);
+            let slow = m.marginal_gain(&Subset::empty(2), e);
+            assert!((fast - slow).abs() < 1e-9, "e={e}: {fast} vs {slow}");
+        }
+        m.update_memoization(1);
+        let fast = m.marginal_gain_memoized(0);
+        let slow = f.marginal_gain(&s1, 0);
+        assert!((fast - slow).abs() < 1e-9, "{fast} vs {slow}");
     }
 
     #[test]

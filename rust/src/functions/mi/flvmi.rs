@@ -11,6 +11,12 @@
 //!
 //! Memoization (Table 4 row 1): `max_vec[i] = max_{j∈A} S_ij`; the query
 //! side `η max_{j∈Q} S_ij` is a precomputed constant vector.
+//!
+//! Empty maxima use the `−∞` sentinel (see `flqmi`'s module docs): with
+//! the old `0` convention a kernel with negative similarities had both
+//! `max_{j∈A}` and the precomputed query cap silently clamped at zero,
+//! diverging from the Table 1 definition. I(∅;Q) is still 0; values on
+//! non-negative kernels are unchanged.
 
 use std::sync::Arc;
 
@@ -28,6 +34,9 @@ pub struct Flvmi {
     eta: f64,
     /// memoized max_{j∈A} S_ij
     max_vec: Vec<f32>,
+    /// Q = ∅ ⇒ I(·;∅) ≡ 0 — there is no cap value that expresses this
+    /// through `min` for negative kernels, so it is a dedicated flag
+    no_queries: bool,
 }
 
 impl Flvmi {
@@ -48,14 +57,21 @@ impl Flvmi {
         let nq = queries.rows();
         let qcap: Vec<f32> = (0..n)
             .map(|i| {
-                eta as f32 * (0..nq).map(|q| queries.get(q, i)).fold(0f32, f32::max)
+                if nq == 0 {
+                    return 0.0; // unused: `no_queries` short-circuits everything
+                }
+                eta as f32
+                    * (0..nq)
+                        .map(|q| queries.get(q, i))
+                        .fold(f32::NEG_INFINITY, f32::max)
             })
             .collect();
         Ok(Flvmi {
             ground: Arc::new(ground),
             qcap: Arc::new(qcap),
             eta,
-            max_vec: vec![0.0; n],
+            max_vec: vec![f32::NEG_INFINITY; n],
+            no_queries: nq == 0,
         })
     }
 
@@ -70,13 +86,16 @@ impl SetFunction for Flvmi {
     }
 
     fn evaluate(&self, subset: &Subset) -> f64 {
+        if self.no_queries || subset.is_empty() {
+            return 0.0; // I(∅;Q) = I(A;∅) = 0
+        }
         (0..self.ground.n())
             .map(|i| {
                 let ma = subset
                     .order()
                     .iter()
                     .map(|&j| self.ground.get(i, j))
-                    .fold(0f32, f32::max);
+                    .fold(f32::NEG_INFINITY, f32::max);
                 ma.min(self.qcap[i]) as f64
             })
             .sum()
@@ -84,7 +103,7 @@ impl SetFunction for Flvmi {
 
     fn init_memoization(&mut self, subset: &Subset) {
         for v in &mut self.max_vec {
-            *v = 0.0;
+            *v = f32::NEG_INFINITY; // empty-set sentinel (module docs)
         }
         let order: Vec<ElementId> = subset.order().to_vec();
         for e in order {
@@ -93,6 +112,9 @@ impl SetFunction for Flvmi {
     }
 
     fn marginal_gain_memoized(&self, e: ElementId) -> f64 {
+        if self.no_queries {
+            return 0.0;
+        }
         // symmetric kernel: row e read contiguously (s_ie == s_ei)
         let row = self.ground.row(e);
         let mut g = 0f64;
@@ -100,11 +122,48 @@ impl SetFunction for Flvmi {
             let mv = self.max_vec[i];
             let cap = self.qcap[i];
             let s = row[i];
-            let before = mv.min(cap);
+            // empty set contributes 0, not min(−∞, cap)
+            let before = if mv == f32::NEG_INFINITY { 0.0 } else { mv.min(cap) };
             let after = mv.max(s).min(cap);
             g += (after - before) as f64;
         }
         g
+    }
+
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        debug_assert_eq!(candidates.len(), out.len());
+        if self.no_queries {
+            out.fill(0.0);
+            return;
+        }
+        // Blocked across candidates: max_vec / qcap stream once per 4
+        // contiguous kernel rows (same shape as FL dense). Ascending-i
+        // accumulation per candidate matches the scalar path bit-for-bit.
+        let mut c = 0;
+        while c + 4 <= candidates.len() {
+            let rows = [
+                self.ground.row(candidates[c]),
+                self.ground.row(candidates[c + 1]),
+                self.ground.row(candidates[c + 2]),
+                self.ground.row(candidates[c + 3]),
+            ];
+            let mut g = [0f64; 4];
+            for i in 0..self.max_vec.len() {
+                let mv = self.max_vec[i];
+                let cap = self.qcap[i];
+                let before = if mv == f32::NEG_INFINITY { 0.0 } else { mv.min(cap) };
+                for t in 0..4 {
+                    let s = rows[t][i];
+                    let after = mv.max(s).min(cap);
+                    g[t] += (after - before) as f64;
+                }
+            }
+            out[c..c + 4].copy_from_slice(&g);
+            c += 4;
+        }
+        for (o, &e) in out[c..].iter_mut().zip(&candidates[c..]) {
+            *o = self.marginal_gain_memoized(e);
+        }
     }
 
     fn update_memoization(&mut self, e: ElementId) {
@@ -176,6 +235,49 @@ mod tests {
         let f = setup(0.0);
         let s = Subset::from_ids(46, &[0, 10, 20]);
         assert!(f.evaluate(&s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_similarities_follow_definition() {
+        use crate::linalg::Matrix;
+        // dot-product features with negative cross-similarities: Table 1's
+        // Σ_i min(max_{j∈A} S_ij, η max_{j∈Q} S_ij) goes negative; the old
+        // 0-initialized maxima clamped both sides at zero.
+        let ground = Matrix::from_rows(&[&[1.0f32], &[-1.0]]);
+        let queries = Matrix::from_rows(&[&[-2.0f32]]);
+        let gk = DenseKernel::from_data(&ground, Metric::Dot);
+        let qk = RectKernel::from_data(&queries, &ground, Metric::Dot).unwrap();
+        let f = Flvmi::new(gk, qk, 1.0).unwrap();
+        assert_eq!(f.evaluate(&Subset::empty(2)), 0.0);
+        // qcap = [−2, 2]; A = {0}: Σ_i min(S_i0, qcap_i)
+        //   i=0: min(1, −2) = −2 ; i=1: min(−1, 2) = −1  → −3
+        let s0 = Subset::from_ids(2, &[0]);
+        assert!((f.evaluate(&s0) - (-3.0)).abs() < 1e-6, "{}", f.evaluate(&s0));
+        // memoized first-pick gain must agree with the stateless delta
+        let mut m = f.clone();
+        m.init_memoization(&Subset::empty(2));
+        for e in 0..2 {
+            let fast = m.marginal_gain_memoized(e);
+            let slow = m.marginal_gain(&Subset::empty(2), e);
+            assert!((fast - slow).abs() < 1e-9, "e={e}: {fast} vs {slow}");
+        }
+    }
+
+    #[test]
+    fn empty_query_set_is_identically_zero() {
+        use crate::linalg::Matrix;
+        // I(A;∅) = 0 for every A — including on negative-similarity
+        // kernels, where no finite qcap value could express this via min
+        let ground = Matrix::from_rows(&[&[1.0f32], &[-1.0]]);
+        let gk = DenseKernel::from_data(&ground, Metric::Dot);
+        let qk = RectKernel::from_matrix(Matrix::zeros(0, 2));
+        let mut f = Flvmi::new(gk, qk, 1.0).unwrap();
+        assert_eq!(f.evaluate(&Subset::from_ids(2, &[0, 1])), 0.0);
+        f.init_memoization(&Subset::empty(2));
+        assert_eq!(f.marginal_gain_memoized(1), 0.0);
+        let mut out = vec![1.0f64; 2];
+        f.marginal_gains_batch(&[0, 1], &mut out);
+        assert_eq!(out, vec![0.0, 0.0]);
     }
 
     #[test]

@@ -61,6 +61,15 @@ impl SetFunction for Gcmi {
         self.affinity[e]
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        // purely modular: the gain is a precomputed table read, so the
+        // batch win is just skipping a dyn dispatch per candidate
+        debug_assert_eq!(candidates.len(), out.len());
+        for (o, &e) in out.iter_mut().zip(candidates) {
+            *o = self.affinity[e];
+        }
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         self.total += self.affinity[e];
     }

@@ -103,6 +103,12 @@ impl SetFunction for LogDetMi {
         self.inner.marginal_gain_memoized(e)
     }
 
+    fn marginal_gains_batch(&self, candidates: &[ElementId], out: &mut [f64]) {
+        // forwards to generic MI → two LogDeterminant blocked forward
+        // substitutions over the shared incremental factors
+        self.inner.marginal_gains_batch(candidates, out);
+    }
+
     fn update_memoization(&mut self, e: ElementId) {
         self.inner.update_memoization(e);
     }

@@ -50,11 +50,22 @@ impl SparseKernel {
         let mut scratch: Vec<(u32, f32)> = Vec::with_capacity(n);
         for i in 0..n {
             scratch.clear();
-            scratch.extend(row(i).iter().enumerate().map(|(j, &s)| (j as u32, s)));
-            // partial select of the k largest by similarity
-            scratch.select_nth_unstable_by(k - 1, |a, b| {
-                b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal)
-            });
+            scratch.extend(row(i).iter().enumerate().map(|(j, &s)| {
+                // a NaN similarity would make "the k most similar
+                // neighbors" meaningless — catch it at the source rather
+                // than letting it scramble the selection downstream
+                debug_assert!(!s.is_nan(), "NaN similarity in kernel row {i}, col {j}");
+                (j as u32, s)
+            }));
+            // Partial select of the k largest by similarity. total_cmp,
+            // NOT partial_cmp().unwrap_or(Equal): under the old comparator
+            // a NaN compared Equal to *everything*, breaking the strict
+            // weak ordering select_nth_unstable_by relies on and silently
+            // scrambling which neighbors survive. total_cmp is a total
+            // order (NaN sorts above +∞, i.e. first in this descending
+            // select), so even a release build with NaNs keeps the
+            // selection well-defined; finite-only rows are unchanged.
+            scratch.select_nth_unstable_by(k - 1, |a, b| b.1.total_cmp(&a.1));
             let mut top: Vec<(u32, f32)> = scratch[..k].to_vec();
             top.sort_unstable_by_key(|e| e.0);
             for (j, s) in top {
@@ -135,7 +146,9 @@ mod tests {
         for i in 0..12 {
             let mut drow: Vec<(usize, f32)> =
                 dense.row(i).iter().cloned().enumerate().collect();
-            drow.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            // total_cmp: same NaN-total comparator class as the builder —
+            // the old partial_cmp().unwrap() panicked outright on NaN
+            drow.sort_by(|a, b| b.1.total_cmp(&a.1));
             let expect: std::collections::HashSet<usize> =
                 drow[..4].iter().map(|e| e.0).collect();
             let (cols, vals) = sparse.row(i);
@@ -162,6 +175,26 @@ mod tests {
             }
         }
         assert_eq!(zeros, 30 * 30 - k.nnz());
+    }
+
+    #[test]
+    fn topk_total_order_handles_nonfinite_rows() {
+        // −∞ (a legal f32, e.g. from a degenerate log-space similarity)
+        // must lose to every finite value under total_cmp, and equal
+        // values must still yield exactly k survivors.
+        let rows: Vec<Vec<f32>> = vec![
+            vec![1.0, f32::NEG_INFINITY, 0.5, 0.75],
+            vec![0.25, 0.25, 0.25, 0.25],
+            vec![f32::NEG_INFINITY, f32::NEG_INFINITY, 2.0, 1.0],
+            vec![0.0, -0.0, 3.0, -1.0],
+        ];
+        let k = SparseKernel::from_dense_rows(4, 2, |i| rows[i].as_slice());
+        assert_eq!(k.nnz(), 8);
+        let survivors = |i: usize| -> Vec<u32> { k.row(i).0.to_vec() };
+        assert_eq!(survivors(0), vec![0, 3]); // 1.0 and 0.75
+        assert_eq!(survivors(1).len(), 2); // all tied: any 2, but exactly 2
+        assert_eq!(survivors(2), vec![2, 3]); // the two finite entries
+        assert_eq!(survivors(3), vec![0, 2]); // 3.0 and +0.0 (beats −0.0)
     }
 
     #[test]

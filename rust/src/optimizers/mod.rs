@@ -13,7 +13,8 @@
 //! ## Batched, parallel gain scans
 //!
 //! Full-scan steps — every NaiveGreedy iteration, StochasticGreedy's
-//! per-iteration sample sweep, LazyGreedy's iteration-0 heap seeding, and
+//! per-iteration sample sweep, LazyGreedy's iteration-0 heap seeding plus
+//! its Minoux-blocked stale re-evaluation (see [`lazy`]), and
 //! LazierThanLazy's first touch of each sampled element — no longer call
 //! `marginal_gain_memoized` one element at a time. They collect the
 //! candidate ids and hand them to [`SetFunction::marginal_gains_batch`]
@@ -205,8 +206,16 @@ pub fn maximize(
 }
 
 /// Shared stop-rule check: should the loop halt given the best gain found?
+///
+/// A −∞ gain terminates unconditionally, independent of the configurable
+/// stop flags: it marks an element whose addition makes the function
+/// undefined (LogDeterminant yields −∞ for candidates that drive the
+/// kernel singular), and committing one would desynchronize the reported
+/// selection from the function's memoized state — `evaluate()` of the
+/// returned ids would no longer equal the accumulated value.
 pub(crate) fn should_stop(best_gain: f64, opts: &MaximizeOpts) -> bool {
-    (opts.stop_if_negative_gain && best_gain < 0.0)
+    best_gain == f64::NEG_INFINITY
+        || (opts.stop_if_negative_gain && best_gain < 0.0)
         || (opts.stop_if_zero_gain && best_gain <= ZERO_GAIN_EPS)
 }
 

@@ -10,19 +10,24 @@
 //!  B3 parallel NaiveGreedy matches a hand-rolled replica of the serial
 //!     seed implementation (scan ascending, first best wins).
 
+use submodlib::functions::cg::Flcg;
 use submodlib::functions::clustered::ClusteredFunction;
+use submodlib::functions::cmi::Flcmi;
 use submodlib::functions::disparity_min::DisparityMin;
 use submodlib::functions::disparity_min_sum::DisparityMinSum;
 use submodlib::functions::disparity_sum::DisparitySum;
 use submodlib::functions::facility_location::FacilityLocation;
 use submodlib::functions::feature_based::{ConcaveShape, FeatureBased};
+use submodlib::functions::generic::{ConditionalMutualInformation, MutualInformation};
 use submodlib::functions::graph_cut::GraphCut;
 use submodlib::functions::log_determinant::LogDeterminant;
+use submodlib::functions::mi::{ConcaveOverModular, Flqmi, Flvmi, Gcmi, LogDetMi};
 use submodlib::functions::mixture::Mixture;
 use submodlib::functions::prob_set_cover::ProbabilisticSetCover;
 use submodlib::functions::set_cover::SetCover;
 use submodlib::functions::traits::{SetFunction, Subset};
 use submodlib::kernel::{DenseKernel, Metric, RectKernel, SparseKernel};
+use submodlib::linalg::Matrix;
 use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
 use submodlib::rng::Pcg64;
 use submodlib::util::prop::{check, gen};
@@ -146,9 +151,11 @@ fn batch_equals_scalar_all_functions_randomized() {
 }
 
 #[test]
-fn batch_equals_scalar_log_determinant_default_path() {
-    // LogDeterminant has no override — pins the trait's default batch
-    check("logdet default batch", 0x10DE7, 10, |rng| {
+fn batch_equals_scalar_log_determinant_blocked_forward_substitution() {
+    // LogDeterminant's override runs one blocked forward substitution
+    // over K candidate columns against the shared incremental factor —
+    // must stay bit-identical to per-candidate gains
+    check("logdet blocked batch", 0x10DE7, 10, |rng| {
         let data = gen::matrix(rng, 8, 20, 2, 4);
         let mut f = LogDeterminant::with_regularization(
             DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 }),
@@ -156,6 +163,118 @@ fn batch_equals_scalar_log_determinant_default_path() {
         )
         .unwrap();
         assert_batch_matches(&mut f, rng)
+    });
+}
+
+/// The MI / CMI / CG information-measure stack (the family PR 1 left on
+/// the scalar default): every specialized or wrapper override must honor
+/// the bit-identical batch == scalar contract.
+fn random_info_measure(rng: &mut Pcg64) -> Box<dyn SetFunction> {
+    let data = gen::matrix(rng, 9, 27, 2, 5);
+    let n = data.rows();
+    let d = data.cols();
+    let queries = gen::matrix(rng, 2, 5, d, d);
+    let privates = gen::matrix(rng, 2, 4, d, d);
+    let qk = RectKernel::from_data(&queries, &data, Metric::Euclidean).unwrap();
+    match rng.next_below(9) {
+        0 => Box::new(Flqmi::new(qk, 0.3 + rng.next_f64()).unwrap()),
+        1 => Box::new(
+            Flvmi::new(
+                DenseKernel::from_data(&data, Metric::Euclidean),
+                qk,
+                0.3 + rng.next_f64(),
+            )
+            .unwrap(),
+        ),
+        2 => Box::new(Gcmi::new(qk, 0.5).unwrap()),
+        3 => Box::new(
+            ConcaveOverModular::new(qk, 0.4 + rng.next_f64(), ConcaveShape::Sqrt)
+                .unwrap(),
+        ),
+        4 => Box::new(
+            Flcmi::new(
+                DenseKernel::from_data(&data, Metric::Euclidean),
+                qk,
+                RectKernel::from_data(&privates, &data, Metric::Euclidean).unwrap(),
+                1.0,
+                0.5,
+            )
+            .unwrap(),
+        ),
+        5 => Box::new(
+            Flcg::new(
+                DenseKernel::from_data(&data, Metric::Euclidean),
+                RectKernel::from_data(&privates, &data, Metric::Euclidean).unwrap(),
+                0.5 + rng.next_f64(),
+            )
+            .unwrap(),
+        ),
+        6 => {
+            // generic MI over an extended FL: last nq elements are Q
+            let nq = queries.rows();
+            let mut all = Matrix::zeros(n + nq, d);
+            for i in 0..n {
+                all.row_mut(i).copy_from_slice(data.row(i));
+            }
+            for q in 0..nq {
+                all.row_mut(n + q).copy_from_slice(queries.row(q));
+            }
+            let base = FacilityLocation::new(DenseKernel::from_data(
+                &all,
+                Metric::Euclidean,
+            ));
+            Box::new(
+                MutualInformation::new(Box::new(base), (n..n + nq).collect(), n)
+                    .unwrap(),
+            )
+        }
+        7 => {
+            // generic CMI over an extended FL: Q then P past the prefix
+            let nq = queries.rows();
+            let np = privates.rows();
+            let mut all = Matrix::zeros(n + nq + np, d);
+            for i in 0..n {
+                all.row_mut(i).copy_from_slice(data.row(i));
+            }
+            for q in 0..nq {
+                all.row_mut(n + q).copy_from_slice(queries.row(q));
+            }
+            for p in 0..np {
+                all.row_mut(n + nq + p).copy_from_slice(privates.row(p));
+            }
+            let base = FacilityLocation::new(DenseKernel::from_data(
+                &all,
+                Metric::Euclidean,
+            ));
+            Box::new(
+                ConditionalMutualInformation::new(
+                    Box::new(base),
+                    (n..n + nq).collect(),
+                    (n + nq..n + nq + np).collect(),
+                    n,
+                )
+                .unwrap(),
+            )
+        }
+        _ => Box::new(
+            LogDetMi::new(
+                DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 }),
+                DenseKernel::from_data(&queries, Metric::Rbf { gamma: 0.5 }),
+                RectKernel::from_data(&queries, &data, Metric::Rbf { gamma: 0.5 })
+                    .unwrap(),
+                0.7,
+                0.1,
+            )
+            .unwrap(),
+        ),
+    }
+}
+
+#[test]
+fn batch_equals_scalar_info_measures_randomized() {
+    check("info-measure batch == scalar gains", 0x1F0E5, 54, |rng| {
+        let mut f = random_info_measure(rng);
+        assert_batch_matches(f.as_mut(), rng)
     });
 }
 
