@@ -18,7 +18,12 @@
 //!   one-pop-at-a-time snapshot;
 //! * `mi_family`: FLQMI / FLVMI / GCMI / COM / LogDetMI at n=500 with 10
 //!   queries, naive vs lazy — the targeted-selection stack that newly
-//!   rides the batched gain path (ISSUE 2).
+//!   rides the batched gain path (ISSUE 2);
+//! * `kernel_build` (schema v3, ISSUE 3): Table 5-shaped dense and
+//!   streaming-sparse kernel-construction wall-clock at n ∈ {500, 2000},
+//!   plus the analytic peak-allocation estimates from
+//!   `kernel::tile::{dense,sparse}_peak_bytes` — the trajectory future
+//!   kernel work extends.
 
 use std::collections::BTreeMap;
 
@@ -29,7 +34,7 @@ use submodlib::functions::graph_cut::GraphCut;
 use submodlib::functions::log_determinant::LogDeterminant;
 use submodlib::functions::mi::{ConcaveOverModular, Flqmi, Flvmi, Gcmi, LogDetMi};
 use submodlib::functions::traits::SetFunction;
-use submodlib::kernel::{DenseKernel, Metric, RectKernel};
+use submodlib::kernel::{tile, DenseKernel, Metric, RectKernel, SparseKernel};
 use submodlib::optimizers::lazy::LAZY_STALE_BLOCK;
 use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
 use submodlib::util::bench::BenchRunner;
@@ -206,6 +211,57 @@ fn main() {
         }
     }
 
+    // ---- kernel build: Table 5 trajectory, dense vs streaming sparse ----
+    const KB_DIM: usize = 128;
+    const KB_NEIGHBORS: usize = 32;
+    eprintln!(
+        "kernel build: dense vs streaming sparse, d={KB_DIM}, num_neighbors={KB_NEIGHBORS}"
+    );
+    let mut kernel_build_rows: Vec<Json> = Vec::new();
+    for &kn in &[500usize, 2000] {
+        let kdata = synthetic::random_features(kn, KB_DIM, 45);
+        let dense_s = runner
+            .bench(&format!("KernelBuild/dense/n{kn}"), || {
+                DenseKernel::from_data(&kdata, Metric::Euclidean).n()
+            })
+            .median
+            .as_secs_f64();
+        let sparse_s = runner
+            .bench(&format!("KernelBuild/sparse/n{kn}"), || {
+                SparseKernel::from_data(&kdata, Metric::Euclidean, KB_NEIGHBORS)
+                    .unwrap()
+                    .nnz()
+            })
+            .median
+            .as_secs_f64();
+        let dense_peak = tile::dense_peak_bytes(kn);
+        let sparse_peak = tile::sparse_peak_bytes(kn, KB_NEIGHBORS);
+        eprintln!(
+            "  n={kn}: dense {dense_s:.4}s (~{} KB peak), sparse {sparse_s:.4}s (~{} KB peak)",
+            dense_peak / 1024,
+            sparse_peak / 1024
+        );
+        kernel_build_rows.push(obj(vec![
+            ("n", Json::Num(kn as f64)),
+            ("dense_median_s", Json::Num(dense_s)),
+            ("sparse_median_s", Json::Num(sparse_s)),
+            ("dense_peak_bytes", Json::Num(dense_peak as f64)),
+            ("sparse_peak_bytes", Json::Num(sparse_peak as f64)),
+        ]));
+    }
+    let kernel_build = obj(vec![
+        (
+            "workload",
+            obj(vec![
+                ("dim", Json::Num(KB_DIM as f64)),
+                ("num_neighbors", Json::Num(KB_NEIGHBORS as f64)),
+                ("metric", Json::Str("euclidean".to_string())),
+                ("tile_rows", Json::Num(tile::TILE_ROWS as f64)),
+            ]),
+        ),
+        ("results", Json::Arr(kernel_build_rows)),
+    ]);
+
     // ---- parallel scaling: n=2000, k=100, FL, naive ---------------------
     let threads =
         std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
@@ -245,7 +301,8 @@ fn main() {
     );
 
     let snapshot = obj(vec![
-        ("schema", Json::Str("bench_optimizers/v2".to_string())),
+        ("schema", Json::Str("bench_optimizers/v3".to_string())),
+        ("kernel_build", kernel_build),
         ("lazy_stale_block", lazy_stale_block),
         (
             "mi_family",

@@ -54,8 +54,20 @@ impl IngestHandle {
     }
 }
 
+/// Upper bound on one drain batch: enough to amortize the store's write
+/// lock under load, small enough that replies stay prompt.
+const DRAIN_BATCH: usize = 64;
+
 /// Spawn the drain thread; returns the producer handle and the join
 /// handle (the drain exits when every producer handle is dropped).
+///
+/// The drain is opportunistically batched: it blocks for the first
+/// message, then soaks up whatever else is already queued (up to
+/// [`DRAIN_BATCH`]) and appends the whole run through
+/// [`ShardStore::push_batch`] — one write-lock acquisition per batch
+/// instead of one per item. Ids stay arrival-ordered (the channel is
+/// FIFO and the batch preserves it) and each producer still gets its own
+/// per-item reply.
 pub(crate) fn spawn_drain(
     store: Arc<ShardStore>,
     metrics: Arc<Metrics>,
@@ -65,12 +77,24 @@ pub(crate) fn spawn_drain(
         sync_channel(depth.max(1));
     let m = metrics.clone();
     let join = std::thread::spawn(move || {
-        while let Ok(msg) = rx.recv() {
-            let res = store.push(msg.features);
-            if res.is_ok() {
-                m.items_ingested.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut pending: Vec<IngestMsg> = Vec::with_capacity(DRAIN_BATCH);
+        while let Ok(first) = rx.recv() {
+            pending.push(first);
+            while pending.len() < DRAIN_BATCH {
+                match rx.try_recv() {
+                    Ok(msg) => pending.push(msg),
+                    Err(_) => break,
+                }
             }
-            let _ = msg.reply.send(res);
+            let feats: Vec<Vec<f32>> =
+                pending.iter_mut().map(|msg| std::mem::take(&mut msg.features)).collect();
+            let results = store.push_batch(feats);
+            for (msg, res) in pending.drain(..).zip(results) {
+                if res.is_ok() {
+                    m.items_ingested.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                let _ = msg.reply.send(res);
+            }
         }
     });
     (IngestHandle { tx, metrics }, join)
@@ -100,6 +124,30 @@ mod tests {
         let (h, _join) = spawn_drain(store, metrics, 8);
         h.ingest(vec![1.0, 2.0]).unwrap();
         assert!(h.ingest(vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn batched_drain_assigns_unique_ids() {
+        // a deep queue lets the drain soak up whole batches; every item
+        // must still get a unique, in-range id and land in the store
+        let store = Arc::new(ShardStore::new(64));
+        let metrics = Arc::new(Metrics::new());
+        let (h, _join) = spawn_drain(store.clone(), metrics.clone(), 256);
+        let mut threads = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            threads.push(std::thread::spawn(move || {
+                (0..32).map(|i| h.ingest(vec![(t * 32 + i) as f32]).unwrap()).collect::<Vec<_>>()
+            }));
+        }
+        let mut ids: Vec<usize> = Vec::new();
+        for t in threads {
+            ids.extend(t.join().unwrap());
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, (0..128).collect::<Vec<_>>());
+        assert_eq!(store.len(), 128);
+        assert_eq!(metrics.snapshot().items_ingested, 128);
     }
 
     #[test]

@@ -3,38 +3,93 @@
 //! Items get globally unique ids in arrival order; shards are closed at
 //! `capacity` items so stage-1 selection cost per shard stays bounded
 //! (dense kernels are O(shard²)).
+//!
+//! Rows live in one flat row-major buffer per shard (not `Vec<Vec<f32>>`):
+//! `Shard::matrix()` and `ShardStore::gather` copy contiguous slices
+//! instead of chasing one heap allocation per row, and `push_batch`
+//! appends a whole batch under a single write-lock acquisition.
 
 use std::sync::RwLock;
 
+use crate::error::{Result, SubmodError};
 use crate::linalg::Matrix;
 
-/// One closed or open shard of features.
+/// One closed or open shard of features, as a flat row-major buffer.
 #[derive(Debug, Clone)]
 pub struct Shard {
     /// global id of this shard's first item
     pub base_id: usize,
-    /// row-major features
-    pub rows: Vec<Vec<f32>>,
+    len: usize,
+    dim: usize,
+    data: Vec<f32>,
 }
 
 impl Shard {
     pub fn len(&self) -> usize {
-        self.rows.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.rows.is_empty()
+        self.len == 0
     }
 
-    /// Features as a matrix.
+    /// Feature dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Features of local row `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Features as a matrix (one contiguous copy of the flat buffer).
     pub fn matrix(&self) -> Matrix {
-        let n = self.rows.len();
-        let d = self.rows.first().map(|r| r.len()).unwrap_or(0);
-        let mut m = Matrix::zeros(n, d);
-        for (i, r) in self.rows.iter().enumerate() {
-            m.row_mut(i).copy_from_slice(r);
+        Matrix::from_vec(self.len, self.dim, self.data.clone())
+            .expect("shard buffer is len×dim by construction")
+    }
+}
+
+/// Lock-protected store state: one lock guards dim, shards, and the item
+/// count together, so a batch append is a single acquisition and there is
+/// no multi-lock ordering to get wrong.
+#[derive(Debug)]
+struct Inner {
+    dim: Option<usize>,
+    shards: Vec<Shard>,
+    total: usize,
+}
+
+impl Inner {
+    fn push_one(&mut self, capacity: usize, features: &[f32]) -> Result<usize> {
+        match self.dim {
+            None => self.dim = Some(features.len()),
+            Some(d) if d != features.len() => {
+                return Err(SubmodError::Shape(format!(
+                    "feature dim {} vs store dim {d}",
+                    features.len()
+                )))
+            }
+            _ => {}
         }
-        m
+        let id = self.total;
+        let needs_new_shard = match self.shards.last() {
+            None => true,
+            Some(s) => s.len >= capacity,
+        };
+        if needs_new_shard {
+            self.shards.push(Shard {
+                base_id: id,
+                len: 0,
+                dim: features.len(),
+                data: Vec::new(),
+            });
+        }
+        let shard = self.shards.last_mut().unwrap();
+        shard.data.extend_from_slice(features);
+        shard.len += 1;
+        self.total += 1;
+        Ok(id)
     }
 }
 
@@ -42,9 +97,7 @@ impl Shard {
 #[derive(Debug)]
 pub struct ShardStore {
     capacity: usize,
-    dim: RwLock<Option<usize>>,
-    shards: RwLock<Vec<Shard>>,
-    total: RwLock<usize>,
+    inner: RwLock<Inner>,
 }
 
 impl ShardStore {
@@ -52,40 +105,27 @@ impl ShardStore {
         assert!(capacity > 0);
         ShardStore {
             capacity,
-            dim: RwLock::new(None),
-            shards: RwLock::new(vec![Shard { base_id: 0, rows: Vec::new() }]),
-            total: RwLock::new(0),
+            inner: RwLock::new(Inner { dim: None, shards: Vec::new(), total: 0 }),
         }
     }
 
     /// Append one item; returns its global id. Fails on dim mismatch.
-    pub fn push(&self, features: Vec<f32>) -> crate::error::Result<usize> {
-        let mut dim = self.dim.write().unwrap();
-        match *dim {
-            None => *dim = Some(features.len()),
-            Some(d) if d != features.len() => {
-                return Err(crate::error::SubmodError::Shape(format!(
-                    "feature dim {} vs store dim {d}",
-                    features.len()
-                )))
-            }
-            _ => {}
-        }
-        drop(dim);
-        let mut shards = self.shards.write().unwrap();
-        let mut total = self.total.write().unwrap();
-        let id = *total;
-        if shards.last().unwrap().len() >= self.capacity {
-            shards.push(Shard { base_id: id, rows: Vec::new() });
-        }
-        shards.last_mut().unwrap().rows.push(features);
-        *total += 1;
-        Ok(id)
+    pub fn push(&self, features: Vec<f32>) -> Result<usize> {
+        self.inner.write().unwrap().push_one(self.capacity, &features)
+    }
+
+    /// Append many items under one write-lock acquisition (the ingest
+    /// drain's batch path). Per-item results: a dim-mismatched item is
+    /// rejected without poisoning the rest of the batch, matching the
+    /// one-at-a-time semantics exactly.
+    pub fn push_batch(&self, items: Vec<Vec<f32>>) -> Vec<Result<usize>> {
+        let mut inner = self.inner.write().unwrap();
+        items.iter().map(|features| inner.push_one(self.capacity, features)).collect()
     }
 
     /// Total items ingested.
     pub fn len(&self) -> usize {
-        *self.total.read().unwrap()
+        self.inner.read().unwrap().total
     }
 
     pub fn is_empty(&self) -> bool {
@@ -94,25 +134,33 @@ impl ShardStore {
 
     /// Snapshot of all non-empty shards.
     pub fn snapshot(&self) -> Vec<Shard> {
-        self.shards.read().unwrap().iter().filter(|s| !s.is_empty()).cloned().collect()
+        self.inner
+            .read()
+            .unwrap()
+            .shards
+            .iter()
+            .filter(|s| !s.is_empty())
+            .cloned()
+            .collect()
     }
 
     /// Fetch features for a set of global ids (stage-2 merge).
-    pub fn gather(&self, ids: &[usize]) -> crate::error::Result<Matrix> {
-        let shards = self.shards.read().unwrap();
-        let d = self.dim.read().unwrap().unwrap_or(0);
+    pub fn gather(&self, ids: &[usize]) -> Result<Matrix> {
+        let inner = self.inner.read().unwrap();
+        let d = inner.dim.unwrap_or(0);
         let mut m = Matrix::zeros(ids.len(), d);
         for (row, &id) in ids.iter().enumerate() {
-            let shard = shards
+            let shard = inner
+                .shards
                 .iter()
                 .rev()
                 .find(|s| s.base_id <= id)
-                .ok_or(crate::error::SubmodError::OutOfGroundSet { id, n: self.len() })?;
+                .ok_or(SubmodError::OutOfGroundSet { id, n: inner.total })?;
             let local = id - shard.base_id;
             if local >= shard.len() {
-                return Err(crate::error::SubmodError::OutOfGroundSet { id, n: self.len() });
+                return Err(SubmodError::OutOfGroundSet { id, n: inner.total });
             }
-            m.row_mut(row).copy_from_slice(&shard.rows[local]);
+            m.row_mut(row).copy_from_slice(shard.row(local));
         }
         Ok(m)
     }
@@ -164,5 +212,42 @@ mod tests {
         let m = store.snapshot()[0].matrix();
         assert_eq!(m.rows(), 2);
         assert_eq!(m.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn push_batch_matches_one_at_a_time_semantics() {
+        let store = ShardStore::new(3);
+        let results = store.push_batch(vec![
+            vec![0.0, 1.0],
+            vec![2.0, 3.0],
+            vec![9.9], // dim mismatch: rejected, rest of batch unaffected
+            vec![4.0, 5.0],
+            vec![6.0, 7.0],
+        ]);
+        assert_eq!(results[0].as_ref().unwrap(), &0);
+        assert_eq!(results[1].as_ref().unwrap(), &1);
+        assert!(results[2].is_err());
+        assert_eq!(results[3].as_ref().unwrap(), &2);
+        assert_eq!(results[4].as_ref().unwrap(), &3);
+        assert_eq!(store.len(), 4);
+        // shard split happens mid-batch exactly as with push()
+        let shards = store.snapshot();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].len(), 3);
+        assert_eq!(shards[1].base_id, 3);
+        let m = store.gather(&[3, 0]).unwrap();
+        assert_eq!(m.row(0), &[6.0, 7.0]);
+        assert_eq!(m.row(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn shard_rows_view_flat_buffer() {
+        let store = ShardStore::new(8);
+        store.push(vec![1.0, 2.0, 3.0]).unwrap();
+        store.push(vec![4.0, 5.0, 6.0]).unwrap();
+        let shard = &store.snapshot()[0];
+        assert_eq!(shard.dim(), 3);
+        assert_eq!(shard.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(shard.row(1), &[4.0, 5.0, 6.0]);
     }
 }

@@ -12,4 +12,4 @@ pub mod table5;
 
 pub use figures::{fig5, fig7, fig8, fig10, Fig5Result, FigSelection};
 pub use table2::{table2, Table2Row};
-pub use table5::{table5, Table5Row};
+pub use table5::{table5, table5_sparse, Table5Row};

@@ -12,7 +12,7 @@ use std::time::Instant;
 use crate::data::synthetic;
 use crate::error::Result;
 use crate::functions::facility_location::FacilityLocation;
-use crate::kernel::{builder, DenseKernel, KernelBackend, Metric};
+use crate::kernel::{builder, DenseKernel, KernelBackend, Metric, SparseKernel};
 use crate::linalg::Matrix;
 use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
 
@@ -29,20 +29,20 @@ pub struct Table5Row {
 pub const PAPER_SIZES: &[usize] =
     &[50, 100, 200, 500, 1000, 5000, 6000, 7000, 8000, 9000, 10000];
 
-/// Run one size point.
-pub fn run_size(
-    n: usize,
-    dim: usize,
-    budget: usize,
-    seed: u64,
-    backend: &KernelBackend,
-) -> Result<Table5Row> {
+/// Shared timing scaffold for one size point: generate the workload,
+/// time `build` (kernel construction + function wrap) as the kernel
+/// phase, then time the LazyGreedy selection — one protocol for every
+/// kernel mode, so dense and sparse rows of the same table always
+/// measure the same thing.
+fn run_timed<F>(n: usize, dim: usize, budget: usize, seed: u64, build: F) -> Result<Table5Row>
+where
+    F: FnOnce(&Matrix) -> Result<FacilityLocation>,
+{
     let data: Matrix = synthetic::random_features(n, dim, seed);
     let t0 = Instant::now();
-    let kernel: DenseKernel = builder::build_dense(&data, Metric::Euclidean, backend)?;
+    let f = build(&data)?;
     let kernel_seconds = t0.elapsed().as_secs_f64();
 
-    let f = FacilityLocation::new(kernel);
     let t1 = Instant::now();
     let _sel = maximize(
         &f,
@@ -57,6 +57,48 @@ pub fn run_size(
         select_seconds,
         total_seconds: kernel_seconds + select_seconds,
     })
+}
+
+/// Run one size point.
+pub fn run_size(
+    n: usize,
+    dim: usize,
+    budget: usize,
+    seed: u64,
+    backend: &KernelBackend,
+) -> Result<Table5Row> {
+    run_timed(n, dim, budget, seed, |data| {
+        let kernel: DenseKernel = builder::build_dense(data, Metric::Euclidean, backend)?;
+        Ok(FacilityLocation::new(kernel))
+    })
+}
+
+/// One size point in sparse (kNN) mode: the §8 escape hatch from the
+/// dense memory wall, timed end-to-end over the *streaming* tiled CSR
+/// build (peak memory O(threads·n + n·k), never n×n — see
+/// `kernel::tile`) plus FacilityLocation sparse-mode selection.
+pub fn run_size_sparse(
+    n: usize,
+    dim: usize,
+    budget: usize,
+    num_neighbors: usize,
+    seed: u64,
+) -> Result<Table5Row> {
+    run_timed(n, dim, budget, seed, |data| {
+        let kernel = SparseKernel::from_data(data, Metric::Euclidean, num_neighbors.min(n))?;
+        Ok(FacilityLocation::sparse(kernel))
+    })
+}
+
+/// Sparse-mode sweep companion to [`table5`].
+pub fn table5_sparse(
+    sizes: &[usize],
+    dim: usize,
+    budget: usize,
+    num_neighbors: usize,
+    seed: u64,
+) -> Result<Vec<Table5Row>> {
+    sizes.iter().map(|&n| run_size_sparse(n, dim, budget, num_neighbors, seed)).collect()
 }
 
 /// Full sweep (sizes capped by `max_n` so tests/CI can shrink it).
@@ -94,6 +136,14 @@ mod tests {
         assert_eq!(rows.len(), 3);
         // 4x data → ~16x kernel work; allow generous slack but demand growth
         assert!(rows[2].total_seconds > rows[0].total_seconds);
+    }
+
+    #[test]
+    fn sparse_sweep_runs_and_grows() {
+        let rows =
+            super::table5_sparse(&[50, 100, 200], 64, 10, 16, 1).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| r.total_seconds > 0.0));
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //!    `sum_in`, PSC's `prod`, …) are shared across all candidates of an
 //!    iteration; a batch implementation streams them once per candidate
 //!    block instead of once per candidate. The specialized overrides use
-//!    the same register-blocking shape as `kernel::dense::build_pairwise`.
+//!    the same register-blocking shape as `kernel::tile::build_pairwise`.
 //! 2. **Parallelism.** The trait requires `Sync`, so the optimizers can
 //!    hand one `&dyn SetFunction` to several scoped threads, each calling
 //!    `marginal_gains_batch` on a disjoint candidate chunk (gain

@@ -1,14 +1,16 @@
 //! Dense N×N similarity kernel (paper mode `"dense"`).
 //!
-//! Construction is the O(n²·d) hot-spot of Table 5; the native path uses
-//! the gram expansion (one blocked X·Xᵀ + an O(n²) metric transform)
-//! parallelized across row blocks with scoped threads. The PJRT path
+//! Construction is the O(n²·d) hot-spot of Table 5; the native path runs
+//! on the direct-write tile pipeline (`super::tile`): gram expansion (one
+//! blocked X·Xᵀ + an O(n²) metric transform) over row-block tiles claimed
+//! dynamically by scoped worker threads. The PJRT path
 //! (`runtime::tiled::build_dense_kernel`) runs the same math through the
 //! AOT-compiled Pallas artifact.
 
 use super::metric::Metric;
+use super::tile::build_pairwise;
 use crate::error::{Result, SubmodError};
-use crate::linalg::{self, Matrix};
+use crate::linalg::Matrix;
 
 /// Dense similarity kernel over a ground set of `n` items.
 #[derive(Debug, Clone)]
@@ -17,7 +19,7 @@ pub struct DenseKernel {
 }
 
 impl DenseKernel {
-    /// Build from a feature matrix (rows = items), threaded gram path.
+    /// Build from a feature matrix (rows = items), threaded tile path.
     pub fn from_data(data: &Matrix, metric: Metric) -> Self {
         let mat = build_pairwise(data, data, metric, false);
         DenseKernel { mat }
@@ -63,201 +65,6 @@ impl DenseKernel {
     pub fn matrix(&self) -> &Matrix {
         &self.mat
     }
-}
-
-/// Shared blocked + threaded pairwise builder. `distances=true` emits the
-/// raw euclidean distance instead of the metric similarity.
-///
-/// When `a` and `b` are the *same* matrix (detected by reference
-/// identity, which is how [`DenseKernel::from_data`] and the sparse
-/// builder call it), every supported metric is symmetric in its inputs,
-/// so only the upper triangle (j ≥ i) is computed — the lower triangle is
-/// mirrored afterwards. That halves the O(n²·d) dot-product work, the
-/// dominant cost of Table 5's kernel construction.
-pub(crate) fn build_pairwise(a: &Matrix, b: &Matrix, metric: Metric, distances: bool) -> Matrix {
-    let m = a.rows();
-    let n = b.rows();
-    if std::ptr::eq(a, b) {
-        return build_symmetric(a, metric, distances);
-    }
-    let mut out = Matrix::zeros(m, n);
-    let sq_a: Vec<f32> = (0..m).map(|i| linalg::dot(a.row(i), a.row(i))).collect();
-    let sq_b: Vec<f32> = (0..n).map(|j| linalg::dot(b.row(j), b.row(j))).collect();
-
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
-    let chunk = m.div_ceil(threads).max(1);
-    let out_slice = out.as_mut_slice();
-
-    std::thread::scope(|scope| {
-        let mut rest = out_slice;
-        let mut start = 0usize;
-        while start < m {
-            let rows_here = chunk.min(m - start);
-            let (this, tail) = rest.split_at_mut(rows_here * n);
-            rest = tail;
-            let (sq_a, sq_b) = (&sq_a, &sq_b);
-            scope.spawn(move || {
-                for (bi, i) in (start..start + rows_here).enumerate() {
-                    let arow = a.row(i);
-                    let orow = &mut this[bi * n..(bi + 1) * n];
-                    // register-blocked: 8 then 4 B rows per pass over
-                    // arow (§Perf iterations 1–2 — EXPERIMENTS.md)
-                    let mut j = 0;
-                    while j + 8 <= n {
-                        let g = linalg::dot8(
-                            arow,
-                            [
-                                b.row(j),
-                                b.row(j + 1),
-                                b.row(j + 2),
-                                b.row(j + 3),
-                                b.row(j + 4),
-                                b.row(j + 5),
-                                b.row(j + 6),
-                                b.row(j + 7),
-                            ],
-                        );
-                        for t in 0..8 {
-                            orow[j + t] = if distances {
-                                (sq_a[i] + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
-                            } else {
-                                metric.from_gram(g[t], sq_a[i], sq_b[j + t])
-                            };
-                        }
-                        j += 8;
-                    }
-                    while j + 4 <= n {
-                        let g = linalg::dot4(
-                            arow,
-                            b.row(j),
-                            b.row(j + 1),
-                            b.row(j + 2),
-                            b.row(j + 3),
-                        );
-                        for t in 0..4 {
-                            orow[j + t] = if distances {
-                                (sq_a[i] + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
-                            } else {
-                                metric.from_gram(g[t], sq_a[i], sq_b[j + t])
-                            };
-                        }
-                        j += 4;
-                    }
-                    for (jj, o) in orow.iter_mut().enumerate().skip(j) {
-                        let g = linalg::dot(arow, b.row(jj));
-                        *o = if distances {
-                            (sq_a[i] + sq_b[jj] - 2.0 * g).max(0.0).sqrt()
-                        } else {
-                            metric.from_gram(g, sq_a[i], sq_b[jj])
-                        };
-                    }
-                }
-            });
-            start += rows_here;
-        }
-    });
-    out
-}
-
-/// Symmetric specialization of [`build_pairwise`]: upper triangle only,
-/// then mirror. Thread chunks are balanced by *triangle area* (row i
-/// carries n−i entries), not by row count, so early rows don't serialize
-/// the build.
-fn build_symmetric(a: &Matrix, metric: Metric, distances: bool) -> Matrix {
-    let n = a.rows();
-    let mut out = Matrix::zeros(n, n);
-    let sq: Vec<f32> = (0..n).map(|i| linalg::dot(a.row(i), a.row(i))).collect();
-
-    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
-    // row ranges with roughly equal Σ(n−i) workloads
-    let total: u64 = (n as u64) * (n as u64 + 1) / 2;
-    let target = total.div_ceil(threads as u64).max(1);
-    let mut bounds: Vec<(usize, usize)> = Vec::with_capacity(threads);
-    let mut row = 0usize;
-    while row < n {
-        let mut acc = 0u64;
-        let start = row;
-        while row < n && acc < target {
-            acc += (n - row) as u64;
-            row += 1;
-        }
-        bounds.push((start, row));
-    }
-
-    let out_slice = out.as_mut_slice();
-    std::thread::scope(|scope| {
-        let mut rest = out_slice;
-        for &(start, end) in &bounds {
-            let (this, tail) = rest.split_at_mut((end - start) * n);
-            rest = tail;
-            let sq = &sq;
-            scope.spawn(move || {
-                for (bi, i) in (start..end).enumerate() {
-                    let arow = a.row(i);
-                    let orow = &mut this[bi * n..(bi + 1) * n];
-                    // same register blocking as the rectangular path,
-                    // starting at the diagonal
-                    let mut j = i;
-                    while j + 8 <= n {
-                        let g = linalg::dot8(
-                            arow,
-                            [
-                                a.row(j),
-                                a.row(j + 1),
-                                a.row(j + 2),
-                                a.row(j + 3),
-                                a.row(j + 4),
-                                a.row(j + 5),
-                                a.row(j + 6),
-                                a.row(j + 7),
-                            ],
-                        );
-                        for t in 0..8 {
-                            orow[j + t] = if distances {
-                                (sq[i] + sq[j + t] - 2.0 * g[t]).max(0.0).sqrt()
-                            } else {
-                                metric.from_gram(g[t], sq[i], sq[j + t])
-                            };
-                        }
-                        j += 8;
-                    }
-                    while j + 4 <= n {
-                        let g = linalg::dot4(
-                            arow,
-                            a.row(j),
-                            a.row(j + 1),
-                            a.row(j + 2),
-                            a.row(j + 3),
-                        );
-                        for t in 0..4 {
-                            orow[j + t] = if distances {
-                                (sq[i] + sq[j + t] - 2.0 * g[t]).max(0.0).sqrt()
-                            } else {
-                                metric.from_gram(g[t], sq[i], sq[j + t])
-                            };
-                        }
-                        j += 4;
-                    }
-                    for jj in j..n {
-                        let g = linalg::dot(arow, a.row(jj));
-                        orow[jj] = if distances {
-                            (sq[i] + sq[jj] - 2.0 * g).max(0.0).sqrt()
-                        } else {
-                            metric.from_gram(g, sq[i], sq[jj])
-                        };
-                    }
-                }
-            });
-        }
-    });
-    // mirror the lower triangle (exact symmetry by construction)
-    let s = out.as_mut_slice();
-    for i in 1..n {
-        for j in 0..i {
-            s[i * n + j] = s[j * n + i];
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -318,8 +125,9 @@ mod tests {
 
     #[test]
     fn symmetric_build_mirrors_exactly() {
-        // the symmetric path computes the upper triangle and mirrors it,
-        // so s_ij == s_ji bitwise — for similarities and distances alike
+        // the symmetric path computes the upper triangle and mirrors it
+        // (in parallel, per block), so s_ij == s_ji bitwise — for
+        // similarities and distances alike
         let data = rand_data(61, 9, 7);
         for k in [
             DenseKernel::from_data(&data, Metric::Cosine),
@@ -334,22 +142,8 @@ mod tests {
     }
 
     #[test]
-    fn symmetric_build_matches_rect_path() {
-        // same math as the two-argument (rectangular) builder
-        let data = rand_data(33, 6, 8);
-        let copy = data.clone();
-        let sym = build_pairwise(&data, &data, Metric::Rbf { gamma: 0.7 }, false);
-        let rect = build_pairwise(&data, &copy, Metric::Rbf { gamma: 0.7 }, false);
-        for i in 0..33 {
-            for j in 0..33 {
-                assert!((sym.get(i, j) - rect.get(i, j)).abs() < 1e-5, "({i},{j})");
-            }
-        }
-    }
-
-    #[test]
     fn threaded_build_matches_single_row_math_large() {
-        // Exercise the multi-chunk threading path (n > typical core count).
+        // Exercise the multi-tile scheduling path (n > TILE_ROWS).
         let data = rand_data(97, 16, 3);
         let k = DenseKernel::from_data(&data, Metric::Rbf { gamma: 1.0 });
         for &(i, j) in &[(0, 96), (50, 51), (96, 0), (13, 77)] {

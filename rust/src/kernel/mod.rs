@@ -10,6 +10,10 @@
 //! * [`rect::RectKernel`] — rectangular kernels (represented set × ground
 //!   set, query × ground, private × ground) for the generic-U functions
 //!   and the MI / CG / CMI instantiations.
+//! * [`tile`] — the streaming tiled construction pipeline all three
+//!   builders run on: direct-write row-block tiles for dense/rect,
+//!   memory-bounded streamed tiles (per-worker buffers + in-worker
+//!   consumers) for sparse. See its docs for the peak-memory model.
 //! * [`builder`] — backend-dispatching construction helpers.
 
 pub mod builder;
@@ -17,6 +21,7 @@ pub mod dense;
 pub mod metric;
 pub mod rect;
 pub mod sparse;
+pub mod tile;
 
 pub use builder::{build_dense, KernelBackend};
 pub use dense::DenseKernel;

@@ -6,8 +6,8 @@
 //! only ever needs a Q × V kernel (paper §3.5), which is what makes it
 //! cheap.
 
-use super::dense::build_pairwise;
 use super::metric::Metric;
+use super::tile::build_pairwise;
 use crate::error::{Result, SubmodError};
 use crate::linalg::Matrix;
 

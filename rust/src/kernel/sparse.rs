@@ -5,9 +5,20 @@
 //! As in Submodlib (following Wei, Iyer, Bilmes 2014 "Fast multi-stage
 //! submodular maximization", cited in paper §2.1.1), this trades accuracy
 //! for memory/time on large ground sets.
+//!
+//! Construction streams through the tile pipeline (`super::tile`): each
+//! worker computes a `TILE_ROWS × n` similarity tile into its own
+//! reusable buffer and reduces every row to its top-k *inside the worker*
+//! before the next tile overwrites the buffer. Peak memory is
+//! O(threads·TILE_ROWS·n + n·k) — the n×n matrix the old
+//! materialize-then-select build allocated never exists, and the top-k
+//! selection parallelizes for free (see `tile::sparse_peak_bytes` for
+//! the full model).
 
-use super::dense::build_pairwise;
+use std::sync::Mutex;
+
 use super::metric::Metric;
+use super::tile::{self, Tile};
 use crate::error::{Result, SubmodError};
 use crate::linalg::Matrix;
 
@@ -24,6 +35,15 @@ impl SparseKernel {
     /// Build from a feature matrix keeping the `k` most similar neighbors
     /// per row (the row's own diagonal entry always counts as one of them,
     /// matching Submodlib's `num_neighbors` semantics).
+    ///
+    /// Streaming tiled build: never materializes the n×n matrix. Rows are
+    /// computed full-width (so the per-row selection sees exactly the
+    /// values a materialize-then-select build over the rectangular tile
+    /// path would see) and reduced to top-k inside the worker thread.
+    /// Every row lands at a fixed CSR offset (exactly `k` entries per
+    /// row), so the output is preallocated once and pre-split into one
+    /// disjoint slice pair per tile — workers write their rows in place,
+    /// with no per-tile buffers, reassembly sort, or second copy.
     pub fn from_data(data: &Matrix, metric: Metric, k: usize) -> Result<Self> {
         let n = data.rows();
         if k == 0 || k > n {
@@ -31,49 +51,77 @@ impl SparseKernel {
                 "num_neighbors {k} for ground set of {n}"
             )));
         }
-        // Dense pass, then top-k per row. For n where dense is infeasible
-        // the coordinator shards first (coordinator::shard), so the dense
-        // intermediate here is bounded by shard size.
-        let dense = build_pairwise(data, data, metric, false);
-        Ok(Self::from_dense_rows(n, k, |i| dense.row(i)))
+        let mut col_idx = vec![0u32; n * k];
+        let mut vals = vec![0f32; n * k];
+        // per-tile output slices, indexed by row_start / TILE_ROWS (the
+        // tile partition is part of stream_tiles' contract)
+        let tile_count = n.div_ceil(tile::TILE_ROWS);
+        let mut slots: Vec<Option<(&mut [u32], &mut [f32])>> =
+            Vec::with_capacity(tile_count);
+        {
+            let mut rest_c = col_idx.as_mut_slice();
+            let mut rest_v = vals.as_mut_slice();
+            for t in 0..tile_count {
+                let rows = tile::TILE_ROWS.min(n - t * tile::TILE_ROWS);
+                let (c, tail_c) = rest_c.split_at_mut(rows * k);
+                let (v, tail_v) = rest_v.split_at_mut(rows * k);
+                slots.push(Some((c, v)));
+                rest_c = tail_c;
+                rest_v = tail_v;
+            }
+        }
+        let slots = Mutex::new(slots);
+        // reusable top-k scratch, recycled across tiles (at most one live
+        // per worker — the 8·t·n term of tile::sparse_peak_bytes)
+        let scratch_pool: Mutex<Vec<Vec<(u32, f32)>>> = Mutex::new(Vec::new());
+        tile::stream_tiles(data, data, metric, false, &|t: Tile<'_>| {
+            let (cols_out, vals_out) = {
+                let mut guard = slots.lock().unwrap();
+                guard[t.row_start / tile::TILE_ROWS]
+                    .take()
+                    .expect("each tile is delivered exactly once")
+            };
+            let mut scratch =
+                scratch_pool.lock().unwrap().pop().unwrap_or_default();
+            for (bi, row) in t.data.chunks_exact(t.cols).enumerate() {
+                select_row_topk(
+                    t.row_start + bi,
+                    row,
+                    k,
+                    &mut scratch,
+                    &mut cols_out[bi * k..(bi + 1) * k],
+                    &mut vals_out[bi * k..(bi + 1) * k],
+                );
+            }
+            scratch_pool.lock().unwrap().push(scratch);
+        });
+        // the slot table borrows col_idx/vals; release it before moving them
+        drop(slots);
+        let row_ptr = (0..=n).map(|i| i * k).collect();
+        Ok(SparseKernel { n, row_ptr, col_idx, vals })
     }
 
-    /// Build from precomputed dense rows (used by tests and the shard path).
+    /// Build from precomputed dense rows (the materialize-then-select
+    /// reference the streaming build is tested against, and the direct
+    /// path for callers that already hold a dense kernel).
     pub(crate) fn from_dense_rows<'a, F>(n: usize, k: usize, row: F) -> Self
     where
         F: Fn(usize) -> &'a [f32],
     {
-        let mut row_ptr = Vec::with_capacity(n + 1);
-        let mut col_idx = Vec::with_capacity(n * k);
-        let mut vals = Vec::with_capacity(n * k);
-        row_ptr.push(0);
+        let mut col_idx = vec![0u32; n * k];
+        let mut vals = vec![0f32; n * k];
         let mut scratch: Vec<(u32, f32)> = Vec::with_capacity(n);
         for i in 0..n {
-            scratch.clear();
-            scratch.extend(row(i).iter().enumerate().map(|(j, &s)| {
-                // a NaN similarity would make "the k most similar
-                // neighbors" meaningless — catch it at the source rather
-                // than letting it scramble the selection downstream
-                debug_assert!(!s.is_nan(), "NaN similarity in kernel row {i}, col {j}");
-                (j as u32, s)
-            }));
-            // Partial select of the k largest by similarity. total_cmp,
-            // NOT partial_cmp().unwrap_or(Equal): under the old comparator
-            // a NaN compared Equal to *everything*, breaking the strict
-            // weak ordering select_nth_unstable_by relies on and silently
-            // scrambling which neighbors survive. total_cmp is a total
-            // order (NaN sorts above +∞, i.e. first in this descending
-            // select), so even a release build with NaNs keeps the
-            // selection well-defined; finite-only rows are unchanged.
-            scratch.select_nth_unstable_by(k - 1, |a, b| b.1.total_cmp(&a.1));
-            let mut top: Vec<(u32, f32)> = scratch[..k].to_vec();
-            top.sort_unstable_by_key(|e| e.0);
-            for (j, s) in top {
-                col_idx.push(j);
-                vals.push(s);
-            }
-            row_ptr.push(col_idx.len());
+            select_row_topk(
+                i,
+                row(i),
+                k,
+                &mut scratch,
+                &mut col_idx[i * k..(i + 1) * k],
+                &mut vals[i * k..(i + 1) * k],
+            );
         }
+        let row_ptr = (0..=n).map(|i| i * k).collect();
         SparseKernel { n, row_ptr, col_idx, vals }
     }
 
@@ -102,6 +150,46 @@ impl SparseKernel {
     pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
         let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
         (&self.col_idx[s..e], &self.vals[s..e])
+    }
+}
+
+/// Select the k largest entries of `row` (by similarity) and write them
+/// to `cols_out`/`vals_out` (length exactly `k`) sorted by column id.
+/// Single source of truth for the top-k semantics: the streaming build
+/// and the dense-rows reference both call this, so their survivors agree
+/// even on exact ties.
+fn select_row_topk(
+    i: usize,
+    row: &[f32],
+    k: usize,
+    scratch: &mut Vec<(u32, f32)>,
+    cols_out: &mut [u32],
+    vals_out: &mut [f32],
+) {
+    debug_assert_eq!(cols_out.len(), k);
+    debug_assert_eq!(vals_out.len(), k);
+    scratch.clear();
+    scratch.extend(row.iter().enumerate().map(|(j, &s)| {
+        // a NaN similarity would make "the k most similar
+        // neighbors" meaningless — catch it at the source rather
+        // than letting it scramble the selection downstream
+        debug_assert!(!s.is_nan(), "NaN similarity in kernel row {i}, col {j}");
+        (j as u32, s)
+    }));
+    // Partial select of the k largest by similarity. total_cmp,
+    // NOT partial_cmp().unwrap_or(Equal): under the old comparator
+    // a NaN compared Equal to *everything*, breaking the strict
+    // weak ordering select_nth_unstable_by relies on and silently
+    // scrambling which neighbors survive. total_cmp is a total
+    // order (NaN sorts above +∞, i.e. first in this descending
+    // select), so even a release build with NaNs keeps the
+    // selection well-defined; finite-only rows are unchanged.
+    scratch.select_nth_unstable_by(k - 1, |a, b| b.1.total_cmp(&a.1));
+    let top = &mut scratch[..k];
+    top.sort_unstable_by_key(|e| e.0);
+    for (t, &(j, s)) in top.iter().enumerate() {
+        cols_out[t] = j;
+        vals_out[t] = s;
     }
 }
 
@@ -175,6 +263,27 @@ mod tests {
             }
         }
         assert_eq!(zeros, 30 * 30 - k.nnz());
+    }
+
+    #[test]
+    fn streaming_matches_dense_rows_reference() {
+        // the streaming build reduces the same full-width rows the
+        // rectangular tile path produces, through the same select —
+        // survivors and values must agree with materialize-then-select
+        // exactly (n > TILE_ROWS exercises multi-tile scheduling)
+        let data = rand_data(2 * tile::TILE_ROWS + 9, 6, 6);
+        let n = data.rows();
+        let copy = data.clone();
+        let dense = crate::kernel::RectKernel::from_data(&data, &copy, Metric::Cosine).unwrap();
+        for k in [1usize, 3, 16, n] {
+            let streamed = SparseKernel::from_data(&data, Metric::Cosine, k).unwrap();
+            let reference = SparseKernel::from_dense_rows(n, k, |i| dense.row(i));
+            assert_eq!(streamed.row_ptr, reference.row_ptr, "k={k}");
+            assert_eq!(streamed.col_idx, reference.col_idx, "k={k}");
+            let bits =
+                |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&streamed.vals), bits(&reference.vals), "k={k}");
+        }
     }
 
     #[test]

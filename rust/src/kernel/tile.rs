@@ -1,0 +1,499 @@
+//! Streaming tiled kernel construction — the layer-0 substrate under
+//! every similarity-kernel build (ISSUE 3; paper Table 5 names kernel
+//! creation as the dominant O(n²·d) cost, and §8's sparse mode exists to
+//! escape the O(n²) *memory* wall).
+//!
+//! All three construction paths are built on the same tile machinery:
+//!
+//! * [`build_pairwise`] — direct-write tiles for the dense / rectangular
+//!   kernels: the output matrix is split into disjoint row-block slices,
+//!   worker threads claim tiles off an atomic counter and fill them in
+//!   place (no intermediate buffer, bit-identical to the pre-tile
+//!   builder). The symmetric (`a == b` by reference identity) case
+//!   computes only the upper triangle over *triangle-area-balanced* tiles
+//!   and mirrors the lower triangle in a second, parallel per-block pass.
+//! * [`stream_tiles`] — memory-bounded streaming for consumers that never
+//!   want an n×n materialization (the sparse kNN build): each worker owns
+//!   one reusable `TILE_ROWS × n` buffer, fills it a row-block at a time
+//!   with the same register-blocked math, and hands the finished tile to
+//!   a caller-supplied callback *inside the worker thread*.
+//!
+//! ## Peak-memory model
+//!
+//! With `t = available_parallelism()` workers and 4-byte floats:
+//!
+//! * direct dense build: `4·n²` output + `8·n` squared norms — the
+//!   output is the floor, nothing transient scales with n²
+//!   ([`dense_peak_bytes`]);
+//! * streaming sparse build: `4·t·TILE_ROWS·n` worker tiles +
+//!   `8·t·n` per-worker top-k scratch + `8·n·k` CSR output + `4·n`
+//!   squared norms ([`sparse_peak_bytes`]) — O(t·n) instead of O(n²),
+//!   which is what lets sparse mode scale past the dense memory wall
+//!   (apricot, Schreiber et al. 2019, makes the same argument).
+//!
+//! The inner loop is shared by both drivers ([`fill_row`]): 8-wide then
+//! 4-wide register-blocked dot products (`linalg::dot8` / `dot4`) with a
+//! scalar tail, exactly the op order of the pre-tile builder. Dense and
+//! rect outputs are pinned bit-identical to that builder by
+//! `tests/kernel_stream.rs`. Streamed rows are full-width (anchored at
+//! column 0), so the *sparse* build now selects from rows whose tail
+//! entries can differ from the old mirrored-symmetric source by an ulp
+//! (different block-phase accumulation order) — its CSR is pinned
+//! bit-exactly against a full-width materialize-then-select reference
+//! instead, and the behavior change is called out in CHANGES.md.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::metric::Metric;
+use crate::linalg::{self, Matrix};
+
+/// Rows per streamed tile. Chosen so a worker's buffer stays a few
+/// hundred KB for typical n (64 rows × n cols × 4 bytes): large enough
+/// to amortize scheduling, small enough that `threads · TILE_ROWS · n`
+/// stays far from O(n²).
+pub const TILE_ROWS: usize = 64;
+
+/// One finished similarity tile: rows `[row_start, row_start + rows)` of
+/// the full kernel against *all* `cols` columns, row-major in `data`.
+/// Borrowed from the worker's reusable buffer — valid only for the
+/// duration of the consumer callback.
+pub struct Tile<'a> {
+    /// Global index of the first row in this tile.
+    pub row_start: usize,
+    /// Number of rows in this tile.
+    pub rows: usize,
+    /// Number of columns (always the full ground-set width).
+    pub cols: usize,
+    /// Row-major `rows × cols` similarity values.
+    pub data: &'a [f32],
+}
+
+fn thread_count() -> usize {
+    std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+}
+
+fn sq_norms(m: &Matrix) -> Vec<f32> {
+    (0..m.rows()).map(|i| linalg::dot(m.row(i), m.row(i))).collect()
+}
+
+/// Fill `orow[j0..n]` with similarities (or distances) of `arow` against
+/// rows `j0..n` of `b`: 8-wide then 4-wide register blocking with a
+/// scalar tail — the exact op order of the pre-tile builder, which is
+/// what keeps every tile path bit-identical to it.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn fill_row(
+    arow: &[f32],
+    sq_ai: f32,
+    b: &Matrix,
+    sq_b: &[f32],
+    j0: usize,
+    metric: Metric,
+    distances: bool,
+    orow: &mut [f32],
+) {
+    let n = b.rows();
+    debug_assert_eq!(orow.len(), n);
+    let mut j = j0;
+    while j + 8 <= n {
+        let g = linalg::dot8(
+            arow,
+            [
+                b.row(j),
+                b.row(j + 1),
+                b.row(j + 2),
+                b.row(j + 3),
+                b.row(j + 4),
+                b.row(j + 5),
+                b.row(j + 6),
+                b.row(j + 7),
+            ],
+        );
+        for t in 0..8 {
+            orow[j + t] = if distances {
+                (sq_ai + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
+            } else {
+                metric.from_gram(g[t], sq_ai, sq_b[j + t])
+            };
+        }
+        j += 8;
+    }
+    while j + 4 <= n {
+        let g = linalg::dot4(arow, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+        for t in 0..4 {
+            orow[j + t] = if distances {
+                (sq_ai + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
+            } else {
+                metric.from_gram(g[t], sq_ai, sq_b[j + t])
+            };
+        }
+        j += 4;
+    }
+    for jj in j..n {
+        let g = linalg::dot(arow, b.row(jj));
+        orow[jj] = if distances {
+            (sq_ai + sq_b[jj] - 2.0 * g).max(0.0).sqrt()
+        } else {
+            metric.from_gram(g, sq_ai, sq_b[jj])
+        };
+    }
+}
+
+/// Stream full-width row tiles of the `a × b` similarity matrix through
+/// `consume`, never materializing more than one `TILE_ROWS × n` buffer
+/// per worker thread. Tiles are claimed dynamically off an atomic
+/// counter; `consume` runs *inside* the worker that computed the tile,
+/// so per-tile reductions (e.g. the sparse top-k) parallelize for free.
+/// Tile arrival order is unspecified, but the partition is part of the
+/// contract: tile t covers rows `[t·TILE_ROWS, (t+1)·TILE_ROWS).min(m)`,
+/// so consumers may key per-tile state on `row_start / TILE_ROWS`.
+///
+/// Every row is computed over the full column range (`j0 = 0`), so row
+/// contents are bit-identical to the rectangular [`build_pairwise`] path
+/// on the same inputs. (A symmetric upper-triangle-only variant is
+/// impossible here: a per-row consumer needs the *whole* row, and the
+/// mirrored half would live in tiles owned by other workers.)
+pub fn stream_tiles<F>(a: &Matrix, b: &Matrix, metric: Metric, distances: bool, consume: &F)
+where
+    F: Fn(Tile<'_>) + Sync,
+{
+    let m = a.rows();
+    let n = b.rows();
+    // nothing to stream when either side is empty (mirrors the empty
+    // matrix build_pairwise returns; also keeps the documented
+    // chunks_exact(t.cols) consumer pattern panic-free)
+    if m == 0 || n == 0 {
+        return;
+    }
+    let sq_a = sq_norms(a);
+    // reuse the norms when streaming a self-similarity (a == b) build
+    let sq_b_own = if std::ptr::eq(a, b) { None } else { Some(sq_norms(b)) };
+    let sq_b: &[f32] = sq_b_own.as_deref().unwrap_or(&sq_a);
+
+    let tile_rows = TILE_ROWS.min(m);
+    let tile_count = m.div_ceil(TILE_ROWS);
+    let threads = thread_count().min(tile_count).max(1);
+    let next = AtomicUsize::new(0);
+    let (sq_a, sq_b) = (&sq_a, sq_b);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut buf = vec![0f32; tile_rows * n];
+                loop {
+                    let t = next.fetch_add(1, Ordering::Relaxed);
+                    if t >= tile_count {
+                        break;
+                    }
+                    let r0 = t * TILE_ROWS;
+                    let r1 = (r0 + TILE_ROWS).min(m);
+                    let rows = r1 - r0;
+                    let data = &mut buf[..rows * n];
+                    for (bi, i) in (r0..r1).enumerate() {
+                        fill_row(
+                            a.row(i),
+                            sq_a[i],
+                            b,
+                            sq_b,
+                            0,
+                            metric,
+                            distances,
+                            &mut data[bi * n..(bi + 1) * n],
+                        );
+                    }
+                    consume(Tile { row_start: r0, rows, cols: n, data });
+                }
+            });
+        }
+    });
+}
+
+/// Direct-write tile driver: `bounds` are row ranges partitioning the
+/// output; the output slice is pre-split into one disjoint sub-slice per
+/// tile, workers claim tile indices off an atomic counter and call
+/// `fill` once per row of their tile. Safe shared-nothing parallelism —
+/// each tile's `&mut` slice is handed out exactly once.
+fn run_direct<F>(bounds: &[(usize, usize)], out: &mut [f32], n: usize, fill: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let mut slots: Vec<Option<&mut [f32]>> = Vec::with_capacity(bounds.len());
+    let mut rest = out;
+    for &(r0, r1) in bounds {
+        let (tile, tail) = rest.split_at_mut((r1 - r0) * n);
+        slots.push(Some(tile));
+        rest = tail;
+    }
+    let slots = Mutex::new(slots);
+    let next = AtomicUsize::new(0);
+    let threads = thread_count().min(bounds.len()).max(1);
+    let fill = &fill;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let t = next.fetch_add(1, Ordering::Relaxed);
+                if t >= bounds.len() {
+                    break;
+                }
+                let tile = {
+                    let mut guard = slots.lock().unwrap();
+                    guard[t].take().expect("each tile is claimed exactly once")
+                };
+                let (r0, r1) = bounds[t];
+                for (bi, i) in (r0..r1).enumerate() {
+                    fill(i, &mut tile[bi * n..(bi + 1) * n]);
+                }
+            });
+        }
+    });
+}
+
+/// Row ranges with roughly equal upper-triangle workloads (row i carries
+/// n − i entries), split into ~`parts` tiles so dynamic scheduling can
+/// balance the remainder.
+fn triangle_bounds(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let total = (n as u64) * (n as u64 + 1) / 2;
+    let target = total.div_ceil(parts.max(1) as u64).max(1);
+    let mut bounds = Vec::with_capacity(parts);
+    let mut row = 0usize;
+    while row < n {
+        let start = row;
+        let mut acc = 0u64;
+        while row < n && acc < target {
+            acc += (n - row) as u64;
+            row += 1;
+        }
+        bounds.push((start, row));
+    }
+    bounds
+}
+
+/// Shared blocked + threaded pairwise builder (the direct-write tile
+/// path). `distances=true` emits the raw euclidean distance instead of
+/// the metric similarity.
+///
+/// When `a` and `b` are the *same* matrix (detected by reference
+/// identity, which is how `DenseKernel::from_data` calls it), every
+/// supported metric is symmetric in its inputs, so only the upper
+/// triangle (j ≥ i) is computed — the lower triangle is mirrored by a
+/// parallel per-block pass. That halves the O(n²·d) dot-product work,
+/// the dominant cost of Table 5's kernel construction.
+pub(crate) fn build_pairwise(a: &Matrix, b: &Matrix, metric: Metric, distances: bool) -> Matrix {
+    if std::ptr::eq(a, b) {
+        return build_symmetric(a, metric, distances);
+    }
+    let m = a.rows();
+    let n = b.rows();
+    let mut out = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let sq_a = sq_norms(a);
+    let sq_b = sq_norms(b);
+    let bounds: Vec<(usize, usize)> = (0..m.div_ceil(TILE_ROWS))
+        .map(|t| (t * TILE_ROWS, ((t + 1) * TILE_ROWS).min(m)))
+        .collect();
+    run_direct(&bounds, out.as_mut_slice(), n, |i, orow| {
+        fill_row(a.row(i), sq_a[i], b, &sq_b, 0, metric, distances, orow)
+    });
+    out
+}
+
+/// Symmetric specialization: upper-triangle-only tiles (balanced by
+/// triangle area), then a parallel per-block mirror of the lower
+/// triangle. The mirror copies bits, so `s_ij == s_ji` exactly.
+fn build_symmetric(a: &Matrix, metric: Metric, distances: bool) -> Matrix {
+    let n = a.rows();
+    let mut out = Matrix::zeros(n, n);
+    if n == 0 {
+        return out;
+    }
+    let sq = sq_norms(a);
+    // ~4 tiles per worker: coarse enough to amortize scheduling, fine
+    // enough that dynamic claiming evens out the triangle's taper
+    let bounds = triangle_bounds(n, thread_count() * 4);
+    run_direct(&bounds, out.as_mut_slice(), n, |i, orow| {
+        fill_row(a.row(i), sq[i], a, &sq, i, metric, distances, orow)
+    });
+    mirror_lower(out.as_mut_slice(), n);
+    out
+}
+
+/// Parallel mirror of the strict lower triangle from the (finished)
+/// strict upper triangle. Safe disjointness by construction: each row is
+/// split at its diagonal into a writable strict-lower part and a shared
+/// diagonal-and-above part, so writers and readers never alias. Work is
+/// balanced by lower-triangle area (row i carries i copies).
+fn mirror_lower(out: &mut [f32], n: usize) {
+    let threads = thread_count();
+    let total = (n as u64) * (n as u64 - 1) / 2;
+    let target = total.div_ceil(threads as u64).max(1);
+    let mut uppers: Vec<&[f32]> = Vec::with_capacity(n);
+    // (first row, strict-lower slices) per worker chunk
+    let mut chunks: Vec<(usize, Vec<&mut [f32]>)> = Vec::with_capacity(threads + 1);
+    let mut rest = out;
+    let mut cur: Vec<&mut [f32]> = Vec::new();
+    let mut cur_start = 0usize;
+    let mut acc = 0u64;
+    for i in 0..n {
+        let (row, tail) = rest.split_at_mut(n);
+        rest = tail;
+        let (lo, up) = row.split_at_mut(i);
+        cur.push(lo);
+        uppers.push(up);
+        acc += i as u64;
+        if acc >= target && i + 1 < n {
+            chunks.push((cur_start, std::mem::take(&mut cur)));
+            cur_start = i + 1;
+            acc = 0;
+        }
+    }
+    if !cur.is_empty() {
+        chunks.push((cur_start, cur));
+    }
+    let uppers = &uppers;
+    std::thread::scope(|scope| {
+        for (start, rows) in chunks {
+            scope.spawn(move || {
+                for (bi, lo) in rows.into_iter().enumerate() {
+                    let i = start + bi;
+                    for (j, slot) in lo.iter_mut().enumerate() {
+                        // (i, j) mirrors (j, i); uppers[j] starts at col j
+                        *slot = uppers[j][i - j];
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Peak heap bytes of the direct dense build at ground-set size `n`:
+/// the n×n output plus the two squared-norm vectors. Nothing transient
+/// scales with n².
+pub fn dense_peak_bytes(n: usize) -> usize {
+    4 * n * n + 8 * n
+}
+
+/// Peak heap bytes of the streaming sparse (kNN, `k` neighbors) build at
+/// ground-set size `n`: per-worker tile buffers and top-k scratch, the
+/// CSR output, and the squared norms — O(threads·n + n·k), never O(n²).
+pub fn sparse_peak_bytes(n: usize, k: usize) -> usize {
+    // stream_tiles never spawns more workers than there are tiles
+    let t = thread_count().min(n.div_ceil(TILE_ROWS)).max(1);
+    let tile = TILE_ROWS.min(n.max(1));
+    4 * t * tile * n // worker tile buffers
+        + 8 * t * n // per-worker (u32, f32) top-k scratch
+        + 8 * n * k // CSR columns + values
+        + 4 * n // squared norms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_data(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::from_vec(n, d, (0..n * d).map(|_| rng.next_gaussian() as f32).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn symmetric_build_matches_rect_path() {
+        // same math as the two-argument (rectangular) builder
+        let data = rand_data(33, 6, 8);
+        let copy = data.clone();
+        let sym = build_pairwise(&data, &data, Metric::Rbf { gamma: 0.7 }, false);
+        let rect = build_pairwise(&data, &copy, Metric::Rbf { gamma: 0.7 }, false);
+        for i in 0..33 {
+            for j in 0..33 {
+                assert!((sym.get(i, j) - rect.get(i, j)).abs() < 1e-5, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_tiles_reassemble_to_rect_build() {
+        // stream_tiles computes full rows (j0 = 0), so reassembling its
+        // tiles must reproduce the rectangular direct build bit-for-bit —
+        // including across the TILE_ROWS boundary (n > 2·TILE_ROWS)
+        let a = rand_data(2 * TILE_ROWS + 21, 5, 9);
+        let b = rand_data(37, 5, 10);
+        for metric in [Metric::Euclidean, Metric::Cosine, Metric::Dot, Metric::Rbf { gamma: 0.4 }]
+        {
+            let direct = build_pairwise(&a, &b, metric, false);
+            let n = b.rows();
+            let assembled = Mutex::new(vec![0f32; a.rows() * n]);
+            stream_tiles(&a, &b, metric, false, &|t: Tile<'_>| {
+                let mut out = assembled.lock().unwrap();
+                out[t.row_start * n..t.row_start * n + t.rows * n].copy_from_slice(t.data);
+            });
+            let assembled = assembled.into_inner().unwrap();
+            for (i, (got, want)) in
+                assembled.iter().zip(direct.as_slice().iter()).enumerate()
+            {
+                assert_eq!(got.to_bits(), want.to_bits(), "{metric:?} flat index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_self_similarity_reuses_norms() {
+        // a == b by reference: norms computed once, rows still full-width
+        let data = rand_data(50, 4, 11);
+        let copy = data.clone();
+        let reference = build_pairwise(&data, &copy, Metric::Euclidean, false);
+        let seen = Mutex::new(vec![false; 50]);
+        stream_tiles(&data, &data, Metric::Euclidean, false, &|t: Tile<'_>| {
+            let mut seen = seen.lock().unwrap();
+            for (bi, row) in t.data.chunks_exact(t.cols).enumerate() {
+                let i = t.row_start + bi;
+                seen[i] = true;
+                for (j, v) in row.iter().enumerate() {
+                    assert_eq!(v.to_bits(), reference.get(i, j).to_bits(), "({i},{j})");
+                }
+            }
+        });
+        assert!(seen.into_inner().unwrap().iter().all(|&s| s), "missing rows");
+    }
+
+    #[test]
+    fn triangle_bounds_cover_all_rows() {
+        for n in [1usize, 2, 7, 64, 257] {
+            for parts in [1usize, 3, 8, 40] {
+                let bounds = triangle_bounds(n, parts);
+                assert_eq!(bounds.first().unwrap().0, 0);
+                assert_eq!(bounds.last().unwrap().1, n);
+                for w in bounds.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap in bounds for n={n}");
+                }
+                for &(s, e) in &bounds {
+                    assert!(s < e, "empty tile for n={n} parts={parts}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distances_path_streams_identically() {
+        let data = rand_data(70, 3, 12);
+        let copy = data.clone();
+        let reference = build_pairwise(&data, &copy, Metric::Euclidean, true);
+        stream_tiles(&data, &copy, Metric::Euclidean, true, &|t: Tile<'_>| {
+            for (bi, row) in t.data.chunks_exact(t.cols).enumerate() {
+                let i = t.row_start + bi;
+                for (j, v) in row.iter().enumerate() {
+                    assert_eq!(v.to_bits(), reference.get(i, j).to_bits(), "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn peak_models_are_monotone() {
+        assert!(dense_peak_bytes(2000) > dense_peak_bytes(500));
+        assert!(sparse_peak_bytes(2000, 32) > sparse_peak_bytes(500, 32));
+        // the streaming model must beat dense materialization at scale
+        assert!(sparse_peak_bytes(100_000, 32) < dense_peak_bytes(100_000));
+    }
+}

@@ -173,6 +173,12 @@ fn cmd_exp(cfg: &Config, target: &str, quick: bool) -> Result<()> {
         let rows = table5(sizes, 1024, 100, 7, &KernelBackend::Native)?;
         println!("== Table 5 (FL timing vs n, 1024-d random) ==");
         print!("{}", submodlib::experiments::table5::render(&rows));
+        let sparse_rows =
+            submodlib::experiments::table5_sparse(sizes, 1024, 100, 100, 7)?;
+        println!(
+            "== Table 5, sparse kNN mode (streaming tiled build, 100 neighbors) =="
+        );
+        print!("{}", submodlib::experiments::table5::render(&sparse_rows));
     }
     if all || target == "fig3" {
         matched = true;

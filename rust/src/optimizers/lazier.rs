@@ -5,11 +5,22 @@
 //! and only re-evaluated until a fresh bound tops the rest — typically a
 //! handful of evaluations per pick.
 //!
+//! Within-sample stale re-evaluations are Minoux-blocked exactly like
+//! `super::lazy`: the run of stale entries at the top of the sample heap
+//! is drained into one [`super::batch_gains`] call, block sizes doubling
+//! 1 → [`LAZY_STALE_BLOCK`] per cascade and resetting every pick. The
+//! selection is invariant (see lazy.rs for the argument: a pick only
+//! happens on a *fresh* top, and early recomputes replace upper bounds
+//! with exact values, never changing the argmax); only the evaluation
+//! count can grow, by less than one block per pick —
+//! `tests/lazier_parity.rs` pins both against the serial pop-one replica.
+//!
 //! Cardinality budgets only (inherits StochasticGreedy's sample formula).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use super::lazy::LAZY_STALE_BLOCK;
 use super::stochastic::sample_size;
 use super::{batch_gains, should_stop, Budget, MaximizeOpts, Selection};
 use crate::error::{Result, SubmodError};
@@ -73,6 +84,9 @@ pub(crate) fn run(
     let mut unseen: Vec<usize> = Vec::with_capacity(s);
     let mut unseen_gains: Vec<f64> = Vec::with_capacity(s);
     let mut seen_before: Vec<bool> = Vec::with_capacity(s);
+    // Minoux stale-block scratch (drained ids + recomputed gains)
+    let mut stale_ids: Vec<usize> = Vec::with_capacity(LAZY_STALE_BLOCK);
+    let mut stale_gains: Vec<f64> = Vec::with_capacity(LAZY_STALE_BLOCK);
 
     for it in 0..k {
         if pool.is_empty() {
@@ -115,16 +129,38 @@ pub(crate) fn run(
             heap.push(Entry { bound: upper[e], e, fresh: !seen_before[i] });
         }
         let mut picked: Option<(usize, f64)> = None;
+        // blocked within-sample drain: block sizes double per cascade and
+        // reset on every pick, same schedule as lazy.rs
+        let mut block = 1usize;
         while let Some(top) = heap.pop() {
             if top.fresh {
                 picked = Some((top.e, top.bound));
                 break;
             }
-            let gain = f.marginal_gain_memoized(top.e);
-            debug_assert!(!gain.is_nan(), "NaN gain for element {}", top.e);
-            evaluations += 1;
-            upper[top.e] = gain;
-            heap.push(Entry { bound: gain, e: top.e, fresh: true });
+            // drain the run of stale entries at the top of the heap (up
+            // to `block`, stopping as soon as a fresh entry surfaces) and
+            // recompute the whole run in one batch
+            stale_ids.clear();
+            stale_ids.push(top.e);
+            while stale_ids.len() < block {
+                match heap.peek() {
+                    Some(next) if !next.fresh => {
+                        let next = heap.pop().expect("peeked entry");
+                        stale_ids.push(next.e);
+                    }
+                    _ => break,
+                }
+            }
+            stale_gains.clear();
+            stale_gains.resize(stale_ids.len(), 0.0);
+            batch_gains(&*f, &stale_ids, &mut stale_gains, opts.parallel);
+            evaluations += stale_ids.len() as u64;
+            for (&e, &gain) in stale_ids.iter().zip(stale_gains.iter()) {
+                debug_assert!(!gain.is_nan(), "NaN gain for element {e}");
+                upper[e] = gain;
+                heap.push(Entry { bound: gain, e, fresh: true });
+            }
+            block = (block * 2).min(LAZY_STALE_BLOCK);
         }
         let Some((e, gain)) = picked else { break };
         if should_stop(gain, opts) {

@@ -226,7 +226,7 @@ pub const PARALLEL_MIN_CANDIDATES: usize = 256;
 
 /// Evaluate the memoized gains of `candidates` into `out`, fanning the
 /// batch out across scoped threads when it is large enough (same pattern
-/// as `kernel::dense::build_pairwise`). With `parallel = false` this is
+/// as `kernel::tile::build_pairwise`). With `parallel = false` this is
 /// the plain serial per-element loop.
 ///
 /// Chunking cannot change results: each element's gain is computed by the

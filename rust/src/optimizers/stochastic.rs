@@ -16,8 +16,10 @@ use crate::error::{Result, SubmodError};
 use crate::functions::traits::SetFunction;
 use crate::rng::Pcg64;
 
-/// Sample size for one stochastic-greedy iteration.
-pub(crate) fn sample_size(n: usize, k: usize, epsilon: f64) -> usize {
+/// Sample size for one stochastic-greedy iteration:
+/// `⌈(n/k)·ln(1/ε)⌉`, clamped to `[1, n]`. Public so parity suites can
+/// replicate the optimizer's exact sampling sequence.
+pub fn sample_size(n: usize, k: usize, epsilon: f64) -> usize {
     let s = ((n as f64 / k as f64) * (1.0 / epsilon).ln()).ceil() as usize;
     s.clamp(1, n)
 }
