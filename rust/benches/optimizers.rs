@@ -19,11 +19,17 @@
 //! * `mi_family`: FLQMI / FLVMI / GCMI / COM / LogDetMI at n=500 with 10
 //!   queries, naive vs lazy — the targeted-selection stack that newly
 //!   rides the batched gain path (ISSUE 2);
-//! * `kernel_build` (schema v3, ISSUE 3): Table 5-shaped dense and
-//!   streaming-sparse kernel-construction wall-clock at n ∈ {500, 2000},
-//!   plus the analytic peak-allocation estimates from
-//!   `kernel::tile::{dense,sparse}_peak_bytes` — the trajectory future
-//!   kernel work extends.
+//! * `kernel_build` (schema v4, ISSUEs 3+4): Table 5-shaped
+//!   kernel-construction wall-clock at n ∈ {500, 2000} for the dense
+//!   build, the symmetric wavefront sparse build (`sparse_sym`, each
+//!   pair computed once) and the full-width sparse baseline
+//!   (`sparse_full`, the pre-wavefront algorithm kept to make the ~2×
+//!   dot saving measurable in one snapshot), plus the analytic
+//!   peak-allocation estimates from
+//!   `kernel::tile::{dense,sparse}_peak_bytes`. The harness also
+//!   *asserts* that dense and sparse builds of the same data agree
+//!   bit-for-bit on shared entries — the wavefront's symmetry guarantee
+//!   stays load-bearing here, not just in unit tests.
 
 use std::collections::BTreeMap;
 
@@ -226,25 +232,58 @@ fn main() {
             })
             .median
             .as_secs_f64();
-        let sparse_s = runner
-            .bench(&format!("KernelBuild/sparse/n{kn}"), || {
+        let sparse_sym_s = runner
+            .bench(&format!("KernelBuild/sparse_sym/n{kn}"), || {
                 SparseKernel::from_data(&kdata, Metric::Euclidean, KB_NEIGHBORS)
                     .unwrap()
                     .nnz()
             })
             .median
             .as_secs_f64();
+        let sparse_full_s = runner
+            .bench(&format!("KernelBuild/sparse_full/n{kn}"), || {
+                SparseKernel::from_data_full_width(
+                    &kdata,
+                    Metric::Euclidean,
+                    KB_NEIGHBORS,
+                )
+                .unwrap()
+                .nnz()
+            })
+            .median
+            .as_secs_f64();
+        // dense/sparse agreement on shared entries: the wavefront build
+        // anchors row i at column i exactly like the dense symmetric
+        // path, so every stored sparse value must equal the dense
+        // kernel's bit-for-bit (and mirrored pairs must agree) — a
+        // broken wavefront fails the bench run loudly
+        let dense_k = DenseKernel::from_data(&kdata, Metric::Euclidean);
+        let sparse_k =
+            SparseKernel::from_data(&kdata, Metric::Euclidean, KB_NEIGHBORS).unwrap();
+        for i in 0..kn {
+            let (cols, vals) = sparse_k.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                assert_eq!(
+                    v.to_bits(),
+                    dense_k.get(i, *c as usize).to_bits(),
+                    "dense/sparse disagreement at ({i},{c})"
+                );
+            }
+        }
         let dense_peak = tile::dense_peak_bytes(kn);
         let sparse_peak = tile::sparse_peak_bytes(kn, KB_NEIGHBORS);
         eprintln!(
-            "  n={kn}: dense {dense_s:.4}s (~{} KB peak), sparse {sparse_s:.4}s (~{} KB peak)",
+            "  n={kn}: dense {dense_s:.4}s (~{} KB peak), sparse sym {sparse_sym_s:.4}s \
+             vs full {sparse_full_s:.4}s ({:.2}x, ~{} KB peak)",
             dense_peak / 1024,
+            sparse_full_s / sparse_sym_s,
             sparse_peak / 1024
         );
         kernel_build_rows.push(obj(vec![
             ("n", Json::Num(kn as f64)),
             ("dense_median_s", Json::Num(dense_s)),
-            ("sparse_median_s", Json::Num(sparse_s)),
+            ("sparse_sym_median_s", Json::Num(sparse_sym_s)),
+            ("sparse_full_median_s", Json::Num(sparse_full_s)),
             ("dense_peak_bytes", Json::Num(dense_peak as f64)),
             ("sparse_peak_bytes", Json::Num(sparse_peak as f64)),
         ]));
@@ -301,7 +340,7 @@ fn main() {
     );
 
     let snapshot = obj(vec![
-        ("schema", Json::Str("bench_optimizers/v3".to_string())),
+        ("schema", Json::Str("bench_optimizers/v4".to_string())),
         ("kernel_build", kernel_build),
         ("lazy_stale_block", lazy_stale_block),
         (

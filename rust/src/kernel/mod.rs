@@ -13,7 +13,9 @@
 //! * [`tile`] — the streaming tiled construction pipeline all three
 //!   builders run on: direct-write row-block tiles for dense/rect,
 //!   memory-bounded streamed tiles (per-worker buffers + in-worker
-//!   consumers) for sparse. See its docs for the peak-memory model.
+//!   consumers) for rectangular workloads, and symmetric upper-triangle
+//!   wedge streaming (each pair computed once) for sparse. See its docs
+//!   for the peak-memory model.
 //! * [`builder`] — backend-dispatching construction helpers.
 
 pub mod builder;

@@ -6,19 +6,36 @@
 //! submodular maximization", cited in paper §2.1.1), this trades accuracy
 //! for memory/time on large ground sets.
 //!
-//! Construction streams through the tile pipeline (`super::tile`): each
-//! worker computes a `TILE_ROWS × n` similarity tile into its own
-//! reusable buffer and reduces every row to its top-k *inside the worker*
-//! before the next tile overwrites the buffer. Peak memory is
-//! O(threads·TILE_ROWS·n + n·k) — the n×n matrix the old
-//! materialize-then-select build allocated never exists, and the top-k
-//! selection parallelizes for free (see `tile::sparse_peak_bytes` for
-//! the full model).
+//! Construction streams through the symmetric wavefront of the tile
+//! pipeline (`tile::stream_symmetric_tiles`): only upper-triangle wedge
+//! tiles are computed — each unordered pair exactly once, the same 2×
+//! dot-product saving the dense symmetric path keeps — and every
+//! computed (i, j) value is delivered to *both* row i's and row j's
+//! top-k accumulator, so `s_ij == s_ji` holds bitwise by construction
+//! (and, because the wedge anchors row i's block phases at column i
+//! exactly like the dense path, every stored value is bit-identical to
+//! the dense kernel built from the same data). Peak memory is
+//! O(threads·TILE_ROWS·n + n·k) — see `tile::sparse_peak_bytes`.
+//!
+//! ## CSR contract: tie-stable top-k
+//!
+//! Tile arrival order is unspecified, so per-row selection must not
+//! depend on it. Each row keeps the k entries *maximal under the strict
+//! total order `(value desc via total_cmp, column asc)`* — strict
+//! because a row never sees the same column twice — which makes the
+//! surviving set unique regardless of delivery order (and therefore
+//! bit-identical across thread counts and to a serial
+//! materialize-upper-triangle-then-select reference). Survivors are
+//! stored sorted by column id. `total_cmp` also pins non-finite values:
+//! −∞ loses to every finite value, +∞ wins, and a NaN similarity ranks
+//! above +∞ (positive NaN) or below −∞ (negative NaN) — an upstream
+//! data bug surfaces deterministically in the neighbor list instead of
+//! scrambling the selection.
 
 use std::sync::Mutex;
 
 use super::metric::Metric;
-use super::tile::{self, Tile};
+use super::tile::{self, Tile, TriTile};
 use crate::error::{Result, SubmodError};
 use crate::linalg::Matrix;
 
@@ -31,20 +48,157 @@ pub struct SparseKernel {
     vals: Vec<f32>,
 }
 
+/// Rows per accumulator lock. One lock covers the same row span as a
+/// full-width tile; workers batch a whole wedge's deliveries per lock
+/// acquisition, so lock traffic is O(tiles · n / SHARD_ROWS).
+const SHARD_ROWS: usize = tile::TILE_ROWS;
+
+/// `(value desc via total_cmp, column asc)` — the CSR contract's strict
+/// total order (see module docs). `a` beats `b` iff it must be kept in
+/// preference to it.
+#[inline]
+fn better(val: f32, col: u32, than_val: f32, than_col: u32) -> bool {
+    match val.total_cmp(&than_val) {
+        std::cmp::Ordering::Greater => true,
+        std::cmp::Ordering::Less => false,
+        std::cmp::Ordering::Equal => col < than_col,
+    }
+}
+
+/// One lock's worth of per-row bounded top-k accumulators, building
+/// directly in the CSR output slices (a contiguous row range of the
+/// kernel, `k` slots per row). Keeping the k best of a stream
+/// under a strict total order is order-independent: the kept set after
+/// any prefix is exactly the k maximal entries seen, whatever the
+/// arrival order — which is what makes the parallel build deterministic.
+struct RowShard<'a> {
+    cols: &'a mut [u32],
+    vals: &'a mut [f32],
+    /// Slots filled so far, per row.
+    fill: Vec<u32>,
+    /// Index (within the row's k slots) of the current worst survivor —
+    /// meaningful only once the row is full.
+    worst: Vec<u32>,
+}
+
+impl<'a> RowShard<'a> {
+    fn new(cols: &'a mut [u32], vals: &'a mut [f32], rows: usize) -> RowShard<'a> {
+        RowShard { cols, vals, fill: vec![0; rows], worst: vec![0; rows] }
+    }
+
+    /// Offer `(col, val)` to local row `r`'s top-k.
+    #[inline]
+    fn push(&mut self, r: usize, col: u32, val: f32, k: usize) {
+        let base = r * k;
+        let fill = self.fill[r] as usize;
+        if fill < k {
+            self.cols[base + fill] = col;
+            self.vals[base + fill] = val;
+            self.fill[r] = (fill + 1) as u32;
+            if fill + 1 == k {
+                self.worst[r] = self.scan_worst(base, k);
+            }
+        } else {
+            let w = base + self.worst[r] as usize;
+            if better(val, col, self.vals[w], self.cols[w]) {
+                self.vals[w] = val;
+                self.cols[w] = col;
+                self.worst[r] = self.scan_worst(base, k);
+            }
+        }
+    }
+
+    /// Index of the minimal entry among a full row's k slots.
+    fn scan_worst(&self, base: usize, k: usize) -> u32 {
+        let mut w = 0usize;
+        for t in 1..k {
+            if better(
+                self.vals[base + w],
+                self.cols[base + w],
+                self.vals[base + t],
+                self.cols[base + t],
+            ) {
+                w = t;
+            }
+        }
+        w as u32
+    }
+}
+
 impl SparseKernel {
     /// Build from a feature matrix keeping the `k` most similar neighbors
     /// per row (the row's own diagonal entry always counts as one of them,
     /// matching Submodlib's `num_neighbors` semantics).
     ///
-    /// Streaming tiled build: never materializes the n×n matrix. Rows are
-    /// computed full-width (so the per-row selection sees exactly the
-    /// values a materialize-then-select build over the rectangular tile
-    /// path would see) and reduced to top-k inside the worker thread.
-    /// Every row lands at a fixed CSR offset (exactly `k` entries per
-    /// row), so the output is preallocated once and pre-split into one
-    /// disjoint slice pair per tile — workers write their rows in place,
-    /// with no per-tile buffers, reassembly sort, or second copy.
+    /// Symmetric wavefront build: streams upper-triangle wedge tiles
+    /// (each (i, j) pair computed exactly once) and delivers every value
+    /// to both endpoints' accumulators, which keep their k maximal
+    /// entries under the tie-stable total order of the CSR contract (see
+    /// module docs) directly in the preallocated CSR arrays — no n×n
+    /// materialization, no reassembly sort beyond the final per-row
+    /// order-by-column. Output is bit-identical across thread counts.
     pub fn from_data(data: &Matrix, metric: Metric, k: usize) -> Result<Self> {
+        let n = data.rows();
+        if k == 0 || k > n {
+            return Err(SubmodError::InvalidParam(format!(
+                "num_neighbors {k} for ground set of {n}"
+            )));
+        }
+        let mut col_idx = vec![0u32; n * k];
+        let mut vals = vec![0f32; n * k];
+        {
+            // sharded row-range accumulators over disjoint CSR slices
+            let shard_count = n.div_ceil(SHARD_ROWS);
+            let mut shards: Vec<Mutex<RowShard<'_>>> = Vec::with_capacity(shard_count);
+            let mut rest_c = col_idx.as_mut_slice();
+            let mut rest_v = vals.as_mut_slice();
+            for s in 0..shard_count {
+                let rows = SHARD_ROWS.min(n - s * SHARD_ROWS);
+                let (c, tail_c) = rest_c.split_at_mut(rows * k);
+                let (v, tail_v) = rest_v.split_at_mut(rows * k);
+                shards.push(Mutex::new(RowShard::new(c, v, rows)));
+                rest_c = tail_c;
+                rest_v = tail_v;
+            }
+            tile::stream_symmetric_tiles(data, metric, false, &|t: TriTile<'_>| {
+                deliver_wedge(&t, &shards, k)
+            });
+            // every row saw all n columns (n ≥ k), so every accumulator
+            // is full; finish by sorting survivors into column order
+            // (the CSR lookup contract)
+            let mut scratch: Vec<(u32, f32)> = Vec::with_capacity(k);
+            for shard in shards {
+                let mut sh = shard.into_inner().unwrap();
+                debug_assert!(sh.fill.iter().all(|&f| f as usize == k));
+                for r in 0..sh.fill.len() {
+                    let base = r * k;
+                    scratch.clear();
+                    scratch.extend(
+                        sh.cols[base..base + k]
+                            .iter()
+                            .copied()
+                            .zip(sh.vals[base..base + k].iter().copied()),
+                    );
+                    scratch.sort_unstable_by_key(|e| e.0);
+                    for (t, &(c, v)) in scratch.iter().enumerate() {
+                        sh.cols[base + t] = c;
+                        sh.vals[base + t] = v;
+                    }
+                }
+            }
+        }
+        let row_ptr = (0..=n).map(|i| i * k).collect();
+        Ok(SparseKernel { n, row_ptr, col_idx, vals })
+    }
+
+    /// Full-width streaming build — the pre-wavefront algorithm, kept as
+    /// the measurable baseline [`Self::from_data`]'s ~2× is benchmarked
+    /// against (`benches/optimizers.rs`). Each row is computed
+    /// independently over all n columns through `tile::stream_tiles`, so
+    /// it does twice the dot work, and its values are anchored at column
+    /// 0 — they can differ from the symmetric build's by an ulp. The
+    /// top-k order is the same CSR contract.
+    pub fn from_data_full_width(data: &Matrix, metric: Metric, k: usize) -> Result<Self> {
         let n = data.rows();
         if k == 0 || k > n {
             return Err(SubmodError::InvalidParam(format!(
@@ -72,7 +226,7 @@ impl SparseKernel {
         }
         let slots = Mutex::new(slots);
         // reusable top-k scratch, recycled across tiles (at most one live
-        // per worker — the 8·t·n term of tile::sparse_peak_bytes)
+        // per worker)
         let scratch_pool: Mutex<Vec<Vec<(u32, f32)>>> = Mutex::new(Vec::new());
         tile::stream_tiles(data, data, metric, false, &|t: Tile<'_>| {
             let (cols_out, vals_out) = {
@@ -85,7 +239,6 @@ impl SparseKernel {
                 scratch_pool.lock().unwrap().pop().unwrap_or_default();
             for (bi, row) in t.data.chunks_exact(t.cols).enumerate() {
                 select_row_topk(
-                    t.row_start + bi,
                     row,
                     k,
                     &mut scratch,
@@ -102,8 +255,10 @@ impl SparseKernel {
     }
 
     /// Build from precomputed dense rows (the materialize-then-select
-    /// reference the streaming build is tested against, and the direct
-    /// path for callers that already hold a dense kernel).
+    /// reference the streaming builds are tested against, and the direct
+    /// path for callers that already hold a dense kernel). Same top-k
+    /// order as the streaming builds, so feeding it the *symmetric*
+    /// dense kernel's rows reproduces [`Self::from_data`] bit-for-bit.
     pub(crate) fn from_dense_rows<'a, F>(n: usize, k: usize, row: F) -> Self
     where
         F: Fn(usize) -> &'a [f32],
@@ -113,7 +268,6 @@ impl SparseKernel {
         let mut scratch: Vec<(u32, f32)> = Vec::with_capacity(n);
         for i in 0..n {
             select_row_topk(
-                i,
                 row(i),
                 k,
                 &mut scratch,
@@ -153,13 +307,45 @@ impl SparseKernel {
     }
 }
 
-/// Select the k largest entries of `row` (by similarity) and write them
+/// Deliver one upper-triangle wedge to every accumulator shard it
+/// touches: value (i, j) goes to row i (as column j) *and* to row j (as
+/// column i) — the same f32 both times, which is what makes the kernel
+/// symmetric by construction. Shards are visited one at a time (never
+/// nested, so no lock-order concerns), with all of a wedge's pushes into
+/// a shard batched under one acquisition.
+fn deliver_wedge(t: &TriTile<'_>, shards: &[Mutex<RowShard<'_>>], k: usize) {
+    let n = t.cols;
+    let r0 = t.row_start;
+    for (s, shard) in shards.iter().enumerate().skip(r0 / SHARD_ROWS) {
+        let c0 = s * SHARD_ROWS;
+        let c1 = (c0 + SHARD_ROWS).min(n);
+        let mut guard = shard.lock().unwrap();
+        // rows at or past this shard's end contribute nothing to it:
+        // their columns all sit at j ≥ i ≥ c1
+        for bi in 0..t.rows.min(c1 - r0) {
+            let i = r0 + bi;
+            let row = t.row(bi); // columns [i, n)
+            if i >= c0 {
+                // row side: all of row i's wedge lands in its own shard
+                for (off, &v) in row.iter().enumerate() {
+                    guard.push(i - c0, (i + off) as u32, v, k);
+                }
+            }
+            // column side: s_ji == s_ij for this shard's rows j > i
+            for j in (i + 1).max(c0)..c1 {
+                guard.push(j - c0, i as u32, row[j - i], k);
+            }
+        }
+    }
+}
+
+/// Select the k largest entries of `row` under the CSR contract's order
+/// (`value desc via total_cmp`, ties by ascending column) and write them
 /// to `cols_out`/`vals_out` (length exactly `k`) sorted by column id.
-/// Single source of truth for the top-k semantics: the streaming build
-/// and the dense-rows reference both call this, so their survivors agree
-/// even on exact ties.
+/// Single source of truth for the materialize-then-select semantics: the
+/// full-width build and the dense-rows reference both call this, and the
+/// wavefront build's accumulators keep the identical set.
 fn select_row_topk(
-    i: usize,
     row: &[f32],
     k: usize,
     scratch: &mut Vec<(u32, f32)>,
@@ -169,22 +355,14 @@ fn select_row_topk(
     debug_assert_eq!(cols_out.len(), k);
     debug_assert_eq!(vals_out.len(), k);
     scratch.clear();
-    scratch.extend(row.iter().enumerate().map(|(j, &s)| {
-        // a NaN similarity would make "the k most similar
-        // neighbors" meaningless — catch it at the source rather
-        // than letting it scramble the selection downstream
-        debug_assert!(!s.is_nan(), "NaN similarity in kernel row {i}, col {j}");
-        (j as u32, s)
-    }));
-    // Partial select of the k largest by similarity. total_cmp,
-    // NOT partial_cmp().unwrap_or(Equal): under the old comparator
-    // a NaN compared Equal to *everything*, breaking the strict
-    // weak ordering select_nth_unstable_by relies on and silently
-    // scrambling which neighbors survive. total_cmp is a total
-    // order (NaN sorts above +∞, i.e. first in this descending
-    // select), so even a release build with NaNs keeps the
-    // selection well-defined; finite-only rows are unchanged.
-    scratch.select_nth_unstable_by(k - 1, |a, b| b.1.total_cmp(&a.1));
+    scratch.extend(row.iter().enumerate().map(|(j, &s)| (j as u32, s)));
+    // Partial select of the k maximal entries. The comparator is the
+    // CSR contract's strict total order — total_cmp then column id — so
+    // the selected set is unique even under heavy value ties and
+    // non-finite similarities (see module docs for the NaN semantics).
+    scratch.select_nth_unstable_by(k - 1, |a, b| {
+        b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0))
+    });
     let top = &mut scratch[..k];
     top.sort_unstable_by_key(|e| e.0);
     for (t, &(j, s)) in top.iter().enumerate() {
@@ -234,8 +412,6 @@ mod tests {
         for i in 0..12 {
             let mut drow: Vec<(usize, f32)> =
                 dense.row(i).iter().cloned().enumerate().collect();
-            // total_cmp: same NaN-total comparator class as the builder —
-            // the old partial_cmp().unwrap() panicked outright on NaN
             drow.sort_by(|a, b| b.1.total_cmp(&a.1));
             let expect: std::collections::HashSet<usize> =
                 drow[..4].iter().map(|e| e.0).collect();
@@ -246,6 +422,39 @@ mod tests {
                     (drow[3].1 - v).abs() < 1e-6
                 });
                 assert!((dense.get(i, *c as usize) - v).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn stored_pairs_symmetric_and_bit_equal_to_dense() {
+        // the headline wavefront guarantees: every stored value is the
+        // dense symmetric kernel's value bit-for-bit, and wherever both
+        // endpoints keep the pair, the two stored values are identical
+        let data = rand_data(90, 5, 7);
+        for metric in
+            [Metric::Euclidean, Metric::Cosine, Metric::Dot, Metric::Rbf { gamma: 0.8 }]
+        {
+            let dense = crate::kernel::DenseKernel::from_data(&data, metric);
+            let sparse = SparseKernel::from_data(&data, metric, 6).unwrap();
+            for i in 0..90 {
+                let (cols, vals) = sparse.row(i);
+                for (c, v) in cols.iter().zip(vals) {
+                    let j = *c as usize;
+                    assert_eq!(
+                        v.to_bits(),
+                        dense.get(i, j).to_bits(),
+                        "{metric:?} ({i},{j}) vs dense"
+                    );
+                    let (jcols, jvals) = sparse.row(j);
+                    if let Ok(pos) = jcols.binary_search(&(i as u32)) {
+                        assert_eq!(
+                            v.to_bits(),
+                            jvals[pos].to_bits(),
+                            "{metric:?} ({i},{j}) vs mirror"
+                        );
+                    }
+                }
             }
         }
     }
@@ -266,31 +475,61 @@ mod tests {
     }
 
     #[test]
-    fn streaming_matches_dense_rows_reference() {
-        // the streaming build reduces the same full-width rows the
-        // rectangular tile path produces, through the same select —
-        // survivors and values must agree with materialize-then-select
-        // exactly (n > TILE_ROWS exercises multi-tile scheduling)
+    fn wavefront_matches_dense_rows_reference() {
+        // the wavefront accumulators keep the k maximal entries of
+        // exactly the rows the dense *symmetric* build materializes, so
+        // feeding those rows to the serial dense-rows select must
+        // reproduce the CSR bit-for-bit (n > TILE_ROWS exercises
+        // multi-wedge scheduling; repeated builds pin order independence
+        // across schedules)
         let data = rand_data(2 * tile::TILE_ROWS + 9, 6, 6);
         let n = data.rows();
-        let copy = data.clone();
-        let dense = crate::kernel::RectKernel::from_data(&data, &copy, Metric::Cosine).unwrap();
+        let dense = crate::kernel::DenseKernel::from_data(&data, Metric::Cosine);
         for k in [1usize, 3, 16, n] {
             let streamed = SparseKernel::from_data(&data, Metric::Cosine, k).unwrap();
+            let again = SparseKernel::from_data(&data, Metric::Cosine, k).unwrap();
             let reference = SparseKernel::from_dense_rows(n, k, |i| dense.row(i));
-            assert_eq!(streamed.row_ptr, reference.row_ptr, "k={k}");
-            assert_eq!(streamed.col_idx, reference.col_idx, "k={k}");
             let bits =
                 |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(streamed.row_ptr, reference.row_ptr, "k={k}");
+            assert_eq!(streamed.col_idx, reference.col_idx, "k={k}");
             assert_eq!(bits(&streamed.vals), bits(&reference.vals), "k={k}");
+            assert_eq!(streamed.col_idx, again.col_idx, "k={k} rebuild");
+            assert_eq!(bits(&streamed.vals), bits(&again.vals), "k={k} rebuild");
+        }
+    }
+
+    #[test]
+    fn full_width_build_close_to_wavefront() {
+        // the baseline build selects from column-0-anchored rows, which
+        // may differ from the symmetric values by ulps — so neighbor
+        // sets may legally differ only at sub-ulp ties; compare the
+        // rank-ordered survivor values instead of exact membership
+        let data = rand_data(80, 5, 8);
+        let sym = SparseKernel::from_data(&data, Metric::Euclidean, 5).unwrap();
+        let full = SparseKernel::from_data_full_width(&data, Metric::Euclidean, 5).unwrap();
+        assert_eq!(sym.nnz(), full.nnz());
+        for i in 0..80 {
+            let mut svals = sym.row(i).1.to_vec();
+            let mut fvals = full.row(i).1.to_vec();
+            svals.sort_by(|a, b| b.total_cmp(a));
+            fvals.sort_by(|a, b| b.total_cmp(a));
+            for (a, b) in svals.iter().zip(&fvals) {
+                assert!((a - b).abs() < 1e-5, "row {i}: {a} vs {b}");
+            }
+            // the diagonal (maximum under euclidean similarity) always
+            // survives both builds
+            assert!((sym.get(i, i) - 1.0).abs() < 1e-5);
+            assert!((full.get(i, i) - 1.0).abs() < 1e-5);
         }
     }
 
     #[test]
     fn topk_total_order_handles_nonfinite_rows() {
         // −∞ (a legal f32, e.g. from a degenerate log-space similarity)
-        // must lose to every finite value under total_cmp, and equal
-        // values must still yield exactly k survivors.
+        // must lose to every finite value under total_cmp; exact value
+        // ties resolve by ascending column id (the CSR contract), so
+        // even all-tied rows have a deterministic survivor set.
         let rows: Vec<Vec<f32>> = vec![
             vec![1.0, f32::NEG_INFINITY, 0.5, 0.75],
             vec![0.25, 0.25, 0.25, 0.25],
@@ -301,9 +540,43 @@ mod tests {
         assert_eq!(k.nnz(), 8);
         let survivors = |i: usize| -> Vec<u32> { k.row(i).0.to_vec() };
         assert_eq!(survivors(0), vec![0, 3]); // 1.0 and 0.75
-        assert_eq!(survivors(1).len(), 2); // all tied: any 2, but exactly 2
+        assert_eq!(survivors(1), vec![0, 1]); // all tied: lowest columns win
         assert_eq!(survivors(2), vec![2, 3]); // the two finite entries
         assert_eq!(survivors(3), vec![0, 2]); // 3.0 and +0.0 (beats −0.0)
+    }
+
+    #[test]
+    fn shard_accumulator_is_order_independent() {
+        // feed the same entries to a RowShard in opposite orders: the
+        // kept set must match (the tentpole's core invariant, isolated)
+        let entries: Vec<(u32, f32)> = vec![
+            (0, 0.5),
+            (1, 0.5),
+            (2, -1.0),
+            (3, f32::NEG_INFINITY),
+            (4, 2.0),
+            (5, 0.5),
+            (6, 0.25),
+            (7, 2.0),
+        ];
+        let k = 3;
+        let run = |order: &[(u32, f32)]| -> (Vec<u32>, Vec<f32>) {
+            let mut cols = vec![0u32; k];
+            let mut vals = vec![0f32; k];
+            let mut shard = RowShard::new(&mut cols, &mut vals, 1);
+            for &(c, v) in order {
+                shard.push(0, c, v, k);
+            }
+            let mut pairs: Vec<(u32, f32)> =
+                cols.iter().copied().zip(vals.iter().copied()).collect();
+            pairs.sort_unstable_by_key(|e| e.0);
+            (pairs.iter().map(|e| e.0).collect(), pairs.iter().map(|e| e.1).collect())
+        };
+        let fwd = run(&entries);
+        let rev = run(&entries.iter().rev().copied().collect::<Vec<_>>());
+        assert_eq!(fwd, rev);
+        // 2.0@4, 2.0@7, then the 0.5 tie resolves to the lowest column
+        assert_eq!(fwd.0, vec![0, 4, 7]);
     }
 
     #[test]
@@ -312,5 +585,7 @@ mod tests {
         assert!(SparseKernel::from_data(&data, Metric::Euclidean, 0).is_err());
         assert!(SparseKernel::from_data(&data, Metric::Euclidean, 6).is_err());
         assert!(SparseKernel::from_data(&data, Metric::Euclidean, 5).is_ok());
+        assert!(SparseKernel::from_data_full_width(&data, Metric::Euclidean, 0).is_err());
+        assert!(SparseKernel::from_data_full_width(&data, Metric::Euclidean, 6).is_err());
     }
 }

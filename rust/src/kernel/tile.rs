@@ -3,7 +3,7 @@
 //! creation as the dominant O(n²·d) cost, and §8's sparse mode exists to
 //! escape the O(n²) *memory* wall).
 //!
-//! All three construction paths are built on the same tile machinery:
+//! All construction paths are built on the same tile machinery:
 //!
 //! * [`build_pairwise`] — direct-write tiles for the dense / rectangular
 //!   kernels: the output matrix is split into disjoint row-block slices,
@@ -12,11 +12,19 @@
 //!   builder). The symmetric (`a == b` by reference identity) case
 //!   computes only the upper triangle over *triangle-area-balanced* tiles
 //!   and mirrors the lower triangle in a second, parallel per-block pass.
-//! * [`stream_tiles`] — memory-bounded streaming for consumers that never
-//!   want an n×n materialization (the sparse kNN build): each worker owns
+//! * [`stream_tiles`] — memory-bounded streaming for rectangular (`a × b`)
+//!   consumers that never want a full materialization: each worker owns
 //!   one reusable `TILE_ROWS × n` buffer, fills it a row-block at a time
 //!   with the same register-blocked math, and hands the finished tile to
 //!   a caller-supplied callback *inside the worker thread*.
+//! * [`stream_symmetric_tiles`] — the symmetric streaming specialization
+//!   (the sparse kNN build): only upper-triangle wedge tiles
+//!   ([`TriTile`], row i holding columns `[i, n)`) are computed, over the
+//!   same triangle-area-balanced row ranges as the dense direct-write
+//!   path, so every unordered pair is computed exactly once — the 2×
+//!   dot-product saving the dense symmetric path keeps. Consumers see
+//!   each (i, j) value once and deliver it to both row i's and row j's
+//!   reduction, so `s_ij == s_ji` holds by construction.
 //!
 //! ## Peak-memory model
 //!
@@ -25,22 +33,25 @@
 //! * direct dense build: `4·n²` output + `8·n` squared norms — the
 //!   output is the floor, nothing transient scales with n²
 //!   ([`dense_peak_bytes`]);
-//! * streaming sparse build: `4·t·TILE_ROWS·n` worker tiles +
-//!   `8·t·n` per-worker top-k scratch + `8·n·k` CSR output + `4·n`
-//!   squared norms ([`sparse_peak_bytes`]) — O(t·n) instead of O(n²),
-//!   which is what lets sparse mode scale past the dense memory wall
-//!   (apricot, Schreiber et al. 2019, makes the same argument).
+//! * symmetric streaming sparse build: `4·t·(TILE_ROWS·n/2 + n)` packed
+//!   per-worker wedge buffers (a tile's area is capped near half a
+//!   full-width tile, no matter how deep into the triangle's taper it
+//!   sits) + `8·n·k` CSR output (the top-k accumulators build in place)
+//!   + `8·n` per-row cursors + `4·n` squared norms
+//!   ([`sparse_peak_bytes`]) — O(t·n) instead of O(n²), which is what
+//!   lets sparse mode scale past the dense memory wall (apricot,
+//!   Schreiber et al. 2019, makes the same argument).
 //!
-//! The inner loop is shared by both drivers ([`fill_row`]): 8-wide then
+//! The inner loop is shared by all drivers ([`fill_row`]): 8-wide then
 //! 4-wide register-blocked dot products (`linalg::dot8` / `dot4`) with a
 //! scalar tail, exactly the op order of the pre-tile builder. Dense and
 //! rect outputs are pinned bit-identical to that builder by
-//! `tests/kernel_stream.rs`. Streamed rows are full-width (anchored at
-//! column 0), so the *sparse* build now selects from rows whose tail
-//! entries can differ from the old mirrored-symmetric source by an ulp
-//! (different block-phase accumulation order) — its CSR is pinned
-//! bit-exactly against a full-width materialize-then-select reference
-//! instead, and the behavior change is called out in CHANGES.md.
+//! `tests/kernel_stream.rs`. The symmetric streamed wedge anchors row i
+//! at column i — the *same* block-phase alignment as the dense symmetric
+//! path — so the sparse build's stored values are bit-identical to the
+//! dense kernel built from the same data (full-width `stream_tiles` rows
+//! anchor at column 0 and can differ from these by an ulp; that is why
+//! the sparse build no longer uses them).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -77,10 +88,13 @@ fn sq_norms(m: &Matrix) -> Vec<f32> {
     (0..m.rows()).map(|i| linalg::dot(m.row(i), m.row(i))).collect()
 }
 
-/// Fill `orow[j0..n]` with similarities (or distances) of `arow` against
-/// rows `j0..n` of `b`: 8-wide then 4-wide register blocking with a
-/// scalar tail — the exact op order of the pre-tile builder, which is
-/// what keeps every tile path bit-identical to it.
+/// Fill `orow` — the slice covering columns `[j0, n)` of an output row —
+/// with similarities (or distances) of `arow` against rows `j0..n` of
+/// `b`: 8-wide then 4-wide register blocking with a scalar tail — the
+/// exact op order of the pre-tile builder, which is what keeps every
+/// tile path bit-identical to it. The block phases are anchored at `j0`,
+/// so two calls agree bitwise on a shared column only when their `j0`s
+/// match (the symmetric paths all anchor row i at `j0 = i`).
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn fill_row(
@@ -94,7 +108,7 @@ fn fill_row(
     orow: &mut [f32],
 ) {
     let n = b.rows();
-    debug_assert_eq!(orow.len(), n);
+    debug_assert_eq!(orow.len(), n - j0);
     let mut j = j0;
     while j + 8 <= n {
         let g = linalg::dot8(
@@ -111,7 +125,7 @@ fn fill_row(
             ],
         );
         for t in 0..8 {
-            orow[j + t] = if distances {
+            orow[j - j0 + t] = if distances {
                 (sq_ai + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
             } else {
                 metric.from_gram(g[t], sq_ai, sq_b[j + t])
@@ -122,7 +136,7 @@ fn fill_row(
     while j + 4 <= n {
         let g = linalg::dot4(arow, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
         for t in 0..4 {
-            orow[j + t] = if distances {
+            orow[j - j0 + t] = if distances {
                 (sq_ai + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
             } else {
                 metric.from_gram(g[t], sq_ai, sq_b[j + t])
@@ -132,7 +146,7 @@ fn fill_row(
     }
     for jj in j..n {
         let g = linalg::dot(arow, b.row(jj));
-        orow[jj] = if distances {
+        orow[jj - j0] = if distances {
             (sq_ai + sq_b[jj] - 2.0 * g).max(0.0).sqrt()
         } else {
             metric.from_gram(g, sq_ai, sq_b[jj])
@@ -151,9 +165,10 @@ fn fill_row(
 ///
 /// Every row is computed over the full column range (`j0 = 0`), so row
 /// contents are bit-identical to the rectangular [`build_pairwise`] path
-/// on the same inputs. (A symmetric upper-triangle-only variant is
-/// impossible here: a per-row consumer needs the *whole* row, and the
-/// mirrored half would live in tiles owned by other workers.)
+/// on the same inputs. For self-similarity (`a == b`) consumers that can
+/// reduce with an order-independent accumulator, prefer
+/// [`stream_symmetric_tiles`], which computes each unordered pair once
+/// instead of twice.
 pub fn stream_tiles<F>(a: &Matrix, b: &Matrix, metric: Metric, distances: bool, consume: &F)
 where
     F: Fn(Tile<'_>) + Sync,
@@ -208,6 +223,121 @@ where
     });
 }
 
+/// One finished upper-triangle wedge tile from
+/// [`stream_symmetric_tiles`]: rows `[row_start, row_start + rows)` of a
+/// symmetric `cols × cols` kernel, where row i carries only its
+/// diagonal-and-right columns `[i, cols)`, packed back-to-back in the
+/// worker's reusable buffer. Borrowed — valid only for the duration of
+/// the consumer callback.
+pub struct TriTile<'a> {
+    /// Global index of the first row in this tile.
+    pub row_start: usize,
+    /// Number of rows in this tile.
+    pub rows: usize,
+    /// Full kernel width (the ground-set size n).
+    pub cols: usize,
+    data: &'a [f32],
+}
+
+impl<'a> TriTile<'a> {
+    /// Columns `[row_start + bi, cols)` of tile row `bi` — entry 0 is the
+    /// diagonal `(i, i)`, entry `off` is column `i + off`.
+    #[inline]
+    pub fn row(&self, bi: usize) -> &'a [f32] {
+        debug_assert!(bi < self.rows);
+        let w = self.cols - self.row_start; // width of the tile's first row
+        // rows shrink by one column each: offset of row bi is
+        // sum_{t<bi} (w - t) = bi·(2w − bi + 1)/2
+        let off = bi * (2 * w - bi + 1) / 2;
+        &self.data[off..off + (w - bi)]
+    }
+}
+
+/// Upper-triangle streaming driver for symmetric (self-similarity)
+/// builds: only tiles with `j ≥ i` are computed — each unordered pair
+/// exactly once, halving the O(n²·d) dot work of full-width streaming —
+/// and handed to `consume` inside the computing worker as packed
+/// [`TriTile`] wedges. Row ranges are triangle-area-balanced (the same
+/// scheme as the dense direct-write path), with per-tile area capped
+/// near `TILE_ROWS·n/2` so a worker's reusable buffer stays O(TILE_ROWS·n)
+/// however deep into the triangle's taper its tiles sit.
+///
+/// Row i of a wedge is computed with block phases anchored at `j0 = i`,
+/// exactly like [`build_pairwise`]'s symmetric case — the values are
+/// bit-identical to the dense symmetric kernel of the same data.
+///
+/// Tile arrival order is unspecified: consumers needing deterministic
+/// output must reduce through an order-independent accumulator (see
+/// `SparseKernel::from_data`, which keeps per-row top-k sets maximal
+/// under a strict total order).
+pub fn stream_symmetric_tiles<F>(a: &Matrix, metric: Metric, distances: bool, consume: &F)
+where
+    F: Fn(TriTile<'_>) + Sync,
+{
+    let n = a.rows();
+    if n == 0 {
+        return;
+    }
+    let sq = sq_norms(a);
+    let bounds = triangle_bounds_by_area(n, sym_tile_area_target(n));
+    let max_area =
+        bounds.iter().map(|&(r0, r1)| wedge_area(n, r0, r1)).max().unwrap_or(0);
+    let threads = thread_count().min(bounds.len()).max(1);
+    let next = AtomicUsize::new(0);
+    let (sq, bounds) = (&sq, &bounds);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut buf = vec![0f32; max_area];
+                loop {
+                    let t = next.fetch_add(1, Ordering::Relaxed);
+                    if t >= bounds.len() {
+                        break;
+                    }
+                    let (r0, r1) = bounds[t];
+                    let mut off = 0usize;
+                    for i in r0..r1 {
+                        let len = n - i;
+                        fill_row(
+                            a.row(i),
+                            sq[i],
+                            a,
+                            sq,
+                            i,
+                            metric,
+                            distances,
+                            &mut buf[off..off + len],
+                        );
+                        off += len;
+                    }
+                    consume(TriTile {
+                        row_start: r0,
+                        rows: r1 - r0,
+                        cols: n,
+                        data: &buf[..off],
+                    });
+                }
+            });
+        }
+    });
+}
+
+/// Packed area of the wedge covering rows `[r0, r1)` of an n-wide upper
+/// triangle (row i carries n − i entries, diagonal included).
+fn wedge_area(n: usize, r0: usize, r1: usize) -> usize {
+    let w = n - r0;
+    let rows = r1 - r0;
+    rows * (2 * w - rows + 1) / 2
+}
+
+/// Per-tile area target for [`stream_symmetric_tiles`]: half a
+/// full-width `TILE_ROWS × n` tile, so the streamed-wedge granularity
+/// (and per-worker buffer) matches the full-width driver's at half the
+/// total work.
+fn sym_tile_area_target(n: usize) -> u64 {
+    ((TILE_ROWS as u64) * (n as u64) / 2).max(1)
+}
+
 /// Direct-write tile driver: `bounds` are row ranges partitioning the
 /// output; the output slice is pre-split into one disjoint sub-slice per
 /// tile, workers claim tile indices off an atomic counter and call
@@ -253,8 +383,15 @@ where
 /// balance the remainder.
 fn triangle_bounds(n: usize, parts: usize) -> Vec<(usize, usize)> {
     let total = (n as u64) * (n as u64 + 1) / 2;
-    let target = total.div_ceil(parts.max(1) as u64).max(1);
-    let mut bounds = Vec::with_capacity(parts);
+    triangle_bounds_by_area(n, total.div_ceil(parts.max(1) as u64).max(1))
+}
+
+/// Row ranges whose upper-triangle areas each reach `target` (the last
+/// range may fall short; any range overshoots by less than one row's
+/// width). Shared by [`triangle_bounds`] (target from a part count) and
+/// [`stream_symmetric_tiles`] (absolute target, bounding worker buffers).
+fn triangle_bounds_by_area(n: usize, target: u64) -> Vec<(usize, usize)> {
+    let mut bounds = Vec::new();
     let mut row = 0usize;
     while row < n {
         let start = row;
@@ -313,7 +450,7 @@ fn build_symmetric(a: &Matrix, metric: Metric, distances: bool) -> Matrix {
     // enough that dynamic claiming evens out the triangle's taper
     let bounds = triangle_bounds(n, thread_count() * 4);
     run_direct(&bounds, out.as_mut_slice(), n, |i, orow| {
-        fill_row(a.row(i), sq[i], a, &sq, i, metric, distances, orow)
+        fill_row(a.row(i), sq[i], a, &sq, i, metric, distances, &mut orow[i..])
     });
     mirror_lower(out.as_mut_slice(), n);
     out
@@ -374,16 +511,22 @@ pub fn dense_peak_bytes(n: usize) -> usize {
     4 * n * n + 8 * n
 }
 
-/// Peak heap bytes of the streaming sparse (kNN, `k` neighbors) build at
-/// ground-set size `n`: per-worker tile buffers and top-k scratch, the
-/// CSR output, and the squared norms — O(threads·n + n·k), never O(n²).
+/// Peak heap bytes of the symmetric streaming sparse (kNN, `k`
+/// neighbors) build at ground-set size `n`: packed per-worker wedge
+/// buffers, the CSR output (the top-k accumulators build in place — no
+/// separate scratch), per-row cursors, and the squared norms —
+/// O(threads·n + n·k), never O(n²).
 pub fn sparse_peak_bytes(n: usize, k: usize) -> usize {
-    // stream_tiles never spawns more workers than there are tiles
-    let t = thread_count().min(n.div_ceil(TILE_ROWS)).max(1);
-    let tile = TILE_ROWS.min(n.max(1));
-    4 * t * tile * n // worker tile buffers
-        + 8 * t * n // per-worker (u32, f32) top-k scratch
-        + 8 * n * k // CSR columns + values
+    let total = n * (n + 1) / 2;
+    let target = sym_tile_area_target(n) as usize;
+    // the greedy area walk closes a wedge within one row of the target,
+    // and never spawns more workers than there are wedges
+    let tiles = total.div_ceil(target).max(1);
+    let t = thread_count().min(tiles).max(1);
+    let wedge = (target + n).min(total.max(1));
+    4 * t * wedge // packed per-worker wedge buffers
+        + 8 * n * k // CSR columns + values (accumulators build in place)
+        + 8 * n // per-row fill/worst cursors
         + 4 * n // squared norms
 }
 
@@ -455,6 +598,58 @@ mod tests {
             }
         });
         assert!(seen.into_inner().unwrap().iter().all(|&s| s), "missing rows");
+    }
+
+    #[test]
+    fn symmetric_stream_covers_upper_triangle_once_bit_equal() {
+        // every (i, j≥i) pair delivered exactly once, bit-identical to
+        // the dense symmetric build (same j0 = i block-phase anchoring);
+        // n spans several area-balanced wedges
+        let data = rand_data(3 * TILE_ROWS + 11, 6, 13);
+        let n = data.rows();
+        let metric = Metric::Rbf { gamma: 0.5 };
+        let reference = build_pairwise(&data, &data, metric, false);
+        let seen = Mutex::new(vec![0u8; n * n]);
+        stream_symmetric_tiles(&data, metric, false, &|t: TriTile<'_>| {
+            let mut seen = seen.lock().unwrap();
+            for bi in 0..t.rows {
+                let i = t.row_start + bi;
+                let row = t.row(bi);
+                assert_eq!(row.len(), n - i, "row {i} width");
+                for (off, v) in row.iter().enumerate() {
+                    let j = i + off;
+                    assert_eq!(v.to_bits(), reference.get(i, j).to_bits(), "({i},{j})");
+                    seen[i * n + j] += 1;
+                }
+            }
+        });
+        let seen = seen.into_inner().unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(seen[i * n + j], u8::from(j >= i), "coverage ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_stream_wedge_areas_bounded() {
+        // the packed buffer bound the driver allocates must hold for the
+        // bounds it actually uses: area ≤ target + (one row's width − 1)
+        for n in [1usize, 63, 64, 65, 300, 1000] {
+            let target = sym_tile_area_target(n);
+            let bounds = triangle_bounds_by_area(n, target);
+            assert_eq!(bounds.first().unwrap().0, 0);
+            assert_eq!(bounds.last().unwrap().1, n);
+            for w in bounds.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap for n={n}");
+            }
+            for &(r0, r1) in &bounds {
+                assert!(
+                    (wedge_area(n, r0, r1) as u64) < target + (n - r0) as u64,
+                    "oversized wedge [{r0},{r1}) for n={n}"
+                );
+            }
+        }
     }
 
     #[test]

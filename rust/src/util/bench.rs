@@ -73,7 +73,7 @@ impl BenchRunner {
         times.sort();
         let total: Duration = times.iter().sum();
         let mean = total / self.samples as u32;
-        let median = times[self.samples / 2];
+        let median = median_of_sorted(&times);
         let mean_s = mean.as_secs_f64();
         let var = times
             .iter()
@@ -115,6 +115,20 @@ impl BenchRunner {
     }
 }
 
+/// Median of an ascending-sorted, non-empty sample list: the mean of the
+/// two middle values for even counts. (`times[n/2]` alone is the *upper*
+/// middle, which biases the reported median high as sample counts vary —
+/// the BENCH_*.json trajectory needs the statistic to mean the same
+/// thing at every `BENCH_SAMPLES` setting.)
+fn median_of_sorted(times: &[Duration]) -> Duration {
+    let n = times.len();
+    if n % 2 == 0 {
+        (times[n / 2 - 1] + times[n / 2]) / 2
+    } else {
+        times[n / 2]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,6 +139,16 @@ mod tests {
         let s = b.bench("noop", || 1 + 1);
         assert_eq!(s.samples, 5);
         assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn median_even_is_mean_of_middles() {
+        let ms = Duration::from_millis;
+        assert_eq!(median_of_sorted(&[ms(5)]), ms(5));
+        assert_eq!(median_of_sorted(&[ms(1), ms(3)]), ms(2));
+        assert_eq!(median_of_sorted(&[ms(1), ms(2), ms(30)]), ms(2));
+        // upper-middle alone would report 10 here
+        assert_eq!(median_of_sorted(&[ms(1), ms(2), ms(10), ms(20)]), ms(6));
     }
 
     #[test]

@@ -55,8 +55,18 @@ impl Json {
         }
     }
 
+    /// Integer view of a number. `fract() == 0.0` alone is not enough:
+    /// every f64 at or above 2^53 has zero fract, but above 2^53 − 1
+    /// distinct integers collapse onto the same float during parsing, so
+    /// a "whole" value no longer identifies one integer — those are
+    /// rejected instead of silently rounded (as is anything beyond
+    /// `usize::MAX`, which would otherwise saturate on 32-bit targets).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
+        const MAX_EXACT_INT: f64 = 9_007_199_254_740_991.0; // 2^53 − 1
+        let max = MAX_EXACT_INT.min(usize::MAX as f64);
+        self.as_f64()
+            .filter(|x| *x >= 0.0 && x.fract() == 0.0 && *x <= max)
+            .map(|x| x as usize)
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -277,15 +287,37 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                return Err(self.err("bad \\u"));
-                            }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| self.err("bad \\u"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u"))?;
-                            self.i += 4;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let cp = self.hex4()?;
+                            let ch = match cp {
+                                // UTF-16 high surrogate: JSON encodes
+                                // astral characters as an escaped
+                                // surrogate *pair* (RFC 8259 §7) — the
+                                // two escapes are one code point, not two
+                                0xD800..=0xDBFF => {
+                                    let save = self.i;
+                                    if self.b[self.i..].starts_with(b"\\u") {
+                                        self.i += 2;
+                                        let lo = self.hex4()?;
+                                        if (0xDC00..=0xDFFF).contains(&lo) {
+                                            let c = 0x10000
+                                                + ((cp - 0xD800) << 10)
+                                                + (lo - 0xDC00);
+                                            char::from_u32(c).unwrap_or('\u{fffd}')
+                                        } else {
+                                            // not a low surrogate: the
+                                            // high one is lone; re-parse
+                                            // the peeked escape on its own
+                                            self.i = save;
+                                            '\u{fffd}'
+                                        }
+                                    } else {
+                                        '\u{fffd}' // lone high surrogate
+                                    }
+                                }
+                                0xDC00..=0xDFFF => '\u{fffd}', // lone low surrogate
+                                cp => char::from_u32(cp).unwrap_or('\u{fffd}'),
+                            };
+                            s.push(ch);
                         }
                         _ => return Err(self.err("bad escape char")),
                     }
@@ -302,6 +334,23 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Consume exactly four hex digits (the payload of a `\u` escape).
+    /// Digit check up front: `from_str_radix` alone also accepts a
+    /// leading `+`, which JSON does not.
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            return Err(self.err("bad \\u"));
+        }
+        let raw = &self.b[self.i..self.i + 4];
+        if !raw.iter().all(|b| b.is_ascii_hexdigit()) {
+            return Err(self.err("bad \\u"));
+        }
+        let hex = std::str::from_utf8(raw).map_err(|_| self.err("bad \\u"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u"))?;
+        self.i += 4;
+        Ok(cp)
     }
 
     fn number(&mut self) -> Result<Json> {
@@ -352,6 +401,67 @@ mod tests {
     fn unicode_escapes_and_utf8() {
         assert_eq!(Json::parse(r#""é""#).unwrap(), Json::Str("é".into()));
         assert_eq!(Json::parse("\"é\"").unwrap(), Json::Str("é".into()));
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // an escaped UTF-16 surrogate pair is ONE code point
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("😀".into())
+        );
+        assert_eq!(
+            Json::parse(r#""x\ud83d\ude00y""#).unwrap(),
+            Json::Str("x😀y".into())
+        );
+        // raw UTF-8 still passes through unchanged
+        assert_eq!(Json::parse(r#""😀""#).unwrap(), Json::Str("😀".into()));
+        // writer emits raw UTF-8, so the escaped pair round-trips
+        let v = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn lone_surrogates_become_replacement_char() {
+        // high with nothing after it
+        assert_eq!(Json::parse(r#""\ud83d""#).unwrap(), Json::Str("\u{fffd}".into()));
+        // high followed by plain text
+        assert_eq!(
+            Json::parse(r#""\ud83dab""#).unwrap(),
+            Json::Str("\u{fffd}ab".into())
+        );
+        // high followed by a non-surrogate *escape*: the rewind path —
+        // lone high becomes U+FFFD, then A is re-parsed on its own
+        assert_eq!(
+            Json::parse(r#""\ud83d\u0041""#).unwrap(),
+            Json::Str("\u{fffd}A".into())
+        );
+        // invalid hex after a high surrogate still errors (and a '+'
+        // sign is not a hex digit)
+        assert!(Json::parse(r#""\u+041""#).is_err());
+        assert!(Json::parse(r#""\ud83d\uzzzz""#).is_err());
+        // two highs in a row: first is lone, second pairs with nothing
+        assert_eq!(
+            Json::parse(r#""\ud83d\ud83d""#).unwrap(),
+            Json::Str("\u{fffd}\u{fffd}".into())
+        );
+        // low with no preceding high
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap(), Json::Str("\u{fffd}".into()));
+    }
+
+    #[test]
+    fn as_usize_rejects_unrepresentable() {
+        // 2^53 − 1 is the largest f64 that still identifies one integer
+        assert_eq!(
+            Json::Num(9_007_199_254_740_991.0).as_usize(),
+            Some(9_007_199_254_740_991)
+        );
+        // 2^53 parses equal to 2^53 + 1 — ambiguous, so rejected
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(0.5).as_usize(), None);
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
     }
 
     #[test]

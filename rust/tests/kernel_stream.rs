@@ -1,9 +1,12 @@
 //! Bit-equality suite for the streaming tiled kernel construction
-//! (ISSUE 3): the tiled dense / rect / distance builds must reproduce the
-//! pre-refactor builder *bit-for-bit* for every `Metric`, and the
-//! streaming sparse build's CSR (row_ptr / col_idx / vals) must equal a
-//! materialize-then-select reference exactly — including rows containing
-//! non-finite similarities.
+//! (ISSUE 3) and the symmetric wavefront sparse build (ISSUE 4): the
+//! tiled dense / rect / distance builds must reproduce the pre-refactor
+//! builder *bit-for-bit* for every `Metric`, and the sparse build's CSR
+//! (row_ptr / col_idx / vals) must equal a serial
+//! materialize-upper-triangle-then-select reference exactly — including
+//! rows containing NaN/±∞ similarities and tie-heavy integer-valued
+//! kernels, where only the contract's `(value desc via total_cmp, col
+//! asc)` order keeps the survivor set well-defined.
 //!
 //! The references below are verbatim serial replicas of the pre-tile
 //! builder's inner loops (8-wide, then 4-wide register blocking, scalar
@@ -158,25 +161,28 @@ fn tiled_rect_bit_equals_pre_refactor_builder_every_metric() {
     }
 }
 
-/// Materialize-then-select reference: full-width rows via the serial
-/// rect replica, then the library's own top-k semantics (descending
-/// `total_cmp` partial select, survivors re-sorted by column id).
+/// Serial materialize-upper-triangle-then-select reference: the
+/// symmetric replica (upper triangle computed with row i anchored at
+/// column i, lower triangle a bitwise mirror) materialized in full, then
+/// a brute-force top-k per row — a *full sort* under the CSR contract's
+/// strict total order `(value desc via total_cmp, col asc)`, take k,
+/// re-sort survivors by column id. No partial-select shortcuts, so ties
+/// and non-finite values are resolved by the ordering alone.
 fn reference_sparse_csr(
     data: &Matrix,
     metric: Metric,
     k: usize,
 ) -> (Vec<usize>, Vec<u32>, Vec<f32>) {
     let n = data.rows();
-    let dense = reference_rect(data, data, metric, false);
+    let dense = reference_symmetric(data, metric, false);
     let mut row_ptr = vec![0usize];
     let mut col_idx = Vec::new();
     let mut vals = Vec::new();
-    let mut scratch: Vec<(u32, f32)> = Vec::with_capacity(n);
     for i in 0..n {
-        scratch.clear();
-        scratch.extend(dense.row(i).iter().enumerate().map(|(j, &s)| (j as u32, s)));
-        scratch.select_nth_unstable_by(k - 1, |a, b| b.1.total_cmp(&a.1));
-        let top = &mut scratch[..k];
+        let mut entries: Vec<(u32, f32)> =
+            dense.row(i).iter().enumerate().map(|(j, &s)| (j as u32, s)).collect();
+        entries.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        let mut top = entries[..k].to_vec();
         top.sort_unstable_by_key(|e| e.0);
         for &(j, s) in top.iter() {
             col_idx.push(j);
@@ -234,7 +240,7 @@ fn streaming_sparse_handles_nonfinite_rows() {
     // at the unit level): f32 products of 1e20 overflow to ±∞, and with
     // single products per dot no NaN can form. −∞ must lose to every
     // finite value; +∞ must win; CSR must still match the
-    // materialize-then-select reference exactly.
+    // materialize-upper-triangle-then-select reference exactly.
     let feats: Vec<f32> = vec![1e20, -1e20, 0.0, 1.0, 2.0, -3.0, 0.5, -0.25, 4.0];
     let n = feats.len();
     let data = Matrix::from_vec(n, 1, feats).unwrap();
@@ -248,4 +254,111 @@ fn streaming_sparse_handles_nonfinite_rows() {
     let (cols, vals) = sparse.row(0);
     assert!(!cols.contains(&1), "−∞ neighbor survived: {cols:?} {vals:?}");
     assert!(vals.iter().all(|v| *v > 0.0));
+}
+
+#[test]
+fn streaming_sparse_handles_nan_rows() {
+    // Two-dimensional Dot features whose products overflow to opposite
+    // infinities: s(0,1) = ∞ + (−∞) = NaN. total_cmp gives NaN a
+    // deterministic rank (above +∞ if positive, below −∞ if negative —
+    // the produced sign is architecture-defined, which is exactly why
+    // the selection must be pinned against a reference running the same
+    // ops rather than against a hand-written expectation).
+    let rows: Vec<[f32; 2]> = vec![
+        [1e20, 1e20],
+        [1e20, -1e20],
+        [1.0, 2.0],
+        [2.0, 1.0],
+        [0.5, -0.5],
+        [-1.0, 3.0],
+        [0.25, 0.75],
+    ];
+    let n = rows.len();
+    let data =
+        Matrix::from_vec(n, 2, rows.iter().flat_map(|r| r.iter().copied()).collect())
+            .unwrap();
+    for k in [1usize, 2, 3, n] {
+        assert_sparse_equals_reference(&data, Metric::Dot, k, &format!("nan k={k}"));
+    }
+    // with k = n every entry is stored: the (0,1) similarity really is
+    // NaN, and both endpoints hold the same bits — symmetry survives
+    // even non-finite arithmetic
+    let sparse = SparseKernel::from_data(&data, Metric::Dot, n).unwrap();
+    let s01 = sparse.get(0, 1);
+    let s10 = sparse.get(1, 0);
+    assert!(s01.is_nan(), "expected NaN at (0,1), got {s01}");
+    assert_eq!(s01.to_bits(), s10.to_bits(), "NaN pair not mirrored");
+    assert!(sparse.get(0, 0).is_infinite() && sparse.get(0, 0) > 0.0);
+}
+
+#[test]
+fn streaming_sparse_tie_heavy_integer_kernel() {
+    // Integer-valued features under Dot give exact integer similarities
+    // from a handful of distinct values — nearly every row is decided by
+    // the (value desc, col asc) tie order, across shard boundaries
+    // (n > 2·64) and straddling the k cut. Must still be bit-identical
+    // to the serial reference.
+    let mut rng = Pcg64::new(77);
+    let n = 150;
+    let d = 4;
+    let feats: Vec<f32> =
+        (0..n * d).map(|_| (rng.next_below(4) as f32) - 1.0).collect();
+    let data = Matrix::from_vec(n, d, feats).unwrap();
+    for k in [1usize, 5, 32, 64, n] {
+        assert_sparse_equals_reference(&data, Metric::Dot, k, &format!("ties k={k}"));
+    }
+}
+
+#[test]
+fn sparse_symmetry_property_random_data_all_metrics() {
+    // Property sweep: for random data across all metrics, every stored
+    // pair agrees bitwise with the dense symmetric kernel of the same
+    // data; whenever both endpoints keep a pair, the two stored values
+    // are bit-equal (get(i,j) == get(j,i) exactly); and the per-row
+    // survivor sets equal the brute-force (value desc, col asc)
+    // reference — also under the heavy ties of rounded features.
+    for (seed, quantize) in [(101u64, false), (102, true), (103, false)] {
+        let mut rng = Pcg64::new(seed);
+        let n = 130;
+        let d = 4;
+        let feats: Vec<f32> = (0..n * d)
+            .map(|_| {
+                let g = rng.next_gaussian() as f32;
+                if quantize {
+                    g.round()
+                } else {
+                    g
+                }
+            })
+            .collect();
+        let data = Matrix::from_vec(n, d, feats).unwrap();
+        for metric in ALL_METRICS {
+            let k = 9;
+            let what = format!("seed={seed} {metric:?}");
+            assert_sparse_equals_reference(&data, metric, k, &what);
+            let sparse = SparseKernel::from_data(&data, metric, k).unwrap();
+            let dense = DenseKernel::from_data(&data, metric);
+            for i in 0..n {
+                let (cols, vals) = sparse.row(i);
+                for (c, v) in cols.iter().zip(vals) {
+                    let j = *c as usize;
+                    assert_eq!(
+                        v.to_bits(),
+                        dense.get(i, j).to_bits(),
+                        "{what}: ({i},{j}) vs dense"
+                    );
+                    // membership can be asymmetric (kNN graphs are), but
+                    // stored values never disagree between endpoints
+                    let (jcols, jvals) = sparse.row(j);
+                    if let Ok(pos) = jcols.binary_search(&(i as u32)) {
+                        assert_eq!(
+                            v.to_bits(),
+                            jvals[pos].to_bits(),
+                            "{what}: get({i},{j}) != get({j},{i})"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
