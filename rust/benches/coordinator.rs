@@ -9,11 +9,13 @@ use submodlib::functions::facility_location::FacilityLocation;
 use submodlib::functions::traits::{SetFunction, Subset};
 use submodlib::kernel::{DenseKernel, Metric};
 use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use submodlib::runtime::pool;
 use submodlib::util::bench::BenchRunner;
 
 fn build(items: usize, dim: usize, cap: usize, factor: f64) -> Coordinator {
     let cfg = CoordinatorConfig {
-        workers: std::thread::available_parallelism().map(|x| x.get()).unwrap_or(2),
+        // honors SUBMODLIB_THREADS like everything else (pool-resolved)
+        workers: pool::num_threads(),
         shard_capacity: cap,
         ingest_depth: 256,
         per_shard_factor: factor,

@@ -29,9 +29,19 @@
 //!   `kernel::tile::{dense,sparse}_peak_bytes`. The harness also
 //!   *asserts* that dense and sparse builds of the same data agree
 //!   bit-for-bit on shared entries — the wavefront's symmetry guarantee
-//!   stays load-bearing here, not just in unit tests.
+//!   stays load-bearing here, not just in unit tests;
+//! * `pool` (schema v5, ISSUE 5): the persistent worker-pool runtime —
+//!   resolved width + spawned worker count, the Table 2 FL n=500
+//!   NaiveGreedy wall-clock on the pool path, a per-call dispatch
+//!   microcomparison (pool publish/park vs. the old per-call
+//!   `std::thread::scope` spawn/join), and the sparse wavefront's
+//!   shard-lock contention counters (`null` in release builds, where
+//!   the debug-only instrumentation is compiled out). Top-level
+//!   metadata records the resolved thread count so snapshots from
+//!   different machines/widths stay comparable.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use submodlib::data::synthetic;
 use submodlib::functions::facility_location::FacilityLocation;
@@ -40,9 +50,11 @@ use submodlib::functions::graph_cut::GraphCut;
 use submodlib::functions::log_determinant::LogDeterminant;
 use submodlib::functions::mi::{ConcaveOverModular, Flqmi, Flvmi, Gcmi, LogDetMi};
 use submodlib::functions::traits::SetFunction;
+use submodlib::kernel::sparse::shard_contention;
 use submodlib::kernel::{tile, DenseKernel, Metric, RectKernel, SparseKernel};
 use submodlib::optimizers::lazy::LAZY_STALE_BLOCK;
 use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use submodlib::runtime::pool;
 use submodlib::util::bench::BenchRunner;
 use submodlib::util::json::Json;
 
@@ -88,6 +100,9 @@ fn main() {
         t("NaiveGreedy") / t("LazierThanLazyGreedy"),
         t("NaiveGreedy") / t("StochasticGreedy"),
     );
+    // the Table 2 FL NaiveGreedy wall-clock doubles as the pool section's
+    // headline number (the whole run rides the pool now)
+    let table2_fl_naive_s = t("NaiveGreedy");
 
     // ---- snapshot: FL / GC / LogDet × naive / lazy / stochastic ---------
     eprintln!("snapshot workload: n=500, k=50, FL/GC/LogDet x naive/lazy/stochastic");
@@ -223,6 +238,9 @@ fn main() {
     eprintln!(
         "kernel build: dense vs streaming sparse, d={KB_DIM}, num_neighbors={KB_NEIGHBORS}"
     );
+    // scope the (debug-only) shard-lock contention tallies to the sparse
+    // builds below; the totals surface in the pool section
+    shard_contention::reset();
     let mut kernel_build_rows: Vec<Json> = Vec::new();
     for &kn in &[500usize, 2000] {
         let kdata = synthetic::random_features(kn, KB_DIM, 45);
@@ -302,8 +320,7 @@ fn main() {
     ]);
 
     // ---- parallel scaling: n=2000, k=100, FL, naive ---------------------
-    let threads =
-        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let threads = pool::num_threads();
     eprintln!("parallel scaling: n=2000, k=100, FL NaiveGreedy ({threads} threads)");
     let big = synthetic::blobs(2000, 2, 10, 4.0, 43);
     let big_fl = FacilityLocation::new(DenseKernel::from_data(&big, Metric::Euclidean));
@@ -339,8 +356,91 @@ fn main() {
         "  parallel gain scan speedup: {speedup:.2}x (serial {serial_stats:.3}s, parallel {parallel_stats:.3}s)"
     );
 
+    // ---- pool runtime: per-call dispatch vs the old scoped spawn --------
+    // Every parallel section above already ran on the pool; this isolates
+    // the per-call overhead the pool removed. One "call" is one parallel
+    // section: pool = publish + park/wake, scoped = `threads` OS thread
+    // spawns + joins (the shape every driver had before ISSUE 5).
+    const DISPATCH_CALLS: usize = 256;
+    eprintln!(
+        "pool dispatch: {threads}-wide trivial section x{DISPATCH_CALLS}, pool vs scoped spawn"
+    );
+    let sink = AtomicUsize::new(0);
+    let pool_per_call_s = runner
+        .bench("Pool/dispatch", || {
+            for _ in 0..DISPATCH_CALLS {
+                pool::run(threads, &|w| {
+                    sink.fetch_add(w + 1, Ordering::Relaxed);
+                });
+            }
+            sink.load(Ordering::Relaxed)
+        })
+        .median
+        .as_secs_f64()
+        / DISPATCH_CALLS as f64;
+    let scoped_per_call_s = runner
+        .bench("Pool/scoped_spawn", || {
+            let sink = &sink;
+            for _ in 0..DISPATCH_CALLS {
+                std::thread::scope(|scope| {
+                    for w in 0..threads {
+                        scope.spawn(move || {
+                            sink.fetch_add(w + 1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+            sink.load(Ordering::Relaxed)
+        })
+        .median
+        .as_secs_f64()
+        / DISPATCH_CALLS as f64;
+    let spawn_over_pool = if pool_per_call_s > 0.0 {
+        scoped_per_call_s / pool_per_call_s
+    } else {
+        0.0
+    };
+    eprintln!(
+        "  per call: pool {:.2}us vs scoped spawn {:.2}us ({spawn_over_pool:.1}x)",
+        pool_per_call_s * 1e6,
+        scoped_per_call_s * 1e6
+    );
+    let pool_section = obj(vec![
+        ("threads", Json::Num(threads as f64)),
+        ("workers", Json::Num(pool::worker_count() as f64)),
+        (
+            "table2_fl_naive",
+            obj(vec![
+                ("n", Json::Num(500.0)),
+                ("k", Json::Num(100.0)),
+                ("median_s", Json::Num(table2_fl_naive_s)),
+            ]),
+        ),
+        (
+            "dispatch_overhead",
+            obj(vec![
+                ("calls_per_sample", Json::Num(DISPATCH_CALLS as f64)),
+                ("pool_per_call_s", Json::Num(pool_per_call_s)),
+                ("scoped_spawn_per_call_s", Json::Num(scoped_per_call_s)),
+                ("spawn_over_pool", Json::Num(spawn_over_pool)),
+            ]),
+        ),
+        (
+            "shard_contention",
+            match shard_contention::stats() {
+                Some((acq, waits)) => obj(vec![
+                    ("acquisitions", Json::Num(acq as f64)),
+                    ("waits", Json::Num(waits as f64)),
+                ]),
+                None => Json::Null,
+            },
+        ),
+    ]);
+
     let snapshot = obj(vec![
-        ("schema", Json::Str("bench_optimizers/v4".to_string())),
+        ("schema", Json::Str("bench_optimizers/v5".to_string())),
+        ("threads", Json::Num(threads as f64)),
+        ("pool", pool_section),
         ("kernel_build", kernel_build),
         ("lazy_stale_block", lazy_stale_block),
         (

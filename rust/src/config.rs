@@ -44,7 +44,13 @@ impl From<MetricConfig> for crate::kernel::Metric {
 /// Coordinator (streaming service) settings.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Worker threads for per-shard selection.
+    /// Worker threads for per-shard (stage-1) selection fan-out,
+    /// spawned per `select()` request as scoped threads. They are *not*
+    /// pool participants — they must stay off the pool because each one
+    /// submits its shard's kernel builds and gain scans *to* the shared
+    /// `runtime::pool` (whose submission lock serializes those parallel
+    /// sections; a pool job may not submit). Defaults to the pool width
+    /// (honors `SUBMODLIB_THREADS`).
     pub workers: usize,
     /// Items per shard before a new shard opens.
     pub shard_capacity: usize,
@@ -58,7 +64,7 @@ pub struct CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
-            workers: 4,
+            workers: crate::runtime::pool::num_threads(),
             shard_capacity: 512,
             ingest_depth: 1024,
             per_shard_factor: 2.0,
@@ -178,7 +184,8 @@ mod tests {
     fn partial_json_uses_defaults() {
         let c = Config::parse(r#"{"out_dir": "results"}"#).unwrap();
         assert_eq!(c.out_dir, "results");
-        assert_eq!(c.coordinator.workers, 4);
+        // default worker count is the pool width (SUBMODLIB_THREADS-aware)
+        assert_eq!(c.coordinator.workers, crate::runtime::pool::num_threads());
     }
 
     #[test]

@@ -53,6 +53,51 @@ pub struct SparseKernel {
 /// acquisition, so lock traffic is O(tiles · n / SHARD_ROWS).
 const SHARD_ROWS: usize = tile::TILE_ROWS;
 
+/// Debug-only contention statistics for the wavefront's shard locks
+/// (delivery waits vs. acquisitions), grounding the ROADMAP "per-worker
+/// partial accumulators" open item in data before anyone builds it. In
+/// release builds the counters are compiled out of the hot path
+/// entirely ([`stats`](shard_contention::stats) returns `None`); in
+/// debug builds `deliver_wedge` counts every lock acquisition and every
+/// acquisition that had to wait (`try_lock` would have blocked).
+/// Surfaced two ways: the debug-only contention test prints the tallies
+/// on every tier-1 `cargo test` run (the practical data source, since
+/// tier-1 is a debug build), and the bench harness's `pool` section
+/// records them (`null` there in practice — benches are release
+/// builds). Resettable for targeted measurements. Counters are
+/// process-global and cumulative — concurrent builds add into the same
+/// tallies.
+pub mod shard_contention {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ACQUISITIONS: AtomicU64 = AtomicU64::new(0);
+    static WAITS: AtomicU64 = AtomicU64::new(0);
+
+    #[cfg(debug_assertions)]
+    pub(super) fn record(waited: bool) {
+        ACQUISITIONS.fetch_add(1, Ordering::Relaxed);
+        if waited {
+            WAITS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Zero both counters (e.g. right before a measured build).
+    pub fn reset() {
+        ACQUISITIONS.store(0, Ordering::Relaxed);
+        WAITS.store(0, Ordering::Relaxed);
+    }
+
+    /// `(acquisitions, waits)` since the last [`reset`], or `None` in
+    /// release builds where the instrumentation is compiled out.
+    pub fn stats() -> Option<(u64, u64)> {
+        if cfg!(debug_assertions) {
+            Some((ACQUISITIONS.load(Ordering::Relaxed), WAITS.load(Ordering::Relaxed)))
+        } else {
+            None
+        }
+    }
+}
+
 /// `(value desc via total_cmp, column asc)` — the CSR contract's strict
 /// total order (see module docs). `a` beats `b` iff it must be kept in
 /// preference to it.
@@ -319,6 +364,22 @@ fn deliver_wedge(t: &TriTile<'_>, shards: &[Mutex<RowShard<'_>>], k: usize) {
     for (s, shard) in shards.iter().enumerate().skip(r0 / SHARD_ROWS) {
         let c0 = s * SHARD_ROWS;
         let c1 = (c0 + SHARD_ROWS).min(n);
+        // debug builds tally acquisitions and would-block waits (see
+        // `shard_contention`); release builds take the lock directly so
+        // the hot path is unchanged
+        #[cfg(debug_assertions)]
+        let mut guard = match shard.try_lock() {
+            Ok(g) => {
+                shard_contention::record(false);
+                g
+            }
+            Err(std::sync::TryLockError::WouldBlock) => {
+                shard_contention::record(true);
+                shard.lock().unwrap()
+            }
+            Err(std::sync::TryLockError::Poisoned(e)) => panic!("shard lock poisoned: {e}"),
+        };
+        #[cfg(not(debug_assertions))]
         let mut guard = shard.lock().unwrap();
         // rows at or past this shard's end contribute nothing to it:
         // their columns all sit at j ≥ i ≥ c1
@@ -577,6 +638,30 @@ mod tests {
         assert_eq!(fwd, rev);
         // 2.0@4, 2.0@7, then the 0.5 tie resolves to the lowest column
         assert_eq!(fwd.0, vec![0, 4, 7]);
+    }
+
+    #[test]
+    fn contention_counters_surface_in_debug_builds() {
+        // enough rows for several wedges and shards, so locks are taken
+        let data = rand_data(3 * tile::TILE_ROWS, 4, 21);
+        shard_contention::reset();
+        let _ = SparseKernel::from_data(&data, Metric::Euclidean, 8).unwrap();
+        match shard_contention::stats() {
+            Some((acq, waits)) => {
+                assert!(acq > 0, "debug builds must count shard-lock acquisitions");
+                // tier-1 (`cargo test`) runs in debug, so this line is
+                // where the ROADMAP open item's data actually surfaces —
+                // `cargo bench` is release and reports null
+                eprintln!(
+                    "shard contention (n={}, k=8): {acq} acquisitions, {waits} waits",
+                    data.rows()
+                );
+            }
+            None => assert!(
+                !cfg!(debug_assertions),
+                "stats() may only be None in release builds"
+            ),
+        }
     }
 
     #[test]

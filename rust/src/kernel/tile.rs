@@ -26,9 +26,16 @@
 //!   each (i, j) value once and deliver it to both row i's and row j's
 //!   reduction, so `s_ij == s_ji` holds by construction.
 //!
+//! All drivers execute on the persistent worker pool
+//! (`runtime::pool`) — tiles are claimed off an atomic counter and each
+//! writes to its own pre-split slot or packed buffer (the indexed-slot
+//! determinism rule the pool documents), so outputs are bit-identical
+//! at every pool width and no per-call threads are ever spawned.
+//!
 //! ## Peak-memory model
 //!
-//! With `t = available_parallelism()` workers and 4-byte floats:
+//! With `t = runtime::pool::num_threads()` participants and 4-byte
+//! floats:
 //!
 //! * direct dense build: `4·n²` output + `8·n` squared norms — the
 //!   output is the floor, nothing transient scales with n²
@@ -54,10 +61,10 @@
 //! the sparse build no longer uses them).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 use super::metric::Metric;
 use crate::linalg::{self, Matrix};
+use crate::runtime::pool;
 
 /// Rows per streamed tile. Chosen so a worker's buffer stays a few
 /// hundred KB for typical n (64 rows × n cols × 4 bytes): large enough
@@ -78,10 +85,6 @@ pub struct Tile<'a> {
     pub cols: usize,
     /// Row-major `rows × cols` similarity values.
     pub data: &'a [f32],
-}
-
-fn thread_count() -> usize {
-    std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
 }
 
 fn sq_norms(m: &Matrix) -> Vec<f32> {
@@ -188,37 +191,33 @@ where
 
     let tile_rows = TILE_ROWS.min(m);
     let tile_count = m.div_ceil(TILE_ROWS);
-    let threads = thread_count().min(tile_count).max(1);
+    let threads = pool::num_threads().min(tile_count).max(1);
     let next = AtomicUsize::new(0);
     let (sq_a, sq_b) = (&sq_a, sq_b);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| {
-                let mut buf = vec![0f32; tile_rows * n];
-                loop {
-                    let t = next.fetch_add(1, Ordering::Relaxed);
-                    if t >= tile_count {
-                        break;
-                    }
-                    let r0 = t * TILE_ROWS;
-                    let r1 = (r0 + TILE_ROWS).min(m);
-                    let rows = r1 - r0;
-                    let data = &mut buf[..rows * n];
-                    for (bi, i) in (r0..r1).enumerate() {
-                        fill_row(
-                            a.row(i),
-                            sq_a[i],
-                            b,
-                            sq_b,
-                            0,
-                            metric,
-                            distances,
-                            &mut data[bi * n..(bi + 1) * n],
-                        );
-                    }
-                    consume(Tile { row_start: r0, rows, cols: n, data });
-                }
-            });
+    pool::run(threads, &|_worker| {
+        let mut buf = vec![0f32; tile_rows * n];
+        loop {
+            let t = next.fetch_add(1, Ordering::Relaxed);
+            if t >= tile_count {
+                break;
+            }
+            let r0 = t * TILE_ROWS;
+            let r1 = (r0 + TILE_ROWS).min(m);
+            let rows = r1 - r0;
+            let data = &mut buf[..rows * n];
+            for (bi, i) in (r0..r1).enumerate() {
+                fill_row(
+                    a.row(i),
+                    sq_a[i],
+                    b,
+                    sq_b,
+                    0,
+                    metric,
+                    distances,
+                    &mut data[bi * n..(bi + 1) * n],
+                );
+            }
+            consume(Tile { row_start: r0, rows, cols: n, data });
         }
     });
 }
@@ -282,42 +281,33 @@ where
     let bounds = triangle_bounds_by_area(n, sym_tile_area_target(n));
     let max_area =
         bounds.iter().map(|&(r0, r1)| wedge_area(n, r0, r1)).max().unwrap_or(0);
-    let threads = thread_count().min(bounds.len()).max(1);
+    let threads = pool::num_threads().min(bounds.len()).max(1);
     let next = AtomicUsize::new(0);
     let (sq, bounds) = (&sq, &bounds);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| {
-                let mut buf = vec![0f32; max_area];
-                loop {
-                    let t = next.fetch_add(1, Ordering::Relaxed);
-                    if t >= bounds.len() {
-                        break;
-                    }
-                    let (r0, r1) = bounds[t];
-                    let mut off = 0usize;
-                    for i in r0..r1 {
-                        let len = n - i;
-                        fill_row(
-                            a.row(i),
-                            sq[i],
-                            a,
-                            sq,
-                            i,
-                            metric,
-                            distances,
-                            &mut buf[off..off + len],
-                        );
-                        off += len;
-                    }
-                    consume(TriTile {
-                        row_start: r0,
-                        rows: r1 - r0,
-                        cols: n,
-                        data: &buf[..off],
-                    });
-                }
-            });
+    pool::run(threads, &|_worker| {
+        let mut buf = vec![0f32; max_area];
+        loop {
+            let t = next.fetch_add(1, Ordering::Relaxed);
+            if t >= bounds.len() {
+                break;
+            }
+            let (r0, r1) = bounds[t];
+            let mut off = 0usize;
+            for i in r0..r1 {
+                let len = n - i;
+                fill_row(
+                    a.row(i),
+                    sq[i],
+                    a,
+                    sq,
+                    i,
+                    metric,
+                    distances,
+                    &mut buf[off..off + len],
+                );
+                off += len;
+            }
+            consume(TriTile { row_start: r0, rows: r1 - r0, cols: n, data: &buf[..off] });
         }
     });
 }
@@ -347,33 +337,17 @@ fn run_direct<F>(bounds: &[(usize, usize)], out: &mut [f32], n: usize, fill: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
-    let mut slots: Vec<Option<&mut [f32]>> = Vec::with_capacity(bounds.len());
+    let mut slots: Vec<&mut [f32]> = Vec::with_capacity(bounds.len());
     let mut rest = out;
     for &(r0, r1) in bounds {
         let (tile, tail) = rest.split_at_mut((r1 - r0) * n);
-        slots.push(Some(tile));
+        slots.push(tile);
         rest = tail;
     }
-    let slots = Mutex::new(slots);
-    let next = AtomicUsize::new(0);
-    let threads = thread_count().min(bounds.len()).max(1);
-    let fill = &fill;
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let t = next.fetch_add(1, Ordering::Relaxed);
-                if t >= bounds.len() {
-                    break;
-                }
-                let tile = {
-                    let mut guard = slots.lock().unwrap();
-                    guard[t].take().expect("each tile is claimed exactly once")
-                };
-                let (r0, r1) = bounds[t];
-                for (bi, i) in (r0..r1).enumerate() {
-                    fill(i, &mut tile[bi * n..(bi + 1) * n]);
-                }
-            });
+    pool::run_indexed(pool::num_threads(), slots, |t, tile| {
+        let (r0, r1) = bounds[t];
+        for (bi, i) in (r0..r1).enumerate() {
+            fill(i, &mut tile[bi * n..(bi + 1) * n]);
         }
     });
 }
@@ -448,7 +422,7 @@ fn build_symmetric(a: &Matrix, metric: Metric, distances: bool) -> Matrix {
     let sq = sq_norms(a);
     // ~4 tiles per worker: coarse enough to amortize scheduling, fine
     // enough that dynamic claiming evens out the triangle's taper
-    let bounds = triangle_bounds(n, thread_count() * 4);
+    let bounds = triangle_bounds(n, pool::num_threads() * 4);
     run_direct(&bounds, out.as_mut_slice(), n, |i, orow| {
         fill_row(a.row(i), sq[i], a, &sq, i, metric, distances, &mut orow[i..])
     });
@@ -462,11 +436,11 @@ fn build_symmetric(a: &Matrix, metric: Metric, distances: bool) -> Matrix {
 /// diagonal-and-above part, so writers and readers never alias. Work is
 /// balanced by lower-triangle area (row i carries i copies).
 fn mirror_lower(out: &mut [f32], n: usize) {
-    let threads = thread_count();
+    let threads = pool::num_threads();
     let total = (n as u64) * (n as u64 - 1) / 2;
     let target = total.div_ceil(threads as u64).max(1);
     let mut uppers: Vec<&[f32]> = Vec::with_capacity(n);
-    // (first row, strict-lower slices) per worker chunk
+    // (first row, strict-lower slices) per claimable chunk
     let mut chunks: Vec<(usize, Vec<&mut [f32]>)> = Vec::with_capacity(threads + 1);
     let mut rest = out;
     let mut cur: Vec<&mut [f32]> = Vec::new();
@@ -489,17 +463,13 @@ fn mirror_lower(out: &mut [f32], n: usize) {
         chunks.push((cur_start, cur));
     }
     let uppers = &uppers;
-    std::thread::scope(|scope| {
-        for (start, rows) in chunks {
-            scope.spawn(move || {
-                for (bi, lo) in rows.into_iter().enumerate() {
-                    let i = start + bi;
-                    for (j, slot) in lo.iter_mut().enumerate() {
-                        // (i, j) mirrors (j, i); uppers[j] starts at col j
-                        *slot = uppers[j][i - j];
-                    }
-                }
-            });
+    pool::run_indexed(threads, chunks, |_t, (start, rows)| {
+        for (bi, lo) in rows.into_iter().enumerate() {
+            let i = start + bi;
+            for (j, slot) in lo.iter_mut().enumerate() {
+                // (i, j) mirrors (j, i); uppers[j] starts at col j
+                *slot = uppers[j][i - j];
+            }
         }
     });
 }
@@ -522,7 +492,7 @@ pub fn sparse_peak_bytes(n: usize, k: usize) -> usize {
     // the greedy area walk closes a wedge within one row of the target,
     // and never spawns more workers than there are wedges
     let tiles = total.div_ceil(target).max(1);
-    let t = thread_count().min(tiles).max(1);
+    let t = pool::num_threads().min(tiles).max(1);
     let wedge = (target + n).min(total.max(1));
     4 * t * wedge // packed per-worker wedge buffers
         + 8 * n * k // CSR columns + values (accumulators build in place)
@@ -532,6 +502,8 @@ pub fn sparse_peak_bytes(n: usize, k: usize) -> usize {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Mutex;
+
     use super::*;
     use crate::rng::Pcg64;
 

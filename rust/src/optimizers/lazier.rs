@@ -115,7 +115,7 @@ pub(crate) fn run(
         if !unseen.is_empty() {
             unseen_gains.clear();
             unseen_gains.resize(unseen.len(), 0.0);
-            batch_gains(&*f, &unseen, &mut unseen_gains, opts.parallel);
+            batch_gains(&*f, &unseen, &mut unseen_gains, opts.parallel, opts.threads);
             evaluations += unseen.len() as u64;
             for (&e, &g) in unseen.iter().zip(unseen_gains.iter()) {
                 debug_assert!(!g.is_nan(), "NaN gain for element {e}");
@@ -153,7 +153,7 @@ pub(crate) fn run(
             }
             stale_gains.clear();
             stale_gains.resize(stale_ids.len(), 0.0);
-            batch_gains(&*f, &stale_ids, &mut stale_gains, opts.parallel);
+            batch_gains(&*f, &stale_ids, &mut stale_gains, opts.parallel, opts.threads);
             evaluations += stale_ids.len() as u64;
             for (&e, &gain) in stale_ids.iter().zip(stale_gains.iter()) {
                 debug_assert!(!gain.is_nan(), "NaN gain for element {e}");

@@ -110,7 +110,7 @@ pub(crate) fn run(
     {
         let ids: Vec<usize> = (0..n).collect();
         let mut gains = vec![0f64; n];
-        batch_gains(&*f, &ids, &mut gains, opts.parallel);
+        batch_gains(&*f, &ids, &mut gains, opts.parallel, opts.threads);
         evaluations += n as u64;
         for (e, &gain) in gains.iter().enumerate() {
             push(&mut heap, Entry { key: gain / budget.cost(e), gain, e, iter: 0 });
@@ -200,7 +200,7 @@ pub(crate) fn run(
             }
             stale_gains.clear();
             stale_gains.resize(stale_ids.len(), 0.0);
-            batch_gains(&*f, &stale_ids, &mut stale_gains, opts.parallel);
+            batch_gains(&*f, &stale_ids, &mut stale_gains, opts.parallel, opts.threads);
             evaluations += stale_ids.len() as u64;
             for (&e, &gain) in stale_ids.iter().zip(stale_gains.iter()) {
                 push(&mut heap, Entry { key: gain / budget.cost(e), gain, e, iter });

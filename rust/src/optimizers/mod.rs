@@ -18,8 +18,10 @@
 //! LazierThanLazy's first touch of each sampled element — no longer call
 //! `marginal_gain_memoized` one element at a time. They collect the
 //! candidate ids and hand them to [`SetFunction::marginal_gains_batch`]
-//! via [`batch_gains`], which chunks the candidates across scoped threads
-//! (`SetFunction: Sync` makes the shared read-only fan-out safe).
+//! via [`batch_gains`], which fans fixed-size candidate chunks out over
+//! the persistent worker pool (`runtime::pool`; `SetFunction: Sync`
+//! makes the shared read-only fan-out safe) — no threads are spawned
+//! per call.
 //!
 //! **Determinism is preserved exactly:** the gains a batch produces are
 //! bit-identical to the serial per-element path (the trait contract), and
@@ -40,6 +42,7 @@ use std::sync::Arc;
 
 use crate::error::{Result, SubmodError};
 use crate::functions::traits::{ElementId, SetFunction, Subset};
+use crate::runtime::pool;
 
 pub use cover::submodular_cover;
 
@@ -108,6 +111,14 @@ pub struct MaximizeOpts {
     /// selection is identical either way (see the module docs), so this
     /// exists for baselining and determinism tests, not correctness.
     pub parallel: bool,
+    /// Cap on the number of pool participants a gain scan uses; `None`
+    /// (default) means the full resolved width
+    /// (`runtime::pool::num_threads()`, i.e. `SUBMODLIB_THREADS` or
+    /// `available_parallelism`). Values are clamped to that width — the
+    /// pool can narrow but never widen. Selections are bit-identical at
+    /// any cap (the pool's indexed-slot determinism rule); this is a
+    /// wall-clock knob only.
+    pub threads: Option<usize>,
 }
 
 impl Default for MaximizeOpts {
@@ -119,6 +130,7 @@ impl Default for MaximizeOpts {
             seed: 1,
             verbose: false,
             parallel: true,
+            threads: None,
         }
     }
 }
@@ -219,25 +231,37 @@ pub(crate) fn should_stop(best_gain: f64, opts: &MaximizeOpts) -> bool {
         || (opts.stop_if_zero_gain && best_gain <= ZERO_GAIN_EPS)
 }
 
-/// Below this candidate count a gain scan stays on one thread: spawning
-/// costs more than the saved work (each gain is at most O(n) and usually
-/// far less).
+/// Below this candidate count a gain scan stays on one thread: even a
+/// pool dispatch costs more than the saved work (each gain is at most
+/// O(n) and usually far less).
 pub const PARALLEL_MIN_CANDIDATES: usize = 256;
 
+/// Candidates per claimable chunk of a parallel gain scan. Fixed-size
+/// chunks (instead of one even pre-split per thread) let participants
+/// that land on cheap candidates claim more chunks — better load balance
+/// when `marginal_gains_batch` costs are skewed (e.g. FL sparse rows of
+/// very different degree) — while each candidate still writes its own
+/// output slot, so the bytes out are identical.
+pub const GAIN_CHUNK: usize = 64;
+
 /// Evaluate the memoized gains of `candidates` into `out`, fanning the
-/// batch out across scoped threads when it is large enough (same pattern
-/// as `kernel::tile::build_pairwise`). With `parallel = false` this is
-/// the plain serial per-element loop.
+/// batch out across the persistent worker pool (`runtime::pool`) when it
+/// is large enough. With `parallel = false` this is the plain serial
+/// per-element loop. `threads` caps the participant count (`None` = the
+/// full pool width).
 ///
-/// Chunking cannot change results: each element's gain is computed by the
-/// same `marginal_gains_batch` code against the same (read-only) memoized
-/// state regardless of which thread owns its chunk, and the trait contract
-/// guarantees batch == per-element bit-for-bit.
+/// Parallelism cannot change results: chunks are claimed off an atomic
+/// counter, each element's gain is computed by the same
+/// `marginal_gains_batch` code against the same (read-only) memoized
+/// state whichever participant claims its chunk, every gain lands in its
+/// own pre-split output slot, and the trait contract guarantees batch ==
+/// per-element bit-for-bit — the pool's indexed-slot determinism rule.
 pub fn batch_gains(
     f: &dyn SetFunction,
     candidates: &[ElementId],
     out: &mut [f64],
     parallel: bool,
+    threads: Option<usize>,
 ) {
     debug_assert_eq!(candidates.len(), out.len());
     if !parallel {
@@ -247,19 +271,19 @@ pub fn batch_gains(
         return;
     }
     let len = candidates.len();
-    let threads =
-        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
-    if len < PARALLEL_MIN_CANDIDATES || threads < 2 {
+    let width = threads
+        .map(|t| t.clamp(1, pool::num_threads()))
+        .unwrap_or_else(pool::num_threads);
+    let chunks = len.div_ceil(GAIN_CHUNK);
+    let parts = width.min(chunks);
+    if len < PARALLEL_MIN_CANDIDATES || parts < 2 {
         f.marginal_gains_batch(candidates, out);
         return;
     }
-    let chunk = len.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (cand_chunk, out_chunk) in
-            candidates.chunks(chunk).zip(out.chunks_mut(chunk))
-        {
-            scope.spawn(move || f.marginal_gains_batch(cand_chunk, out_chunk));
-        }
+    pool::run_indexed(parts, out.chunks_mut(GAIN_CHUNK).collect(), |t, out_chunk| {
+        let c0 = t * GAIN_CHUNK;
+        let c1 = (c0 + GAIN_CHUNK).min(len);
+        f.marginal_gains_batch(&candidates[c0..c1], out_chunk);
     });
 }
 

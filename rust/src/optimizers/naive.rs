@@ -43,7 +43,7 @@ pub(crate) fn run(
         }
         gains.clear();
         gains.resize(candidates.len(), 0.0);
-        batch_gains(&*f, &candidates, &mut gains, opts.parallel);
+        batch_gains(&*f, &candidates, &mut gains, opts.parallel, opts.threads);
         evaluations += candidates.len() as u64;
         let mut best: Option<(usize, f64, f64)> = None; // (e, gain, key)
         for (&e, &gain) in candidates.iter().zip(gains.iter()) {

@@ -63,7 +63,7 @@ pub(crate) fn run(
         }
         gains.clear();
         gains.resize(take, 0.0);
-        batch_gains(&*f, &pool[..take], &mut gains, opts.parallel);
+        batch_gains(&*f, &pool[..take], &mut gains, opts.parallel, opts.threads);
         evaluations += take as u64;
         let mut best: Option<(usize, usize, f64)> = None; // (pool pos, e, gain)
         for (pos, (&e, &gain)) in pool[..take].iter().zip(gains.iter()).enumerate() {

@@ -1,16 +1,25 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
-//! `make artifacts` (python/compile/aot.py) and executes them from the
-//! Rust hot path. Python is never involved at run time.
+//! Runtime substrate: the persistent worker pool every parallel layer
+//! runs on, plus the PJRT accelerator path.
 //!
+//! * [`pool`] — lazily-initialized persistent worker pool (std-only).
+//!   All native parallel sections (`kernel::tile` drivers,
+//!   `optimizers::batch_gains`, the sparse wavefront consumer) publish
+//!   scoped jobs here instead of spawning threads per call; see its
+//!   module docs for the `SUBMODLIB_THREADS` contract and the
+//!   indexed-slot determinism rule.
 //! * [`client::Engine`] — PJRT CPU client + compiled-executable registry,
-//!   keyed by the entries in `artifacts/manifest.json`.
+//!   keyed by the entries in `artifacts/manifest.json` (loads the
+//!   AOT-compiled HLO artifacts produced by `make artifacts`; Python is
+//!   never involved at run time).
 //! * [`tiled`] — padding/tiling drivers that stitch fixed-shape artifact
 //!   invocations into arbitrary-shape kernel builds.
 //!
-//! Interchange format is HLO *text* (see aot.py's docstring for why
-//! serialized protos don't work against xla_extension 0.5.1).
+//! Interchange format for artifacts is HLO *text* (see aot.py's
+//! docstring for why serialized protos don't work against
+//! xla_extension 0.5.1).
 
 pub mod client;
+pub mod pool;
 pub mod tiled;
 
 pub use client::{Engine, Manifest};

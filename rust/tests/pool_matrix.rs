@@ -1,0 +1,180 @@
+//! ISSUE 5 cross-thread-count determinism matrix: every selection and
+//! every kernel build must be **bit-identical** at pool width 1, 2, and
+//! the default — the observable half of the pool's indexed-slot
+//! determinism rule (`runtime::pool` module docs). Functions and their
+//! kernels are built *inside* each width context, so the kernel
+//! construction paths (dense direct-write + mirror, sparse wavefront)
+//! are exercised at each width too, not just the gain scans.
+//!
+//! Widths are narrowed per-thread via `pool::with_thread_limit`, which
+//! is what lets one process cover the whole matrix (the pool's spawned
+//! size is fixed at first use); CI additionally runs the entire tier-1
+//! suite under `SUBMODLIB_THREADS=2` so a non-default *configured*
+//! width is exercised end-to-end on every push.
+
+use submodlib::data::synthetic;
+use submodlib::functions::clustered::ClusteredFunction;
+use submodlib::functions::facility_location::FacilityLocation;
+use submodlib::functions::log_determinant::LogDeterminant;
+use submodlib::functions::mi::Flqmi;
+use submodlib::functions::traits::SetFunction;
+use submodlib::kernel::{DenseKernel, Metric, RectKernel, SparseKernel};
+use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use submodlib::runtime::pool;
+
+/// Ground-set size: above `PARALLEL_MIN_CANDIDATES` (256), so the gain
+/// scans genuinely fan out instead of staying on the serial fast path.
+const N: usize = 400;
+const K: usize = 15;
+
+/// `Some(w)` = cap this thread's parallel sections at w participants;
+/// `None` = the full default width.
+fn at_width<T>(width: Option<usize>, f: impl FnOnce() -> T) -> T {
+    match width {
+        Some(w) => pool::with_thread_limit(w, f),
+        None => f(),
+    }
+}
+
+/// Selection fingerprint: pick order with gain bits, plus value bits —
+/// any nondeterminism in the parallel substrate shows up here.
+fn fingerprint(f: &dyn SetFunction, kind: OptimizerKind) -> (Vec<(usize, u64)>, u64) {
+    let sel =
+        maximize(f, Budget::cardinality(K), kind, &MaximizeOpts::default()).unwrap();
+    (sel.order.iter().map(|&(e, g)| (e, g.to_bits())).collect(), sel.value.to_bits())
+}
+
+/// Width 1 is the serial reference; widths 2 and default must reproduce
+/// it exactly under both Naive and Lazy greedy.
+fn assert_width_matrix(label: &str, build: impl Fn() -> Box<dyn SetFunction>) {
+    for kind in [OptimizerKind::NaiveGreedy, OptimizerKind::LazyGreedy] {
+        let reference = at_width(Some(1), || fingerprint(build().as_ref(), kind));
+        for width in [Some(2), None] {
+            let got = at_width(width, || fingerprint(build().as_ref(), kind));
+            assert_eq!(got, reference, "{label} / {kind:?} at width {width:?}");
+        }
+    }
+}
+
+fn ground() -> submodlib::linalg::Matrix {
+    synthetic::blobs(N, 2, 8, 3.0, 71)
+}
+
+#[test]
+fn facility_location_dense_matrix() {
+    let data = ground();
+    assert_width_matrix("FL dense", || {
+        Box::new(FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean)))
+    });
+}
+
+#[test]
+fn facility_location_sparse_matrix() {
+    let data = ground();
+    assert_width_matrix("FL sparse", || {
+        Box::new(FacilityLocation::sparse(
+            SparseKernel::from_data(&data, Metric::Euclidean, 24).unwrap(),
+        ))
+    });
+}
+
+#[test]
+fn facility_location_clustered_matrix() {
+    let data = ground();
+    assert_width_matrix("FL clustered", || {
+        Box::new(
+            ClusteredFunction::from_data(&data, 5, 7, |sub| {
+                Ok(Box::new(FacilityLocation::new(DenseKernel::from_data(
+                    sub,
+                    Metric::Euclidean,
+                ))))
+            })
+            .unwrap(),
+        )
+    });
+}
+
+#[test]
+fn log_determinant_matrix() {
+    let data = ground();
+    assert_width_matrix("LogDeterminant", || {
+        Box::new(
+            LogDeterminant::with_regularization(
+                DenseKernel::from_data(&data, Metric::Rbf { gamma: 0.5 }),
+                0.1,
+            )
+            .unwrap(),
+        )
+    });
+}
+
+#[test]
+fn flqmi_matrix() {
+    let data = ground();
+    let queries = synthetic::blobs(10, 2, 2, 1.0, 72);
+    assert_width_matrix("FLQMI", || {
+        Box::new(
+            Flqmi::new(
+                RectKernel::from_data(&queries, &data, Metric::Euclidean).unwrap(),
+                1.0,
+            )
+            .unwrap(),
+        )
+    });
+}
+
+#[test]
+fn maximize_opts_threads_cap_is_inert_on_results() {
+    // the `MaximizeOpts::threads` knob must be a wall-clock knob only
+    let data = ground();
+    let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+    let budget = Budget::cardinality(K);
+    let base = maximize(&f, budget.clone(), OptimizerKind::NaiveGreedy, &MaximizeOpts::default())
+        .unwrap();
+    for cap in [1usize, 2, usize::MAX] {
+        let capped = maximize(
+            &f,
+            budget.clone(),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts { threads: Some(cap), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(capped.ids(), base.ids(), "threads cap {cap}");
+        assert_eq!(capped.value.to_bits(), base.value.to_bits(), "threads cap {cap}");
+    }
+}
+
+#[test]
+fn kernel_builds_bit_identical_across_widths() {
+    // several wedge/tile boundaries (n > 3·TILE_ROWS) so the width
+    // actually changes the parallel schedule being tested
+    let data = synthetic::blobs(3 * 64 + 17, 6, 5, 2.0, 99);
+    let n = data.rows();
+    let nk = 9;
+    let (ref_dense, ref_sparse) = at_width(Some(1), || {
+        (
+            DenseKernel::from_data(&data, Metric::Euclidean),
+            SparseKernel::from_data(&data, Metric::Euclidean, nk).unwrap(),
+        )
+    });
+    for width in [Some(2), None] {
+        let (dense, sparse) = at_width(width, || {
+            (
+                DenseKernel::from_data(&data, Metric::Euclidean),
+                SparseKernel::from_data(&data, Metric::Euclidean, nk).unwrap(),
+            )
+        });
+        for i in 0..n {
+            let (got, want) = (dense.row(i), ref_dense.row(i));
+            for (j, (g, w)) in got.iter().zip(want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "dense ({i},{j}) width {width:?}");
+            }
+            let (gc, gv) = sparse.row(i);
+            let (wc, wv) = ref_sparse.row(i);
+            assert_eq!(gc, wc, "sparse cols row {i} width {width:?}");
+            for (g, w) in gv.iter().zip(wv) {
+                assert_eq!(g.to_bits(), w.to_bits(), "sparse vals row {i} width {width:?}");
+            }
+        }
+    }
+}
