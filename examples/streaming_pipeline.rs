@@ -77,6 +77,7 @@ fn main() -> anyhow::Result<()> {
         shard_capacity: 256,
         ingest_depth: 128,
         per_shard_factor: 2.0,
+        min_shard_quorum: None,
     };
     let coordinator = Coordinator::new(cfg);
     let data = synthetic::blobs(items, dim, 10, 2.0, 123);

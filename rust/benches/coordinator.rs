@@ -1,6 +1,13 @@
 //! Ablation bench: the L3 streaming coordinator — selection latency vs
 //! shard capacity and stage-1 candidate factor, plus ingest throughput.
 //! (The design choices DESIGN.md §3 calls out for the two-stage scheme.)
+//!
+//! Also emits `BENCH_coordinator.json` (`bench_coordinator/v1`): the
+//! service-level latency distribution — select p50/p99 as the metrics
+//! histogram reports them — so the perf trajectory tracks what an
+//! operator of the service would see, not only harness wall-clock.
+
+use std::collections::BTreeMap;
 
 use submodlib::config::CoordinatorConfig;
 use submodlib::coordinator::{Coordinator, SelectRequest};
@@ -11,6 +18,11 @@ use submodlib::kernel::{DenseKernel, Metric};
 use submodlib::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
 use submodlib::runtime::pool;
 use submodlib::util::bench::BenchRunner;
+use submodlib::util::json::Json;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
 
 fn build(items: usize, dim: usize, cap: usize, factor: f64) -> Coordinator {
     let cfg = CoordinatorConfig {
@@ -19,6 +31,7 @@ fn build(items: usize, dim: usize, cap: usize, factor: f64) -> Coordinator {
         shard_capacity: cap,
         ingest_depth: 256,
         per_shard_factor: factor,
+        min_shard_quorum: None,
     };
     let c = Coordinator::new(cfg);
     let data = synthetic::blobs(items, dim, 10, 2.0, 321);
@@ -88,5 +101,58 @@ fn main() {
         );
         assert!(v >= 0.85 * flat.value);
     }
+
+    // ---- service latency snapshot (BENCH_coordinator.json) -----------
+    // p50/p99 come from the coordinator's own metrics histogram — the
+    // operator-facing numbers — over a fixed select load at the default
+    // ablation point (cap 256, factor 2.0)
+    const SNAPSHOT_SELECTS: usize = 30;
+    let svc = build(items, dim, 256, 2.0);
+    for _ in 0..SNAPSHOT_SELECTS {
+        svc.select(SelectRequest { budget, ..Default::default() }).unwrap();
+    }
+    let m = svc.metrics();
+    eprintln!("service metrics: {m}");
+    assert_eq!(m.selections_served, SNAPSHOT_SELECTS as u64);
+    let snapshot = obj(vec![
+        ("schema", Json::Str("bench_coordinator/v1".to_string())),
+        ("threads", Json::Num(pool::num_threads() as f64)),
+        (
+            "workload",
+            obj(vec![
+                ("items", Json::Num(items as f64)),
+                ("dim", Json::Num(dim as f64)),
+                ("budget", Json::Num(budget as f64)),
+                ("shard_capacity", Json::Num(256.0)),
+                ("per_shard_factor", Json::Num(2.0)),
+                ("selects", Json::Num(SNAPSHOT_SELECTS as f64)),
+            ]),
+        ),
+        (
+            "select_latency",
+            obj(vec![
+                ("p50_us", Json::Num(m.latency_p50_us as f64)),
+                ("p99_us", Json::Num(m.latency_p99_us as f64)),
+            ]),
+        ),
+        (
+            "counters",
+            obj(vec![
+                ("items_ingested", Json::Num(m.items_ingested as f64)),
+                ("selections_served", Json::Num(m.selections_served as f64)),
+                ("selections_failed", Json::Num(m.selections_failed as f64)),
+                ("selections_degraded", Json::Num(m.selections_degraded as f64)),
+                ("shard_failures", Json::Num(m.shard_failures as f64)),
+                ("shard_retries", Json::Num(m.shard_retries as f64)),
+                ("deadline_exceeded", Json::Num(m.deadline_exceeded as f64)),
+                ("drain_restarts", Json::Num(m.drain_restarts as f64)),
+                ("backpressure_waits", Json::Num(m.backpressure_waits as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_coordinator.json", snapshot.to_string())
+        .expect("write BENCH_coordinator.json");
+    eprintln!("wrote BENCH_coordinator.json");
+
     runner.finish("coordinator_ablation");
 }

@@ -44,13 +44,14 @@ impl From<MetricConfig> for crate::kernel::Metric {
 /// Coordinator (streaming service) settings.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Worker threads for per-shard (stage-1) selection fan-out,
-    /// spawned per `select()` request as scoped threads. They are *not*
-    /// pool participants — they must stay off the pool because each one
-    /// submits its shard's kernel builds and gain scans *to* the shared
-    /// `runtime::pool` (whose submission lock serializes those parallel
-    /// sections; a pool job may not submit). Defaults to the pool width
-    /// (honors `SUBMODLIB_THREADS`).
+    /// Participant cap for the stage-1 shard fan-out. Shard evaluations
+    /// run as one job on the shared `runtime::pool` (shards claimed off
+    /// an atomic counter, one result slot per shard); `workers` caps how
+    /// many pool participants join that job — it is a wall-clock knob
+    /// only, clamped to the pool width, and never affects the selected
+    /// bytes. Per-shard kernel builds and gain scans execute inline
+    /// inside the job (the pool is non-reentrant by design). Defaults to
+    /// the pool width (honors `SUBMODLIB_THREADS`).
     pub workers: usize,
     /// Items per shard before a new shard opens.
     pub shard_capacity: usize,
@@ -59,6 +60,14 @@ pub struct CoordinatorConfig {
     /// Stage-1 per-shard candidate multiplier: each shard returns
     /// `ceil(budget * factor / n_shards)` candidates, min 1.
     pub per_shard_factor: f64,
+    /// Minimum number of shards that must produce stage-1 candidates for
+    /// a selection to be served. A shard whose evaluation panics or
+    /// errors is retried once and then dropped; if at least
+    /// `min_shard_quorum` shards survive, the request succeeds in
+    /// *degraded* mode (`SelectResponse::degraded`, `failed_shards`),
+    /// otherwise it fails. `None` (the default) means every shard must
+    /// survive — any post-retry shard failure fails the request.
+    pub min_shard_quorum: Option<usize>,
 }
 
 impl Default for CoordinatorConfig {
@@ -68,6 +77,7 @@ impl Default for CoordinatorConfig {
             shard_capacity: 512,
             ingest_depth: 1024,
             per_shard_factor: 2.0,
+            min_shard_quorum: None,
         }
     }
 }
@@ -134,6 +144,9 @@ impl Config {
             if let Some(x) = c.get("per_shard_factor").and_then(Json::as_f64) {
                 cfg.coordinator.per_shard_factor = x;
             }
+            if let Some(x) = c.get("min_shard_quorum").and_then(Json::as_usize) {
+                cfg.coordinator.min_shard_quorum = Some(x);
+            }
         }
         if let Some(k) = v.get("kernel") {
             if let Some(m) = k.get("metric").and_then(Json::as_str) {
@@ -163,6 +176,11 @@ impl Config {
         }
         if self.coordinator.per_shard_factor <= 0.0 {
             return Err(SubmodError::InvalidParam("per_shard_factor must be > 0".into()));
+        }
+        if self.coordinator.min_shard_quorum == Some(0) {
+            return Err(SubmodError::InvalidParam(
+                "min_shard_quorum must be ≥ 1 when set (omit for all-shards)".into(),
+            ));
         }
         match self.kernel.backend.as_str() {
             "native" | "pjrt" => Ok(()),
@@ -204,6 +222,15 @@ mod tests {
         assert_eq!(c.kernel.metric, MetricConfig::Rbf { gamma: 0.5 });
         assert_eq!(c.kernel.backend, "pjrt");
         assert_eq!(c.out_dir, "x");
+    }
+
+    #[test]
+    fn quorum_parses_and_validates() {
+        // absent → None (all shards must survive)
+        assert_eq!(Config::parse("{}").unwrap().coordinator.min_shard_quorum, None);
+        let c = Config::parse(r#"{"coordinator": {"min_shard_quorum": 3}}"#).unwrap();
+        assert_eq!(c.coordinator.min_shard_quorum, Some(3));
+        assert!(Config::parse(r#"{"coordinator": {"min_shard_quorum": 0}}"#).is_err());
     }
 
     #[test]

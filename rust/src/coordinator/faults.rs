@@ -1,0 +1,262 @@
+//! Deterministic fault injection (failpoints) for the coordinator.
+//!
+//! The fault-tolerance layer (panic isolation, retries, quorum
+//! degradation, deadlines, drain supervision — see [`super::service`])
+//! is only trustworthy if every recovery path is a *reproducible test*.
+//! This module provides named injection sites on the coordinator's hot
+//! paths; `tests/fault_injection.rs` arms them to force panics, delays,
+//! and errors exactly where real faults would occur.
+//!
+//! ## Sites
+//!
+//! * [`STAGE1_EVAL`]   — top of a stage-1 per-shard evaluation, keyed by
+//!   the shard's `base_id` (so a *specific* shard can be killed
+//!   regardless of which pool participant claims it);
+//! * [`DRAIN_LOOP`]    — the ingest drain, once per batch, before the
+//!   store append (key 0);
+//! * [`KERNEL_BUILD`]  — [`super::service::ObjectiveKind`] kernel/
+//!   function construction, keyed by the ground-set size being built
+//!   (distinguishes per-shard builds from the stage-2 merge build).
+//!
+//! ## Determinism
+//!
+//! Count-based triggers ([`Trigger::Times`]) combined with a key filter
+//! are deterministic under any thread interleaving: "the shard with
+//! `base_id` 0 panics on its first 2 evaluations" does not depend on
+//! which worker claims that shard or when. [`Trigger::Prob`] draws from
+//! a seeded [`Pcg64`] stream — bit-reproducible wherever the *hit order*
+//! at a site is deterministic (single-threaded sites like the drain
+//! loop; stochastic-soak tests elsewhere should assert invariants, not
+//! exact schedules).
+//!
+//! ## Cost when disabled
+//!
+//! Without the `faults` cargo feature the registry and configuration API
+//! do not exist and [`failpoint`] is an inlined `Ok(())` — the
+//! production hot paths carry no branch, no lock, no atomic.
+
+/// Stage-1 per-shard evaluation (keyed by shard `base_id`).
+pub const STAGE1_EVAL: &str = "stage1_eval";
+/// Ingest drain loop, once per batch (key 0).
+pub const DRAIN_LOOP: &str = "drain_loop";
+/// Objective kernel/function construction (keyed by ground-set size).
+pub const KERNEL_BUILD: &str = "kernel_build";
+
+/// Check a named injection site. No-op unless the `faults` feature is
+/// enabled *and* the site has been armed with [`inject`]. `key`
+/// identifies the logical unit hitting the site (shard id, build size);
+/// specs may filter on it.
+#[cfg(not(feature = "faults"))]
+#[inline(always)]
+pub fn failpoint(_site: &str, _key: usize) -> crate::error::Result<()> {
+    Ok(())
+}
+
+#[cfg(feature = "faults")]
+pub use enabled::{clear, clear_site, failpoint, hits, inject, FaultAction, FaultSpec, Trigger};
+
+#[cfg(feature = "faults")]
+mod enabled {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Duration;
+
+    use crate::error::{Result, SubmodError};
+    use crate::rng::Pcg64;
+
+    /// What an armed site does when its trigger fires.
+    #[derive(Debug, Clone, Copy, PartialEq)]
+    pub enum FaultAction {
+        /// `panic!` at the site (exercises catch_unwind isolation).
+        Panic,
+        /// Sleep before proceeding (exercises deadlines).
+        Delay(Duration),
+        /// Return a typed `SubmodError::Coordinator` from the site.
+        Error,
+    }
+
+    /// When an armed site fires.
+    #[derive(Debug, Clone, Copy)]
+    pub enum Trigger {
+        /// Fire on the first `n` matching hits, then go quiet.
+        Times(u32),
+        /// Fire each matching hit with probability `p`, drawn from a
+        /// dedicated `Pcg64` seeded with `seed`.
+        Prob { p: f64, seed: u64 },
+    }
+
+    /// A site's armed behavior.
+    #[derive(Debug, Clone, Copy)]
+    pub struct FaultSpec {
+        pub action: FaultAction,
+        /// Only hits whose key matches fire (None = every hit).
+        pub key: Option<usize>,
+        pub trigger: Trigger,
+    }
+
+    struct SiteState {
+        spec: FaultSpec,
+        /// Matching hits that fired so far (bounds `Trigger::Times`).
+        fired: u32,
+        /// Every hit observed at the site, matching or not.
+        hits: u64,
+        rng: Pcg64,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, SiteState>> {
+        static REGISTRY: OnceLock<Mutex<HashMap<String, SiteState>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    /// Registry guard that survives a poisoned mutex: an injected panic
+    /// can unwind through arbitrary frames, and the harness must keep
+    /// working afterwards.
+    fn lock() -> std::sync::MutexGuard<'static, HashMap<String, SiteState>> {
+        registry().lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Arm `site` with `spec` (replacing any previous arming).
+    pub fn inject(site: &str, spec: FaultSpec) {
+        let seed = match spec.trigger {
+            Trigger::Prob { seed, .. } => seed,
+            Trigger::Times(_) => 0,
+        };
+        lock().insert(
+            site.to_string(),
+            SiteState { spec, fired: 0, hits: 0, rng: Pcg64::new(seed) },
+        );
+    }
+
+    /// Disarm one site.
+    pub fn clear_site(site: &str) {
+        lock().remove(site);
+    }
+
+    /// Disarm every site (call between tests).
+    pub fn clear() {
+        lock().clear();
+    }
+
+    /// Hits observed at `site` since it was armed (0 if unarmed).
+    pub fn hits(site: &str) -> u64 {
+        lock().get(site).map_or(0, |s| s.hits)
+    }
+
+    /// See the module docs. The action is *decided* under the registry
+    /// lock but *performed* after releasing it, so a panic or delay
+    /// never wedges or poisons the registry for other sites.
+    pub fn failpoint(site: &str, key: usize) -> Result<()> {
+        let action = {
+            let mut reg = lock();
+            let Some(st) = reg.get_mut(site) else { return Ok(()) };
+            st.hits += 1;
+            if st.spec.key.is_some_and(|k| k != key) {
+                return Ok(());
+            }
+            let fire = match st.spec.trigger {
+                Trigger::Times(n) => st.fired < n,
+                Trigger::Prob { p, .. } => st.rng.next_f64() < p,
+            };
+            if !fire {
+                return Ok(());
+            }
+            st.fired += 1;
+            st.spec.action
+        };
+        match action {
+            FaultAction::Panic => panic!("injected fault: panic at {site} (key {key})"),
+            FaultAction::Delay(d) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+            FaultAction::Error => Err(SubmodError::Coordinator(format!(
+                "injected fault: error at {site} (key {key})"
+            ))),
+        }
+    }
+
+    // NOTE for test authors: the registry is process-global. Tests in
+    // this crate's lib target use synthetic site names (never the real
+    // coordinator sites) so they cannot perturb unrelated tests running
+    // in parallel; tests/fault_injection.rs serializes on its own mutex.
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn unarmed_site_is_noop() {
+            assert!(failpoint("faults_unit_unarmed", 3).is_ok());
+            assert_eq!(hits("faults_unit_unarmed"), 0);
+        }
+
+        #[test]
+        fn times_trigger_fires_exactly_n() {
+            let site = "faults_unit_times";
+            inject(
+                site,
+                FaultSpec { action: FaultAction::Error, key: None, trigger: Trigger::Times(2) },
+            );
+            assert!(failpoint(site, 0).is_err());
+            assert!(failpoint(site, 1).is_err());
+            assert!(failpoint(site, 2).is_ok());
+            assert!(failpoint(site, 3).is_ok());
+            assert_eq!(hits(site), 4);
+            clear_site(site);
+        }
+
+        #[test]
+        fn key_filter_selects_matching_hits_only() {
+            let site = "faults_unit_key";
+            inject(
+                site,
+                FaultSpec {
+                    action: FaultAction::Error,
+                    key: Some(7),
+                    trigger: Trigger::Times(u32::MAX),
+                },
+            );
+            assert!(failpoint(site, 0).is_ok());
+            assert!(failpoint(site, 7).is_err());
+            assert!(failpoint(site, 8).is_ok());
+            assert!(failpoint(site, 7).is_err());
+            clear_site(site);
+        }
+
+        #[test]
+        fn prob_trigger_is_seed_deterministic() {
+            let site = "faults_unit_prob";
+            let run = || -> Vec<bool> {
+                inject(
+                    site,
+                    FaultSpec {
+                        action: FaultAction::Error,
+                        key: None,
+                        trigger: Trigger::Prob { p: 0.5, seed: 42 },
+                    },
+                );
+                let fires = (0..64).map(|i| failpoint(site, i).is_err()).collect();
+                clear_site(site);
+                fires
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a, b, "same seed must give the same fire schedule");
+            assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f), "p=0.5 mixes");
+        }
+
+        #[test]
+        fn panic_action_does_not_wedge_the_registry() {
+            let site = "faults_unit_panic";
+            inject(
+                site,
+                FaultSpec { action: FaultAction::Panic, key: None, trigger: Trigger::Times(1) },
+            );
+            let caught = std::panic::catch_unwind(|| failpoint(site, 0));
+            assert!(caught.is_err(), "armed panic must fire");
+            // the registry still works after unwinding through failpoint
+            assert!(failpoint(site, 0).is_ok());
+            assert_eq!(hits(site), 2);
+            clear_site(site);
+        }
+    }
+}

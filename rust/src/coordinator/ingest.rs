@@ -1,16 +1,36 @@
 //! Bounded ingestion: feature rows flow through a `sync_channel` with
 //! fixed depth — when the drain lags, producers block (backpressure)
-//! instead of ballooning memory. A drain thread moves rows into the
-//! [`super::shard::ShardStore`].
+//! instead of ballooning memory. A supervised drain thread moves rows
+//! into the [`super::shard::ShardStore`].
+//!
+//! ## Fault model (ISSUE 6)
+//!
+//! The drain is the coordinator's single point of ingest failure, so it
+//! is *supervised*: the drain loop runs under `catch_unwind`, and a
+//! panic (anywhere in a batch — including the [`super::faults`]
+//! `drain_loop` site) restarts the loop with the channel receiver and
+//! the `ShardStore` intact, bumping `Metrics::drain_restarts`. Producers
+//! never hang on a drain crash:
+//!
+//! * messages whose replies were in flight when the panic hit see their
+//!   reply channel close → a typed `Coordinator` error (the rows in that
+//!   batch are dropped, at-most-once; the producer may retry);
+//! * messages still queued survive in the channel and are served after
+//!   the restart;
+//! * if the supervisor itself is gone (process teardown), `ingest`'s
+//!   sends and reply receives observe disconnected channels → typed
+//!   errors, again never a hang.
 //!
 //! (The architecture sketch calls for tokio here; the offline registry
 //! ships no async runtime, so the coordinator uses std threads + bounded
 //! channels, which give the same backpressure semantics for this
 //! CPU-bound pipeline.)
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 
+use crate::coordinator::faults;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::shard::ShardStore;
 use crate::error::{Result, SubmodError};
@@ -30,7 +50,9 @@ pub struct IngestHandle {
 
 impl IngestHandle {
     /// Submit one item; blocks (backpressure) when the queue is full.
-    /// Returns the item's global id once stored.
+    /// Returns the item's global id once stored. Every failure mode is a
+    /// typed error — a crashed or restarting drain can fail an in-flight
+    /// item but can never hang the producer.
     pub fn ingest(&self, features: Vec<f32>) -> Result<usize> {
         let (reply, rx) = sync_channel(1);
         let msg = IngestMsg { features, reply };
@@ -58,16 +80,10 @@ impl IngestHandle {
 /// lock under load, small enough that replies stay prompt.
 const DRAIN_BATCH: usize = 64;
 
-/// Spawn the drain thread; returns the producer handle and the join
-/// handle (the drain exits when every producer handle is dropped).
-///
-/// The drain is opportunistically batched: it blocks for the first
-/// message, then soaks up whatever else is already queued (up to
-/// [`DRAIN_BATCH`]) and appends the whole run through
-/// [`ShardStore::push_batch`] — one write-lock acquisition per batch
-/// instead of one per item. Ids stay arrival-ordered (the channel is
-/// FIFO and the batch preserves it) and each producer still gets its own
-/// per-item reply.
+/// Spawn the supervised drain thread; returns the producer handle and
+/// the join handle. The thread exits only when every producer handle is
+/// dropped *and* the loop finishes cleanly — a panicking drain loop is
+/// restarted in place (receiver and store intact, see module docs).
 pub(crate) fn spawn_drain(
     store: Arc<ShardStore>,
     metrics: Arc<Metrics>,
@@ -76,28 +92,59 @@ pub(crate) fn spawn_drain(
     let (tx, rx): (SyncSender<IngestMsg>, Receiver<IngestMsg>) =
         sync_channel(depth.max(1));
     let m = metrics.clone();
-    let join = std::thread::spawn(move || {
-        let mut pending: Vec<IngestMsg> = Vec::with_capacity(DRAIN_BATCH);
-        while let Ok(first) = rx.recv() {
-            pending.push(first);
-            while pending.len() < DRAIN_BATCH {
-                match rx.try_recv() {
-                    Ok(msg) => pending.push(msg),
-                    Err(_) => break,
-                }
-            }
-            let feats: Vec<Vec<f32>> =
-                pending.iter_mut().map(|msg| std::mem::take(&mut msg.features)).collect();
-            let results = store.push_batch(feats);
-            for (msg, res) in pending.drain(..).zip(results) {
-                if res.is_ok() {
-                    m.items_ingested.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                }
-                let _ = msg.reply.send(res);
+    let join = std::thread::spawn(move || loop {
+        let exited = catch_unwind(AssertUnwindSafe(|| drain_loop(&rx, &store, &m)));
+        match exited {
+            // channel closed: every producer is gone — clean shutdown
+            Ok(()) => break,
+            // drain crashed mid-batch: that batch's replies were dropped
+            // during unwind (producers see a typed error); restart with
+            // the store and any queued messages intact
+            Err(_) => {
+                m.drain_restarts.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             }
         }
     });
     (IngestHandle { tx, metrics }, join)
+}
+
+/// The drain proper, opportunistically batched: block for the first
+/// message, soak up whatever else is already queued (up to
+/// [`DRAIN_BATCH`]) and append the whole run through
+/// [`ShardStore::push_batch`] — one write-lock acquisition per batch
+/// instead of one per item. Ids stay arrival-ordered (the channel is
+/// FIFO and the batch preserves it) and each producer still gets its own
+/// per-item reply.
+fn drain_loop(rx: &Receiver<IngestMsg>, store: &ShardStore, m: &Metrics) {
+    let mut pending: Vec<IngestMsg> = Vec::with_capacity(DRAIN_BATCH);
+    while let Ok(first) = rx.recv() {
+        pending.push(first);
+        while pending.len() < DRAIN_BATCH {
+            match rx.try_recv() {
+                Ok(msg) => pending.push(msg),
+                Err(_) => break,
+            }
+        }
+        // injection site: a Panic here unwinds out of drain_loop and the
+        // supervisor restarts it; an Error fails this batch's producers
+        // with the typed error and keeps draining
+        if let Err(e) = faults::failpoint(faults::DRAIN_LOOP, 0) {
+            let text = e.to_string();
+            for msg in pending.drain(..) {
+                let _ = msg.reply.send(Err(SubmodError::Coordinator(text.clone())));
+            }
+            continue;
+        }
+        let feats: Vec<Vec<f32>> =
+            pending.iter_mut().map(|msg| std::mem::take(&mut msg.features)).collect();
+        let results = store.push_batch(feats);
+        for (msg, res) in pending.drain(..).zip(results) {
+            if res.is_ok() {
+                m.items_ingested.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            let _ = msg.reply.send(res);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -169,5 +216,16 @@ mod tests {
         }
         assert_eq!(store.len(), 128);
         assert_eq!(metrics.snapshot().items_ingested, 128);
+    }
+
+    #[test]
+    fn drain_exits_cleanly_when_producers_drop() {
+        let store = Arc::new(ShardStore::new(4));
+        let metrics = Arc::new(Metrics::new());
+        let (h, join) = spawn_drain(store, metrics.clone(), 8);
+        h.ingest(vec![1.0]).unwrap();
+        drop(h);
+        join.join().expect("supervised drain exits cleanly on channel close");
+        assert_eq!(metrics.snapshot().drain_restarts, 0);
     }
 }

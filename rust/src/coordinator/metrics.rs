@@ -1,12 +1,26 @@
 //! Coordinator metrics: lock-free counters plus a fixed-bucket latency
 //! histogram (enough for p50/p99 without external crates).
+//!
+//! Besides throughput accounting, the counters are the observability
+//! surface of the fault-tolerance layer (ISSUE 6): every recovery path —
+//! shard retry, degraded selection, deadline abort, drain respawn — bumps
+//! a dedicated counter so operators (and the fault-injection suite) can
+//! distinguish "healthy", "degraded but serving", and "failing".
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Latency histogram buckets (µs upper bounds), roughly logarithmic.
+/// The last bucket is the overflow catch-all: recorded there, but
+/// *reported* as [`OVERFLOW_CLAMP_US`] (see [`percentile`]).
 const BUCKETS_US: [u64; 12] =
     [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 100_000, 1_000_000, u64::MAX];
+
+/// Finite stand-in reported for the unbounded overflow bucket: one
+/// decade above the last real bound (1 s → 10 s). Reporting the raw
+/// `u64::MAX` sentinel made a single slow selection look like a
+/// ~584 000-year p99 in dashboards and the bench snapshot.
+pub const OVERFLOW_CLAMP_US: u64 = 10_000_000;
 
 /// Shared metrics sink.
 #[derive(Debug, Default)]
@@ -15,6 +29,16 @@ pub struct Metrics {
     pub selections_served: AtomicU64,
     pub selections_failed: AtomicU64,
     pub backpressure_waits: AtomicU64,
+    /// Selections served with at least one shard dropped (quorum met).
+    pub selections_degraded: AtomicU64,
+    /// Stage-1 shard evaluations that failed even after their retry.
+    pub shard_failures: AtomicU64,
+    /// Stage-1 shard evaluations retried after a panic or error.
+    pub shard_retries: AtomicU64,
+    /// Selections aborted because `SelectRequest::deadline` passed.
+    pub deadline_exceeded: AtomicU64,
+    /// Times the supervised ingest drain was restarted after a panic.
+    pub drain_restarts: AtomicU64,
     select_latency: [AtomicU64; 12],
 }
 
@@ -37,6 +61,11 @@ impl Metrics {
             selections_served: self.selections_served.load(Ordering::Relaxed),
             selections_failed: self.selections_failed.load(Ordering::Relaxed),
             backpressure_waits: self.backpressure_waits.load(Ordering::Relaxed),
+            selections_degraded: self.selections_degraded.load(Ordering::Relaxed),
+            shard_failures: self.shard_failures.load(Ordering::Relaxed),
+            shard_retries: self.shard_retries.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            drain_restarts: self.drain_restarts.load(Ordering::Relaxed),
             latency_p50_us: percentile(&hist, 0.50),
             latency_p99_us: percentile(&hist, 0.99),
         }
@@ -53,10 +82,12 @@ fn percentile(hist: &[u64], p: f64) -> u64 {
     for (i, &c) in hist.iter().enumerate() {
         acc += c;
         if acc >= target {
-            return BUCKETS_US[i];
+            // the overflow bucket's `u64::MAX` bound is a sentinel, not a
+            // latency — report the finite clamp instead
+            return BUCKETS_US[i].min(OVERFLOW_CLAMP_US);
         }
     }
-    *BUCKETS_US.last().unwrap()
+    OVERFLOW_CLAMP_US
 }
 
 /// Point-in-time metrics view.
@@ -66,7 +97,13 @@ pub struct MetricsSnapshot {
     pub selections_served: u64,
     pub selections_failed: u64,
     pub backpressure_waits: u64,
-    /// bucketized upper-bound estimates
+    pub selections_degraded: u64,
+    pub shard_failures: u64,
+    pub shard_retries: u64,
+    pub deadline_exceeded: u64,
+    pub drain_restarts: u64,
+    /// bucketized upper-bound estimates (overflow clamped to
+    /// [`OVERFLOW_CLAMP_US`])
     pub latency_p50_us: u64,
     pub latency_p99_us: u64,
 }
@@ -75,11 +112,18 @@ impl std::fmt::Display for MetricsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "ingested={} served={} failed={} backpressure={} p50≤{}µs p99≤{}µs",
+            "ingested={} served={} failed={} degraded={} backpressure={} \
+             shard_failures={} shard_retries={} deadline_exceeded={} \
+             drain_restarts={} p50≤{}µs p99≤{}µs",
             self.items_ingested,
             self.selections_served,
             self.selections_failed,
+            self.selections_degraded,
             self.backpressure_waits,
+            self.shard_failures,
+            self.shard_retries,
+            self.deadline_exceeded,
+            self.drain_restarts,
             self.latency_p50_us,
             self.latency_p99_us
         )
@@ -95,9 +139,11 @@ mod tests {
         let m = Metrics::new();
         m.items_ingested.fetch_add(5, Ordering::Relaxed);
         m.selections_served.fetch_add(2, Ordering::Relaxed);
+        m.shard_retries.fetch_add(1, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.items_ingested, 5);
         assert_eq!(s.selections_served, 2);
+        assert_eq!(s.shard_retries, 1);
     }
 
     #[test]
@@ -113,6 +159,27 @@ mod tests {
     }
 
     #[test]
+    fn overflow_bucket_reports_finite_clamp() {
+        // regression (ISSUE 6 satellite): a latency past the last finite
+        // bound (1 s) lands in the overflow bucket, whose `u64::MAX`
+        // sentinel used to be reported verbatim as the percentile
+        let m = Metrics::new();
+        m.record_select_latency(Duration::from_secs(5));
+        let s = m.snapshot();
+        assert_eq!(s.latency_p50_us, OVERFLOW_CLAMP_US);
+        assert_eq!(s.latency_p99_us, OVERFLOW_CLAMP_US);
+        // mixed: the median stays in a real bucket, p99 is clamped
+        for _ in 0..98 {
+            m.record_select_latency(Duration::from_micros(40));
+        }
+        m.record_select_latency(Duration::from_secs(2));
+        let s = m.snapshot();
+        assert_eq!(s.latency_p50_us, 50);
+        assert_eq!(s.latency_p99_us, OVERFLOW_CLAMP_US);
+        assert!(s.latency_p99_us < u64::MAX);
+    }
+
+    #[test]
     fn empty_histogram_zero() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.latency_p50_us, 0);
@@ -123,6 +190,9 @@ mod tests {
     fn display_mentions_counters() {
         let m = Metrics::new();
         m.items_ingested.fetch_add(3, Ordering::Relaxed);
-        assert!(m.snapshot().to_string().contains("ingested=3"));
+        m.drain_restarts.fetch_add(1, Ordering::Relaxed);
+        let text = m.snapshot().to_string();
+        assert!(text.contains("ingested=3"));
+        assert!(text.contains("drain_restarts=1"));
     }
 }

@@ -1,4 +1,5 @@
-//! Layer-3 coordinator: a streaming subset-selection pipeline.
+//! Layer-3 coordinator: a fault-tolerant streaming subset-selection
+//! pipeline.
 //!
 //! Submodlib is a library, not a service; its natural data-pipeline
 //! deployment (the use cases the paper's §1 motivates — continual data
@@ -7,14 +8,33 @@
 //! coordinator provides:
 //!
 //! * [`ingest`]   — bounded ingestion queue (backpressure) feeding
-//!   fixed-capacity feature [`shard`]s;
-//! * [`service`]  — the orchestrator: routes selection requests to worker
-//!   tasks that run stage-1 greedy per shard in parallel, then merges the
-//!   per-shard candidates with a stage-2 greedy over the union (the
-//!   two-stage scheme of Wei, Iyer & Bilmes 2014, cited by the paper for
-//!   exactly this scaling role);
-//! * [`metrics`]  — ingest/select counters and latency accounting.
+//!   fixed-capacity feature [`shard`]s, drained by a *supervised* thread
+//!   that is restarted in place if it panics;
+//! * [`service`]  — the orchestrator: stage-1 greedy per shard fanned out
+//!   over the shared worker pool, then a stage-2 greedy merge over the
+//!   candidate union (the two-stage scheme of Wei, Iyer & Bilmes 2014,
+//!   cited by the paper for exactly this scaling role);
+//! * [`metrics`]  — ingest/select counters, fault/recovery counters, and
+//!   latency accounting;
+//! * [`faults`]   — deterministic fault injection (failpoints) used by
+//!   `tests/fault_injection.rs` to pin every recovery path (no-op unless
+//!   the `faults` cargo feature is enabled).
+//!
+//! ## Fault model, in one paragraph
+//!
+//! A stage-1 shard evaluation that panics or errors is isolated, retried
+//! once, and then dropped; the request still succeeds — marked
+//! `degraded`, listing `failed_shards` — as long as
+//! `CoordinatorConfig::min_shard_quorum` shards survive (default: all
+//! must). Requests carry an optional deadline and fail fast with
+//! `SubmodError::DeadlineExceeded` instead of blocking. The ingest drain
+//! is supervised: producers get typed errors (never hangs) across a
+//! drain crash, and the drain resumes with the [`ShardStore`] intact.
+//! The whole ground set snapshots to a versioned binary checkpoint from
+//! which a new coordinator serves byte-identical selections. See
+//! [`service`] for the full contract.
 
+pub mod faults;
 pub mod ingest;
 pub mod metrics;
 pub mod service;

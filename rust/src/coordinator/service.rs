@@ -1,20 +1,57 @@
 //! The selection service: two-stage distributed greedy over the sharded
-//! ground set.
+//! ground set, with fault isolation around every shard.
 //!
 //! Stage 1 (fan-out): each shard runs greedy (the requested function +
 //! optimizer) over its own dense kernel, returning
-//! `ceil(budget · factor / n_shards)` local candidates. Shards run on a
-//! scoped thread pool of `cfg.workers` threads.
+//! `ceil(budget · factor / n_shards)` local candidates. Shards are
+//! claimed off the shared `runtime::pool` as one job (`cfg.workers` caps
+//! the participants); per-shard kernel builds and gain scans execute
+//! inline inside the job.
 //!
-//! Stage 2 (merge): the union of candidates forms a reduced ground set; a
-//! final greedy over its kernel picks the answer. This is the classic
+//! Stage 2 (merge): the union of candidates forms a reduced ground set;
+//! a final greedy over its kernel picks the answer. This is the classic
 //! composable two-stage scheme (Wei, Iyer & Bilmes 2014 — cited by the
 //! paper for exactly this scaling role; same shape as GreeDi).
+//!
+//! ## Fault model (ISSUE 6)
+//!
+//! The two-stage scheme keeps a partition-greedy approximation story per
+//! *surviving* shard, so the service degrades instead of dying:
+//!
+//! * **What retries:** a stage-1 shard evaluation that panics or errors
+//!   is retried once (`Metrics::shard_retries`). Panics are contained by
+//!   `catch_unwind` inside the fan-out job — they never unwind into the
+//!   worker pool or tear down the request.
+//! * **What degrades:** a shard that fails even its retry is dropped
+//!   (`Metrics::shard_failures`). If at least
+//!   `CoordinatorConfig::min_shard_quorum` shards survive (default: all
+//!   must), selection proceeds over the survivors and the response is
+//!   marked `degraded` with the dropped shards' base ids in
+//!   `failed_shards` (`Metrics::selections_degraded`).
+//! * **What errors:** quorum failures return a typed `Coordinator`
+//!   error; a request running past `SelectRequest::deadline` — checked
+//!   between shard claims and again before stage 2 — returns
+//!   `SubmodError::DeadlineExceeded` (`Metrics::deadline_exceeded`)
+//!   instead of blocking unboundedly. Stage-2 failures fail the request:
+//!   there is no partial answer to degrade to. Every failed request
+//!   bumps `Metrics::selections_failed`.
+//! * **What recovers:** the ingest drain is supervised (see
+//!   [`super::ingest`]), and the whole ground set can be checkpointed
+//!   and restored ([`Coordinator::checkpoint`] /
+//!   [`Coordinator::from_checkpoint`]); restored selections are
+//!   byte-identical to pre-crash ones because selection is a
+//!   deterministic function of the stored rows.
+//!
+//! Every path above is pinned by the deterministic fault-injection suite
+//! (`tests/fault_injection.rs`, via [`super::faults`]).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::CoordinatorConfig;
+use crate::coordinator::faults;
 use crate::coordinator::ingest::{spawn_drain, IngestHandle};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::shard::{Shard, ShardStore};
@@ -27,6 +64,7 @@ use crate::functions::traits::SetFunction;
 use crate::kernel::{DenseKernel, Metric};
 use crate::linalg::Matrix;
 use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use crate::runtime::pool;
 
 /// Which objective a selection request optimizes.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,6 +78,9 @@ pub enum ObjectiveKind {
 
 impl ObjectiveKind {
     fn build(&self, data: &Matrix, metric: Metric) -> Result<Box<dyn SetFunction>> {
+        // injection site: keyed by the ground-set size being built, so
+        // tests can target per-shard builds vs the stage-2 merge build
+        faults::failpoint(faults::KERNEL_BUILD, data.rows())?;
         Ok(match *self {
             ObjectiveKind::FacilityLocation => {
                 Box::new(FacilityLocation::new(DenseKernel::from_data(data, metric)))
@@ -76,6 +117,11 @@ pub struct SelectRequest {
     pub budget: usize,
     pub optimizer: OptimizerKind,
     pub metric: Metric,
+    /// Wall-clock budget for this request, measured from `select()`
+    /// entry. Checked between shard claims and before the stage-2 merge;
+    /// when exceeded the request fails with
+    /// `SubmodError::DeadlineExceeded`. `None` (default) = no deadline.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for SelectRequest {
@@ -85,6 +131,7 @@ impl Default for SelectRequest {
             budget: 10,
             optimizer: OptimizerKind::LazyGreedy,
             metric: Metric::Euclidean,
+            deadline: None,
         }
     }
 }
@@ -94,9 +141,22 @@ impl Default for SelectRequest {
 pub struct SelectResponse {
     pub ids: Vec<usize>,
     pub value: f64,
+    /// Shards consulted (including any that failed and were dropped).
     pub shards: usize,
     pub stage1_candidates: usize,
     pub elapsed_ms: f64,
+    /// True when at least one shard was dropped after its retry and the
+    /// answer was computed over the surviving shards only.
+    pub degraded: bool,
+    /// `base_id`s of the dropped shards (ascending; empty when healthy).
+    pub failed_shards: Vec<usize>,
+}
+
+/// One shard's stage-1 outcome: candidate ids, or the (stringified)
+/// error/panic that survived the retry.
+struct ShardOutcome {
+    base_id: usize,
+    result: std::result::Result<Vec<usize>, String>,
 }
 
 /// The coordinator.
@@ -111,9 +171,29 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Coordinator {
         let store = Arc::new(ShardStore::new(cfg.shard_capacity));
+        Coordinator::with_store(cfg, store)
+    }
+
+    /// Rebuild a coordinator from a [`checkpoint`](Self::checkpoint)
+    /// blob: the restored store keeps its checkpointed shard layout and
+    /// capacity (new ingest continues from the checkpointed id space);
+    /// `cfg.shard_capacity` is ignored in favor of the checkpoint's.
+    pub fn from_checkpoint(cfg: CoordinatorConfig, bytes: &[u8]) -> Result<Coordinator> {
+        let store = Arc::new(ShardStore::restore(bytes)?);
+        Ok(Coordinator::with_store(cfg, store))
+    }
+
+    fn with_store(cfg: CoordinatorConfig, store: Arc<ShardStore>) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
         let (ingest, drain) = spawn_drain(store.clone(), metrics.clone(), cfg.ingest_depth);
         Coordinator { store, metrics, ingest, cfg, _drain: drain }
+    }
+
+    /// Serialize the current ground set (see [`ShardStore::checkpoint`]).
+    /// Selections over a store restored from this blob are byte-identical
+    /// to selections over the live store at checkpoint time.
+    pub fn checkpoint(&self) -> Vec<u8> {
+        self.store.checkpoint()
     }
 
     /// Producer handle for streaming items in.
@@ -134,14 +214,23 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Run one two-stage selection over the current ground set.
+    /// Run one two-stage selection over the current ground set. See the
+    /// module docs for the fault model (retry → degrade → error).
     pub fn select(&self, req: SelectRequest) -> Result<SelectResponse> {
+        let res = self.select_inner(&req);
+        if let Err(e) = &res {
+            if matches!(e, SubmodError::DeadlineExceeded) {
+                self.metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            }
+            self.metrics.selections_failed.fetch_add(1, Ordering::Relaxed);
+        }
+        res
+    }
+
+    fn select_inner(&self, req: &SelectRequest) -> Result<SelectResponse> {
         let t0 = Instant::now();
         let shards = self.store.snapshot();
         if shards.is_empty() {
-            self.metrics
-                .selections_failed
-                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             return Err(SubmodError::Coordinator("ground set is empty".into()));
         }
         let n_shards = shards.len();
@@ -150,31 +239,80 @@ impl Coordinator {
                 as usize)
                 .max(1);
 
-        // stage 1: fan out per-shard greedy over `workers` threads
-        let queue: Mutex<Vec<Shard>> = Mutex::new(shards);
-        let results: Mutex<Vec<Result<Vec<usize>>>> = Mutex::new(Vec::new());
-        std::thread::scope(|scope| {
-            for _ in 0..self.cfg.workers.max(1) {
-                scope.spawn(|| loop {
-                    let shard = {
-                        let mut q = queue.lock().unwrap();
-                        match q.pop() {
-                            Some(s) => s,
-                            None => break,
-                        }
-                    };
-                    let r = stage1(&shard, &req, per_shard);
-                    results.lock().unwrap().push(r);
-                });
+        // stage 1: fan the shards out over the shared pool as one job.
+        // Shards are claimed off an atomic counter and each outcome goes
+        // to its own slot (slot index = shard index), so the result is
+        // independent of the participant count. Each evaluation runs
+        // under catch_unwind with one retry; panics never reach the pool.
+        let deadline_hit = AtomicBool::new(false);
+        let outcomes: Vec<Mutex<Option<ShardOutcome>>> =
+            (0..n_shards).map(|_| Mutex::new(None)).collect();
+        pool::run_indexed(self.cfg.workers.max(1), shards, |t, shard: Shard| {
+            // deadline check between shard claims: once the budget is
+            // gone, remaining shards are skipped, not evaluated
+            if let Some(d) = req.deadline {
+                if deadline_hit.load(Ordering::Relaxed) || t0.elapsed() >= d {
+                    deadline_hit.store(true, Ordering::Relaxed);
+                    return;
+                }
             }
+            let base_id = shard.base_id;
+            let result = match run_isolated(|| stage1(&shard, req, per_shard)) {
+                Ok(ids) => Ok(ids),
+                Err(_first) => {
+                    self.metrics.shard_retries.fetch_add(1, Ordering::Relaxed);
+                    match run_isolated(|| stage1(&shard, req, per_shard)) {
+                        Ok(ids) => Ok(ids),
+                        Err(e) => {
+                            self.metrics.shard_failures.fetch_add(1, Ordering::Relaxed);
+                            Err(e)
+                        }
+                    }
+                }
+            };
+            *outcomes[t].lock().unwrap() = Some(ShardOutcome { base_id, result });
         });
-        let mut candidates: Vec<usize> = Vec::new();
-        for r in results.into_inner().unwrap() {
-            candidates.extend(r?);
+        if deadline_hit.load(Ordering::Relaxed)
+            || req.deadline.is_some_and(|d| t0.elapsed() >= d)
+        {
+            return Err(SubmodError::DeadlineExceeded);
         }
+
+        // quorum policy: proceed over the survivors iff enough remain
+        let mut candidates: Vec<usize> = Vec::new();
+        let mut failed_shards: Vec<usize> = Vec::new();
+        let mut last_error = String::new();
+        for slot in &outcomes {
+            let outcome = slot
+                .lock()
+                .unwrap()
+                .take()
+                .expect("every shard slot is filled when no deadline fired");
+            match outcome.result {
+                Ok(ids) => candidates.extend(ids),
+                Err(e) => {
+                    failed_shards.push(outcome.base_id);
+                    last_error = e;
+                }
+            }
+        }
+        let survivors = n_shards - failed_shards.len();
+        let quorum = self.cfg.min_shard_quorum.map_or(n_shards, |q| q.clamp(1, n_shards));
+        if survivors < quorum {
+            return Err(SubmodError::Coordinator(format!(
+                "shard quorum not met: {survivors}/{n_shards} shards survived stage 1 \
+                 (quorum {quorum}); last shard error: {last_error}"
+            )));
+        }
+        let degraded = !failed_shards.is_empty();
         candidates.sort_unstable();
         candidates.dedup();
         let stage1_candidates = candidates.len();
+
+        // deadline check before the stage-2 merge
+        if req.deadline.is_some_and(|d| t0.elapsed() >= d) {
+            return Err(SubmodError::DeadlineExceeded);
+        }
 
         // stage 2: greedy over the candidate union
         let features = self.store.gather(&candidates)?;
@@ -194,20 +332,47 @@ impl Coordinator {
 
         let elapsed = t0.elapsed();
         self.metrics.record_select_latency(elapsed);
-        self.metrics
-            .selections_served
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.selections_served.fetch_add(1, Ordering::Relaxed);
+        if degraded {
+            self.metrics.selections_degraded.fetch_add(1, Ordering::Relaxed);
+        }
         Ok(SelectResponse {
             ids,
             value: sel.value,
             shards: n_shards,
             stage1_candidates,
             elapsed_ms: elapsed.as_secs_f64() * 1e3,
+            degraded,
+            failed_shards,
         })
     }
 }
 
+/// Run one shard evaluation with panics contained: a panic or error
+/// becomes a stringified failure the fan-out can retry or record, never
+/// an unwind into the pool.
+fn run_isolated<T>(f: impl FnOnce() -> Result<T>) -> std::result::Result<T, String> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(Ok(v)) => Ok(v),
+        Ok(Err(e)) => Err(e.to_string()),
+        Err(payload) => Err(panic_message(&*payload)),
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".to_string()
+    }
+}
+
 fn stage1(shard: &Shard, req: &SelectRequest, per_shard: usize) -> Result<Vec<usize>> {
+    // injection site: keyed by the shard's base_id so a specific shard
+    // can be killed deterministically under any claim order
+    faults::failpoint(faults::STAGE1_EVAL, shard.base_id)?;
     let data = shard.matrix();
     let f = req.objective.build(&data, req.metric)?;
     let budget = per_shard.min(shard.len());
@@ -238,6 +403,7 @@ mod tests {
             shard_capacity: shard_cap,
             ingest_depth: 64,
             per_shard_factor: 2.0,
+            min_shard_quorum: None,
         };
         let c = Coordinator::new(cfg);
         let data = synthetic::blobs(n, 2, 5, 1.5, 77);
@@ -255,12 +421,16 @@ mod tests {
         assert_eq!(resp.ids.len(), 10);
         assert!(resp.shards >= 4);
         assert!(resp.stage1_candidates >= 10);
+        assert!(!resp.degraded);
+        assert!(resp.failed_shards.is_empty());
         let set: std::collections::HashSet<_> = resp.ids.iter().collect();
         assert_eq!(set.len(), 10);
         assert!(resp.ids.iter().all(|&id| id < 120));
         let m = c.metrics();
         assert_eq!(m.selections_served, 1);
         assert_eq!(m.items_ingested, 120);
+        assert_eq!(m.selections_degraded, 0);
+        assert_eq!(m.shard_failures, 0);
     }
 
     #[test]
@@ -320,5 +490,49 @@ mod tests {
         let r2 = c.select(SelectRequest { budget: 5, ..Default::default() }).unwrap();
         assert!(r2.shards >= r1.shards);
         assert_eq!(c.len(), 80);
+    }
+
+    #[test]
+    fn generous_deadline_is_met() {
+        let c = seeded_coordinator(80, 20);
+        let resp = c
+            .select(SelectRequest {
+                budget: 5,
+                deadline: Some(Duration::from_secs(600)),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(resp.ids.len(), 5);
+        assert_eq!(c.metrics().deadline_exceeded, 0);
+    }
+
+    #[test]
+    fn zero_deadline_exceeds_immediately() {
+        let c = seeded_coordinator(80, 20);
+        let err = c
+            .select(SelectRequest {
+                budget: 5,
+                deadline: Some(Duration::ZERO),
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert!(matches!(err, SubmodError::DeadlineExceeded), "{err}");
+        let m = c.metrics();
+        assert_eq!(m.deadline_exceeded, 1);
+        assert_eq!(m.selections_failed, 1);
+        // no shard was charged a failure for a deadline skip
+        assert_eq!(m.shard_failures, 0);
+    }
+
+    #[test]
+    fn checkpoint_restore_preserves_selection() {
+        let c = seeded_coordinator(90, 24);
+        let before = c.select(SelectRequest { budget: 6, ..Default::default() }).unwrap();
+        let blob = c.checkpoint();
+        let r = Coordinator::from_checkpoint(CoordinatorConfig::default(), &blob).unwrap();
+        assert_eq!(r.len(), 90);
+        let after = r.select(SelectRequest { budget: 6, ..Default::default() }).unwrap();
+        assert_eq!(after.ids, before.ids);
+        assert_eq!(after.value.to_bits(), before.value.to_bits());
     }
 }

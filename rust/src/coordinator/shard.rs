@@ -8,6 +8,14 @@
 //! `Shard::matrix()` and `ShardStore::gather` copy contiguous slices
 //! instead of chasing one heap allocation per row, and `push_batch`
 //! appends a whole batch under a single write-lock acquisition.
+//!
+//! The store is also the coordinator's recovery unit:
+//! [`ShardStore::checkpoint`] serializes the full state (shard layout
+//! included) to a versioned length-prefixed binary blob, and
+//! [`ShardStore::restore`] rebuilds an identical store from it. Because
+//! selection is a deterministic function of the stored rows, a restored
+//! store serves byte-identical selections to the original (pinned by
+//! `tests/fault_injection.rs`).
 
 use std::sync::RwLock;
 
@@ -144,6 +152,98 @@ impl ShardStore {
             .collect()
     }
 
+    /// Serialize the full store — shard layout, ids, features — to a
+    /// versioned binary blob (all integers u64 little-endian, feature
+    /// rows as raw f32 LE, so the round trip is bit-exact).
+    ///
+    /// Layout: magic `SMCK`, version u32, capacity, dim flag + dim,
+    /// total, shard count, then per shard `base_id, len, dim,
+    /// value-count, values`.
+    pub fn checkpoint(&self) -> Vec<u8> {
+        let inner = self.inner.read().unwrap();
+        let mut out = Vec::new();
+        out.extend_from_slice(CHECKPOINT_MAGIC);
+        out.extend_from_slice(&CHECKPOINT_VERSION.to_le_bytes());
+        put_u64(&mut out, self.capacity as u64);
+        out.push(inner.dim.is_some() as u8);
+        put_u64(&mut out, inner.dim.unwrap_or(0) as u64);
+        put_u64(&mut out, inner.total as u64);
+        put_u64(&mut out, inner.shards.len() as u64);
+        for s in &inner.shards {
+            put_u64(&mut out, s.base_id as u64);
+            put_u64(&mut out, s.len as u64);
+            put_u64(&mut out, s.dim as u64);
+            put_u64(&mut out, s.data.len() as u64);
+            for v in &s.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Rebuild a store from a [`checkpoint`](Self::checkpoint) blob.
+    /// Validates magic, version, and structural invariants (shard
+    /// buffer sizes, contiguous id ranges, total) so a truncated or
+    /// corrupted blob is rejected instead of serving wrong rows.
+    pub fn restore(bytes: &[u8]) -> Result<ShardStore> {
+        let mut r = Reader { b: bytes, i: 0 };
+        let magic = r.take(4)?;
+        if magic != CHECKPOINT_MAGIC {
+            return Err(corrupt("bad magic"));
+        }
+        let version = u32::from_le_bytes(r.take(4)?.try_into().unwrap());
+        if version != CHECKPOINT_VERSION {
+            return Err(corrupt(&format!(
+                "unsupported checkpoint version {version} (supported: {CHECKPOINT_VERSION})"
+            )));
+        }
+        let capacity = r.u64()? as usize;
+        if capacity == 0 {
+            return Err(corrupt("capacity 0"));
+        }
+        let has_dim = r.take(1)?[0] != 0;
+        let dim_raw = r.u64()? as usize;
+        let dim = has_dim.then_some(dim_raw);
+        let total = r.u64()? as usize;
+        let n_shards = r.u64()? as usize;
+        let mut shards = Vec::new();
+        let mut expect_base = 0usize;
+        for _ in 0..n_shards {
+            let base_id = r.u64()? as usize;
+            let len = r.u64()? as usize;
+            let sdim = r.u64()? as usize;
+            let count = r.u64()? as usize;
+            if count != len.checked_mul(sdim).ok_or_else(|| corrupt("shard size overflow"))? {
+                return Err(corrupt("shard buffer size mismatch"));
+            }
+            if base_id != expect_base {
+                return Err(corrupt("non-contiguous shard id ranges"));
+            }
+            if Some(sdim) != dim && len > 0 {
+                return Err(corrupt("shard dim disagrees with store dim"));
+            }
+            let byte_len =
+                count.checked_mul(4).ok_or_else(|| corrupt("shard size overflow"))?;
+            let raw = r.take(byte_len)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            expect_base += len;
+            shards.push(Shard { base_id, len, dim: sdim, data });
+        }
+        if expect_base != total {
+            return Err(corrupt("total disagrees with shard lengths"));
+        }
+        if r.i != bytes.len() {
+            return Err(corrupt("trailing bytes"));
+        }
+        Ok(ShardStore {
+            capacity,
+            inner: RwLock::new(Inner { dim, shards, total }),
+        })
+    }
+
     /// Fetch features for a set of global ids (stage-2 merge).
     pub fn gather(&self, ids: &[usize]) -> Result<Matrix> {
         let inner = self.inner.read().unwrap();
@@ -163,6 +263,41 @@ impl ShardStore {
             m.row_mut(row).copy_from_slice(shard.row(local));
         }
         Ok(m)
+    }
+}
+
+const CHECKPOINT_MAGIC: &[u8; 4] = b"SMCK";
+const CHECKPOINT_VERSION: u32 = 1;
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn corrupt(why: &str) -> SubmodError {
+    SubmodError::Coordinator(format!("corrupt checkpoint: {why}"))
+}
+
+/// Bounds-checked cursor over a checkpoint blob.
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.i.checked_add(n).filter(|&e| e <= self.b.len());
+        match end {
+            Some(e) => {
+                let s = &self.b[self.i..e];
+                self.i = e;
+                Ok(s)
+            }
+            None => Err(corrupt("truncated")),
+        }
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 }
 
@@ -238,6 +373,74 @@ mod tests {
         let m = store.gather(&[3, 0]).unwrap();
         assert_eq!(m.row(0), &[6.0, 7.0]);
         assert_eq!(m.row(1), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn checkpoint_round_trip_is_bit_exact() {
+        let store = ShardStore::new(3);
+        for i in 0..8 {
+            // exercise non-trivial f32 bit patterns, including subnormals
+            store.push(vec![i as f32 * 0.1, f32::MIN_POSITIVE * (i + 1) as f32]).unwrap();
+        }
+        let blob = store.checkpoint();
+        let back = ShardStore::restore(&blob).unwrap();
+        assert_eq!(back.len(), 8);
+        let (a, b) = (store.snapshot(), back.snapshot());
+        assert_eq!(a.len(), b.len());
+        for (sa, sb) in a.iter().zip(&b) {
+            assert_eq!(sa.base_id, sb.base_id);
+            assert_eq!(sa.len(), sb.len());
+            for i in 0..sa.len() {
+                let (ra, rb) = (sa.row(i), sb.row(i));
+                assert_eq!(ra.len(), rb.len());
+                for (x, y) in ra.iter().zip(rb) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+        }
+        // restored store keeps ingesting with the checkpointed capacity
+        assert_eq!(back.push(vec![9.0, 9.0]).unwrap(), 8);
+        assert_eq!(back.snapshot().len(), 3);
+        // a second checkpoint of an unchanged store is byte-identical
+        assert_eq!(store.checkpoint(), blob);
+    }
+
+    #[test]
+    fn empty_store_round_trips() {
+        let store = ShardStore::new(5);
+        let back = ShardStore::restore(&store.checkpoint()).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(back.push(vec![1.0]).unwrap(), 0);
+    }
+
+    #[test]
+    fn corrupt_checkpoints_rejected() {
+        let store = ShardStore::new(3);
+        for i in 0..5 {
+            store.push(vec![i as f32]).unwrap();
+        }
+        let blob = store.checkpoint();
+        // truncation at every prefix length must error, never panic
+        for cut in 0..blob.len() {
+            assert!(ShardStore::restore(&blob[..cut]).is_err(), "cut {cut}");
+        }
+        // trailing garbage
+        let mut long = blob.clone();
+        long.push(0);
+        assert!(ShardStore::restore(&long).is_err());
+        // bad magic
+        let mut bad = blob.clone();
+        bad[0] ^= 0xff;
+        assert!(ShardStore::restore(&bad).is_err());
+        // unsupported version
+        let mut vers = blob.clone();
+        vers[4] = 0xfe;
+        assert!(ShardStore::restore(&vers).is_err());
+        // corrupted shard length breaks the structural invariants
+        let mut len_broken = blob;
+        let shard_table = 4 + 4 + 8 + 1 + 8 + 8 + 8; // header up to first shard
+        len_broken[shard_table + 8] ^= 1; // first shard's len
+        assert!(ShardStore::restore(&len_broken).is_err());
     }
 
     #[test]

@@ -23,6 +23,11 @@ pub enum SubmodError {
     Io(std::io::Error),
     /// Coordinator/service-level failures (channel closed, worker died).
     Coordinator(String),
+    /// A selection request ran past its `SelectRequest::deadline`. The
+    /// coordinator checks the clock between shard claims and before the
+    /// stage-2 merge, so a stuck or slow shard surfaces as this typed
+    /// error instead of unbounded blocking.
+    DeadlineExceeded,
 }
 
 impl fmt::Display for SubmodError {
@@ -37,6 +42,7 @@ impl fmt::Display for SubmodError {
             SubmodError::Runtime(m) => write!(f, "runtime error: {m}"),
             SubmodError::Io(e) => write!(f, "io error: {e}"),
             SubmodError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            SubmodError::DeadlineExceeded => write!(f, "deadline exceeded"),
         }
     }
 }

@@ -17,6 +17,7 @@ fn cfg(workers: usize, cap: usize) -> CoordinatorConfig {
         shard_capacity: cap,
         ingest_depth: 32,
         per_shard_factor: 2.0,
+        min_shard_quorum: None,
     }
 }
 
@@ -123,6 +124,57 @@ fn all_objectives_serve() {
         assert_eq!(uniq.len(), 6, "{obj:?} returned duplicates");
     }
     assert_eq!(c.metrics().selections_served, 4);
+}
+
+#[test]
+fn concurrent_selects_are_byte_identical_to_serial() {
+    // multi-tenant service behavior: N clients hammering select() on a
+    // frozen ground set must each get exactly the serial answer — the
+    // fan-out's claim/slot structure and the shared pool may reorder
+    // *work*, never *results*
+    let c = Coordinator::new(cfg(2, 48));
+    let data = synthetic::blobs(256, 3, 6, 1.2, 66);
+    let h = c.ingest_handle();
+    for i in 0..256 {
+        h.ingest(data.row(i).to_vec()).unwrap();
+    }
+    let reqs = [
+        SelectRequest { budget: 9, ..Default::default() },
+        SelectRequest {
+            objective: ObjectiveKind::GraphCut { lambda: 0.3 },
+            budget: 7,
+            ..Default::default()
+        },
+    ];
+    // serial baselines first (store is frozen: no ingest from here on)
+    let baselines: Vec<_> =
+        reqs.iter().map(|r| c.select(r.clone()).unwrap()).collect();
+    let served_before = c.metrics().selections_served;
+    const TENANTS: usize = 6;
+    const ROUNDS: usize = 4;
+    std::thread::scope(|scope| {
+        for t in 0..TENANTS {
+            let c = &c;
+            let req = &reqs[t % reqs.len()];
+            let base = &baselines[t % reqs.len()];
+            scope.spawn(move || {
+                for _ in 0..ROUNDS {
+                    let resp = c.select(req.clone()).unwrap();
+                    assert_eq!(resp.ids, base.ids, "tenant {t} diverged from serial");
+                    assert_eq!(
+                        resp.value.to_bits(),
+                        base.value.to_bits(),
+                        "tenant {t} value not bit-identical"
+                    );
+                    assert!(!resp.degraded);
+                }
+            });
+        }
+    });
+    let m = c.metrics();
+    assert_eq!(m.selections_served, served_before + (TENANTS * ROUNDS) as u64);
+    assert_eq!(m.selections_failed, 0);
+    assert_eq!(m.shard_failures, 0);
 }
 
 #[test]

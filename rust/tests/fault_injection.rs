@@ -1,0 +1,334 @@
+//! Deterministic fault-injection suite (ISSUE 6): every recovery path of
+//! the fault-tolerant coordinator, forced via `coordinator::faults` and
+//! pinned as a reproducible test. Requires the `faults` cargo feature
+//! (see Cargo.toml `required-features`; CI runs this with
+//! `--features faults`).
+//!
+//! The failpoint registry is process-global, so tests serialize on one
+//! mutex and disarm every site on entry and exit (panic-safe guard) —
+//! ordering between tests can never change an outcome.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use submodlib::config::CoordinatorConfig;
+use submodlib::coordinator::faults::{self, FaultAction, FaultSpec, Trigger};
+use submodlib::coordinator::{Coordinator, SelectRequest};
+use submodlib::data::synthetic;
+use submodlib::error::SubmodError;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Serialize the test and guarantee a clean registry before and after,
+/// even when the test panics.
+struct FaultGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+fn exclusive() -> FaultGuard {
+    let g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    faults::clear();
+    FaultGuard(g)
+}
+
+const SHARD_CAP: usize = 32;
+const N_ITEMS: usize = 96; // 3 shards: base ids 0, 32, 64
+
+fn cfg(workers: usize, quorum: Option<usize>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        shard_capacity: SHARD_CAP,
+        ingest_depth: 64,
+        per_shard_factor: 2.0,
+        min_shard_quorum: quorum,
+    }
+}
+
+fn seeded(workers: usize, quorum: Option<usize>) -> Coordinator {
+    let c = Coordinator::new(cfg(workers, quorum));
+    let data = synthetic::blobs(N_ITEMS, 2, 5, 1.5, 77);
+    let h = c.ingest_handle();
+    for i in 0..N_ITEMS {
+        h.ingest(data.row(i).to_vec()).unwrap();
+    }
+    c
+}
+
+fn arm(site: &str, action: FaultAction, key: Option<usize>, trigger: Trigger) {
+    faults::inject(site, FaultSpec { action, key, trigger });
+}
+
+// ---------------------------------------------------------------------
+// Pillar 1: panic isolation, retry, quorum, degraded responses
+// ---------------------------------------------------------------------
+
+#[test]
+fn stage1_panic_yields_degraded_response() {
+    let _g = exclusive();
+    // shard base_id 0 panics on BOTH attempts (first + retry) — key
+    // filtering makes this deterministic under any claim interleaving
+    arm(faults::STAGE1_EVAL, FaultAction::Panic, Some(0), Trigger::Times(2));
+    let c = seeded(2, Some(1));
+    let resp = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+    assert!(resp.degraded, "a dropped shard must mark the response degraded");
+    assert_eq!(resp.failed_shards, [0]); // acceptance: failed_shards ≥ 1
+    assert_eq!(resp.shards, 3);
+    assert_eq!(resp.ids.len(), 8);
+    // nothing can be selected from the dead shard's id range
+    assert!(resp.ids.iter().all(|&id| id >= SHARD_CAP), "{:?}", resp.ids);
+    let m = c.metrics();
+    assert_eq!(m.shard_retries, 1);
+    assert_eq!(m.shard_failures, 1);
+    assert_eq!(m.selections_degraded, 1);
+    assert_eq!(m.selections_served, 1);
+    assert_eq!(m.selections_failed, 0);
+}
+
+#[test]
+fn quorum_policy_is_enforced() {
+    let _g = exclusive();
+    // same dead shard, but the default quorum (all shards) refuses to
+    // serve a degraded answer
+    arm(faults::STAGE1_EVAL, FaultAction::Panic, Some(0), Trigger::Times(2));
+    let c = seeded(2, None);
+    let err = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap_err();
+    assert!(
+        matches!(&err, SubmodError::Coordinator(m) if m.contains("quorum")),
+        "{err}"
+    );
+    let m = c.metrics();
+    assert_eq!(m.selections_failed, 1);
+    assert_eq!(m.selections_served, 0);
+    assert_eq!(m.shard_failures, 1);
+
+    // quorum 2 tolerates one dead shard out of three...
+    faults::clear();
+    arm(faults::STAGE1_EVAL, FaultAction::Panic, Some(0), Trigger::Times(2));
+    let c = seeded(2, Some(2));
+    assert!(c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap().degraded);
+
+    // ...but not two dead shards. A single worker claims shards serially
+    // (base ids 0, 32, 64), so an unfiltered Times(4) kills exactly
+    // shards 0 and 32 (two attempts each) deterministically.
+    faults::clear();
+    arm(faults::STAGE1_EVAL, FaultAction::Panic, None, Trigger::Times(4));
+    let c = seeded(1, Some(2));
+    let err = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap_err();
+    assert!(
+        matches!(&err, SubmodError::Coordinator(m) if m.contains("quorum")),
+        "{err}"
+    );
+    let m = c.metrics();
+    assert_eq!(m.shard_failures, 2);
+    assert_eq!(m.shard_retries, 2);
+}
+
+#[test]
+fn retried_shard_recovers_byte_identically() {
+    let _g = exclusive();
+    // baseline: no faults
+    let baseline = seeded(2, None)
+        .select(SelectRequest { budget: 8, ..Default::default() })
+        .unwrap();
+    // shard 0 panics once; the retry succeeds and the answer is
+    // byte-identical to the healthy run (memoized-state determinism)
+    arm(faults::STAGE1_EVAL, FaultAction::Panic, Some(0), Trigger::Times(1));
+    let c = seeded(2, None);
+    let resp = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+    assert!(!resp.degraded);
+    assert!(resp.failed_shards.is_empty());
+    assert_eq!(resp.ids, baseline.ids);
+    assert_eq!(resp.value.to_bits(), baseline.value.to_bits());
+    let m = c.metrics();
+    assert_eq!(m.shard_retries, 1);
+    assert_eq!(m.shard_failures, 0);
+    assert_eq!(m.selections_degraded, 0);
+}
+
+#[test]
+fn injected_errors_degrade_like_panics() {
+    let _g = exclusive();
+    // typed-error faults (not panics) follow the same retry→drop path
+    arm(faults::STAGE1_EVAL, FaultAction::Error, Some(64), Trigger::Times(2));
+    let c = seeded(2, Some(1));
+    let resp = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+    assert!(resp.degraded);
+    assert_eq!(resp.failed_shards, [64]);
+    assert!(resp.ids.iter().all(|&id| id < 64));
+}
+
+#[test]
+fn kernel_build_fault_is_retried_inside_the_shard() {
+    let _g = exclusive();
+    // a fault one layer deeper — objective/kernel construction — is
+    // contained by the same shard isolation; single worker makes the
+    // claim order (and thus which build fails) deterministic
+    arm(faults::KERNEL_BUILD, FaultAction::Error, Some(SHARD_CAP), Trigger::Times(1));
+    let c = seeded(1, None);
+    let resp = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+    assert!(!resp.degraded);
+    let m = c.metrics();
+    assert_eq!(m.shard_retries, 1);
+    assert_eq!(m.shard_failures, 0);
+}
+
+// ---------------------------------------------------------------------
+// Pillar 2: deadlines
+// ---------------------------------------------------------------------
+
+#[test]
+fn injected_delay_past_deadline_fails_typed() {
+    let _g = exclusive();
+    // every stage-1 evaluation stalls 100 ms against a 20 ms deadline:
+    // whichever shard runs first blows the budget, the remaining claims
+    // are skipped, and the request fails with the typed error
+    arm(
+        faults::STAGE1_EVAL,
+        FaultAction::Delay(Duration::from_millis(100)),
+        None,
+        Trigger::Times(u32::MAX),
+    );
+    let c = seeded(2, None);
+    let err = c
+        .select(SelectRequest {
+            budget: 8,
+            deadline: Some(Duration::from_millis(20)),
+            ..Default::default()
+        })
+        .unwrap_err();
+    assert!(matches!(err, SubmodError::DeadlineExceeded), "{err}");
+    let m = c.metrics();
+    assert_eq!(m.deadline_exceeded, 1);
+    assert_eq!(m.selections_failed, 1);
+    // deadline skips are not shard failures
+    assert_eq!(m.shard_failures, 0);
+    assert_eq!(m.shard_retries, 0);
+
+    // the same coordinator still serves once the fault is cleared
+    faults::clear();
+    let resp = c
+        .select(SelectRequest {
+            budget: 8,
+            deadline: Some(Duration::from_secs(600)),
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(resp.ids.len(), 8);
+    assert_eq!(c.metrics().deadline_exceeded, 1);
+}
+
+// ---------------------------------------------------------------------
+// Pillar 3: supervised ingest
+// ---------------------------------------------------------------------
+
+#[test]
+fn killed_drain_is_respawned_and_ingest_resumes() {
+    let _g = exclusive();
+    let c = Coordinator::new(cfg(2, None));
+    let h = c.ingest_handle();
+    let data = synthetic::blobs(N_ITEMS, 2, 5, 1.5, 77);
+    for i in 0..40 {
+        h.ingest(data.row(i).to_vec()).unwrap();
+    }
+    // kill the drain on its next batch: the in-flight producer gets a
+    // typed error (never a hang), the supervisor restarts the loop
+    arm(faults::DRAIN_LOOP, FaultAction::Panic, None, Trigger::Times(1));
+    let err = h.ingest(data.row(40).to_vec()).unwrap_err();
+    assert!(matches!(err, SubmodError::Coordinator(_)), "{err}");
+    // the restart is recorded (the supervisor increments after the
+    // unwind completes, concurrently with this assertion — poll briefly)
+    let mut restarts = 0;
+    for _ in 0..200 {
+        restarts = c.metrics().drain_restarts;
+        if restarts > 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(restarts, 1, "supervisor must record exactly one drain restart");
+    // ingest resumes against the SAME store: ids continue where the
+    // pre-crash state left off (the crashed row was dropped, at-most-once)
+    let next_id = h.ingest(data.row(41).to_vec()).unwrap();
+    assert_eq!(next_id, 40);
+    assert_eq!(c.len(), 41);
+    // and the coordinator still selects over everything ingested
+    let resp = c.select(SelectRequest { budget: 5, ..Default::default() }).unwrap();
+    assert_eq!(resp.ids.len(), 5);
+    assert_eq!(c.metrics().items_ingested, 41);
+}
+
+#[test]
+fn drain_error_fault_fails_batch_without_restart() {
+    let _g = exclusive();
+    let c = Coordinator::new(cfg(2, None));
+    let h = c.ingest_handle();
+    h.ingest(vec![1.0, 2.0]).unwrap();
+    arm(faults::DRAIN_LOOP, FaultAction::Error, None, Trigger::Times(1));
+    let err = h.ingest(vec![3.0, 4.0]).unwrap_err();
+    assert!(matches!(&err, SubmodError::Coordinator(m) if m.contains("injected")), "{err}");
+    // an error path keeps the drain alive — no restart, next item lands
+    assert_eq!(h.ingest(vec![5.0, 6.0]).unwrap(), 1);
+    assert_eq!(c.metrics().drain_restarts, 0);
+}
+
+// ---------------------------------------------------------------------
+// Pillar 4: snapshot / restore
+// ---------------------------------------------------------------------
+
+#[test]
+fn checkpoint_restore_select_is_byte_identical() {
+    let _g = exclusive();
+    let c = seeded(2, None);
+    let req = || SelectRequest { budget: 10, ..Default::default() };
+    let before = c.select(req()).unwrap();
+    let blob = c.checkpoint();
+    drop(c); // "crash" the original service
+
+    let restored = Coordinator::from_checkpoint(cfg(2, None), &blob).unwrap();
+    assert_eq!(restored.len(), N_ITEMS);
+    let after = restored.select(req()).unwrap();
+    assert_eq!(after.ids, before.ids, "restored selection must match pre-crash ids");
+    assert_eq!(
+        after.value.to_bits(),
+        before.value.to_bits(),
+        "restored objective value must be bit-identical"
+    );
+    assert_eq!(after.shards, before.shards);
+    assert_eq!(after.stage1_candidates, before.stage1_candidates);
+
+    // restore is repeatable: a second restore from the same blob agrees
+    let again = Coordinator::from_checkpoint(cfg(2, None), &blob).unwrap();
+    let r2 = again.select(req()).unwrap();
+    assert_eq!(r2.ids, before.ids);
+
+    // the restored service keeps living: ingest continues the id space
+    let h = restored.ingest_handle();
+    let extra = synthetic::blobs(8, 2, 2, 1.0, 5);
+    for i in 0..8 {
+        assert_eq!(h.ingest(extra.row(i).to_vec()).unwrap(), N_ITEMS + i);
+    }
+    assert_eq!(restored.len(), N_ITEMS + 8);
+    assert!(restored.select(req()).is_ok());
+}
+
+#[test]
+fn checkpoint_survives_a_degraded_epoch() {
+    let _g = exclusive();
+    // checkpoint taken while a shard is failing still captures the full
+    // ground set — recovery is about the data, not the fault
+    arm(faults::STAGE1_EVAL, FaultAction::Panic, Some(0), Trigger::Times(2));
+    let c = seeded(2, Some(1));
+    let degraded = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+    assert!(degraded.degraded);
+    let blob = c.checkpoint();
+    faults::clear();
+    let restored = Coordinator::from_checkpoint(cfg(2, None), &blob).unwrap();
+    let healthy = restored.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+    assert!(!healthy.degraded);
+    // the healthy run sees all three shards again, including shard 0
+    assert_eq!(healthy.shards, 3);
+}

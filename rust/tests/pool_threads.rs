@@ -1,7 +1,10 @@
-//! ISSUE 5 pool containment proof: a full maximize run — kernel builds
-//! (dense direct-write + mirror, sparse wavefront) and batched gain
-//! scans — must execute entirely on the persistent pool, spawning no OS
-//! threads beyond it.
+//! ISSUE 5 pool containment proof, extended by ISSUE 6 to the
+//! coordinator: a full maximize run — kernel builds (dense direct-write
+//! + mirror, sparse wavefront) and batched gain scans — AND a
+//! coordinator `select()` (stage-1 fan-out now runs as one
+//! `pool::run_indexed` job) must execute entirely on the persistent
+//! pool, spawning no OS threads beyond it plus the coordinator's single
+//! supervised drain thread.
 //!
 //! Per-call scoped threads join before their parallel section returns,
 //! so sampling the thread count *after* a workload would pass even for
@@ -14,6 +17,8 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
+use submodlib::config::CoordinatorConfig;
+use submodlib::coordinator::{Coordinator, SelectRequest};
 use submodlib::data::synthetic;
 use submodlib::functions::facility_location::FacilityLocation;
 use submodlib::kernel::{DenseKernel, Metric, SparseKernel};
@@ -55,8 +60,25 @@ fn maximize_spawns_no_threads_beyond_the_pool() {
     // pool topology: resolved width w means at most w − 1 detached
     // workers (the submitting thread is always a participant)
     assert!(pool::worker_count() < pool::configured_width());
+    // a live coordinator contributes exactly one extra thread (the
+    // supervised ingest drain); it is created — and its ground set
+    // ingested — BEFORE the baseline so the drain is part of the settled
+    // count and select() itself must add nothing
+    let coord = Coordinator::new(CoordinatorConfig {
+        workers: 2,
+        shard_capacity: 64,
+        ingest_depth: 32,
+        per_shard_factor: 2.0,
+        min_shard_quorum: None,
+    });
+    let h = coord.ingest_handle();
+    let stream = synthetic::blobs(200, 2, 4, 1.5, 7);
+    for i in 0..200 {
+        h.ingest(stream.row(i).to_vec()).unwrap();
+    }
     // warm once so lazy pool initialization is behind us
     workload();
+    coord.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
     if os_threads().is_none() {
         return; // non-linux: no portable thread count to read
     }
@@ -75,17 +97,23 @@ fn maximize_spawns_no_threads_beyond_the_pool() {
         });
         for _ in 0..3 {
             workload();
+            // the coordinator's stage-1 fan-out rides the same pool: a
+            // select must not raise the peak above the parked baseline
+            coord.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
         }
         stop.store(true, Ordering::Relaxed);
         watcher.join().expect("watcher thread")
     });
+    // the coordinator (and its drain thread) stays alive through this
+    // read, so `settled` includes every persistent thread the workload had
     let settled = os_threads().expect("/proc stayed readable");
     // after the watcher exits, the settled count is main + harness +
-    // parked pool workers; during the workload nothing may exceed the
-    // watcher-inclusive version of that same set
+    // parked pool workers + coordinator drain; during the workload
+    // nothing may exceed the watcher-inclusive version of that same set
     assert!(
         peak <= settled + 1,
         "peak thread count {peak} exceeded settled {settled} + watcher \
          (a hot path spawned threads outside the pool)"
     );
+    drop(coord);
 }
