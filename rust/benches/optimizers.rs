@@ -382,6 +382,7 @@ fn main() {
         .bench("Pool/scoped_spawn", || {
             let sink = &sink;
             for _ in 0..DISPATCH_CALLS {
+                // lint: allow(thread-spawn) — the spawn-per-call baseline the pool is measured against
                 std::thread::scope(|scope| {
                     for w in 0..threads {
                         scope.spawn(move || {

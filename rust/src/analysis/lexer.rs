@@ -1,0 +1,290 @@
+//! Minimal Rust source "channel splitter" for the conformance linter.
+//!
+//! The rules in [`super::rules`] must match *code*, never prose: the
+//! codebase's own documentation talks about the exact patterns the
+//! linter forbids (the pool docs mention scoped threads, the optimizer
+//! docs explain why `partial_cmp` is banned), and rule patterns appear
+//! as string literals inside the linter itself. A plain grep would flag
+//! all of those. So every source file is first split into two per-line
+//! channels:
+//!
+//! * **code** — the line with comments removed and the *contents* of
+//!   string/char literals blanked (delimiters kept, so token boundaries
+//!   survive);
+//! * **comment** — the concatenated comment text of the line, which is
+//!   where `SAFETY:` justifications and suppression pragmas live.
+//!
+//! The splitter is a small state machine that understands exactly as
+//! much Rust as the job needs: line comments (`//`, `///`, `//!`),
+//! nested block comments, string literals with escapes, raw (and byte)
+//! strings with hash fences, and the char-literal/lifetime ambiguity
+//! (`'a'` vs `<'a>`). It is deliberately not a full lexer — it never
+//! needs to evaluate anything, only to decide which channel a byte
+//! belongs to.
+
+/// One source line, split into its code and comment channels.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code with string/char contents blanked and comments removed.
+    pub code: String,
+    /// Concatenated comment text (without the `//` / `/*` markers).
+    pub comment: String,
+}
+
+/// Cross-line lexer state (line comments never cross a newline, so they
+/// are handled inline and need no state here).
+enum St {
+    Code,
+    /// Nested block comment, with depth.
+    Block(usize),
+    /// Ordinary (or byte) string literal.
+    Str,
+    /// Raw string literal fenced by this many `#`s.
+    RawStr(usize),
+}
+
+/// True for characters that can be part of an identifier. Used for
+/// token-boundary checks both here (raw-string prefix detection) and in
+/// the rule matcher.
+pub fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Try to read a raw-string opener (`r"`, `r#"`, `br##"`, ...) at
+/// position `i`. Returns `(hash_count, chars_consumed)`.
+fn raw_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = match (chars.get(i), chars.get(i + 1)) {
+        (Some('r'), _) => i + 1,
+        (Some('b'), Some('r')) => i + 2,
+        _ => return None,
+    };
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Heuristic char-literal test at a `'` in code position: `'\...'` and
+/// `'x'` are literals, everything else (`'a` in `<'a>`, `'static`) is a
+/// lifetime or loop label.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Split `src` into per-line code/comment channels. Newlines terminate a
+/// line in every state (multi-line strings and block comments simply
+/// continue on the next line), so `out.len()` equals the line count and
+/// indices line up with editor line numbers (0-based here; the rule
+/// layer reports 1-based).
+pub fn split_channels(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Vec::new();
+    let mut cur = Line::default();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            out.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    // line comment: consume to end of line
+                    let mut j = i + 2;
+                    while j < n && chars[j] != '\n' {
+                        cur.comment.push(chars[j]);
+                        j += 1;
+                    }
+                    i = j;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b')
+                    && (i == 0 || !is_ident_char(chars[i - 1]))
+                {
+                    if let Some((hashes, used)) = raw_open(&chars, i) {
+                        cur.code.push('"');
+                        st = St::RawStr(hashes);
+                        i += used;
+                    } else if c == 'b' && next == Some('"') {
+                        cur.code.push('b');
+                        cur.code.push('"');
+                        st = St::Str;
+                        i += 2;
+                    } else if c == 'b'
+                        && next == Some('\'')
+                        && is_char_literal(&chars, i + 1)
+                    {
+                        cur.code.push('b');
+                        i += 1; // the `'` handler below consumes the rest
+                        i = consume_char_literal(&chars, i, &mut cur.code);
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if is_char_literal(&chars, i) {
+                        i = consume_char_literal(&chars, i, &mut cur.code);
+                    } else {
+                        // lifetime / loop label: keep as code
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = St::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // skip the escaped char, but never swallow a newline
+                    // (line-continuation escapes keep line counts honest)
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1; // blanked
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && (1..=hashes).all(|h| chars.get(i + h) == Some(&'#')) {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1; // blanked
+                }
+            }
+        }
+    }
+    out.push(cur);
+    out
+}
+
+/// Consume a char literal starting at the opening `'` (blanked: only the
+/// delimiters reach the code channel). Returns the index after it.
+fn consume_char_literal(chars: &[char], i: usize, code: &mut String) -> usize {
+    code.push('\'');
+    let mut j = i + 1;
+    while j < chars.len() {
+        match chars[j] {
+            '\\' => j += 2,
+            '\'' => {
+                j += 1;
+                break;
+            }
+            _ => j += 1,
+        }
+    }
+    code.push('\'');
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_leave_the_code_channel() {
+        let src = "let x = 1; // uses .partial_cmp( in prose\n/* unsafe\n block */ let y = 2;\n";
+        let lines = split_channels(src);
+        assert_eq!(lines.len(), 4); // trailing empty line after final \n
+        assert!(!lines[0].code.contains("partial_cmp"));
+        assert!(lines[0].comment.contains("partial_cmp"));
+        assert!(!lines[1].code.contains("unsafe"));
+        assert!(lines[1].comment.contains("unsafe"));
+        assert!(lines[2].code.contains("let y = 2;"));
+        assert!(lines[2].comment.contains("block"));
+    }
+
+    #[test]
+    fn doc_comments_are_comments() {
+        let lines = split_channels("/// says thread::spawn\n//! and unsafe\nfn f() {}\n");
+        assert!(lines[0].code.trim().is_empty());
+        assert!(lines[0].comment.contains("thread::spawn"));
+        assert!(lines[1].comment.contains("unsafe"));
+        assert!(lines[2].code.contains("fn f()"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let lines = split_channels(
+            "let p = \".partial_cmp(\"; let q = r#\"thread::spawn\"#; let b = b\"unsafe\";\n",
+        );
+        let code = &lines[0].code;
+        assert!(!code.contains("partial_cmp"), "{code}");
+        assert!(!code.contains("thread::spawn"), "{code}");
+        assert!(!code.contains("unsafe"), "{code}");
+        // delimiters survive so the statement structure is still visible
+        assert!(code.contains("let p = \"\";"), "{code}");
+    }
+
+    #[test]
+    fn escapes_and_embedded_quotes() {
+        let lines = split_channels("let s = \"a\\\"b // not a comment\"; let t = 1;\n");
+        assert!(lines[0].code.contains("let t = 1;"));
+        assert!(!lines[0].code.contains("not a comment"));
+        assert!(lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let lines = split_channels("fn f<'a>(x: &'a str) { let c = '\\''; let d = 'y'; }\n");
+        let code = &lines[0].code;
+        assert!(code.contains("<'a>"), "{code}");
+        assert!(code.contains("&'a str"), "{code}");
+        assert!(!code.contains('y'), "{code}");
+    }
+
+    #[test]
+    fn multiline_strings_and_nested_block_comments_keep_line_numbers() {
+        let src = "let a = \"line1\nline2\"; let b = 2;\n/* outer /* inner */ still */ let c = 3;\n";
+        let lines = split_channels(src);
+        assert_eq!(lines.len(), 4);
+        assert!(lines[1].code.contains("let b = 2;"));
+        assert!(lines[2].code.contains("let c = 3;"));
+        assert!(lines[2].comment.contains("inner"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes_spanning_lines() {
+        let src = "let s = r##\"has \"quote\" and\nthread::spawn\"##; let after = 1;\n";
+        let lines = split_channels(src);
+        assert!(!lines[1].code.contains("thread::spawn"));
+        assert!(lines[1].code.contains("let after = 1;"));
+    }
+}

@@ -1,0 +1,123 @@
+//! Static conformance analysis: the determinism linter.
+//!
+//! The library's reproducibility contract — bit-identical selections at
+//! any `SUBMODLIB_THREADS` width — is mostly enforced at runtime by
+//! parity tests (tests/pool_matrix.rs, the wavefront-vs-dense suites).
+//! This module is the *static* half: a std-only linter that scans the
+//! repo's own sources (`rust/src`, `rust/tests`, `rust/benches`) and
+//! mechanically enforces the written invariants those tests assume. It
+//! runs as the `lint` CLI subcommand and as a tier-1 test
+//! (tests/conformance.rs), so a violation fails the build, not a code
+//! review.
+//!
+//! The rule set, the suppression-pragma format, and the SAFETY-comment
+//! policy are documented in [`rules`]; the comment/string-aware source
+//! splitting that keeps prose from tripping the rules is in [`lexer`].
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{lint_source, RuleInfo, Violation, RULES};
+
+/// Directories scanned, relative to the repo root. `rust/examples` is
+/// deliberately excluded: it is not in the build graph (Cargo.toml sets
+/// `autoexamples = false`) and serves as illustrative scratch space.
+const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches"];
+
+/// Recursively collect `.rs` files under `dir`, sorted by path so the
+/// report (and any downstream diffing) is itself deterministic.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every Rust source under `root`'s scan directories. Returns all
+/// violations sorted by (file, line). Missing scan directories are
+/// skipped (the linter can run from a partial checkout).
+pub fn lint_root(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    for d in SCAN_DIRS {
+        let dir = root.join(d);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    let mut out = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&path)?;
+        out.extend(rules::lint_source(&rel, &src));
+    }
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(out)
+}
+
+/// Render a violation report (one line per violation plus a summary
+/// tail), or the all-clear message.
+pub fn render(violations: &[Violation]) -> String {
+    if violations.is_empty() {
+        return "conformance: clean (0 violations)".to_string();
+    }
+    let mut s = String::new();
+    for v in violations {
+        s.push_str(&v.to_string());
+        s.push('\n');
+    }
+    s.push_str(&format!("conformance: {} violation(s)", violations.len()));
+    s
+}
+
+/// Render the rule table (for `lint --rules`).
+pub fn render_rules() -> String {
+    let width = RULES.iter().map(|r| r.name.len()).max().unwrap_or(0);
+    let mut s = String::from("conformance rules:\n");
+    for r in RULES {
+        s.push_str(&format!("  {:width$}  {}\n", r.name, r.summary));
+    }
+    s.push_str(
+        "suppress inline with `// lint: allow(<rule>) \u{2014} <reason>` on or above the line",
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_reports_counts_and_locations() {
+        assert_eq!(render(&[]), "conformance: clean (0 violations)");
+        let vs = rules::lint_source(
+            "rust/src/functions/example.rs",
+            "fn f() { std::thread::spawn(|| {}); }\n",
+        );
+        let report = render(&vs);
+        assert!(report.contains("rust/src/functions/example.rs:1"), "{report}");
+        assert!(report.ends_with("conformance: 1 violation(s)"), "{report}");
+    }
+
+    #[test]
+    fn rule_table_lists_every_rule() {
+        let table = render_rules();
+        for r in RULES {
+            assert!(table.contains(r.name), "missing {} in\n{table}", r.name);
+        }
+    }
+}

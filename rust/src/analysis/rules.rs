@@ -1,0 +1,685 @@
+//! The conformance rules and the matching engine.
+//!
+//! Each rule mechanically enforces one of the codebase's written
+//! determinism/concurrency invariants (the prose versions live in
+//! ROADMAP.md and the module docs of `runtime::pool`, `kernel::sparse`,
+//! and the optimizer layer). Rules match only the **code channel** of
+//! [`super::lexer`] — comments and string literals can talk about the
+//! forbidden patterns freely.
+//!
+//! ## The rules
+//!
+//! * **`float-ord`** — no `.partial_cmp(` calls. Float comparisons order
+//!   via `total_cmp`: `partial_cmp().unwrap()` panics on NaN and
+//!   `unwrap_or(Equal)` makes NaN compare equal to *everything*, which
+//!   breaks `Ord`'s transitivity and silently corrupts heaps and sorts
+//!   (the exact bug class PR 2 eradicated from the optimizers).
+//!   Implementing `PartialOrd` (`fn partial_cmp`) is fine — the rule
+//!   targets call sites.
+//! * **`thread-spawn`** — no `thread::spawn` / `thread::scope` /
+//!   `thread::Builder` outside `runtime::pool`. Every parallel section
+//!   rides the one persistent pool (the static twin of the runtime
+//!   watcher in tests/pool_threads.rs); ad-hoc OS threads bypass the
+//!   `SUBMODLIB_THREADS` width contract and the indexed-slot determinism
+//!   rule.
+//! * **`hash-iter`** — no iteration over `HashMap`/`HashSet` bindings
+//!   (`.iter()`, `.keys()`, `.values()`, `.drain()`, `.retain()`,
+//!   `for … in map`). Hash iteration order is randomized per process, so
+//!   anything order-dependent downstream becomes nondeterministic.
+//!   Keyed lookup (`get`/`contains`/`insert`) is fine; iterate a
+//!   `BTreeMap`/`BTreeSet` or a sorted `Vec` instead. Bindings are
+//!   discovered per file by declaration (`let x: HashMap…`,
+//!   `field: HashSet<…>`), so the check is heuristic — deliberate,
+//!   justified iteration takes a suppression pragma.
+//! * **`wall-clock`** — no `Instant::now` / `SystemTime` inside
+//!   selection logic (`optimizers/`, `functions/`, `kernel/`,
+//!   `clustering/`, `linalg/`, `rng.rs`, and the pool). Timing belongs
+//!   in the bench harness, the experiments layer, and the coordinator's
+//!   latency metrics — a clock read inside selection logic is a
+//!   determinism leak waiting to become a tie-break.
+//! * **`unsafe-confined`** — no `unsafe` outside the whitelisted
+//!   concurrency core (`runtime/pool.rs`). Everything else in the crate
+//!   is safe Rust by construction.
+//! * **`safety-comment`** — inside the whitelisted modules, every
+//!   `unsafe` must carry a `// SAFETY:` comment on the same line or in
+//!   the contiguous comment block directly above it, stating the
+//!   invariant that makes it sound.
+//!
+//! ## Suppressions
+//!
+//! Exceptions are inline pragmas of the form
+//! `lint: allow(<rule>) — <reason>` in a `//` comment, either trailing
+//! the offending line or on the line(s) directly above it. The reason is
+//! mandatory, unknown rule names are themselves violations, and a pragma
+//! that suppresses nothing is flagged as stale — so every exception in
+//! the tree is visible, justified, and live. (There is deliberately no
+//! file- or crate-level opt-out.)
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use super::lexer::{self, Line};
+
+/// The concurrency core: the only place `unsafe` and raw thread APIs
+/// are allowed (with SAFETY comments; see the module docs).
+const POOL: &str = "rust/src/runtime/pool.rs";
+
+/// Path prefixes that count as "selection logic" for `wall-clock`.
+const SELECTION_PATHS: &[&str] = &[
+    "rust/src/optimizers/",
+    "rust/src/functions/",
+    "rust/src/kernel/",
+    "rust/src/clustering/",
+    "rust/src/linalg/",
+];
+
+pub const FLOAT_ORD: &str = "float-ord";
+pub const THREAD_SPAWN: &str = "thread-spawn";
+pub const HASH_ITER: &str = "hash-iter";
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const UNSAFE_CONFINED: &str = "unsafe-confined";
+pub const SAFETY_COMMENT: &str = "safety-comment";
+/// Meta-rule for malformed/stale suppression pragmas (not allow-able).
+pub const PRAGMA: &str = "pragma";
+
+/// One rule's registry entry: name, one-line summary, and a minimal
+/// source snippet that must trigger it (pinned by tests/conformance.rs
+/// so the linter can never silently stop firing).
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// Path the example is linted under (rules are path-scoped).
+    pub example_path: &'static str,
+    /// Minimal bad input; `lint_source(example_path, bad_example)` must
+    /// report at least one violation of `name`.
+    pub bad_example: &'static str,
+}
+
+/// Every enforced rule. `main lint --rules` prints this table.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: FLOAT_ORD,
+        summary: "floats order via total_cmp, never .partial_cmp() calls",
+        example_path: "rust/src/functions/example.rs",
+        bad_example: "fn f(xs: &mut [f64]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n",
+    },
+    RuleInfo {
+        name: THREAD_SPAWN,
+        summary: "no OS threads outside runtime::pool (spawn/scope/Builder)",
+        example_path: "rust/src/functions/example.rs",
+        bad_example: "fn f() { std::thread::spawn(|| {}); }\n",
+    },
+    RuleInfo {
+        name: HASH_ITER,
+        summary: "no HashMap/HashSet iteration (nondeterministic order)",
+        example_path: "rust/src/functions/example.rs",
+        bad_example: "fn f() {\n    let m: std::collections::HashMap<u32, u32> = Default::default();\n    for (k, v) in m.iter() { println!(\"{k} {v}\"); }\n}\n",
+    },
+    RuleInfo {
+        name: WALL_CLOCK,
+        summary: "no Instant::now/SystemTime inside selection logic",
+        example_path: "rust/src/optimizers/example.rs",
+        bad_example: "fn f() -> std::time::Instant { std::time::Instant::now() }\n",
+    },
+    RuleInfo {
+        name: UNSAFE_CONFINED,
+        summary: "unsafe code confined to the whitelisted concurrency core",
+        example_path: "rust/src/functions/example.rs",
+        bad_example: "fn f(p: *const u32) -> u32 { unsafe { *p } }\n",
+    },
+    RuleInfo {
+        name: SAFETY_COMMENT,
+        summary: "every unsafe block carries a // SAFETY: justification",
+        example_path: POOL,
+        bad_example: "fn f(p: *const u32) -> u32 { unsafe { *p } }\n",
+    },
+    RuleInfo {
+        name: PRAGMA,
+        summary: "suppression pragmas must be well-formed, justified, live",
+        example_path: "rust/src/functions/example.rs",
+        bad_example: "// lint: allow(thread-spawn)\nfn f() { std::thread::spawn(|| {}); }\n",
+    },
+];
+
+/// One conformance violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Repo-relative path with forward slashes.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Simple code-channel token: identifiers vs single-char punctuation
+/// (whitespace dropped). Just enough structure for the heuristic rules.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Tok {
+    Ident(String),
+    Punct(char),
+}
+
+fn tokenize(code: &str) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut it = code.chars().peekable();
+    while let Some(&c) = it.peek() {
+        if c.is_whitespace() {
+            it.next();
+        } else if lexer::is_ident_char(c) {
+            let mut s = String::new();
+            while let Some(&d) = it.peek() {
+                if lexer::is_ident_char(d) {
+                    s.push(d);
+                    it.next();
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok::Ident(s));
+        } else {
+            toks.push(Tok::Punct(c));
+            it.next();
+        }
+    }
+    toks
+}
+
+/// Token-boundary substring search: `pat`'s first/last characters only
+/// match at identifier boundaries (so `unsafe` never matches inside
+/// `unsafe_op_in_unsafe_fn`).
+fn has_pattern(code: &str, pat: &str) -> bool {
+    let first_ident = pat.chars().next().is_some_and(lexer::is_ident_char);
+    let last_ident = pat.chars().last().is_some_and(lexer::is_ident_char);
+    let mut start = 0;
+    while let Some(off) = code[start..].find(pat) {
+        let at = start + off;
+        let ok_before = !first_ident
+            || !code[..at].chars().next_back().is_some_and(lexer::is_ident_char);
+        let ok_after = !last_ident
+            || !code[at + pat.len()..].chars().next().is_some_and(lexer::is_ident_char);
+        if ok_before && ok_after {
+            return true;
+        }
+        start = at + pat.len().max(1);
+    }
+    false
+}
+
+/// A parsed suppression pragma.
+struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    line: usize,
+    /// Rule name inside `allow(…)`.
+    rule: String,
+    /// 0-based index of the code line it applies to, if any.
+    target: Option<usize>,
+    /// Whether a justification followed the `allow(…)`.
+    has_reason: bool,
+    used: bool,
+}
+
+/// Parse `lint: allow(<rule>) — <reason>` from normalized comment text.
+/// The comment must *start* with `lint:` (after doc-comment markers), so
+/// prose that merely mentions the pragma format never parses as one.
+fn parse_pragma(comment: &str) -> Option<(String, bool)> {
+    let t = comment.trim_start_matches(&['/', '!', ' ', '\t'][..]);
+    let rest = t.strip_prefix("lint:")?.trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let reason = rest[close + 1..].trim_start_matches(&[' ', '\t', '—', '–', '-', ':'][..]);
+    Some((rule, !reason.trim().is_empty()))
+}
+
+fn collect_pragmas(lines: &[Line]) -> Vec<Pragma> {
+    let mut pragmas = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let Some((rule, has_reason)) = parse_pragma(&line.comment) else { continue };
+        let target = if !line.code.trim().is_empty() {
+            Some(i)
+        } else {
+            lines[i + 1..]
+                .iter()
+                .position(|l| !l.code.trim().is_empty())
+                .map(|off| i + 1 + off)
+        };
+        pragmas.push(Pragma { line: i + 1, rule, target, has_reason, used: false });
+    }
+    pragmas
+}
+
+/// Lint one source file (already-read text) under its repo-relative
+/// path. Pure: reads nothing from disk, so rules are unit-testable on
+/// synthetic inputs. Violations come back sorted by line.
+pub fn lint_source(path: &str, src: &str) -> Vec<Violation> {
+    let lines = lexer::split_channels(src);
+    let mut pragmas = collect_pragmas(&lines);
+    let mut raw: Vec<(usize, &'static str, String)> = Vec::new();
+
+    check_float_ord(&lines, &mut raw);
+    check_thread_spawn(path, &lines, &mut raw);
+    check_hash_iter(&lines, &mut raw);
+    check_wall_clock(path, &lines, &mut raw);
+    check_unsafe(path, &lines, &mut raw);
+
+    let known: BTreeSet<&str> = [
+        FLOAT_ORD,
+        THREAD_SPAWN,
+        HASH_ITER,
+        WALL_CLOCK,
+        UNSAFE_CONFINED,
+        SAFETY_COMMENT,
+    ]
+    .into_iter()
+    .collect();
+
+    let mut out = Vec::new();
+    for (idx, rule, message) in raw {
+        let suppressed = pragmas.iter_mut().find(|p| {
+            known.contains(p.rule.as_str()) && p.rule == rule && p.target == Some(idx)
+        });
+        match suppressed {
+            Some(p) => p.used = true,
+            None => out.push(Violation { file: path.to_string(), line: idx + 1, rule, message }),
+        }
+    }
+    // pragma hygiene: unknown rule, missing reason, stale suppression
+    for p in &pragmas {
+        if !known.contains(p.rule.as_str()) {
+            out.push(Violation {
+                file: path.to_string(),
+                line: p.line,
+                rule: PRAGMA,
+                message: format!(
+                    "unknown rule {:?} in suppression (known: {})",
+                    p.rule,
+                    known.iter().copied().collect::<Vec<_>>().join(", ")
+                ),
+            });
+            continue;
+        }
+        if !p.has_reason {
+            out.push(Violation {
+                file: path.to_string(),
+                line: p.line,
+                rule: PRAGMA,
+                message: format!(
+                    "suppression of {} has no justification — write `lint: allow({}) — <why>`",
+                    p.rule, p.rule
+                ),
+            });
+        }
+        if !p.used {
+            out.push(Violation {
+                file: path.to_string(),
+                line: p.line,
+                rule: PRAGMA,
+                message: format!(
+                    "stale suppression: no {} violation on the line it covers",
+                    p.rule
+                ),
+            });
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+fn check_float_ord(lines: &[Line], raw: &mut Vec<(usize, &'static str, String)>) {
+    for (i, line) in lines.iter().enumerate() {
+        if has_pattern(&line.code, ".partial_cmp(") {
+            raw.push((
+                i,
+                FLOAT_ORD,
+                "float ordering via .partial_cmp() — use total_cmp (NaN-safe strict \
+                 total order)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn check_thread_spawn(path: &str, lines: &[Line], raw: &mut Vec<(usize, &'static str, String)>) {
+    if path == POOL {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
+            if has_pattern(&line.code, pat) {
+                raw.push((
+                    i,
+                    THREAD_SPAWN,
+                    format!(
+                        "{pat} outside runtime::pool — parallel sections ride the \
+                         persistent pool (pool::run / pool::run_indexed)"
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+}
+
+fn check_hash_iter(lines: &[Line], raw: &mut Vec<(usize, &'static str, String)>) {
+    const ITER_METHODS: &[&str] =
+        &["iter", "iter_mut", "into_iter", "keys", "values", "values_mut", "drain", "retain"];
+    // pass 1: hash-typed bindings declared anywhere in this file
+    let mut tracked: BTreeSet<String> = BTreeSet::new();
+    for line in lines {
+        if !line.code.contains("HashMap") && !line.code.contains("HashSet") {
+            continue;
+        }
+        let toks = tokenize(&line.code);
+        let hash_pos = toks
+            .iter()
+            .position(|t| matches!(t, Tok::Ident(s) if s == "HashMap" || s == "HashSet"));
+        let Some(hash_pos) = hash_pos else { continue };
+        if let Some(let_pos) = toks.iter().position(|t| matches!(t, Tok::Ident(s) if s == "let"))
+        {
+            // `let [mut] name …`
+            if let Some(Tok::Ident(name)) = toks[let_pos + 1..]
+                .iter()
+                .find(|t| !matches!(t, Tok::Ident(s) if s == "mut"))
+            {
+                tracked.insert(name.clone());
+            }
+        } else {
+            // nearest `name :` before the hash type (field / param / static),
+            // skipping `::` path separators
+            for q in (1..hash_pos).rev() {
+                let colon = toks[q] == Tok::Punct(':')
+                    && toks.get(q + 1) != Some(&Tok::Punct(':'))
+                    && toks.get(q.wrapping_sub(1)).is_some_and(|t| matches!(t, Tok::Ident(_)))
+                    && (q < 2 || toks[q - 2] != Tok::Punct(':'));
+                if colon {
+                    if let Tok::Ident(name) = &toks[q - 1] {
+                        tracked.insert(name.clone());
+                    }
+                    break;
+                }
+            }
+        }
+    }
+    if tracked.is_empty() {
+        return;
+    }
+    // pass 2: iteration over a tracked binding
+    for (i, line) in lines.iter().enumerate() {
+        let toks = tokenize(&line.code);
+        let mut hit = false;
+        for (t, tok) in toks.iter().enumerate() {
+            let Tok::Ident(name) = tok else { continue };
+            if !tracked.contains(name) {
+                continue;
+            }
+            if toks.get(t + 1) == Some(&Tok::Punct('.')) {
+                if let Some(Tok::Ident(m)) = toks.get(t + 2) {
+                    if ITER_METHODS.contains(&m.as_str()) {
+                        raw.push((
+                            i,
+                            HASH_ITER,
+                            format!(
+                                "iterating hash collection `{name}.{m}()` — order is \
+                                 nondeterministic; use BTreeMap/BTreeSet or sort first"
+                            ),
+                        ));
+                        hit = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if hit {
+            continue;
+        }
+        // `for … in <expr containing a tracked binding not being method-called>`
+        let Some(for_pos) = toks.iter().position(|t| matches!(t, Tok::Ident(s) if s == "for"))
+        else {
+            continue;
+        };
+        let Some(in_off) =
+            toks[for_pos..].iter().position(|t| matches!(t, Tok::Ident(s) if s == "in"))
+        else {
+            continue;
+        };
+        for (q, tok) in toks.iter().enumerate().skip(for_pos + in_off + 1) {
+            let Tok::Ident(name) = tok else { continue };
+            if !tracked.contains(name) {
+                continue;
+            }
+            // `map.len()` etc. is a scalar method call, not iteration —
+            // iter-method calls were already handled above
+            if toks.get(q + 1) == Some(&Tok::Punct('.')) {
+                continue;
+            }
+            raw.push((
+                i,
+                HASH_ITER,
+                format!(
+                    "for-loop over hash collection `{name}` — order is nondeterministic; \
+                     use BTreeMap/BTreeSet or sort first"
+                ),
+            ));
+            break;
+        }
+    }
+}
+
+fn check_wall_clock(path: &str, lines: &[Line], raw: &mut Vec<(usize, &'static str, String)>) {
+    let scoped = SELECTION_PATHS.iter().any(|p| path.starts_with(p))
+        || path == POOL
+        || path == "rust/src/rng.rs";
+    if !scoped {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        for pat in ["Instant::now", "SystemTime"] {
+            if has_pattern(&line.code, pat) {
+                raw.push((
+                    i,
+                    WALL_CLOCK,
+                    format!(
+                        "{pat} inside selection logic — clocks belong in the bench \
+                         harness / experiments / coordinator metrics"
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+}
+
+fn check_unsafe(path: &str, lines: &[Line], raw: &mut Vec<(usize, &'static str, String)>) {
+    let whitelisted = path == POOL;
+    for (i, line) in lines.iter().enumerate() {
+        if !has_pattern(&line.code, "unsafe") {
+            continue;
+        }
+        if !whitelisted {
+            raw.push((
+                i,
+                UNSAFE_CONFINED,
+                "unsafe outside the whitelisted concurrency core (runtime/pool.rs)"
+                    .to_string(),
+            ));
+            continue;
+        }
+        // same line, or the contiguous comment-only block directly above
+        let mut justified = line.comment.contains("SAFETY:");
+        let mut j = i;
+        while !justified && j > 0 {
+            j -= 1;
+            if !lines[j].code.trim().is_empty() {
+                break;
+            }
+            justified = lines[j].comment.contains("SAFETY:");
+        }
+        if !justified {
+            raw.push((
+                i,
+                SAFETY_COMMENT,
+                "unsafe without a // SAFETY: comment (same line or the comment block \
+                 directly above)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(path: &str, src: &str) -> Vec<&'static str> {
+        lint_source(path, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    const SRC_PATH: &str = "rust/src/functions/example.rs";
+
+    #[test]
+    fn every_registered_rule_fires_on_its_bad_example() {
+        for r in RULES {
+            let fired = rules_fired(r.example_path, r.bad_example);
+            assert!(
+                fired.contains(&r.name),
+                "rule {} did not fire on its own bad example (got {:?})",
+                r.name,
+                fired
+            );
+        }
+    }
+
+    #[test]
+    fn float_ord_flags_calls_not_impls() {
+        let bad = "let m = xs.iter().max_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        assert_eq!(rules_fired(SRC_PATH, bad), vec![FLOAT_ORD]);
+        // a PartialOrd impl *definition* is legitimate
+        let ok = "impl PartialOrd for E {\n    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {\n        Some(self.cmp(o))\n    }\n}\n";
+        assert!(rules_fired(SRC_PATH, ok).is_empty());
+        // total_cmp is the sanctioned spelling
+        let fixed = "let m = xs.iter().max_by(|a, b| a.total_cmp(b));\n";
+        assert!(rules_fired(SRC_PATH, fixed).is_empty());
+    }
+
+    #[test]
+    fn float_ord_in_comments_and_strings_is_fine() {
+        let src = "// .partial_cmp( is banned\nlet s = \".partial_cmp(\";\n";
+        assert!(rules_fired(SRC_PATH, src).is_empty());
+    }
+
+    #[test]
+    fn thread_spawn_flagged_everywhere_but_the_pool() {
+        for pat in
+            ["std::thread::spawn(|| {});", "std::thread::scope(|s| {});", "thread::Builder::new()"]
+        {
+            let src = format!("fn f() {{ {pat} }}\n");
+            assert_eq!(rules_fired(SRC_PATH, &src), vec![THREAD_SPAWN], "{pat}");
+            assert!(rules_fired("rust/src/runtime/pool.rs", &src).is_empty(), "{pat}");
+        }
+        // joins, parks, sleeps are not spawns
+        let ok = "fn f() { std::thread::sleep(d); std::thread::yield_now(); }\n";
+        assert!(rules_fired(SRC_PATH, ok).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_catches_let_bindings_fields_and_for_loops() {
+        let m = "let m: std::collections::HashMap<u32, u32> = Default::default();\n";
+        for (tail, expect) in [
+            ("for (k, v) in m.iter() {}\n", true),
+            ("for k in m.keys() {}\n", true),
+            ("for (k, v) in &m {}\n", true),
+            ("m.retain(|_, v| *v > 0);\n", true),
+            ("let hit = m.contains_key(&3); let v = m.get(&3);\n", false),
+            ("for i in 0..m.len() {}\n", false),
+            ("m.insert(1, 2);\n", false),
+        ] {
+            let src = format!("{m}{tail}");
+            let fired = rules_fired(SRC_PATH, &src);
+            assert_eq!(fired.contains(&HASH_ITER), expect, "{tail} -> {fired:?}");
+        }
+        // struct fields count as bindings too
+        let field = "struct S { seen: std::collections::HashSet<u32> }\nimpl S {\n    fn all(&self) -> Vec<u32> { self.seen.iter().copied().collect() }\n}\n";
+        assert_eq!(rules_fired(SRC_PATH, field), vec![HASH_ITER]);
+        // BTree iteration is the sanctioned replacement
+        let btree = "let m: std::collections::BTreeMap<u32, u32> = Default::default();\nfor (k, v) in m.iter() {}\n";
+        assert!(rules_fired(SRC_PATH, btree).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_is_path_scoped() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(rules_fired("rust/src/optimizers/naive.rs", src), vec![WALL_CLOCK]);
+        assert_eq!(rules_fired("rust/src/kernel/tile.rs", src), vec![WALL_CLOCK]);
+        // the bench harness, experiments, and coordinator may read clocks
+        assert!(rules_fired("rust/src/util/bench.rs", src).is_empty());
+        assert!(rules_fired("rust/src/coordinator/service.rs", src).is_empty());
+        assert!(rules_fired("rust/src/main.rs", src).is_empty());
+        let st = "fn f() { let t = std::time::SystemTime::now(); }\n";
+        assert_eq!(rules_fired("rust/src/functions/fl.rs", st), vec![WALL_CLOCK]);
+    }
+
+    #[test]
+    fn unsafe_confinement_and_safety_comments() {
+        let bare = "fn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+        assert_eq!(rules_fired(SRC_PATH, bare), vec![UNSAFE_CONFINED]);
+        // in the pool, unsafe is allowed but must be justified
+        assert_eq!(rules_fired(POOL, bare), vec![SAFETY_COMMENT]);
+        let justified =
+            "// SAFETY: p is valid for reads by the caller's contract.\nfn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+        assert!(rules_fired(POOL, justified).is_empty());
+        // a contiguous comment block above also counts…
+        let block = "// SAFETY: p outlives the call.\n// (lifetime erasure only)\nfn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+        assert!(rules_fired(POOL, block).is_empty());
+        // …but a comment separated by code does not
+        let severed =
+            "// SAFETY: stale.\nfn g() {}\nfn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+        assert_eq!(rules_fired(POOL, severed), vec![SAFETY_COMMENT]);
+        // the deny attribute's identifier must not trip the matcher
+        let attr = "#![deny(unsafe_op_in_unsafe_fn)]\n";
+        assert!(rules_fired(SRC_PATH, attr).is_empty());
+    }
+
+    #[test]
+    fn pragmas_suppress_with_reason_and_are_kept_honest() {
+        // trailing pragma
+        let trailing = "fn f() { std::thread::spawn(|| {}); } // lint: allow(thread-spawn) — demo producer thread\n";
+        assert!(rules_fired(SRC_PATH, trailing).is_empty());
+        // pragma on the line above
+        let above = "// lint: allow(thread-spawn) — supervisor must outlive the pool\nfn f() { std::thread::spawn(|| {}); }\n";
+        assert!(rules_fired(SRC_PATH, above).is_empty());
+        // missing reason: target suppressed, but the pragma is flagged
+        let unreasoned = "// lint: allow(thread-spawn)\nfn f() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(rules_fired(SRC_PATH, unreasoned), vec![PRAGMA]);
+        // unknown rule: no suppression, pragma flagged
+        let unknown = "// lint: allow(no-such-rule) — whatever\nfn f() { std::thread::spawn(|| {}); }\n";
+        let fired = rules_fired(SRC_PATH, unknown);
+        assert!(fired.contains(&PRAGMA) && fired.contains(&THREAD_SPAWN), "{fired:?}");
+        // stale pragma: suppresses nothing
+        let stale = "// lint: allow(thread-spawn) — nothing here anymore\nfn f() {}\n";
+        assert_eq!(rules_fired(SRC_PATH, stale), vec![PRAGMA]);
+        // a pragma only covers its own line, not the whole file
+        let elsewhere = "// lint: allow(thread-spawn) — covers only the next line\nfn f() { std::thread::spawn(|| {}); }\nfn g() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(rules_fired(SRC_PATH, elsewhere), vec![THREAD_SPAWN]);
+    }
+
+    #[test]
+    fn prose_mentioning_the_pragma_format_is_not_a_pragma() {
+        let src = "//! Suppressions have the form `lint: allow(<rule>) — reason`.\nfn f() {}\n";
+        assert!(rules_fired(SRC_PATH, src).is_empty());
+    }
+
+    #[test]
+    fn violations_render_with_location_and_rule() {
+        let vs = lint_source(SRC_PATH, "fn f() { std::thread::spawn(|| {}); }\n");
+        assert_eq!(vs.len(), 1);
+        let line = vs[0].to_string();
+        assert!(line.starts_with("rust/src/functions/example.rs:1: [thread-spawn]"), "{line}");
+    }
+}

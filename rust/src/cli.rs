@@ -53,6 +53,13 @@ pub enum Command {
         fraction: f64,
         metric: String,
     },
+    /// Run the determinism conformance linter over the repo's sources.
+    Lint {
+        /// Repo root to scan (defaults to the current directory).
+        root: Option<String>,
+        /// Print the rule table instead of linting.
+        rules: bool,
+    },
     Help,
 }
 
@@ -75,6 +82,8 @@ COMMANDS:
               [--n 512] [--dim 1024] [--artifacts artifacts]
   cover     Problem 2: minimum subset reaching a coverage target
               --data <csv> [--function fl] [--fraction 0.9] [--metric euclidean]
+  lint      determinism conformance linter over rust/src, rust/tests, rust/benches
+              [--root <repo-dir>] [--rules]
   help      this text
 ";
 
@@ -166,6 +175,10 @@ impl Cli {
                 fraction: get_f64(&flags, "fraction", 0.9)?,
                 metric: flags.get("metric").cloned().unwrap_or_else(|| "euclidean".into()),
             },
+            "lint" => Command::Lint {
+                root: flags.get("root").cloned(),
+                rules: flags.contains_key("rules"),
+            },
             "help" | "--help" | "-h" => Command::Help,
             other => {
                 return Err(SubmodError::InvalidParam(format!("unknown command {other:?}")))
@@ -246,6 +259,26 @@ mod tests {
             _ => panic!(),
         }
         assert!(Cli::parse(&argv("cover --fraction 0.8")).is_err());
+    }
+
+    #[test]
+    fn parses_lint() {
+        let c = Cli::parse(&argv("lint")).unwrap();
+        match c.command {
+            Command::Lint { root, rules } => {
+                assert!(root.is_none());
+                assert!(!rules);
+            }
+            _ => panic!(),
+        }
+        let c = Cli::parse(&argv("lint --root /tmp/repo --rules")).unwrap();
+        match c.command {
+            Command::Lint { root, rules } => {
+                assert_eq!(root.as_deref(), Some("/tmp/repo"));
+                assert!(rules);
+            }
+            _ => panic!(),
+        }
     }
 
     #[test]

@@ -98,12 +98,13 @@ pub fn kmeans(data: &Matrix, k: usize, max_iters: usize, seed: u64) -> KMeansRes
                     *cv = sv * inv;
                 }
             } else {
-                // re-seed empty cluster at the farthest point
+                // re-seed empty cluster at the farthest point; total_cmp so a
+                // NaN feature row (NaN distance) can never panic the compare
                 let far = (0..n)
                     .max_by(|&a, &b| {
                         let da = linalg::sq_dist(data.row(a), centroids.row(labels[a]));
                         let db = linalg::sq_dist(data.row(b), centroids.row(labels[b]));
-                        da.partial_cmp(&db).unwrap()
+                        da.total_cmp(&db)
                     })
                     .unwrap();
                 let row = data.row(far).to_vec();
@@ -162,6 +163,28 @@ mod tests {
         let r = kmeans(&data, 1, 10, 1);
         assert!((r.centroids.get(0, 0) - 1.0).abs() < 1e-6);
         assert!((r.centroids.get(0, 1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nan_feature_row_neither_panics_nor_scrambles_assignment() {
+        // Regression: the empty-cluster reseed compared distances with
+        // `partial_cmp().unwrap()`, which panics the moment a NaN feature
+        // row makes a NaN distance. A NaN row must degrade gracefully:
+        // the run completes, stays deterministic, and identical finite
+        // rows still land in the same cluster.
+        let data = Matrix::from_rows(&[
+            &[0.0, 0.0],
+            &[f32::NAN, f32::NAN],
+            &[1.0, 1.0],
+            &[1.0, 1.0],
+        ]);
+        for seed in 0..8 {
+            let a = kmeans(&data, 3, 10, seed);
+            let b = kmeans(&data, 3, 10, seed);
+            assert_eq!(a.labels, b.labels, "seed {seed} nondeterministic");
+            assert!(a.labels.iter().all(|&l| l < 3), "seed {seed}: {:?}", a.labels);
+            assert_eq!(a.labels[2], a.labels[3], "seed {seed} scrambled duplicates");
+        }
     }
 
     use crate::linalg::Matrix;

@@ -92,6 +92,8 @@ pub(crate) fn spawn_drain(
     let (tx, rx): (SyncSender<IngestMsg>, Receiver<IngestMsg>) =
         sync_channel(depth.max(1));
     let m = metrics.clone();
+    // lint: allow(thread-spawn) — the drain supervisor must outlive any one pool job
+    // (it blocks on a channel for the process lifetime; pool workers may never block)
     let join = std::thread::spawn(move || loop {
         let exited = catch_unwind(AssertUnwindSafe(|| drain_loop(&rx, &store, &m)));
         match exited {
@@ -183,6 +185,7 @@ mod tests {
         let mut threads = Vec::new();
         for t in 0..4 {
             let h = h.clone();
+            // lint: allow(thread-spawn) — test models external producer threads, not a compute fan-out
             threads.push(std::thread::spawn(move || {
                 (0..32).map(|i| h.ingest(vec![(t * 32 + i) as f32]).unwrap()).collect::<Vec<_>>()
             }));
@@ -205,6 +208,7 @@ mod tests {
         let mut threads = Vec::new();
         for t in 0..8 {
             let h = h.clone();
+            // lint: allow(thread-spawn) — test models external producer threads, not a compute fan-out
             threads.push(std::thread::spawn(move || {
                 for i in 0..16 {
                     h.ingest(vec![(t * 16 + i) as f32]).unwrap();

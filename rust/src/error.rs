@@ -28,6 +28,9 @@ pub enum SubmodError {
     /// stage-2 merge, so a stuck or slow shard surfaces as this typed
     /// error instead of unbounded blocking.
     DeadlineExceeded,
+    /// The conformance linter (`submodlib lint` / the `analysis` module)
+    /// found this many violations of the determinism invariants.
+    Conformance(usize),
 }
 
 impl fmt::Display for SubmodError {
@@ -43,6 +46,7 @@ impl fmt::Display for SubmodError {
             SubmodError::Io(e) => write!(f, "io error: {e}"),
             SubmodError::Coordinator(m) => write!(f, "coordinator error: {m}"),
             SubmodError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            SubmodError::Conformance(n) => write!(f, "conformance: {n} violation(s)"),
         }
     }
 }

@@ -240,9 +240,7 @@ mod tests {
         for _ in 0..2 {
             let best = (0..46)
                 .max_by(|&a, &b| {
-                    f.marginal_gain_memoized(a)
-                        .partial_cmp(&f.marginal_gain_memoized(b))
-                        .unwrap()
+                    f.marginal_gain_memoized(a).total_cmp(&f.marginal_gain_memoized(b))
                 })
                 .unwrap();
             f.update_memoization(best);

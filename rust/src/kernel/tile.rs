@@ -514,6 +514,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // full tile-pipeline builds; prohibitive under the interpreter
     fn symmetric_build_matches_rect_path() {
         // same math as the two-argument (rectangular) builder
         let data = rand_data(33, 6, 8);
@@ -528,6 +529,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // full tile-pipeline builds; prohibitive under the interpreter
     fn streamed_tiles_reassemble_to_rect_build() {
         // stream_tiles computes full rows (j0 = 0), so reassembling its
         // tiles must reproduce the rectangular direct build bit-for-bit —
@@ -553,6 +555,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // full tile-pipeline builds; prohibitive under the interpreter
     fn streamed_self_similarity_reuses_norms() {
         // a == b by reference: norms computed once, rows still full-width
         let data = rand_data(50, 4, 11);
@@ -573,6 +576,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // full tile-pipeline builds; prohibitive under the interpreter
     fn symmetric_stream_covers_upper_triangle_once_bit_equal() {
         // every (i, j≥i) pair delivered exactly once, bit-identical to
         // the dense symmetric build (same j0 = i block-phase anchoring);
@@ -642,6 +646,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // full tile-pipeline builds; prohibitive under the interpreter
     fn distances_path_streams_identically() {
         let data = rand_data(70, 3, 12);
         let copy = data.clone();

@@ -38,6 +38,12 @@
 //! See `examples/` for the paper's experiment drivers and DESIGN.md for the
 //! experiment index.
 
+// `unsafe` appears only in `runtime::pool`, and every block there carries a
+// SAFETY comment (enforced statically by `analysis`); inside `unsafe fn`s the
+// individual operations must still be wrapped and justified explicitly.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod cli;
 pub mod clustering;
 pub mod config;

@@ -49,6 +49,22 @@ fn run(args: &[String]) -> Result<()> {
         Command::Cover { data, function, fraction, metric } => {
             cmd_cover(&data, &function, fraction, &metric)
         }
+        Command::Lint { root, rules } => cmd_lint(root.as_deref(), rules),
+    }
+}
+
+fn cmd_lint(root: Option<&str>, rules: bool) -> Result<()> {
+    if rules {
+        println!("{}", submodlib::analysis::render_rules());
+        return Ok(());
+    }
+    let root = std::path::Path::new(root.unwrap_or("."));
+    let violations = submodlib::analysis::lint_root(root)?;
+    println!("{}", submodlib::analysis::render(&violations));
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        Err(SubmodError::Conformance(violations.len()))
     }
 }
 
@@ -242,6 +258,7 @@ fn cmd_serve(cfg: &Config, items: usize, dim: usize, requests: usize, budget: us
     println!("ingesting {items} items of dim {dim}...");
     let t0 = std::time::Instant::now();
     // producer threads stream the data in while selections are served
+    // lint: allow(thread-spawn) — demo producer simulating an external ingest stream; not a compute path
     let producer = std::thread::spawn(move || -> Result<()> {
         for i in 0..items {
             handle.ingest(data.row(i).to_vec())?;

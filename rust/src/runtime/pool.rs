@@ -71,8 +71,10 @@ type JobRef<'a> = &'a (dyn Fn(usize) + Sync + 'a);
 #[derive(Clone, Copy)]
 struct Job(*const (dyn Fn(usize) + Sync + 'static));
 
-// The pointer is only dereferenced while the submitting thread keeps
-// the underlying closure alive (see `Job`); the closure itself is Sync.
+// SAFETY: the pointer is only dereferenced while the submitting thread
+// keeps the underlying closure alive — `run_scoped` blocks until every
+// participant finishes (see `Job`) — and the closure is `Sync`, so
+// invoking it concurrently from worker threads is sound.
 unsafe impl Send for Job {}
 
 struct State {
@@ -284,9 +286,12 @@ impl Pool {
             return;
         }
         let serial = self.submit.lock().unwrap();
+        // SAFETY: lifetime erasure only — the transmute does not change
+        // the fat reference's layout, and this function does not return
+        // until `unclaimed` and `running` have both drained to 0 (the
+        // `done` wait below), so the erased borrow outlives every
+        // dereference a worker performs.
         let erased = Job(unsafe {
-            // lifetime erasure only — layout of the fat reference is
-            // unchanged; see `Job` for why the borrow stays live
             std::mem::transmute::<JobRef<'_>, JobRef<'static>>(job) as *const _
         });
         {
@@ -347,9 +352,13 @@ fn worker_loop(shared: &Shared) {
         };
         // catch panics so `running` always reaches 0 and the submitter
         // can re-raise instead of deadlocking on `done`; IN_JOB turns
-        // any nested `run` issued by the job inline
-        let result =
-            catch_unwind(AssertUnwindSafe(|| with_in_job(|| unsafe { (*job.0)(slot) })));
+        // any nested `run` issued by the job inline.
+        // SAFETY: the submitter keeps the closure behind `job.0` alive —
+        // it cannot return from `run_scoped` before this worker drops
+        // `running` back to 0 — and the closure is `Sync`, so calling it
+        // from this thread is sound.
+        let call = || unsafe { (*job.0)(slot) };
+        let result = catch_unwind(AssertUnwindSafe(|| with_in_job(call)));
         let mut st = shared.state.lock().unwrap();
         if let Err(p) = result {
             // keep the first payload; later ones are dropped
@@ -406,11 +415,19 @@ mod tests {
         assert_eq!(inner.load(Ordering::Relaxed), o, "one inline nested run per slot");
     }
 
+    /// Item/round counts shrink under Miri (the interpreter is ~100×
+    /// slower); the claim/slot/panic paths exercised are identical.
+    const N_ITEMS: usize = if cfg!(miri) { 37 } else { 131 };
+    const N_CLAIMS: usize = if cfg!(miri) { 33 } else { 257 };
+    const N_ROUNDS: usize = if cfg!(miri) { 8 } else { 200 };
+    const N_SUBMITTERS: usize = if cfg!(miri) { 2 } else { 4 };
+    const N_JOBS_EACH: usize = if cfg!(miri) { 4 } else { 50 };
+
     #[test]
     fn run_indexed_claims_every_item_exactly_once() {
         for limit in [1usize, 2, 16] {
             with_thread_limit(limit, || {
-                let items: Vec<usize> = (0..131).collect();
+                let items: Vec<usize> = (0..N_ITEMS).collect();
                 let out: Vec<AtomicUsize> =
                     (0..items.len()).map(|_| AtomicUsize::new(usize::MAX)).collect();
                 run_indexed(num_threads(), items, |t, item| {
@@ -436,7 +453,7 @@ mod tests {
             with_thread_limit(limit, || {
                 let next = AtomicUsize::new(0);
                 let out: Vec<AtomicUsize> =
-                    (0..257).map(|_| AtomicUsize::new(usize::MAX)).collect();
+                    (0..N_CLAIMS).map(|_| AtomicUsize::new(usize::MAX)).collect();
                 run(num_threads(), &|_w| loop {
                     let t = next.fetch_add(1, Ordering::Relaxed);
                     if t >= out.len() {
@@ -456,12 +473,12 @@ mod tests {
         // many back-to-back jobs through the same workers; a stuck
         // generation handoff would hang this test
         let total = AtomicUsize::new(0);
-        for _ in 0..200 {
+        for _ in 0..N_ROUNDS {
             run(num_threads(), &|_w| {
                 total.fetch_add(1, Ordering::Relaxed);
             });
         }
-        assert!(total.load(Ordering::Relaxed) >= 200);
+        assert!(total.load(Ordering::Relaxed) >= N_ROUNDS);
     }
 
     #[test]
@@ -470,9 +487,9 @@ mod tests {
         // jobs; the submission lock must keep them isolated
         let sum = AtomicUsize::new(0);
         std::thread::scope(|scope| {
-            for _ in 0..4 {
+            for _ in 0..N_SUBMITTERS {
                 scope.spawn(|| {
-                    for _ in 0..50 {
+                    for _ in 0..N_JOBS_EACH {
                         let local = AtomicUsize::new(0);
                         run(2, &|w| {
                             local.fetch_add(w + 1, Ordering::Relaxed);
@@ -484,7 +501,7 @@ mod tests {
         });
         // each job adds 1(+2 when a second participant exists); with
         // width 1 the job degenerates to slot 0 only — either way > 0
-        assert!(sum.load(Ordering::Relaxed) >= 200);
+        assert!(sum.load(Ordering::Relaxed) >= N_SUBMITTERS * N_JOBS_EACH);
     }
 
     #[test]
@@ -526,6 +543,48 @@ mod tests {
             ok.fetch_add(1, Ordering::Relaxed);
         });
         assert!(ok.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn run_indexed_panic_propagates_and_pool_recovers() {
+        let hit = catch_unwind(AssertUnwindSafe(|| {
+            run_indexed(num_threads(), (0..16).collect::<Vec<usize>>(), |_t, item| {
+                if item == 7 {
+                    panic!("boom in item 7");
+                }
+            });
+        }));
+        let payload = hit.expect_err("panic inside run_indexed must reach the caller");
+        // original payload, whichever participant claimed item 7
+        assert_eq!(payload.downcast_ref::<&str>().copied(), Some("boom in item 7"));
+        // every slot of the next job still runs: no stuck generation,
+        // no leaked claim counter
+        let done = AtomicUsize::new(0);
+        run_indexed(num_threads(), (0..8).collect::<Vec<usize>>(), |_t, _item| {
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn run_indexed_results_are_width_independent() {
+        // the indexed-slot rule, end to end: bytes out are a pure
+        // function of the items, whatever the pool width
+        let compute = |limit: usize| {
+            with_thread_limit(limit, || {
+                let n = if cfg!(miri) { 24 } else { 96 };
+                let out: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                run_indexed(num_threads(), (0..n).collect::<Vec<usize>>(), |t, item| {
+                    out[t].store(item * item + 1, Ordering::Relaxed);
+                });
+                out.into_iter().map(AtomicUsize::into_inner).collect::<Vec<usize>>()
+            })
+        };
+        let w1 = compute(1);
+        let w2 = compute(2);
+        let wmax = compute(usize::MAX);
+        assert_eq!(w1, w2, "width 1 vs 2");
+        assert_eq!(w1, wmax, "width 1 vs max");
     }
 
     #[test]

@@ -30,6 +30,7 @@ fn concurrent_ingest_then_select() {
     for chunk in rows.chunks(128) {
         let chunk: Vec<Vec<f32>> = chunk.to_vec();
         let h = c.ingest_handle();
+        // lint: allow(thread-spawn) — test models external producer threads, not a compute fan-out
         threads.push(std::thread::spawn(move || {
             for r in chunk {
                 h.ingest(r).unwrap();
@@ -152,6 +153,7 @@ fn concurrent_selects_are_byte_identical_to_serial() {
     let served_before = c.metrics().selections_served;
     const TENANTS: usize = 6;
     const ROUNDS: usize = 4;
+    // lint: allow(thread-spawn) — tenants are external callers racing the coordinator, not pool work
     std::thread::scope(|scope| {
         for t in 0..TENANTS {
             let c = &c;

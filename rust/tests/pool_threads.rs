@@ -83,6 +83,7 @@ fn maximize_spawns_no_threads_beyond_the_pool() {
         return; // non-linux: no portable thread count to read
     }
     let stop = AtomicBool::new(false);
+    // lint: allow(thread-spawn) — pool-external watcher counting OS threads via /proc
     let peak = std::thread::scope(|scope| {
         let watcher = scope.spawn(|| {
             // baseline includes this watcher itself; sample as fast as
