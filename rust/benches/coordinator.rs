@@ -32,6 +32,12 @@ fn build(items: usize, dim: usize, cap: usize, factor: f64) -> Coordinator {
         ingest_depth: 256,
         per_shard_factor: factor,
         min_shard_quorum: None,
+        // the ablation measures selection cost, not overload behavior:
+        // gate wide open, breakers off (loadgen.rs benches those)
+        max_inflight: pool::num_threads().max(1),
+        admission_queue_depth: 64,
+        breaker_threshold: None,
+        breaker_probe_after: 4,
     };
     let c = Coordinator::new(cfg);
     let data = synthetic::blobs(items, dim, 10, 2.0, 321);
@@ -133,6 +139,10 @@ fn main() {
             obj(vec![
                 ("p50_us", Json::Num(m.latency_p50_us as f64)),
                 ("p99_us", Json::Num(m.latency_p99_us as f64)),
+                // failed/shed requests live in their own histogram
+                // (survivorship-bias fix, ISSUE 8) — 0 in this clean run
+                ("failed_p50_us", Json::Num(m.failed_latency_p50_us as f64)),
+                ("failed_p99_us", Json::Num(m.failed_latency_p99_us as f64)),
             ]),
         ),
         (
@@ -142,6 +152,8 @@ fn main() {
                 ("selections_served", Json::Num(m.selections_served as f64)),
                 ("selections_failed", Json::Num(m.selections_failed as f64)),
                 ("selections_degraded", Json::Num(m.selections_degraded as f64)),
+                ("selections_shed", Json::Num(m.selections_shed as f64)),
+                ("admission_waits", Json::Num(m.admission_waits as f64)),
                 ("shard_failures", Json::Num(m.shard_failures as f64)),
                 ("shard_retries", Json::Num(m.shard_retries as f64)),
                 ("deadline_exceeded", Json::Num(m.deadline_exceeded as f64)),

@@ -1,0 +1,103 @@
+//! Sustained-load bench: drives `coordinator::loadgen` and emits
+//! `BENCH_loadgen.json` (schema `bench_loadgen/v1`).
+//!
+//! Two modes:
+//!
+//! * default — a sustained multi-tenant run (chaos armed when the crate
+//!   is built with `--features faults`, clean otherwise), sized to take
+//!   seconds, not minutes;
+//! * `--smoke` — the tiny configuration CI runs with `--features faults`
+//!   to prove the chaos plumbing end-to-end without burning CI minutes.
+//!
+//! Either way the closed-loop accounting must balance: every issued
+//! request resolves as served, shed, deadline-exceeded, or failed.
+
+use submodlib::coordinator::loadgen::{run, LoadgenConfig};
+use submodlib::runtime::pool;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // chaos requires the faults feature; without it, run clean
+    let chaos = cfg!(feature = "faults");
+    let cfg = if smoke {
+        LoadgenConfig {
+            items: 200,
+            dim: 4,
+            shard_capacity: 32,
+            tenants: 3,
+            requests_per_tenant: 6,
+            budget: 5,
+            max_inflight: 2,
+            admission_queue_depth: 1,
+            breaker_threshold: Some(2),
+            breaker_probe_after: 2,
+            stage1_panic_prob: if chaos { 0.10 } else { 0.0 },
+            stage1_error_prob: if chaos { 0.05 } else { 0.0 },
+            stage2_delay_prob: if chaos { 0.20 } else { 0.0 },
+            stage2_delay_ms: 2,
+            drain_panic_prob: if chaos { 0.05 } else { 0.0 },
+            ..Default::default()
+        }
+    } else {
+        LoadgenConfig {
+            items: 1500,
+            dim: 16,
+            shard_capacity: 128,
+            tenants: 6,
+            requests_per_tenant: 24,
+            budget: 10,
+            max_inflight: pool::num_threads().max(2) / 2,
+            admission_queue_depth: 2,
+            breaker_threshold: Some(3),
+            breaker_probe_after: 4,
+            stage1_panic_prob: if chaos { 0.05 } else { 0.0 },
+            stage1_error_prob: if chaos { 0.03 } else { 0.0 },
+            stage2_delay_prob: if chaos { 0.10 } else { 0.0 },
+            stage2_delay_ms: 5,
+            drain_panic_prob: if chaos { 0.02 } else { 0.0 },
+            ..Default::default()
+        }
+    };
+    eprintln!(
+        "loadgen{}: {} tenants × {} requests, max_inflight {}, queue {}, chaos {}",
+        if smoke { " (smoke)" } else { "" },
+        cfg.tenants,
+        cfg.requests_per_tenant,
+        cfg.max_inflight,
+        cfg.admission_queue_depth,
+        if chaos { "on" } else { "off (build with --features faults)" },
+    );
+
+    let report = run(&cfg).expect("loadgen run");
+
+    // closed-loop accounting: every request resolved exactly once
+    assert_eq!(
+        report.served + report.shed + report.deadline_exceeded + report.failed_other,
+        report.requests_total,
+        "loadgen accounting must balance"
+    );
+    assert_eq!(report.metrics.items_ingested as usize, cfg.items);
+    assert_eq!(report.metrics.selections_inflight, 0, "all permits returned");
+    assert!(report.throughput_rps > 0.0);
+
+    eprintln!(
+        "{} requests in {:.3}s ({:.1} req/s): served {} (degraded {}), shed {}, \
+         deadline {}, failed {}; breaker trips {}, recoveries {}, drain restarts {}",
+        report.requests_total,
+        report.wall_s,
+        report.throughput_rps,
+        report.served,
+        report.degraded,
+        report.shed,
+        report.deadline_exceeded,
+        report.failed_other,
+        report.metrics.breaker_trips,
+        report.metrics.breaker_recoveries,
+        report.metrics.drain_restarts,
+    );
+    eprintln!("metrics: {}", report.metrics);
+
+    std::fs::write("BENCH_loadgen.json", report.to_json(&cfg).to_string())
+        .expect("write BENCH_loadgen.json");
+    eprintln!("wrote BENCH_loadgen.json");
+}

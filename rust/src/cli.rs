@@ -53,6 +53,12 @@ pub enum Command {
         fraction: f64,
         metric: String,
     },
+    /// Sustained-load harness: seeded multi-tenant chaos traffic against
+    /// the coordinator, reported as `bench_loadgen/v1` JSON.
+    Loadgen {
+        cfg: crate::coordinator::LoadgenConfig,
+        out: String,
+    },
     /// Run the determinism conformance linter over the repo's sources.
     Lint {
         /// Repo root to scan (defaults to the current directory).
@@ -82,6 +88,13 @@ COMMANDS:
               [--n 512] [--dim 1024] [--artifacts artifacts]
   cover     Problem 2: minimum subset reaching a coverage target
               --data <csv> [--function fl] [--fraction 0.9] [--metric euclidean]
+  loadgen   sustained multi-tenant load harness (writes bench_loadgen/v1 JSON)
+              [--items 600] [--dim 8] [--tenants 4] [--requests 16] [--budget 8]
+              [--max-inflight 2] [--queue-depth 2] [--breaker-threshold 3]
+              [--breaker-probe 4] [--deadline-ms 0] [--quorum 1] [--seed 42]
+              [--shed-retries 2] [--out BENCH_loadgen.json]
+              chaos (needs --features faults): [--panic-prob 0] [--error-prob 0]
+              [--delay-prob 0] [--delay-ms 5] [--drain-panic-prob 0]
   lint      determinism conformance linter over rust/src, rust/tests, rust/benches
               [--root <repo-dir>] [--rules]
   help      this text
@@ -175,6 +188,65 @@ impl Cli {
                 fraction: get_f64(&flags, "fraction", 0.9)?,
                 metric: flags.get("metric").cloned().unwrap_or_else(|| "euclidean".into()),
             },
+            "loadgen" => {
+                let defaults = crate::coordinator::LoadgenConfig::default();
+                // 0 means "disabled" for the optional knobs
+                let breaker = get_usize(
+                    &flags,
+                    "breaker-threshold",
+                    defaults.breaker_threshold.unwrap_or(0),
+                )?;
+                let deadline_ms = get_usize(&flags, "deadline-ms", 0)?;
+                let quorum =
+                    get_usize(&flags, "quorum", defaults.min_shard_quorum.unwrap_or(0))?;
+                Command::Loadgen {
+                    cfg: crate::coordinator::LoadgenConfig {
+                        items: get_usize(&flags, "items", defaults.items)?,
+                        dim: get_usize(&flags, "dim", defaults.dim)?,
+                        shard_capacity: get_usize(
+                            &flags,
+                            "shard-capacity",
+                            defaults.shard_capacity,
+                        )?,
+                        tenants: get_usize(&flags, "tenants", defaults.tenants)?,
+                        requests_per_tenant: get_usize(
+                            &flags,
+                            "requests",
+                            defaults.requests_per_tenant,
+                        )?,
+                        budget: get_usize(&flags, "budget", defaults.budget)?,
+                        max_inflight: get_usize(&flags, "max-inflight", defaults.max_inflight)?,
+                        admission_queue_depth: get_usize(
+                            &flags,
+                            "queue-depth",
+                            defaults.admission_queue_depth,
+                        )?,
+                        breaker_threshold: (breaker > 0).then_some(breaker),
+                        breaker_probe_after: get_usize(
+                            &flags,
+                            "breaker-probe",
+                            defaults.breaker_probe_after,
+                        )?,
+                        deadline_ms: (deadline_ms > 0).then_some(deadline_ms as u64),
+                        min_shard_quorum: (quorum > 0).then_some(quorum),
+                        seed: get_usize(&flags, "seed", defaults.seed as usize)? as u64,
+                        shed_retries: get_usize(&flags, "shed-retries", defaults.shed_retries)?,
+                        stage1_panic_prob: get_f64(&flags, "panic-prob", 0.0)?,
+                        stage1_error_prob: get_f64(&flags, "error-prob", 0.0)?,
+                        stage2_delay_prob: get_f64(&flags, "delay-prob", 0.0)?,
+                        stage2_delay_ms: get_usize(
+                            &flags,
+                            "delay-ms",
+                            defaults.stage2_delay_ms as usize,
+                        )? as u64,
+                        drain_panic_prob: get_f64(&flags, "drain-panic-prob", 0.0)?,
+                    },
+                    out: flags
+                        .get("out")
+                        .cloned()
+                        .unwrap_or_else(|| "BENCH_loadgen.json".into()),
+                }
+            }
             "lint" => Command::Lint {
                 root: flags.get("root").cloned(),
                 rules: flags.contains_key("rules"),
@@ -279,6 +351,41 @@ mod tests {
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn parses_loadgen() {
+        let c = Cli::parse(&argv(
+            "loadgen --tenants 6 --requests 3 --max-inflight 1 --queue-depth 1 \
+             --breaker-threshold 0 --deadline-ms 250 --seed 7 --out lg.json",
+        ))
+        .unwrap();
+        match c.command {
+            Command::Loadgen { cfg, out } => {
+                assert_eq!(cfg.tenants, 6);
+                assert_eq!(cfg.requests_per_tenant, 3);
+                assert_eq!(cfg.max_inflight, 1);
+                assert_eq!(cfg.admission_queue_depth, 1);
+                assert_eq!(cfg.breaker_threshold, None, "0 disables the breaker");
+                assert_eq!(cfg.deadline_ms, Some(250));
+                assert_eq!(cfg.seed, 7);
+                assert_eq!(out, "lg.json");
+                // chaos defaults off
+                assert_eq!(cfg.stage1_panic_prob, 0.0);
+            }
+            _ => panic!(),
+        }
+        // defaults: breaker on, no deadline, default out path
+        let c = Cli::parse(&argv("loadgen")).unwrap();
+        match c.command {
+            Command::Loadgen { cfg, out } => {
+                assert!(cfg.breaker_threshold.is_some());
+                assert_eq!(cfg.deadline_ms, None);
+                assert_eq!(out, "BENCH_loadgen.json");
+            }
+            _ => panic!(),
+        }
+        assert!(Cli::parse(&argv("loadgen --tenants six")).is_err());
     }
 
     #[test]

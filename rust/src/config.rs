@@ -68,6 +68,29 @@ pub struct CoordinatorConfig {
     /// otherwise it fails. `None` (the default) means every shard must
     /// survive — any post-retry shard failure fails the request.
     pub min_shard_quorum: Option<usize>,
+    /// Admission control (ISSUE 8): maximum selections evaluated
+    /// concurrently. Further requests wait in a bounded FIFO admission
+    /// queue; the permit gate is a wall-clock/scheduling knob only and
+    /// never changes the selected bytes. Defaults to the pool width
+    /// (honors `SUBMODLIB_THREADS`). Must be ≥ 1.
+    pub max_inflight: usize,
+    /// Bounded FIFO admission queue depth. When every `max_inflight`
+    /// permit is held and this many requests are already waiting, new
+    /// requests are *shed* with a typed `SubmodError::Overloaded` —
+    /// never queued unboundedly. `0` disables queueing entirely (shed
+    /// as soon as all permits are busy).
+    pub admission_queue_depth: usize,
+    /// Per-shard circuit breaker: a shard whose stage-1 evaluation fails
+    /// (post-retry) this many *consecutive requests* trips Open and is
+    /// skipped — counted toward quorum exactly like a dropped shard —
+    /// until a Half-Open probe closes it again. `None` (the default)
+    /// disables breakers; `Some(0)` is rejected by validation.
+    pub breaker_threshold: Option<usize>,
+    /// Requests observed while a breaker is Open before it goes
+    /// Half-Open and dispatches one probe evaluation (request-count
+    /// based, not wall-clock, so recovery is deterministic under the
+    /// repo's no-wall-clock selection contract). Must be ≥ 1.
+    pub breaker_probe_after: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -78,6 +101,10 @@ impl Default for CoordinatorConfig {
             ingest_depth: 1024,
             per_shard_factor: 2.0,
             min_shard_quorum: None,
+            max_inflight: crate::runtime::pool::num_threads(),
+            admission_queue_depth: 32,
+            breaker_threshold: None,
+            breaker_probe_after: 8,
         }
     }
 }
@@ -147,6 +174,18 @@ impl Config {
             if let Some(x) = c.get("min_shard_quorum").and_then(Json::as_usize) {
                 cfg.coordinator.min_shard_quorum = Some(x);
             }
+            if let Some(x) = c.get("max_inflight").and_then(Json::as_usize) {
+                cfg.coordinator.max_inflight = x;
+            }
+            if let Some(x) = c.get("admission_queue_depth").and_then(Json::as_usize) {
+                cfg.coordinator.admission_queue_depth = x;
+            }
+            if let Some(x) = c.get("breaker_threshold").and_then(Json::as_usize) {
+                cfg.coordinator.breaker_threshold = Some(x);
+            }
+            if let Some(x) = c.get("breaker_probe_after").and_then(Json::as_usize) {
+                cfg.coordinator.breaker_probe_after = x;
+            }
         }
         if let Some(k) = v.get("kernel") {
             if let Some(m) = k.get("metric").and_then(Json::as_str) {
@@ -181,6 +220,17 @@ impl Config {
             return Err(SubmodError::InvalidParam(
                 "min_shard_quorum must be ≥ 1 when set (omit for all-shards)".into(),
             ));
+        }
+        if self.coordinator.max_inflight == 0 {
+            return Err(SubmodError::InvalidParam("max_inflight must be ≥ 1".into()));
+        }
+        if self.coordinator.breaker_threshold == Some(0) {
+            return Err(SubmodError::InvalidParam(
+                "breaker_threshold must be ≥ 1 when set (omit to disable breakers)".into(),
+            ));
+        }
+        if self.coordinator.breaker_probe_after == 0 {
+            return Err(SubmodError::InvalidParam("breaker_probe_after must be ≥ 1".into()));
         }
         match self.kernel.backend.as_str() {
             "native" | "pjrt" => Ok(()),
@@ -238,6 +288,29 @@ mod tests {
         assert!(Config::parse(r#"{"coordinator": {"workers": 0}}"#).is_err());
         assert!(Config::parse(r#"{"kernel": {"backend": "gpu"}}"#).is_err());
         assert!(Config::parse(r#"{"kernel": {"metric": "hamming"}}"#).is_err());
+        assert!(Config::parse(r#"{"coordinator": {"max_inflight": 0}}"#).is_err());
+        assert!(Config::parse(r#"{"coordinator": {"breaker_threshold": 0}}"#).is_err());
+        assert!(Config::parse(r#"{"coordinator": {"breaker_probe_after": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn overload_knobs_parse_and_default() {
+        // absent → defaults: permit count = pool width, breakers off
+        let d = Config::parse("{}").unwrap().coordinator;
+        assert_eq!(d.max_inflight, crate::runtime::pool::num_threads());
+        assert_eq!(d.admission_queue_depth, 32);
+        assert_eq!(d.breaker_threshold, None);
+        assert_eq!(d.breaker_probe_after, 8);
+        let c = Config::parse(
+            r#"{"coordinator": {"max_inflight": 3, "admission_queue_depth": 0,
+                                "breaker_threshold": 2, "breaker_probe_after": 5}}"#,
+        )
+        .unwrap()
+        .coordinator;
+        assert_eq!(c.max_inflight, 3);
+        assert_eq!(c.admission_queue_depth, 0); // 0 = shed immediately, valid
+        assert_eq!(c.breaker_threshold, Some(2));
+        assert_eq!(c.breaker_probe_after, 5);
     }
 
     #[test]

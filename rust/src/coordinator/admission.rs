@@ -1,0 +1,273 @@
+//! Admission control (ISSUE 8): a FIFO permit gate bounding how many
+//! selections the coordinator evaluates concurrently.
+//!
+//! Without a gate, N tenants calling `select()` simultaneously all pile
+//! onto the worker pool's submission lock with unbounded queueing — the
+//! classic overload failure of a served system. The gate gives the
+//! coordinator an explicit capacity contract:
+//!
+//! * at most `max_inflight` selections hold a permit at once;
+//! * at most `admission_queue_depth` further requests wait, FIFO-fair
+//!   (tickets in a `VecDeque`; the head waiter takes the next permit);
+//! * everything beyond that is **shed** immediately with a typed
+//!   [`SubmodError::Overloaded`] — overload produces fast typed errors,
+//!   never an unbounded queue;
+//! * a request whose deadline is already spent on arrival is shed
+//!   without queueing (it could only expire in line); a request whose
+//!   deadline expires *while queued* leaves the queue with the honest
+//!   [`SubmodError::DeadlineExceeded`];
+//! * after [`AdmissionGate::close`] every acquire — queued or new —
+//!   fails with [`SubmodError::ShuttingDown`], and
+//!   [`AdmissionGate::drain`] blocks until the last permit is returned
+//!   (the graceful-shutdown path).
+//!
+//! The gate is deliberately passive: a `Mutex` + `Condvar` on the
+//! callers' own threads, no helper threads (the pool-thread watcher test
+//! pins that `select()` spawns nothing). It schedules *when* a selection
+//! runs, never *what* it computes — admitted selections stay
+//! byte-identical to an uncontended run (pinned by
+//! `tests/coordinator_e2e.rs` and the saturation fault test). Wall-clock
+//! reads here are legal: the coordinator rim is outside the linter's
+//! no-wall-clock selection paths.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::error::{Result, SubmodError};
+
+/// The permit gate. One per [`super::Coordinator`].
+pub(crate) struct AdmissionGate {
+    max_inflight: usize,
+    queue_depth: usize,
+    metrics: Arc<Metrics>,
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    in_flight: usize,
+    closed: bool,
+    next_ticket: u64,
+    /// Waiting tickets in arrival order; the front ticket is next.
+    queue: VecDeque<u64>,
+}
+
+/// RAII permit: dropping it releases the slot and wakes the queue head.
+pub(crate) struct Permit<'a> {
+    gate: &'a AdmissionGate,
+}
+
+impl AdmissionGate {
+    pub fn new(max_inflight: usize, queue_depth: usize, metrics: Arc<Metrics>) -> Self {
+        AdmissionGate {
+            max_inflight: max_inflight.max(1),
+            queue_depth,
+            metrics,
+            state: Mutex::new(GateState {
+                in_flight: 0,
+                closed: false,
+                next_ticket: 0,
+                queue: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Acquire a permit for a request that entered `select()` at `t0`
+    /// with an optional deadline. See the module docs for the shed /
+    /// wait / deadline / shutdown contract.
+    pub fn acquire(&self, t0: Instant, deadline: Option<Duration>) -> Result<Permit<'_>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(SubmodError::ShuttingDown);
+        }
+        // a deadline spent before admission can only expire in line: shed
+        if let Some(d) = deadline {
+            if t0.elapsed() >= d {
+                return self.shed();
+            }
+        }
+        // fast path — but only when nobody is queued, so a newcomer can
+        // never overtake the FIFO queue
+        if st.in_flight < self.max_inflight && st.queue.is_empty() {
+            return Ok(self.admit(&mut st));
+        }
+        if st.queue.len() >= self.queue_depth {
+            return self.shed();
+        }
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.queue.push_back(ticket);
+        self.metrics.admission_waits.fetch_add(1, Ordering::Relaxed);
+        loop {
+            if st.closed {
+                Self::leave_queue(&mut st, ticket);
+                self.cv.notify_all();
+                return Err(SubmodError::ShuttingDown);
+            }
+            if st.queue.front() == Some(&ticket) && st.in_flight < self.max_inflight {
+                st.queue.pop_front();
+                let permit = self.admit(&mut st);
+                // a freed permit may admit more than one head in a row
+                self.cv.notify_all();
+                return Ok(permit);
+            }
+            match deadline {
+                None => st = self.cv.wait(st).unwrap(),
+                Some(d) => {
+                    let elapsed = t0.elapsed();
+                    if elapsed >= d {
+                        Self::leave_queue(&mut st, ticket);
+                        self.cv.notify_all();
+                        return Err(SubmodError::DeadlineExceeded);
+                    }
+                    st = self.cv.wait_timeout(st, d - elapsed).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// Stop admitting: new and queued requests fail with `ShuttingDown`.
+    /// Idempotent.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until every admitted selection has returned its permit and
+    /// the queue has emptied out (call after [`close`](Self::close)).
+    pub fn drain(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.in_flight > 0 || !st.queue.is_empty() {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn admit(&self, st: &mut GateState) -> Permit<'_> {
+        st.in_flight += 1;
+        self.metrics.selections_inflight.fetch_add(1, Ordering::Relaxed);
+        Permit { gate: self }
+    }
+
+    fn shed(&self) -> Result<Permit<'_>> {
+        self.metrics.selections_shed.fetch_add(1, Ordering::Relaxed);
+        Err(SubmodError::Overloaded)
+    }
+
+    fn leave_queue(st: &mut GateState, ticket: u64) {
+        if let Some(pos) = st.queue.iter().position(|&t| t == ticket) {
+            st.queue.remove(pos);
+        }
+    }
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        let mut st = self.gate.state.lock().unwrap();
+        st.in_flight -= 1;
+        drop(st);
+        self.gate.metrics.selections_inflight.fetch_sub(1, Ordering::Relaxed);
+        self.gate.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(max: usize, depth: usize) -> (AdmissionGate, Arc<Metrics>) {
+        let m = Arc::new(Metrics::new());
+        (AdmissionGate::new(max, depth, m.clone()), m)
+    }
+
+    #[test]
+    fn fast_path_admits_and_releases() {
+        let (g, m) = gate(2, 4);
+        let t0 = Instant::now();
+        let a = g.acquire(t0, None).unwrap();
+        let b = g.acquire(t0, None).unwrap();
+        assert_eq!(m.selections_inflight.load(Ordering::Relaxed), 2);
+        drop(a);
+        drop(b);
+        assert_eq!(m.selections_inflight.load(Ordering::Relaxed), 0);
+        assert_eq!(m.selections_shed.load(Ordering::Relaxed), 0);
+        assert_eq!(m.admission_waits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn queue_full_sheds_with_typed_overloaded() {
+        // depth 0: as soon as every permit is held, requests shed
+        let (g, m) = gate(1, 0);
+        let t0 = Instant::now();
+        let _held = g.acquire(t0, None).unwrap();
+        let err = g.acquire(t0, None).unwrap_err();
+        assert!(matches!(err, SubmodError::Overloaded), "{err}");
+        assert_eq!(m.selections_shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn spent_deadline_sheds_before_queueing() {
+        let (g, m) = gate(4, 4);
+        // permits are free, but a zero deadline is already spent at
+        // admission time — shed, not admitted, not queued
+        let err = g.acquire(Instant::now(), Some(Duration::ZERO)).unwrap_err();
+        assert!(matches!(err, SubmodError::Overloaded), "{err}");
+        assert_eq!(m.selections_shed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.admission_waits.load(Ordering::Relaxed), 0);
+        assert_eq!(m.selections_inflight.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn closed_gate_rejects_with_shutting_down() {
+        let (g, m) = gate(2, 2);
+        g.close();
+        let err = g.acquire(Instant::now(), None).unwrap_err();
+        assert!(matches!(err, SubmodError::ShuttingDown), "{err}");
+        // shutdown refusals are not sheds
+        assert_eq!(m.selections_shed.load(Ordering::Relaxed), 0);
+        g.drain(); // empty gate: returns immediately
+    }
+
+    #[test]
+    fn queued_waiter_admitted_fifo_when_permit_frees() {
+        let (g, m) = gate(1, 2);
+        let t0 = Instant::now();
+        let held = g.acquire(t0, None).unwrap();
+        // lint: allow(thread-spawn) — test models external callers blocking on admission
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| g.acquire(Instant::now(), None).map(|_p| ()));
+            // wait until the waiter is queued, then free the permit
+            while m.admission_waits.load(Ordering::Relaxed) == 0 {
+                std::thread::yield_now();
+            }
+            drop(held);
+            waiter.join().unwrap().unwrap();
+        });
+        assert_eq!(m.admission_waits.load(Ordering::Relaxed), 1);
+        assert_eq!(m.selections_inflight.load(Ordering::Relaxed), 0);
+        assert_eq!(m.selections_shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn close_flushes_queued_waiters() {
+        let (g, m) = gate(1, 2);
+        let t0 = Instant::now();
+        let held = g.acquire(t0, None).unwrap();
+        // lint: allow(thread-spawn) — test models external callers blocking on admission
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| g.acquire(Instant::now(), None).map(|_p| ()));
+            while m.admission_waits.load(Ordering::Relaxed) == 0 {
+                std::thread::yield_now();
+            }
+            g.close();
+            let err = waiter.join().unwrap().unwrap_err();
+            assert!(matches!(err, SubmodError::ShuttingDown), "{err}");
+            drop(held);
+            g.drain();
+        });
+        assert_eq!(m.selections_inflight.load(Ordering::Relaxed), 0);
+    }
+}

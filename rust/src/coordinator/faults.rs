@@ -14,6 +14,10 @@
 //!   regardless of which pool participant claims it);
 //! * [`DRAIN_LOOP`]    — the ingest drain, once per batch, before the
 //!   store append (key 0);
+//! * [`STAGE2_MERGE`]  — before the stage-2 merge over the candidate
+//!   union, keyed by the number of stage-1 candidates (a Delay here
+//!   holds a selection in flight past its admission, which is how the
+//!   overload tests force saturation deterministically);
 //! * [`KERNEL_BUILD`]  — [`super::service::ObjectiveKind`] kernel/
 //!   function construction, keyed by the ground-set size being built
 //!   (distinguishes per-shard builds from the stage-2 merge build).
@@ -39,6 +43,8 @@
 pub const STAGE1_EVAL: &str = "stage1_eval";
 /// Ingest drain loop, once per batch (key 0).
 pub const DRAIN_LOOP: &str = "drain_loop";
+/// Stage-2 merge entry (keyed by stage-1 candidate count).
+pub const STAGE2_MERGE: &str = "stage2_merge";
 /// Objective kernel/function construction (keyed by ground-set size).
 pub const KERNEL_BUILD: &str = "kernel_build";
 

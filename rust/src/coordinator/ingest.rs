@@ -35,10 +35,13 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::shard::ShardStore;
 use crate::error::{Result, SubmodError};
 
-/// One ingest message: features + reply channel for the assigned id.
-pub(crate) struct IngestMsg {
-    pub features: Vec<f32>,
-    pub reply: SyncSender<Result<usize>>,
+/// One ingest message: an item (features + reply channel for the
+/// assigned id), or the shutdown sentinel `Coordinator::shutdown` sends.
+pub(crate) enum IngestMsg {
+    Item { features: Vec<f32>, reply: SyncSender<Result<usize>> },
+    /// Drain everything queued ahead of this sentinel, then exit the
+    /// drain loop cleanly (the supervisor treats a clean exit as final).
+    Shutdown,
 }
 
 /// Producer-side handle (cheap to clone; many producers allowed).
@@ -55,7 +58,7 @@ impl IngestHandle {
     /// item but can never hang the producer.
     pub fn ingest(&self, features: Vec<f32>) -> Result<usize> {
         let (reply, rx) = sync_channel(1);
-        let msg = IngestMsg { features, reply };
+        let msg = IngestMsg::Item { features, reply };
         // try_send first so backpressure events are observable in metrics
         match self.tx.try_send(msg) {
             Ok(()) => {}
@@ -73,6 +76,14 @@ impl IngestHandle {
         }
         rx.recv()
             .map_err(|_| SubmodError::Coordinator("ingest drain dropped reply".into()))?
+    }
+
+    /// Queue the shutdown sentinel (best-effort: a drain that already
+    /// exited is fine). Items queued ahead of the sentinel are still
+    /// stored and replied to; items ingested after it observe the
+    /// disconnected channel as a typed error once the drain exits.
+    pub(crate) fn request_shutdown(&self) {
+        let _ = self.tx.send(IngestMsg::Shutdown);
     }
 }
 
@@ -118,12 +129,25 @@ pub(crate) fn spawn_drain(
 /// FIFO and the batch preserves it) and each producer still gets its own
 /// per-item reply.
 fn drain_loop(rx: &Receiver<IngestMsg>, store: &ShardStore, m: &Metrics) {
-    let mut pending: Vec<IngestMsg> = Vec::with_capacity(DRAIN_BATCH);
-    while let Ok(first) = rx.recv() {
-        pending.push(first);
+    let mut pending: Vec<(Vec<f32>, SyncSender<Result<usize>>)> =
+        Vec::with_capacity(DRAIN_BATCH);
+    loop {
+        // a Shutdown sentinel stops the loop *after* the batch it closes:
+        // items queued ahead of it are stored and replied to, honoring
+        // the graceful-drain contract
+        let mut stop = false;
+        match rx.recv() {
+            Err(_) => return, // every producer handle dropped
+            Ok(IngestMsg::Shutdown) => return,
+            Ok(IngestMsg::Item { features, reply }) => pending.push((features, reply)),
+        }
         while pending.len() < DRAIN_BATCH {
             match rx.try_recv() {
-                Ok(msg) => pending.push(msg),
+                Ok(IngestMsg::Item { features, reply }) => pending.push((features, reply)),
+                Ok(IngestMsg::Shutdown) => {
+                    stop = true;
+                    break;
+                }
                 Err(_) => break,
             }
         }
@@ -132,19 +156,25 @@ fn drain_loop(rx: &Receiver<IngestMsg>, store: &ShardStore, m: &Metrics) {
         // with the typed error and keeps draining
         if let Err(e) = faults::failpoint(faults::DRAIN_LOOP, 0) {
             let text = e.to_string();
-            for msg in pending.drain(..) {
-                let _ = msg.reply.send(Err(SubmodError::Coordinator(text.clone())));
+            for (_, reply) in pending.drain(..) {
+                let _ = reply.send(Err(SubmodError::Coordinator(text.clone())));
+            }
+            if stop {
+                return;
             }
             continue;
         }
         let feats: Vec<Vec<f32>> =
-            pending.iter_mut().map(|msg| std::mem::take(&mut msg.features)).collect();
+            pending.iter_mut().map(|(features, _)| std::mem::take(features)).collect();
         let results = store.push_batch(feats);
-        for (msg, res) in pending.drain(..).zip(results) {
+        for ((_, reply), res) in pending.drain(..).zip(results) {
             if res.is_ok() {
                 m.items_ingested.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             }
-            let _ = msg.reply.send(res);
+            let _ = reply.send(res);
+        }
+        if stop {
+            return;
         }
     }
 }
@@ -220,6 +250,27 @@ mod tests {
         }
         assert_eq!(store.len(), 128);
         assert_eq!(metrics.snapshot().items_ingested, 128);
+    }
+
+    #[test]
+    fn shutdown_sentinel_drains_queued_items_then_exits() {
+        let store = Arc::new(ShardStore::new(8));
+        let metrics = Arc::new(Metrics::new());
+        let (h, join) = spawn_drain(store.clone(), metrics.clone(), 8);
+        // items ahead of the sentinel are stored and replied to
+        for i in 0..3 {
+            assert_eq!(h.ingest(vec![i as f32]).unwrap(), i);
+        }
+        h.request_shutdown();
+        join.join().expect("drain exits cleanly on shutdown sentinel");
+        assert_eq!(store.len(), 3);
+        // the handle is still alive but the drain is gone: ingest after
+        // shutdown is a typed error, never a hang
+        let err = h.ingest(vec![9.0]).unwrap_err();
+        assert!(matches!(err, SubmodError::Coordinator(_)), "{err}");
+        // a second sentinel is harmless (best-effort send)
+        h.request_shutdown();
+        assert_eq!(metrics.snapshot().drain_restarts, 0);
     }
 
     #[test]

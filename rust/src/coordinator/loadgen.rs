@@ -1,0 +1,499 @@
+//! Sustained-load harness (ISSUE 8): a seeded, deterministic,
+//! multi-tenant closed-loop driver for the coordinator.
+//!
+//! PR 6 pinned each fault-recovery path with a unit-style failpoint
+//! test; this module measures the whole shed → degrade → error →
+//! shutdown stack under *sustained* chaos traffic. `run` builds a
+//! coordinator, streams a synthetic ground set in, then drives
+//! `tenants × requests_per_tenant` selections from closed-loop tenant
+//! threads (each tenant issues its next request only after the previous
+//! one resolves — the load level is the concurrency, not a wall-clock
+//! rate, so runs are schedule-robust). Chaos rides the existing
+//! [`super::faults`] registry: seeded `Trigger::Prob` specs on the
+//! stage-1, kernel-build, stage-2, and drain-loop sites give a
+//! configurable panic/error/delay mix that replays identically for a
+//! given seed.
+//!
+//! Outcomes are tallied per closed-loop accounting — every issued
+//! request resolves as served, shed, deadline-exceeded, or failed — and
+//! the final [`LoadgenReport`] merges the tally with the coordinator's
+//! own metrics snapshot (shed/degraded/breaker/drain counters, success
+//! *and* failed latency percentiles) plus the shutdown checkpoint size.
+//! `benches/loadgen.rs` serializes it as `BENCH_loadgen.json` (schema
+//! `bench_loadgen/v1`); the `submodlib loadgen` CLI subcommand prints it.
+//!
+//! Chaos probabilities require the `faults` cargo feature: without it a
+//! nonzero probability is a typed `InvalidParam` (never a silent no-op
+//! pretending chaos ran).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::config::CoordinatorConfig;
+use crate::coordinator::service::{Coordinator, SelectRequest};
+use crate::coordinator::MetricsSnapshot;
+use crate::data::synthetic;
+use crate::error::{Result, SubmodError};
+use crate::rng::Pcg64;
+use crate::util::json::Json;
+
+/// Everything a loadgen run is parameterized by. Defaults give a small
+/// but non-trivial run (4 tenants over 2 permits, breakers armed).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Ground-set size streamed in before the tenants start.
+    pub items: usize,
+    pub dim: usize,
+    pub shard_capacity: usize,
+    /// Closed-loop tenant threads issuing selections concurrently.
+    pub tenants: usize,
+    pub requests_per_tenant: usize,
+    pub budget: usize,
+    pub max_inflight: usize,
+    pub admission_queue_depth: usize,
+    pub breaker_threshold: Option<usize>,
+    pub breaker_probe_after: usize,
+    /// Per-request deadline (`None` = no deadline).
+    pub deadline_ms: Option<u64>,
+    pub min_shard_quorum: Option<usize>,
+    /// Seeds tenant request streams and every chaos trigger.
+    pub seed: u64,
+    /// Shed retries per request: a tenant retries an `Overloaded`
+    /// response up to this many times (yielding between attempts)
+    /// before tallying it as shed.
+    pub shed_retries: usize,
+    /// Chaos mix (all require the `faults` feature when nonzero).
+    pub stage1_panic_prob: f64,
+    pub stage1_error_prob: f64,
+    pub stage2_delay_prob: f64,
+    pub stage2_delay_ms: u64,
+    pub drain_panic_prob: f64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            items: 600,
+            dim: 8,
+            shard_capacity: 64,
+            tenants: 4,
+            requests_per_tenant: 16,
+            budget: 8,
+            max_inflight: 2,
+            admission_queue_depth: 2,
+            breaker_threshold: Some(3),
+            breaker_probe_after: 4,
+            deadline_ms: None,
+            min_shard_quorum: Some(1),
+            seed: 42,
+            shed_retries: 2,
+            stage1_panic_prob: 0.0,
+            stage1_error_prob: 0.0,
+            stage2_delay_prob: 0.0,
+            stage2_delay_ms: 5,
+            drain_panic_prob: 0.0,
+        }
+    }
+}
+
+impl LoadgenConfig {
+    fn has_chaos(&self) -> bool {
+        self.stage1_panic_prob > 0.0
+            || self.stage1_error_prob > 0.0
+            || self.stage2_delay_prob > 0.0
+            || self.drain_panic_prob > 0.0
+    }
+
+    fn validate(&self) -> Result<()> {
+        let positive = [
+            ("items", self.items),
+            ("tenants", self.tenants),
+            ("requests_per_tenant", self.requests_per_tenant),
+            ("budget", self.budget),
+        ];
+        for (name, v) in positive {
+            if v == 0 {
+                return Err(SubmodError::InvalidParam(format!("loadgen {name} must be > 0")));
+            }
+        }
+        for (name, p) in [
+            ("stage1_panic_prob", self.stage1_panic_prob),
+            ("stage1_error_prob", self.stage1_error_prob),
+            ("stage2_delay_prob", self.stage2_delay_prob),
+            ("drain_panic_prob", self.drain_panic_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(SubmodError::InvalidParam(format!(
+                    "loadgen {name} must be in [0, 1], got {p}"
+                )));
+            }
+        }
+        if self.has_chaos() && !cfg!(feature = "faults") {
+            return Err(SubmodError::InvalidParam(
+                "loadgen chaos probabilities require the `faults` cargo feature \
+                 (rebuild with --features faults)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// What a run measured. `to_json` is the `bench_loadgen/v1` document.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub wall_s: f64,
+    /// Resolved requests (any outcome) per wall-clock second.
+    pub throughput_rps: f64,
+    pub requests_total: u64,
+    pub served: u64,
+    pub degraded: u64,
+    pub shed: u64,
+    pub deadline_exceeded: u64,
+    pub failed_other: u64,
+    /// Tenant-level retries of `Overloaded` responses.
+    pub shed_retries: u64,
+    /// Ingest submissions retried after a drain crash failed them.
+    pub ingest_retries: u64,
+    pub checkpoint_bytes: usize,
+    /// Final coordinator metrics (latency percentiles, breaker
+    /// transitions, drain restarts, ...).
+    pub metrics: MetricsSnapshot,
+}
+
+impl LoadgenReport {
+    /// Serialize as the `bench_loadgen/v1` schema.
+    pub fn to_json(&self, cfg: &LoadgenConfig) -> Json {
+        let m = &self.metrics;
+        obj(vec![
+            ("schema", Json::Str("bench_loadgen/v1".into())),
+            ("threads", Json::Num(crate::runtime::pool::num_threads() as f64)),
+            (
+                "workload",
+                obj(vec![
+                    ("items", num(cfg.items as u64)),
+                    ("dim", num(cfg.dim as u64)),
+                    ("shard_capacity", num(cfg.shard_capacity as u64)),
+                    ("tenants", num(cfg.tenants as u64)),
+                    ("requests_per_tenant", num(cfg.requests_per_tenant as u64)),
+                    ("budget", num(cfg.budget as u64)),
+                    ("max_inflight", num(cfg.max_inflight as u64)),
+                    ("admission_queue_depth", num(cfg.admission_queue_depth as u64)),
+                    ("breaker_threshold", num(cfg.breaker_threshold.unwrap_or(0) as u64)),
+                    ("breaker_probe_after", num(cfg.breaker_probe_after as u64)),
+                    ("deadline_ms", num(cfg.deadline_ms.unwrap_or(0))),
+                    ("seed", num(cfg.seed)),
+                    ("stage1_panic_prob", Json::Num(cfg.stage1_panic_prob)),
+                    ("stage1_error_prob", Json::Num(cfg.stage1_error_prob)),
+                    ("stage2_delay_prob", Json::Num(cfg.stage2_delay_prob)),
+                    ("stage2_delay_ms", num(cfg.stage2_delay_ms)),
+                    ("drain_panic_prob", Json::Num(cfg.drain_panic_prob)),
+                ]),
+            ),
+            (
+                "throughput",
+                obj(vec![
+                    ("wall_s", Json::Num(self.wall_s)),
+                    ("requests_per_s", Json::Num(self.throughput_rps)),
+                ]),
+            ),
+            (
+                "select_latency",
+                obj(vec![
+                    ("p50_us", num(m.latency_p50_us)),
+                    ("p99_us", num(m.latency_p99_us)),
+                    ("failed_p50_us", num(m.failed_latency_p50_us)),
+                    ("failed_p99_us", num(m.failed_latency_p99_us)),
+                ]),
+            ),
+            (
+                "outcomes",
+                obj(vec![
+                    ("requests_total", num(self.requests_total)),
+                    ("served", num(self.served)),
+                    ("degraded", num(self.degraded)),
+                    ("shed", num(self.shed)),
+                    ("deadline_exceeded", num(self.deadline_exceeded)),
+                    ("failed_other", num(self.failed_other)),
+                    ("shed_retries", num(self.shed_retries)),
+                    ("ingest_retries", num(self.ingest_retries)),
+                ]),
+            ),
+            (
+                "coordinator",
+                obj(vec![
+                    ("selections_served", num(m.selections_served)),
+                    ("selections_failed", num(m.selections_failed)),
+                    ("selections_degraded", num(m.selections_degraded)),
+                    ("selections_shed", num(m.selections_shed)),
+                    ("admission_waits", num(m.admission_waits)),
+                    ("deadline_exceeded", num(m.deadline_exceeded)),
+                    ("shard_retries", num(m.shard_retries)),
+                    ("shard_failures", num(m.shard_failures)),
+                    ("breaker_trips", num(m.breaker_trips)),
+                    ("breaker_probes", num(m.breaker_probes)),
+                    ("breaker_recoveries", num(m.breaker_recoveries)),
+                    ("shards_quarantined", num(m.shards_quarantined)),
+                    ("drain_restarts", num(m.drain_restarts)),
+                    ("backpressure_waits", num(m.backpressure_waits)),
+                    ("checkpoint_bytes", num(self.checkpoint_bytes as u64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Per-run tallies, bumped by the tenant threads.
+#[derive(Default)]
+struct Tally {
+    served: AtomicU64,
+    degraded: AtomicU64,
+    shed: AtomicU64,
+    deadline: AtomicU64,
+    failed: AtomicU64,
+    shed_retries: AtomicU64,
+}
+
+/// Run the harness: build → ingest (chaos may crash the drain; failed
+/// submissions are retried) → closed-loop tenant phase → clear chaos →
+/// graceful shutdown → report.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    cfg.validate()?;
+    let coordinator = Coordinator::new(CoordinatorConfig {
+        workers: crate::runtime::pool::num_threads(),
+        shard_capacity: cfg.shard_capacity,
+        ingest_depth: 64,
+        per_shard_factor: 2.0,
+        min_shard_quorum: cfg.min_shard_quorum,
+        max_inflight: cfg.max_inflight,
+        admission_queue_depth: cfg.admission_queue_depth,
+        breaker_threshold: cfg.breaker_threshold,
+        breaker_probe_after: cfg.breaker_probe_after,
+    });
+
+    arm_chaos(cfg);
+    // always disarm, even if ingest or a tenant errors out below
+    struct ChaosGuard;
+    impl Drop for ChaosGuard {
+        fn drop(&mut self) {
+            clear_chaos();
+        }
+    }
+    let _guard = ChaosGuard;
+
+    // ingest phase: an armed drain_loop panic fails whole batches with
+    // typed errors (rows dropped before the store append), so a bounded
+    // per-item retry loop makes seeding converge and counts the cost
+    let data = synthetic::blobs(cfg.items, cfg.dim, 8, 2.0, cfg.seed);
+    let handle = coordinator.ingest_handle();
+    let mut ingest_retries = 0u64;
+    for i in 0..cfg.items {
+        let row = data.row(i).to_vec();
+        let mut attempts = 0usize;
+        loop {
+            match handle.ingest(row.clone()) {
+                Ok(_) => break,
+                Err(_) if attempts < 50 => {
+                    attempts += 1;
+                    ingest_retries += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    let tally = Tally::default();
+    let t_start = Instant::now();
+    // lint: allow(thread-spawn) — loadgen tenants model independent external
+    // clients of the service; they must contend on admission concurrently,
+    // which pool jobs (one claimed work item per worker) cannot express
+    std::thread::scope(|scope| {
+        for tenant in 0..cfg.tenants {
+            let coordinator = &coordinator;
+            let tally = &tally;
+            scope.spawn(move || {
+                let mut rng = Pcg64::new_stream(cfg.seed, tenant as u64);
+                for _ in 0..cfg.requests_per_tenant {
+                    // per-tenant budget jitter keeps request costs mixed
+                    let budget = 1 + rng.next_below(cfg.budget);
+                    let req = SelectRequest {
+                        budget,
+                        deadline: cfg.deadline_ms.map(Duration::from_millis),
+                        ..Default::default()
+                    };
+                    let mut outcome = coordinator.select(req.clone());
+                    let mut retries = 0usize;
+                    while matches!(outcome, Err(SubmodError::Overloaded))
+                        && retries < cfg.shed_retries
+                    {
+                        retries += 1;
+                        tally.shed_retries.fetch_add(1, Ordering::Relaxed);
+                        std::thread::yield_now();
+                        outcome = coordinator.select(req.clone());
+                    }
+                    match outcome {
+                        Ok(resp) => {
+                            tally.served.fetch_add(1, Ordering::Relaxed);
+                            if resp.degraded {
+                                tally.degraded.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(SubmodError::Overloaded) => {
+                            tally.shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(SubmodError::DeadlineExceeded) => {
+                            tally.deadline.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            tally.failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall_s = t_start.elapsed().as_secs_f64();
+
+    // disarm before shutdown so the drain's final batch can't be killed
+    drop(_guard);
+    let checkpoint = coordinator.shutdown()?;
+
+    let requests_total = (cfg.tenants * cfg.requests_per_tenant) as u64;
+    let served = tally.served.load(Ordering::Relaxed);
+    let shed = tally.shed.load(Ordering::Relaxed);
+    let deadline_exceeded = tally.deadline.load(Ordering::Relaxed);
+    let failed_other = tally.failed.load(Ordering::Relaxed);
+    debug_assert_eq!(served + shed + deadline_exceeded + failed_other, requests_total);
+    Ok(LoadgenReport {
+        wall_s,
+        throughput_rps: if wall_s > 0.0 { requests_total as f64 / wall_s } else { 0.0 },
+        requests_total,
+        served,
+        degraded: tally.degraded.load(Ordering::Relaxed),
+        shed,
+        deadline_exceeded,
+        failed_other,
+        shed_retries: tally.shed_retries.load(Ordering::Relaxed),
+        ingest_retries,
+        checkpoint_bytes: checkpoint.len(),
+        metrics: coordinator.metrics(),
+    })
+}
+
+#[cfg(feature = "faults")]
+fn arm_chaos(cfg: &LoadgenConfig) {
+    use crate::coordinator::faults::{self, FaultAction, FaultSpec, Trigger};
+    let mut arm = |site: &str, action: FaultAction, p: f64, stream: u64| {
+        if p > 0.0 {
+            faults::inject(
+                site,
+                FaultSpec {
+                    action,
+                    key: None,
+                    trigger: Trigger::Prob { p, seed: cfg.seed ^ stream },
+                },
+            );
+        }
+    };
+    arm(faults::STAGE1_EVAL, FaultAction::Panic, cfg.stage1_panic_prob, 0x51);
+    arm(faults::KERNEL_BUILD, FaultAction::Error, cfg.stage1_error_prob, 0x52);
+    arm(
+        faults::STAGE2_MERGE,
+        FaultAction::Delay(Duration::from_millis(cfg.stage2_delay_ms)),
+        cfg.stage2_delay_prob,
+        0x53,
+    );
+    arm(faults::DRAIN_LOOP, FaultAction::Panic, cfg.drain_panic_prob, 0x54);
+}
+
+#[cfg(not(feature = "faults"))]
+fn arm_chaos(_cfg: &LoadgenConfig) {}
+
+#[cfg(feature = "faults")]
+fn clear_chaos() {
+    crate::coordinator::faults::clear();
+}
+
+#[cfg(not(feature = "faults"))]
+fn clear_chaos() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: chaos-armed loadgen runs live in `benches/loadgen.rs` and
+    // `tests/fault_injection.rs` (own processes / serialized): the
+    // failpoint registry is process-global and these lib tests run in
+    // parallel with the coordinator's own unit tests.
+
+    fn small() -> LoadgenConfig {
+        LoadgenConfig {
+            items: 120,
+            dim: 4,
+            shard_capacity: 32,
+            tenants: 3,
+            requests_per_tenant: 4,
+            budget: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn clean_run_accounts_for_every_request() {
+        let cfg = small();
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.requests_total, 12);
+        assert_eq!(
+            report.served + report.shed + report.deadline_exceeded + report.failed_other,
+            12
+        );
+        // no chaos, generous queue: everything is eventually served
+        assert_eq!(report.served + report.shed, 12);
+        assert_eq!(report.metrics.items_ingested, 120);
+        assert!(report.throughput_rps > 0.0);
+        assert_eq!(report.metrics.drain_restarts, 0);
+    }
+
+    #[test]
+    fn report_serializes_the_v1_schema() {
+        let cfg = small();
+        let report = run(&cfg).unwrap();
+        let json = report.to_json(&cfg);
+        let text = json.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some("bench_loadgen/v1"));
+        let outcomes = back.get("outcomes").expect("outcomes object");
+        assert_eq!(outcomes.get("requests_total").and_then(Json::as_usize), Some(12));
+        assert!(back.get("select_latency").is_some());
+        assert!(back.get("coordinator").is_some());
+        assert!(back.get("throughput").is_some());
+    }
+
+    #[test]
+    fn invalid_configs_are_typed_errors() {
+        for broken in [
+            LoadgenConfig { tenants: 0, ..small() },
+            LoadgenConfig { items: 0, ..small() },
+            LoadgenConfig { stage1_panic_prob: 1.5, ..small() },
+            LoadgenConfig { drain_panic_prob: -0.1, ..small() },
+        ] {
+            assert!(matches!(run(&broken), Err(SubmodError::InvalidParam(_))), "{broken:?}");
+        }
+    }
+
+    #[cfg(not(feature = "faults"))]
+    #[test]
+    fn chaos_without_faults_feature_is_rejected() {
+        let cfg = LoadgenConfig { stage1_panic_prob: 0.1, ..small() };
+        let err = run(&cfg).unwrap_err();
+        assert!(matches!(err, SubmodError::InvalidParam(_)), "{err}");
+    }
+}

@@ -6,6 +6,16 @@
 //! shard retry, degraded selection, deadline abort, drain respawn — bumps
 //! a dedicated counter so operators (and the fault-injection suite) can
 //! distinguish "healthy", "degraded but serving", and "failing".
+//!
+//! The overload-protection layer (ISSUE 8) adds its own surface:
+//! admission accounting (`selections_shed`, `admission_waits`, the
+//! `selections_inflight` gauge), circuit-breaker transitions
+//! (`breaker_trips` / `breaker_probes` / `breaker_recoveries`, the
+//! `shards_quarantined` gauge), and a *separate* failure-latency
+//! histogram. Successful and failed requests are recorded apart because
+//! folding them together understates tail latency in exactly the runs
+//! that matter (survivorship bias: the slow requests are the ones that
+//! hit deadlines and fail).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -39,7 +49,29 @@ pub struct Metrics {
     pub deadline_exceeded: AtomicU64,
     /// Times the supervised ingest drain was restarted after a panic.
     pub drain_restarts: AtomicU64,
+    /// Requests shed at admission (queue full, or deadline already spent
+    /// on arrival) with a typed `Overloaded` error.
+    pub selections_shed: AtomicU64,
+    /// Requests that had to wait in the bounded FIFO admission queue
+    /// before acquiring a permit.
+    pub admission_waits: AtomicU64,
+    /// Gauge: selections currently holding an admission permit.
+    pub selections_inflight: AtomicU64,
+    /// Gauge: shards currently quarantined by their circuit breaker
+    /// (Open or Half-Open).
+    pub shards_quarantined: AtomicU64,
+    /// Circuit breakers tripped Closed → Open (threshold consecutive
+    /// request failures reached).
+    pub breaker_trips: AtomicU64,
+    /// Half-Open probe evaluations dispatched for quarantined shards.
+    pub breaker_probes: AtomicU64,
+    /// Breakers closed again after a successful Half-Open probe.
+    pub breaker_recoveries: AtomicU64,
     select_latency: [AtomicU64; 12],
+    /// Latencies of requests that failed or were shed — kept apart from
+    /// `select_latency` so success percentiles don't silently exclude
+    /// the slow failures (and vice versa).
+    failed_latency: [AtomicU64; 12],
 }
 
 impl Metrics {
@@ -48,14 +80,21 @@ impl Metrics {
     }
 
     pub fn record_select_latency(&self, d: Duration) {
-        let us = d.as_micros() as u64;
-        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len() - 1);
-        self.select_latency[idx].fetch_add(1, Ordering::Relaxed);
+        self.select_latency[bucket_index(d)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the end-to-end latency of a request that errored (failed,
+    /// shed, deadline-exceeded). See the module docs on survivorship
+    /// bias — these never mix into the success histogram.
+    pub fn record_failed_latency(&self, d: Duration) {
+        self.failed_latency[bucket_index(d)].fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let hist: Vec<u64> =
             self.select_latency.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let failed_hist: Vec<u64> =
+            self.failed_latency.iter().map(|a| a.load(Ordering::Relaxed)).collect();
         MetricsSnapshot {
             items_ingested: self.items_ingested.load(Ordering::Relaxed),
             selections_served: self.selections_served.load(Ordering::Relaxed),
@@ -66,10 +105,24 @@ impl Metrics {
             shard_retries: self.shard_retries.load(Ordering::Relaxed),
             deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
             drain_restarts: self.drain_restarts.load(Ordering::Relaxed),
+            selections_shed: self.selections_shed.load(Ordering::Relaxed),
+            admission_waits: self.admission_waits.load(Ordering::Relaxed),
+            selections_inflight: self.selections_inflight.load(Ordering::Relaxed),
+            shards_quarantined: self.shards_quarantined.load(Ordering::Relaxed),
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
+            breaker_probes: self.breaker_probes.load(Ordering::Relaxed),
+            breaker_recoveries: self.breaker_recoveries.load(Ordering::Relaxed),
             latency_p50_us: percentile(&hist, 0.50),
             latency_p99_us: percentile(&hist, 0.99),
+            failed_latency_p50_us: percentile(&failed_hist, 0.50),
+            failed_latency_p99_us: percentile(&failed_hist, 0.99),
         }
     }
+}
+
+fn bucket_index(d: Duration) -> usize {
+    let us = d.as_micros() as u64;
+    BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len() - 1)
 }
 
 fn percentile(hist: &[u64], p: f64) -> u64 {
@@ -102,10 +155,21 @@ pub struct MetricsSnapshot {
     pub shard_retries: u64,
     pub deadline_exceeded: u64,
     pub drain_restarts: u64,
+    pub selections_shed: u64,
+    pub admission_waits: u64,
+    pub selections_inflight: u64,
+    pub shards_quarantined: u64,
+    pub breaker_trips: u64,
+    pub breaker_probes: u64,
+    pub breaker_recoveries: u64,
     /// bucketized upper-bound estimates (overflow clamped to
     /// [`OVERFLOW_CLAMP_US`])
     pub latency_p50_us: u64,
     pub latency_p99_us: u64,
+    /// percentiles over *unsuccessful* requests only (failed, shed,
+    /// deadline-exceeded) — 0 when every request succeeded
+    pub failed_latency_p50_us: u64,
+    pub failed_latency_p99_us: u64,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -114,7 +178,10 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "ingested={} served={} failed={} degraded={} backpressure={} \
              shard_failures={} shard_retries={} deadline_exceeded={} \
-             drain_restarts={} p50≤{}µs p99≤{}µs",
+             drain_restarts={} shed={} admission_waits={} inflight={} \
+             quarantined={} breaker_trips={} breaker_probes={} \
+             breaker_recoveries={} p50≤{}µs p99≤{}µs failed_p50≤{}µs \
+             failed_p99≤{}µs",
             self.items_ingested,
             self.selections_served,
             self.selections_failed,
@@ -124,8 +191,17 @@ impl std::fmt::Display for MetricsSnapshot {
             self.shard_retries,
             self.deadline_exceeded,
             self.drain_restarts,
+            self.selections_shed,
+            self.admission_waits,
+            self.selections_inflight,
+            self.shards_quarantined,
+            self.breaker_trips,
+            self.breaker_probes,
+            self.breaker_recoveries,
             self.latency_p50_us,
-            self.latency_p99_us
+            self.latency_p99_us,
+            self.failed_latency_p50_us,
+            self.failed_latency_p99_us
         )
     }
 }
@@ -191,8 +267,34 @@ mod tests {
         let m = Metrics::new();
         m.items_ingested.fetch_add(3, Ordering::Relaxed);
         m.drain_restarts.fetch_add(1, Ordering::Relaxed);
+        m.selections_shed.fetch_add(2, Ordering::Relaxed);
+        m.shards_quarantined.fetch_add(1, Ordering::Relaxed);
         let text = m.snapshot().to_string();
         assert!(text.contains("ingested=3"));
         assert!(text.contains("drain_restarts=1"));
+        assert!(text.contains("shed=2"));
+        assert!(text.contains("quarantined=1"));
+    }
+
+    #[test]
+    fn failed_latency_is_a_separate_histogram() {
+        // regression (ISSUE 8 satellite, survivorship bias): failed/shed
+        // request latencies must populate their own percentiles without
+        // leaking into the success histogram — and slow failures must be
+        // visible even when every success was fast
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_select_latency(Duration::from_micros(80));
+        }
+        m.record_failed_latency(Duration::from_millis(40));
+        let s = m.snapshot();
+        assert_eq!(s.latency_p50_us, 100, "success p50 unaffected by failures");
+        assert_eq!(s.latency_p99_us, 100, "success p99 unaffected by failures");
+        assert_eq!(s.failed_latency_p50_us, 100_000);
+        assert_eq!(s.failed_latency_p99_us, 100_000);
+        // and the failure histogram alone stays empty-safe
+        let empty = Metrics::new().snapshot();
+        assert_eq!(empty.failed_latency_p50_us, 0);
+        assert_eq!(empty.failed_latency_p99_us, 0);
     }
 }

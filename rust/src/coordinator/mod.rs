@@ -7,40 +7,57 @@
 //! long-running selector over an *arriving* ground set. That is what this
 //! coordinator provides:
 //!
-//! * [`ingest`]   — bounded ingestion queue (backpressure) feeding
+//! * [`ingest`]    — bounded ingestion queue (backpressure) feeding
 //!   fixed-capacity feature [`shard`]s, drained by a *supervised* thread
 //!   that is restarted in place if it panics;
-//! * [`service`]  — the orchestrator: stage-1 greedy per shard fanned out
-//!   over the shared worker pool, then a stage-2 greedy merge over the
-//!   candidate union (the two-stage scheme of Wei, Iyer & Bilmes 2014,
-//!   cited by the paper for exactly this scaling role);
-//! * [`metrics`]  — ingest/select counters, fault/recovery counters, and
-//!   latency accounting;
-//! * [`faults`]   — deterministic fault injection (failpoints) used by
+//! * [`admission`] — the overload gate: bounded in-flight selections +
+//!   bounded FIFO admission queue; excess load is shed with a typed
+//!   `SubmodError::Overloaded` instead of queueing unboundedly;
+//! * [`service`]   — the orchestrator: stage-1 greedy per shard fanned
+//!   out over the shared worker pool (behind per-shard circuit
+//!   breakers), then a stage-2 greedy merge over the candidate union
+//!   (the two-stage scheme of Wei, Iyer & Bilmes 2014, cited by the
+//!   paper for exactly this scaling role);
+//! * [`metrics`]   — ingest/select counters, fault/recovery/overload
+//!   counters, and success + failed latency accounting;
+//! * [`faults`]    — deterministic fault injection (failpoints) used by
 //!   `tests/fault_injection.rs` to pin every recovery path (no-op unless
-//!   the `faults` cargo feature is enabled).
+//!   the `faults` cargo feature is enabled);
+//! * [`loadgen`]   — a seeded multi-tenant closed-loop load generator
+//!   that measures the whole stack under sustained chaos traffic
+//!   (`benches/loadgen.rs`, `submodlib loadgen`).
 //!
 //! ## Fault model, in one paragraph
 //!
-//! A stage-1 shard evaluation that panics or errors is isolated, retried
-//! once, and then dropped; the request still succeeds — marked
-//! `degraded`, listing `failed_shards` — as long as
+//! Shed → degrade → error → shutdown. Load beyond
+//! `CoordinatorConfig::max_inflight` waits in a bounded FIFO queue;
+//! beyond that it is *shed* fast with `SubmodError::Overloaded`. A
+//! stage-1 shard evaluation that panics or errors is isolated, retried
+//! once, and then dropped; a shard failing `breaker_threshold`
+//! consecutive requests is quarantined by a circuit breaker (request-
+//! count-based Half-Open probes readmit it). The request still succeeds
+//! — marked `degraded`, listing `failed_shards` — as long as
 //! `CoordinatorConfig::min_shard_quorum` shards survive (default: all
 //! must). Requests carry an optional deadline and fail fast with
 //! `SubmodError::DeadlineExceeded` instead of blocking. The ingest drain
 //! is supervised: producers get typed errors (never hangs) across a
 //! drain crash, and the drain resumes with the [`ShardStore`] intact.
-//! The whole ground set snapshots to a versioned binary checkpoint from
-//! which a new coordinator serves byte-identical selections. See
-//! [`service`] for the full contract.
+//! [`Coordinator::shutdown`] closes admission, drains in-flight work and
+//! the ingest queue, and returns a final checkpoint; the whole ground
+//! set snapshots to a versioned binary checkpoint from which a new
+//! coordinator serves byte-identical selections. See [`service`] for the
+//! full contract.
 
+pub(crate) mod admission;
 pub mod faults;
 pub mod ingest;
+pub mod loadgen;
 pub mod metrics;
 pub mod service;
 pub mod shard;
 
 pub use ingest::IngestHandle;
+pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use metrics::MetricsSnapshot;
 pub use service::{Coordinator, SelectRequest, SelectResponse};
 pub use shard::ShardStore;

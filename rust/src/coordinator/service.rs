@@ -13,6 +13,53 @@
 //! composable two-stage scheme (Wei, Iyer & Bilmes 2014 — cited by the
 //! paper for exactly this scaling role; same shape as GreeDi).
 //!
+//! ## Approximation bound (ROADMAP item 4)
+//!
+//! For a monotone submodular objective, running greedy independently on
+//! a partition of the ground set and then greedy again over the union of
+//! the per-block solutions is a constant-factor approximation of the
+//! centralized greedy: with `m` blocks and budget `k`, the two-stage
+//! value is within `1/min(m, k)` of the optimal subset in the worst
+//! case, and Wei, Iyer & Bilmes (2014, "Fast multi-stage submodular
+//! maximization") show the practical gap is far smaller when blocks are
+//! balanced — which the capacity-bounded [`super::shard::ShardStore`]
+//! guarantees. `per_shard_factor` over-provisions each block's quota
+//! (`ceil(budget · factor / n_shards)`) so the stage-2 union almost
+//! always contains the centralized greedy's picks (the
+//! `two_stage_close_to_flat_greedy` test pins ≥ 0.85 of the flat value).
+//! Dropping a failed shard removes only that block's candidates: the
+//! bound degrades gracefully to the surviving blocks' partition — the
+//! formal basis for the quorum policy below, and why a `degraded`
+//! response is still a principled answer rather than a best-effort one.
+//!
+//! ## Fault model (ISSUE 6 + ISSUE 8): shed → degrade → error → shutdown
+//!
+//! Overload protection wraps the per-request fault tolerance in four
+//! layers, ordered from cheapest to most drastic:
+//!
+//! 1. **Shed** ([`super::admission`]): at most
+//!    `CoordinatorConfig::max_inflight` selections run concurrently;
+//!    `admission_queue_depth` more wait FIFO. Beyond that — or when a
+//!    request's deadline is already spent at admission — the request is
+//!    refused immediately with `SubmodError::Overloaded`
+//!    (`Metrics::selections_shed`). Admission schedules *when* a
+//!    selection runs, never *what* it computes, so admitted selections
+//!    are byte-identical to an uncontended run.
+//! 2. **Degrade** (quorum + circuit breakers): shards that fail their
+//!    retry are dropped; a shard failing `breaker_threshold` consecutive
+//!    requests is quarantined ([`super::shard::ShardBreakers`]) and
+//!    skipped — counted toward quorum exactly like a dropped shard,
+//!    surfaced in `failed_shards` and the `shards_quarantined` gauge —
+//!    until a request-count-based Half-Open probe readmits it.
+//! 3. **Error**: quorum misses, deadlines, and stage-2 failures return
+//!    typed errors; failed/shed request latencies land in a separate
+//!    histogram (`failed_latency_p50/p99_us`) so success percentiles
+//!    carry no survivorship bias.
+//! 4. **Shutdown** ([`Coordinator::shutdown`]): admission closes (typed
+//!    `ShuttingDown` for new requests), in-flight selections and the
+//!    ingest queue drain, the drain thread joins, and a final checkpoint
+//!    blob is returned.
+//!
 //! ## Fault model (ISSUE 6)
 //!
 //! The two-stage scheme keeps a partition-greedy approximation story per
@@ -51,10 +98,13 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::CoordinatorConfig;
+use crate::coordinator::admission::AdmissionGate;
 use crate::coordinator::faults;
 use crate::coordinator::ingest::{spawn_drain, IngestHandle};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::shard::{Shard, ShardStore};
+use crate::coordinator::shard::{
+    BreakerDecision, BreakerTransition, Shard, ShardBreakers, ShardStore,
+};
 use crate::error::{Result, SubmodError};
 use crate::functions::disparity_sum::DisparitySum;
 use crate::functions::facility_location::FacilityLocation;
@@ -71,7 +121,10 @@ use crate::runtime::pool;
 pub enum ObjectiveKind {
     FacilityLocation,
     GraphCut { lambda: f64 },
-    /// LogDet always uses an RBF kernel internally (positive definite).
+    /// LogDet requires a positive-definite kernel, so it only accepts
+    /// RBF metrics: an explicit `Metric::Rbf` in the request is honored
+    /// (gamma included); any other metric is overridden to
+    /// `Rbf { gamma: 1.0 }`. See [`SelectRequest::metric`].
     LogDeterminant { reg: f64 },
     DisparitySum,
 }
@@ -88,12 +141,21 @@ impl ObjectiveKind {
             ObjectiveKind::GraphCut { lambda } => {
                 Box::new(GraphCut::new(DenseKernel::from_data(data, metric), lambda)?)
             }
-            ObjectiveKind::LogDeterminant { reg } => Box::new(
-                LogDeterminant::with_regularization(
-                    DenseKernel::from_data(data, Metric::Rbf { gamma: 1.0 }),
+            ObjectiveKind::LogDeterminant { reg } => {
+                // LogDet's Cholesky needs a positive-definite kernel:
+                // honor an explicit RBF (gamma included), override
+                // anything else to RBF γ=1.0 (documented on
+                // `SelectRequest::metric`, pinned by
+                // `log_determinant_metric_override_is_pinned`)
+                let metric = match metric {
+                    rbf @ Metric::Rbf { .. } => rbf,
+                    _ => Metric::Rbf { gamma: 1.0 },
+                };
+                Box::new(LogDeterminant::with_regularization(
+                    DenseKernel::from_data(data, metric),
                     reg,
-                )?,
-            ),
+                )?)
+            }
             ObjectiveKind::DisparitySum => {
                 Box::new(DisparitySum::new(DenseKernel::distances_from_data(data)))
             }
@@ -116,11 +178,21 @@ pub struct SelectRequest {
     pub objective: ObjectiveKind,
     pub budget: usize,
     pub optimizer: OptimizerKind,
+    /// Similarity metric for kernel construction. One documented
+    /// override: `ObjectiveKind::LogDeterminant` requires a
+    /// positive-definite kernel, so it honors `Metric::Rbf` (gamma
+    /// included) but silently substitutes `Rbf { gamma: 1.0 }` for any
+    /// other metric — the default `Euclidean` therefore still works for
+    /// LogDet requests (pinned by
+    /// `log_determinant_metric_override_is_pinned`).
     pub metric: Metric,
     /// Wall-clock budget for this request, measured from `select()`
-    /// entry. Checked between shard claims and before the stage-2 merge;
-    /// when exceeded the request fails with
-    /// `SubmodError::DeadlineExceeded`. `None` (default) = no deadline.
+    /// entry — time spent waiting in the admission queue counts. A
+    /// deadline already spent at admission sheds the request
+    /// (`SubmodError::Overloaded`); one expiring in the queue or during
+    /// evaluation (checked between shard claims and before the stage-2
+    /// merge) fails it with `SubmodError::DeadlineExceeded`. `None`
+    /// (default) = no deadline.
     pub deadline: Option<Duration>,
 }
 
@@ -165,7 +237,10 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     ingest: IngestHandle,
     cfg: CoordinatorConfig,
-    _drain: std::thread::JoinHandle<()>,
+    admission: AdmissionGate,
+    breakers: ShardBreakers,
+    /// Taken (and joined) exactly once, by [`shutdown`](Self::shutdown).
+    drain: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Coordinator {
@@ -186,7 +261,18 @@ impl Coordinator {
     fn with_store(cfg: CoordinatorConfig, store: Arc<ShardStore>) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
         let (ingest, drain) = spawn_drain(store.clone(), metrics.clone(), cfg.ingest_depth);
-        Coordinator { store, metrics, ingest, cfg, _drain: drain }
+        let admission =
+            AdmissionGate::new(cfg.max_inflight, cfg.admission_queue_depth, metrics.clone());
+        let breakers = ShardBreakers::new(cfg.breaker_threshold, cfg.breaker_probe_after);
+        Coordinator {
+            store,
+            metrics,
+            ingest,
+            cfg,
+            admission,
+            breakers,
+            drain: Mutex::new(Some(drain)),
+        }
     }
 
     /// Serialize the current ground set (see [`ShardStore::checkpoint`]).
@@ -214,21 +300,67 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Run one two-stage selection over the current ground set. See the
-    /// module docs for the fault model (retry → degrade → error).
+    /// Run one two-stage selection over the current ground set, gated by
+    /// admission control. See the module docs for the full fault model
+    /// (shed → degrade → error → shutdown).
     pub fn select(&self, req: SelectRequest) -> Result<SelectResponse> {
-        let res = self.select_inner(&req);
+        // the clock starts at entry: time waiting in the admission queue
+        // counts against the request's deadline
+        let t0 = Instant::now();
+        let res = self
+            .admission
+            .acquire(t0, req.deadline)
+            .and_then(|_permit| self.select_inner(&req, t0));
         if let Err(e) = &res {
             if matches!(e, SubmodError::DeadlineExceeded) {
                 self.metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
             }
             self.metrics.selections_failed.fetch_add(1, Ordering::Relaxed);
+            // failed/shed latencies go to their own histogram so the
+            // success percentiles carry no survivorship bias
+            self.metrics.record_failed_latency(t0.elapsed());
         }
         res
     }
 
-    fn select_inner(&self, req: &SelectRequest) -> Result<SelectResponse> {
-        let t0 = Instant::now();
+    /// Stop serving: close admission (new selections fail with
+    /// `SubmodError::ShuttingDown`), wait for in-flight selections to
+    /// finish, drain the ingest queue, join the drain thread, and return
+    /// a final checkpoint of the ground set. Idempotent — a second call
+    /// returns a fresh checkpoint of the (unchanged) store.
+    pub fn shutdown(&self) -> Result<Vec<u8>> {
+        self.admission.close();
+        self.admission.drain();
+        self.ingest.request_shutdown();
+        let drain = self.drain.lock().unwrap().take();
+        if let Some(join) = drain {
+            join.join().map_err(|_| {
+                SubmodError::Coordinator("ingest drain panicked during shutdown".into())
+            })?;
+        }
+        Ok(self.store.checkpoint())
+    }
+
+    /// Map a breaker state-machine transition onto the metrics surface.
+    fn note_breaker(&self, transition: Option<BreakerTransition>) {
+        match transition {
+            Some(BreakerTransition::Tripped) => {
+                self.metrics.breaker_trips.fetch_add(1, Ordering::Relaxed);
+                self.metrics.shards_quarantined.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(BreakerTransition::Probing) => {
+                self.metrics.breaker_probes.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(BreakerTransition::Recovered) => {
+                self.metrics.breaker_recoveries.fetch_add(1, Ordering::Relaxed);
+                self.metrics.shards_quarantined.fetch_sub(1, Ordering::Relaxed);
+            }
+            // re-opening keeps the shard quarantined: gauge unchanged
+            Some(BreakerTransition::Reopened) | None => {}
+        }
+    }
+
+    fn select_inner(&self, req: &SelectRequest, t0: Instant) -> Result<SelectResponse> {
         let shards = self.store.snapshot();
         if shards.is_empty() {
             return Err(SubmodError::Coordinator("ground set is empty".into()));
@@ -257,17 +389,35 @@ impl Coordinator {
                 }
             }
             let base_id = shard.base_id;
-            let result = match run_isolated(|| stage1(&shard, req, per_shard)) {
-                Ok(ids) => Ok(ids),
-                Err(_first) => {
-                    self.metrics.shard_retries.fetch_add(1, Ordering::Relaxed);
-                    match run_isolated(|| stage1(&shard, req, per_shard)) {
+            // circuit breaker: a quarantined shard is skipped without an
+            // evaluation (or retry) — it still counts toward quorum like
+            // a dropped shard, but costs nothing per request
+            let (decision, opening) = self.breakers.decide(base_id);
+            self.note_breaker(opening);
+            let result = match decision {
+                BreakerDecision::Skip => {
+                    Err("circuit breaker open (shard quarantined)".to_string())
+                }
+                BreakerDecision::Attempt { probe } => {
+                    let result = match run_isolated(|| stage1(&shard, req, per_shard)) {
                         Ok(ids) => Ok(ids),
-                        Err(e) => {
-                            self.metrics.shard_failures.fetch_add(1, Ordering::Relaxed);
-                            Err(e)
+                        Err(_first) => {
+                            self.metrics.shard_retries.fetch_add(1, Ordering::Relaxed);
+                            match run_isolated(|| stage1(&shard, req, per_shard)) {
+                                Ok(ids) => Ok(ids),
+                                Err(e) => {
+                                    self.metrics
+                                        .shard_failures
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    Err(e)
+                                }
+                            }
                         }
-                    }
+                    };
+                    // the post-retry outcome feeds the breaker; a probe
+                    // outcome decides recovery vs re-quarantine
+                    self.note_breaker(self.breakers.record(base_id, probe, result.is_ok()));
+                    result
                 }
             };
             *outcomes[t].lock().unwrap() = Some(ShardOutcome { base_id, result });
@@ -313,6 +463,11 @@ impl Coordinator {
         if req.deadline.is_some_and(|d| t0.elapsed() >= d) {
             return Err(SubmodError::DeadlineExceeded);
         }
+
+        // injection site: a Delay here holds the selection in flight
+        // (admission permit held) — how the saturation tests force
+        // overload deterministically; keyed by the candidate count
+        faults::failpoint(faults::STAGE2_MERGE, stage1_candidates)?;
 
         // stage 2: greedy over the candidate union
         let features = self.store.gather(&candidates)?;
@@ -404,6 +559,10 @@ mod tests {
             ingest_depth: 64,
             per_shard_factor: 2.0,
             min_shard_quorum: None,
+            max_inflight: 4,
+            admission_queue_depth: 16,
+            breaker_threshold: None,
+            breaker_probe_after: 4,
         };
         let c = Coordinator::new(cfg);
         let data = synthetic::blobs(n, 2, 5, 1.5, 77);
@@ -460,7 +619,12 @@ mod tests {
     fn empty_ground_set_fails_cleanly() {
         let c = Coordinator::new(CoordinatorConfig::default());
         assert!(c.select(SelectRequest::default()).is_err());
-        assert_eq!(c.metrics().selections_failed, 1);
+        let m = c.metrics();
+        assert_eq!(m.selections_failed, 1);
+        // the failure's latency lands in the failed histogram, not the
+        // success one (survivorship-bias fix, ISSUE 8)
+        assert!(m.failed_latency_p99_us > 0);
+        assert_eq!(m.latency_p99_us, 0);
     }
 
     #[test]
@@ -507,7 +671,10 @@ mod tests {
     }
 
     #[test]
-    fn zero_deadline_exceeds_immediately() {
+    fn zero_deadline_is_shed_at_admission() {
+        // a deadline already spent on arrival can only expire in the
+        // queue, so admission sheds it with `Overloaded` (ISSUE 8)
+        // before any shard work happens
         let c = seeded_coordinator(80, 20);
         let err = c
             .select(SelectRequest {
@@ -516,12 +683,57 @@ mod tests {
                 ..Default::default()
             })
             .unwrap_err();
-        assert!(matches!(err, SubmodError::DeadlineExceeded), "{err}");
+        assert!(matches!(err, SubmodError::Overloaded), "{err}");
         let m = c.metrics();
-        assert_eq!(m.deadline_exceeded, 1);
+        assert_eq!(m.selections_shed, 1);
         assert_eq!(m.selections_failed, 1);
-        // no shard was charged a failure for a deadline skip
+        // shed ≠ deadline-exceeded-in-flight, and no shard was charged
+        assert_eq!(m.deadline_exceeded, 0);
         assert_eq!(m.shard_failures, 0);
+    }
+
+    #[test]
+    fn log_determinant_metric_override_is_pinned() {
+        // LogDet honors an explicit RBF metric (gamma included) and
+        // overrides every other metric to Rbf{gamma: 1.0} — the default
+        // Euclidean request must behave exactly like explicit Rbf{1.0}
+        let c = seeded_coordinator(60, 20);
+        let logdet = ObjectiveKind::LogDeterminant { reg: 0.1 };
+        let with_metric = |metric| {
+            c.select(SelectRequest { objective: logdet, budget: 5, metric, ..Default::default() })
+                .unwrap()
+        };
+        let euclid = with_metric(Metric::Euclidean);
+        let rbf_default = with_metric(Metric::Rbf { gamma: 1.0 });
+        assert_eq!(euclid.ids, rbf_default.ids);
+        assert_eq!(euclid.value.to_bits(), rbf_default.value.to_bits());
+        // and an explicit non-default gamma is actually honored
+        let rbf_wide = with_metric(Metric::Rbf { gamma: 0.01 });
+        assert_ne!(
+            euclid.value.to_bits(),
+            rbf_wide.value.to_bits(),
+            "explicit gamma must reach the kernel"
+        );
+    }
+
+    #[test]
+    fn shutdown_refuses_new_work_and_returns_checkpoint() {
+        let c = seeded_coordinator(60, 20);
+        let before = c.select(SelectRequest { budget: 5, ..Default::default() }).unwrap();
+        let blob = c.shutdown().unwrap();
+        // new selections are refused with the typed shutdown error
+        let err = c.select(SelectRequest { budget: 5, ..Default::default() }).unwrap_err();
+        assert!(matches!(err, SubmodError::ShuttingDown), "{err}");
+        // ingest after shutdown is a typed error, never a hang
+        assert!(c.ingest_handle().ingest(vec![0.0, 0.0]).is_err());
+        // the checkpoint restores to a coordinator serving byte-identical
+        // selections
+        let r = Coordinator::from_checkpoint(CoordinatorConfig::default(), &blob).unwrap();
+        let after = r.select(SelectRequest { budget: 5, ..Default::default() }).unwrap();
+        assert_eq!(after.ids, before.ids);
+        assert_eq!(after.value.to_bits(), before.value.to_bits());
+        // shutdown is idempotent
+        assert_eq!(c.shutdown().unwrap(), blob);
     }
 
     #[test]

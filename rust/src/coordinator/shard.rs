@@ -17,7 +17,8 @@
 //! store serves byte-identical selections to the original (pinned by
 //! `tests/fault_injection.rs`).
 
-use std::sync::RwLock;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, RwLock};
 
 use crate::error::{Result, SubmodError};
 use crate::linalg::Matrix;
@@ -266,6 +267,155 @@ impl ShardStore {
     }
 }
 
+/// What the breaker tells the fan-out to do with a shard this request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum BreakerDecision {
+    /// Evaluate the shard. `probe: true` marks the single Half-Open
+    /// probe whose outcome decides Close vs re-Open.
+    Attempt { probe: bool },
+    /// Shard is quarantined (Open or mid-probe): skip without
+    /// evaluating. Counts toward quorum exactly like a dropped shard.
+    Skip,
+}
+
+/// State-machine transitions, surfaced so the service layer can map them
+/// onto metrics (`breaker_trips` / `breaker_probes` / `breaker_recoveries`
+/// and the `shards_quarantined` gauge) without the breaker knowing about
+/// `Metrics`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum BreakerTransition {
+    /// Closed → Open: `threshold` consecutive request failures.
+    Tripped,
+    /// Open → Half-Open: this request carries the probe evaluation.
+    Probing,
+    /// Half-Open → Closed: the probe succeeded, shard back in service.
+    Recovered,
+    /// Half-Open → Open: the probe failed, quarantine continues.
+    Reopened,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum BreakerState {
+    /// In service; counts consecutive request-level failures.
+    Closed { consec: usize },
+    /// Quarantined; counts requests seen since opening (request-count
+    /// based, not wall-clock — breaker behavior stays deterministic).
+    Open { seen: usize },
+    /// A probe evaluation is in flight for this request.
+    HalfOpen,
+}
+
+/// Per-shard circuit breakers, keyed by shard `base_id`.
+///
+/// A shard whose stage-1 evaluation fails (after the retry) on
+/// `threshold` *consecutive requests* trips Open and is skipped — it
+/// still counts toward the quorum like a dropped shard, but the
+/// coordinator stops burning an evaluation + retry on it every request.
+/// After `probe_after` subsequent requests the breaker goes Half-Open:
+/// the next request evaluates the shard once as a probe, and that single
+/// outcome decides Closed (recovered) vs Open again. All bookkeeping is
+/// request-count based so breaker behavior is a deterministic function
+/// of the request/outcome sequence (no wall-clock, no sleeps in tests).
+///
+/// `decide` is called per shard at the start of a request, `record` with
+/// the shard's final outcome (post-retry); both are cheap and run under
+/// one mutex, outside the evaluation itself.
+#[derive(Debug)]
+pub(crate) struct ShardBreakers {
+    /// `None` disables breaking entirely (every decision is Attempt).
+    threshold: Option<usize>,
+    probe_after: usize,
+    states: Mutex<BTreeMap<usize, BreakerState>>,
+}
+
+impl ShardBreakers {
+    pub fn new(threshold: Option<usize>, probe_after: usize) -> Self {
+        ShardBreakers {
+            threshold,
+            probe_after: probe_after.max(1),
+            states: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Decide whether this request should evaluate shard `base_id`, and
+    /// report any transition the decision itself caused (Open →
+    /// Half-Open happens here, on the request that carries the probe).
+    pub fn decide(&self, base_id: usize) -> (BreakerDecision, Option<BreakerTransition>) {
+        if self.threshold.is_none() {
+            return (BreakerDecision::Attempt { probe: false }, None);
+        }
+        let mut states = self.states.lock().unwrap();
+        let st = states.entry(base_id).or_insert(BreakerState::Closed { consec: 0 });
+        match *st {
+            BreakerState::Closed { .. } => (BreakerDecision::Attempt { probe: false }, None),
+            BreakerState::Open { seen } => {
+                let seen = seen + 1;
+                if seen >= self.probe_after {
+                    *st = BreakerState::HalfOpen;
+                    (BreakerDecision::Attempt { probe: true }, Some(BreakerTransition::Probing))
+                } else {
+                    *st = BreakerState::Open { seen };
+                    (BreakerDecision::Skip, None)
+                }
+            }
+            BreakerState::HalfOpen => (BreakerDecision::Skip, None),
+        }
+    }
+
+    /// Record the final (post-retry) outcome of an evaluated shard.
+    /// `probe` must be the flag `decide` returned for this request.
+    pub fn record(
+        &self,
+        base_id: usize,
+        probe: bool,
+        success: bool,
+    ) -> Option<BreakerTransition> {
+        let threshold = self.threshold?;
+        let mut states = self.states.lock().unwrap();
+        let st = states.entry(base_id).or_insert(BreakerState::Closed { consec: 0 });
+        if probe {
+            return if success {
+                *st = BreakerState::Closed { consec: 0 };
+                Some(BreakerTransition::Recovered)
+            } else {
+                *st = BreakerState::Open { seen: 0 };
+                Some(BreakerTransition::Reopened)
+            };
+        }
+        match (*st, success) {
+            (BreakerState::Closed { .. }, true) => {
+                *st = BreakerState::Closed { consec: 0 };
+                None
+            }
+            (BreakerState::Closed { consec }, false) => {
+                let consec = consec + 1;
+                if consec >= threshold {
+                    *st = BreakerState::Open { seen: 0 };
+                    Some(BreakerTransition::Tripped)
+                } else {
+                    *st = BreakerState::Closed { consec };
+                    None
+                }
+            }
+            // Skipped shards never call record; a non-probe outcome for
+            // an Open/HalfOpen shard cannot happen in the service flow,
+            // but tolerate it without state damage.
+            _ => None,
+        }
+    }
+
+    /// Number of shards currently quarantined (Open or Half-Open).
+    #[cfg(test)]
+    pub fn quarantined(&self) -> usize {
+        self.states
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| !matches!(s, BreakerState::Closed { .. }))
+            .count()
+    }
+}
+
 const CHECKPOINT_MAGIC: &[u8; 4] = b"SMCK";
 const CHECKPOINT_VERSION: u32 = 1;
 
@@ -441,6 +591,66 @@ mod tests {
         let shard_table = 4 + 4 + 8 + 1 + 8 + 8 + 8; // header up to first shard
         len_broken[shard_table + 8] ^= 1; // first shard's len
         assert!(ShardStore::restore(&len_broken).is_err());
+    }
+
+    #[test]
+    fn breaker_disabled_always_attempts() {
+        let b = ShardBreakers::new(None, 4);
+        for _ in 0..10 {
+            assert_eq!(b.decide(0), (BreakerDecision::Attempt { probe: false }, None));
+            assert_eq!(b.record(0, false, false), None);
+        }
+        assert_eq!(b.quarantined(), 0);
+    }
+
+    #[test]
+    fn breaker_full_lifecycle_is_request_count_based() {
+        let b = ShardBreakers::new(Some(2), 2);
+        // two consecutive failures trip the breaker
+        assert_eq!(b.decide(32), (BreakerDecision::Attempt { probe: false }, None));
+        assert_eq!(b.record(32, false, false), None);
+        assert_eq!(b.decide(32), (BreakerDecision::Attempt { probe: false }, None));
+        assert_eq!(b.record(32, false, false), Some(BreakerTransition::Tripped));
+        assert_eq!(b.quarantined(), 1);
+        // next request: skipped (1 of probe_after=2 seen)
+        assert_eq!(b.decide(32), (BreakerDecision::Skip, None));
+        // second request since opening: half-open, carries the probe
+        assert_eq!(
+            b.decide(32),
+            (BreakerDecision::Attempt { probe: true }, Some(BreakerTransition::Probing))
+        );
+        // failed probe re-opens and restarts the request count
+        assert_eq!(b.record(32, true, false), Some(BreakerTransition::Reopened));
+        assert_eq!(b.decide(32), (BreakerDecision::Skip, None));
+        assert_eq!(
+            b.decide(32),
+            (BreakerDecision::Attempt { probe: true }, Some(BreakerTransition::Probing))
+        );
+        // successful probe closes the breaker; shard is back in service
+        assert_eq!(b.record(32, true, true), Some(BreakerTransition::Recovered));
+        assert_eq!(b.quarantined(), 0);
+        assert_eq!(b.decide(32), (BreakerDecision::Attempt { probe: false }, None));
+    }
+
+    #[test]
+    fn breaker_success_resets_consecutive_failures() {
+        let b = ShardBreakers::new(Some(3), 4);
+        b.record(0, false, false);
+        b.record(0, false, false);
+        b.record(0, false, true); // success wipes the streak
+        b.record(0, false, false);
+        assert_eq!(b.record(0, false, false), None); // only 2 consecutive
+        assert_eq!(b.record(0, false, false), Some(BreakerTransition::Tripped));
+    }
+
+    #[test]
+    fn breakers_are_independent_per_shard() {
+        let b = ShardBreakers::new(Some(1), 8);
+        assert_eq!(b.record(0, false, false), Some(BreakerTransition::Tripped));
+        // shard 64 unaffected
+        assert_eq!(b.decide(64), (BreakerDecision::Attempt { probe: false }, None));
+        assert_eq!(b.decide(0), (BreakerDecision::Skip, None));
+        assert_eq!(b.quarantined(), 1);
     }
 
     #[test]

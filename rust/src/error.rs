@@ -28,6 +28,15 @@ pub enum SubmodError {
     /// stage-2 merge, so a stuck or slow shard surfaces as this typed
     /// error instead of unbounded blocking.
     DeadlineExceeded,
+    /// The coordinator shed this request at admission: every
+    /// `max_inflight` permit was held and the bounded FIFO admission
+    /// queue was full (or the request's deadline was already spent on
+    /// arrival). Load is never queued unboundedly — callers see this
+    /// typed error fast and may retry with backoff.
+    Overloaded,
+    /// The coordinator is shutting down (`Coordinator::shutdown`): new
+    /// selections are refused while in-flight work drains.
+    ShuttingDown,
     /// The conformance linter (`submodlib lint` / the `analysis` module)
     /// found this many violations of the determinism invariants.
     Conformance(usize),
@@ -46,6 +55,10 @@ impl fmt::Display for SubmodError {
             SubmodError::Io(e) => write!(f, "io error: {e}"),
             SubmodError::Coordinator(m) => write!(f, "coordinator error: {m}"),
             SubmodError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            SubmodError::Overloaded => {
+                write!(f, "overloaded: admission queue full, request shed")
+            }
+            SubmodError::ShuttingDown => write!(f, "coordinator is shutting down"),
             SubmodError::Conformance(n) => write!(f, "conformance: {n} violation(s)"),
         }
     }
@@ -72,6 +85,9 @@ mod tests {
         assert!(e.to_string().contains('7'));
         assert!(e.to_string().contains('5'));
         assert!(SubmodError::Shape("bad".into()).to_string().contains("bad"));
+        // overload-protection errors must be distinguishable by message
+        assert!(SubmodError::Overloaded.to_string().contains("shed"));
+        assert!(SubmodError::ShuttingDown.to_string().contains("shutting down"));
     }
 
     #[test]

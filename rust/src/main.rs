@@ -49,8 +49,42 @@ fn run(args: &[String]) -> Result<()> {
         Command::Cover { data, function, fraction, metric } => {
             cmd_cover(&data, &function, fraction, &metric)
         }
+        Command::Loadgen { cfg, out } => cmd_loadgen(&cfg, &out),
         Command::Lint { root, rules } => cmd_lint(root.as_deref(), rules),
     }
+}
+
+fn cmd_loadgen(cfg: &submodlib::coordinator::LoadgenConfig, out: &str) -> Result<()> {
+    println!(
+        "loadgen: {} tenants × {} requests over max_inflight {} (queue {}), seed {}",
+        cfg.tenants, cfg.requests_per_tenant, cfg.max_inflight, cfg.admission_queue_depth, cfg.seed
+    );
+    let report = submodlib::coordinator::loadgen::run(cfg)?;
+    println!(
+        "{} requests in {:.3}s ({:.1} req/s): served {} (degraded {}), shed {}, \
+         deadline {}, failed {}; shed retries {}, ingest retries {}",
+        report.requests_total,
+        report.wall_s,
+        report.throughput_rps,
+        report.served,
+        report.degraded,
+        report.shed,
+        report.deadline_exceeded,
+        report.failed_other,
+        report.shed_retries,
+        report.ingest_retries
+    );
+    println!(
+        "breakers: {} trips, {} probes, {} recoveries; drain restarts {}",
+        report.metrics.breaker_trips,
+        report.metrics.breaker_probes,
+        report.metrics.breaker_recoveries,
+        report.metrics.drain_restarts
+    );
+    println!("metrics: {}", report.metrics);
+    std::fs::write(out, report.to_json(cfg).to_string())?;
+    println!("wrote {out}");
+    Ok(())
 }
 
 fn cmd_lint(root: Option<&str>, rules: bool) -> Result<()> {
@@ -280,6 +314,8 @@ fn cmd_serve(cfg: &Config, items: usize, dim: usize, requests: usize, budget: us
         );
     }
     println!("metrics: {}", coordinator.metrics());
+    let checkpoint = coordinator.shutdown()?;
+    println!("graceful shutdown: final checkpoint {} bytes", checkpoint.len());
     Ok(())
 }
 

@@ -70,6 +70,10 @@ fn maximize_spawns_no_threads_beyond_the_pool() {
         ingest_depth: 32,
         per_shard_factor: 2.0,
         min_shard_quorum: None,
+        max_inflight: 4,
+        admission_queue_depth: 16,
+        breaker_threshold: None,
+        breaker_probe_after: 4,
     });
     let h = coord.ingest_handle();
     let stream = synthetic::blobs(200, 2, 4, 1.5, 7);
