@@ -30,6 +30,16 @@
 //!   *asserts* that dense and sparse builds of the same data agree
 //!   bit-for-bit on shared entries — the wavefront's symmetry guarantee
 //!   stays load-bearing here, not just in unit tests;
+//! * `backends` (schema v6, ISSUE 9): the pluggable compute backends —
+//!   which `kernel::backend` implementation is active (top-level
+//!   `backend` tag too, so snapshots from different ISAs stay
+//!   comparable), an inner-kernel sweep timing `fill_row` over
+//!   `TILE_ROWS` rows at n=2000/d=128 for *every* available backend
+//!   (scalar / wide / avx2 where detected), and a `simd_speedup` row
+//!   (best SIMD backend vs the scalar anchor — the ISSUE 9 ≥1.5×
+//!   acceptance number, warned about loudly when an AVX2 host comes in
+//!   under target). The `kernel_build` section records the backend its
+//!   builds ran under, since dense/sparse wall-clock now depends on it;
 //! * `pool` (schema v5, ISSUE 5): the persistent worker-pool runtime —
 //!   resolved width + spawned worker count, the Table 2 FL n=500
 //!   NaiveGreedy wall-clock on the pool path, a per-call dispatch
@@ -43,6 +53,7 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use submodlib::data::points::PointView;
 use submodlib::data::synthetic;
 use submodlib::functions::facility_location::FacilityLocation;
 use submodlib::functions::feature_based::ConcaveShape;
@@ -50,6 +61,7 @@ use submodlib::functions::graph_cut::GraphCut;
 use submodlib::functions::log_determinant::LogDeterminant;
 use submodlib::functions::mi::{ConcaveOverModular, Flqmi, Flvmi, Gcmi, LogDetMi};
 use submodlib::functions::traits::SetFunction;
+use submodlib::kernel::backend;
 use submodlib::kernel::sparse::shard_contention;
 use submodlib::kernel::{tile, DenseKernel, Metric, RectKernel, SparseKernel};
 use submodlib::optimizers::lazy::LAZY_STALE_BLOCK;
@@ -288,8 +300,8 @@ fn main() {
                 );
             }
         }
-        let dense_peak = tile::dense_peak_bytes(kn);
-        let sparse_peak = tile::sparse_peak_bytes(kn, KB_NEIGHBORS);
+        let dense_peak = tile::dense_peak_bytes(kn, KB_DIM);
+        let sparse_peak = tile::sparse_peak_bytes(kn, KB_NEIGHBORS, KB_DIM);
         eprintln!(
             "  n={kn}: dense {dense_s:.4}s (~{} KB peak), sparse sym {sparse_sym_s:.4}s \
              vs full {sparse_full_s:.4}s ({:.2}x, ~{} KB peak)",
@@ -314,9 +326,127 @@ fn main() {
                 ("num_neighbors", Json::Num(KB_NEIGHBORS as f64)),
                 ("metric", Json::Str("euclidean".to_string())),
                 ("tile_rows", Json::Num(tile::TILE_ROWS as f64)),
+                ("backend", Json::Str(backend::active().name().to_string())),
             ]),
         ),
         ("results", Json::Arr(kernel_build_rows)),
+    ]);
+
+    // ---- compute backends: inner-kernel sweep, scalar vs SIMD -----------
+    // Times the backend seam in isolation: `fill_row` (gram + metric
+    // finalization) over TILE_ROWS rows against n=2000 columns at d=128,
+    // once per *available* backend — each through the layout it asked for
+    // (`wants_soa`). The scalar anchor is the baseline; the best SIMD
+    // backend over it is the ISSUE 9 acceptance number.
+    let ik_n = 2000usize;
+    let ik_rows = tile::TILE_ROWS;
+    let ik_data = synthetic::random_features(ik_n, KB_DIM, 46);
+    let backends_available = backend::available();
+    eprintln!(
+        "inner kernels: {ik_rows} rows x n={ik_n}, d={KB_DIM}, backends: {:?} (active: {})",
+        backends_available.iter().map(|k| k.name()).collect::<Vec<_>>(),
+        backend::active().name()
+    );
+    let mut backend_rows: Vec<Json> = Vec::new();
+    let mut ik_times: Vec<(&'static str, f64)> = Vec::new();
+    for k in &backends_available {
+        let view = PointView::new(&ik_data, k.wants_soa());
+        let sq = k.sq_norms(&ik_data);
+        let mut orow = vec![0f32; ik_n];
+        let median_s = runner
+            .bench(&format!("InnerKernel/{}", k.name()), || {
+                let mut acc = 0f32;
+                for i in 0..ik_rows {
+                    k.fill_row(
+                        ik_data.row(i),
+                        sq[i],
+                        &view,
+                        &sq,
+                        0,
+                        Metric::Euclidean,
+                        false,
+                        &mut orow,
+                    );
+                    acc += orow[ik_n - 1];
+                }
+                acc
+            })
+            .median
+            .as_secs_f64();
+        ik_times.push((k.name(), median_s));
+        backend_rows.push(obj(vec![
+            ("backend", Json::Str(k.name().to_string())),
+            ("median_s", Json::Num(median_s)),
+        ]));
+    }
+    let scalar_ik_s = ik_times
+        .iter()
+        .find(|(name, _)| *name == "scalar")
+        .map(|&(_, s)| s)
+        .expect("scalar backend is always available");
+    // fold-style best (the conformance linter bans partial_cmp floats)
+    let mut best_simd: Option<(&'static str, f64)> = None;
+    for &(name, s) in &ik_times {
+        if name == "scalar" {
+            continue;
+        }
+        let better = match best_simd {
+            None => true,
+            Some((_, bs)) => s < bs,
+        };
+        if better {
+            best_simd = Some((name, s));
+        }
+    }
+    let simd_speedup = match best_simd {
+        Some((name, s)) if s > 0.0 => {
+            let factor = scalar_ik_s / s;
+            eprintln!(
+                "  scalar {:.2}us/row vs best SIMD ({name}) {:.2}us/row: {factor:.2}x",
+                scalar_ik_s * 1e6 / ik_rows as f64,
+                s * 1e6 / ik_rows as f64
+            );
+            if backend::avx2().is_some() && factor < 1.5 {
+                eprintln!(
+                    "  WARNING: avx2 detected but best SIMD speedup {factor:.2}x is under \
+                     the 1.5x target — investigate before refreshing the snapshot"
+                );
+            }
+            obj(vec![
+                ("baseline", Json::Str("scalar".to_string())),
+                ("best", Json::Str(name.to_string())),
+                ("factor", Json::Num(factor)),
+            ])
+        }
+        _ => Json::Null,
+    };
+    let backends_section = obj(vec![
+        ("active", Json::Str(backend::active().name().to_string())),
+        (
+            "available",
+            Json::Arr(
+                backends_available
+                    .iter()
+                    .map(|k| Json::Str(k.name().to_string()))
+                    .collect(),
+            ),
+        ),
+        (
+            "inner_kernel",
+            obj(vec![
+                (
+                    "workload",
+                    obj(vec![
+                        ("rows", Json::Num(ik_rows as f64)),
+                        ("n", Json::Num(ik_n as f64)),
+                        ("dim", Json::Num(KB_DIM as f64)),
+                        ("metric", Json::Str("euclidean".to_string())),
+                    ]),
+                ),
+                ("results", Json::Arr(backend_rows)),
+            ]),
+        ),
+        ("simd_speedup", simd_speedup),
     ]);
 
     // ---- parallel scaling: n=2000, k=100, FL, naive ---------------------
@@ -439,8 +569,10 @@ fn main() {
     ]);
 
     let snapshot = obj(vec![
-        ("schema", Json::Str("bench_optimizers/v5".to_string())),
+        ("schema", Json::Str("bench_optimizers/v6".to_string())),
         ("threads", Json::Num(threads as f64)),
+        ("backend", Json::Str(backend::active().name().to_string())),
+        ("backends", backends_section),
         ("pool", pool_section),
         ("kernel_build", kernel_build),
         ("lazy_stale_block", lazy_stale_block),

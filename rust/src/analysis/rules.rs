@@ -37,13 +37,17 @@
 //!   in the bench harness, the experiments layer, and the coordinator's
 //!   latency metrics — a clock read inside selection logic is a
 //!   determinism leak waiting to become a tie-break.
-//! * **`unsafe-confined`** — no `unsafe` outside the whitelisted
-//!   concurrency core (`runtime/pool.rs`). Everything else in the crate
-//!   is safe Rust by construction.
+//! * **`unsafe-confined`** — no `unsafe` outside the whitelist: the
+//!   concurrency core (`runtime/pool.rs`) and the AVX2 intrinsics
+//!   compute backend (`kernel/backend/avx2.rs`). Everything else in the
+//!   crate is safe Rust by construction — including the other compute
+//!   backends (`scalar`, `wide`), which stay off the whitelist on
+//!   purpose.
 //! * **`safety-comment`** — inside the whitelisted modules, every
 //!   `unsafe` must carry a `// SAFETY:` comment on the same line or in
 //!   the contiguous comment block directly above it, stating the
-//!   invariant that makes it sound.
+//!   invariant that makes it sound (for the intrinsics backend: ISA
+//!   availability and pointer bounds).
 //!
 //! ## Suppressions
 //!
@@ -60,9 +64,20 @@ use std::fmt;
 
 use super::lexer::{self, Line};
 
-/// The concurrency core: the only place `unsafe` and raw thread APIs
-/// are allowed (with SAFETY comments; see the module docs).
+/// The concurrency core: the only place raw thread APIs are allowed,
+/// and one of the two places `unsafe` is (with SAFETY comments; see the
+/// module docs).
 const POOL: &str = "rust/src/runtime/pool.rs";
+
+/// The AVX2 intrinsics compute backend: `std::arch` calls are `unsafe`,
+/// so it shares the pool's obligations (every line justified).
+const AVX2_BACKEND: &str = "rust/src/kernel/backend/avx2.rs";
+
+/// Everywhere `unsafe` may appear. Deliberately exact paths, not
+/// prefixes: the safe backends (`scalar.rs`, `wide.rs`, `mod.rs`) are
+/// *not* whitelisted, so unsafe creep inside `kernel/backend/` still
+/// fires `unsafe-confined`.
+const UNSAFE_WHITELIST: &[&str] = &[POOL, AVX2_BACKEND];
 
 /// Path prefixes that count as "selection logic" for `wall-clock`.
 const SELECTION_PATHS: &[&str] = &[
@@ -123,7 +138,7 @@ pub const RULES: &[RuleInfo] = &[
     },
     RuleInfo {
         name: UNSAFE_CONFINED,
-        summary: "unsafe code confined to the whitelisted concurrency core",
+        summary: "unsafe code confined to the whitelist (pool + avx2 backend)",
         example_path: "rust/src/functions/example.rs",
         bad_example: "fn f(p: *const u32) -> u32 { unsafe { *p } }\n",
     },
@@ -497,7 +512,7 @@ fn check_wall_clock(path: &str, lines: &[Line], raw: &mut Vec<(usize, &'static s
 }
 
 fn check_unsafe(path: &str, lines: &[Line], raw: &mut Vec<(usize, &'static str, String)>) {
-    let whitelisted = path == POOL;
+    let whitelisted = UNSAFE_WHITELIST.contains(&path);
     for (i, line) in lines.iter().enumerate() {
         if !has_pattern(&line.code, "unsafe") {
             continue;
@@ -506,7 +521,7 @@ fn check_unsafe(path: &str, lines: &[Line], raw: &mut Vec<(usize, &'static str, 
             raw.push((
                 i,
                 UNSAFE_CONFINED,
-                "unsafe outside the whitelisted concurrency core (runtime/pool.rs)"
+                "unsafe outside the whitelist (runtime/pool.rs, kernel/backend/avx2.rs)"
                     .to_string(),
             ));
             continue;
@@ -629,11 +644,14 @@ mod tests {
     fn unsafe_confinement_and_safety_comments() {
         let bare = "fn f(p: *const u32) -> u32 { unsafe { *p } }\n";
         assert_eq!(rules_fired(SRC_PATH, bare), vec![UNSAFE_CONFINED]);
-        // in the pool, unsafe is allowed but must be justified
-        assert_eq!(rules_fired(POOL, bare), vec![SAFETY_COMMENT]);
+        // in the whitelisted modules, unsafe is allowed but must be justified
+        for path in UNSAFE_WHITELIST {
+            assert_eq!(rules_fired(path, bare), vec![SAFETY_COMMENT], "{path}");
+        }
         let justified =
             "// SAFETY: p is valid for reads by the caller's contract.\nfn f(p: *const u32) -> u32 { unsafe { *p } }\n";
         assert!(rules_fired(POOL, justified).is_empty());
+        assert!(rules_fired(AVX2_BACKEND, justified).is_empty());
         // a contiguous comment block above also counts…
         let block = "// SAFETY: p outlives the call.\n// (lifetime erasure only)\nfn f(p: *const u32) -> u32 { unsafe { *p } }\n";
         assert!(rules_fired(POOL, block).is_empty());
@@ -641,6 +659,18 @@ mod tests {
         let severed =
             "// SAFETY: stale.\nfn g() {}\nfn f(p: *const u32) -> u32 { unsafe { *p } }\n";
         assert_eq!(rules_fired(POOL, severed), vec![SAFETY_COMMENT]);
+        // an attribute line is code and also severs the block — SAFETY
+        // comments must sit between the attribute and the unsafe line
+        let attr_severed = "// SAFETY: stale.\n#[target_feature(enable = \"avx2\")]\nfn f(p: *const u32) -> u32 { unsafe { *p } }\n";
+        assert_eq!(rules_fired(AVX2_BACKEND, attr_severed), vec![SAFETY_COMMENT]);
+        // the safe backend modules stay off the whitelist on purpose
+        for path in [
+            "rust/src/kernel/backend/mod.rs",
+            "rust/src/kernel/backend/scalar.rs",
+            "rust/src/kernel/backend/wide.rs",
+        ] {
+            assert_eq!(rules_fired(path, bare), vec![UNSAFE_CONFINED], "{path}");
+        }
         // the deny attribute's identifier must not trip the matcher
         let attr = "#![deny(unsafe_op_in_unsafe_fn)]\n";
         assert!(rules_fired(SRC_PATH, attr).is_empty());

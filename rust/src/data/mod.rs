@@ -1,7 +1,9 @@
 //! Dataset substrate: synthetic generators reproducing the paper's
 //! evaluation workloads, controlled 2-D datasets for the qualitative
-//! figures, and simple I/O.
+//! figures, simple I/O, and the aligned SoA point views the SIMD
+//! compute backends load from ([`points`]).
 
 pub mod controlled;
 pub mod io;
+pub mod points;
 pub mod synthetic;

@@ -1,0 +1,255 @@
+//! Aligned structure-of-arrays (SoA) point views — the load layout the
+//! SIMD compute backends (`kernel::backend`, ISSUE 9 / ROADMAP item 2)
+//! vectorize over.
+//!
+//! The row-major [`Matrix`] keeps one *point* contiguous, which is the
+//! right layout for the scalar register-blocked kernels (one dot product
+//! walks one row). A vector lane, however, wants eight *consecutive
+//! columns* of the gram row at once — eight different points — so the
+//! SIMD backends transpose the operand into [`SoaPoints`]: feature-major
+//! storage where row `f` holds feature `f` of every point, padded and
+//! aligned so an 8-wide load of columns `[j, j+8)` is one contiguous
+//! `loadu` from `feature(f)[j..]`.
+//!
+//! Layout contract:
+//!
+//! * each feature row is `stride = n.div_ceil(16) * 16` floats long
+//!   (64-byte multiples, [`SoaPoints::padded_cols`]); columns `[n, stride)`
+//!   are zero,
+//! * the first feature row starts on a 64-byte boundary (the buffer
+//!   over-allocates [`SOA_LANE`] slack floats and advances to alignment —
+//!   plain pointer arithmetic, no `unsafe`), so every feature row is
+//!   64-byte aligned (strides are 64-byte multiples),
+//! * the backends never *read* the zero padding for results — tails
+//!   narrower than a vector are computed by per-column scalar chains with
+//!   the same op order — so padding affects layout, never values.
+//!
+//! The peak-memory models (`kernel::tile::{dense,sparse}_peak_bytes`)
+//! account for this buffer via [`SoaPoints::padded_bytes`], and the unit
+//! tests here pin that model to the actual allocation.
+
+use crate::linalg::Matrix;
+
+/// Columns per padded group: 16 f32 = 64 bytes, one cache line and two
+/// AVX2 vectors. Feature-row strides round up to a multiple of this.
+pub const SOA_LANE: usize = 16;
+
+/// Target byte alignment of every feature row.
+const ALIGN_BYTES: usize = 64;
+
+/// Feature-major, 64-byte-aligned, column-padded copy of a point set.
+#[derive(Debug, Clone)]
+pub struct SoaPoints {
+    n: usize,
+    d: usize,
+    stride: usize,
+    /// Index of the first aligned element inside `buf`.
+    offset: usize,
+    buf: Vec<f32>,
+}
+
+impl SoaPoints {
+    /// Padded column count for `n` points: `n` rounded up to a multiple
+    /// of [`SOA_LANE`]. This is the per-feature row stride.
+    #[inline]
+    pub fn padded_cols(n: usize) -> usize {
+        n.div_ceil(SOA_LANE) * SOA_LANE
+    }
+
+    /// Total f32 slots an `n × d` view allocates: `d` padded feature
+    /// rows plus [`SOA_LANE`] slack slots consumed by alignment.
+    #[inline]
+    pub fn padded_len(n: usize, d: usize) -> usize {
+        d * Self::padded_cols(n) + SOA_LANE
+    }
+
+    /// Heap bytes of an `n × d` view — the figure the peak-memory models
+    /// in `kernel::tile` add when the active backend wants SoA operands.
+    #[inline]
+    pub fn padded_bytes(n: usize, d: usize) -> usize {
+        4 * Self::padded_len(n, d)
+    }
+
+    /// Transpose a row-major `n × d` matrix into feature-major padded
+    /// storage. O(n·d) — negligible next to the O(n²·d) builds it feeds.
+    pub fn from_matrix(m: &Matrix) -> Self {
+        let n = m.rows();
+        let d = m.cols();
+        let stride = Self::padded_cols(n);
+        let buf = vec![0f32; Self::padded_len(n, d)];
+        // Advance to the first 64-byte boundary. A Vec<f32> pointer is
+        // 4-byte aligned, so the gap to the boundary is a multiple of 4
+        // bytes and at most SOA_LANE - 1 elements — inside the slack.
+        let addr = buf.as_ptr() as usize;
+        let offset = (ALIGN_BYTES - addr % ALIGN_BYTES) % ALIGN_BYTES / 4;
+        debug_assert!(offset < SOA_LANE);
+        let mut soa = SoaPoints { n, d, stride, offset, buf };
+        for i in 0..n {
+            let row = m.row(i);
+            for (f, &v) in row.iter().enumerate() {
+                soa.buf[soa.offset + f * stride + i] = v;
+            }
+        }
+        soa
+    }
+
+    /// Feature row `f`: feature `f` of point `j` at index `j`, columns
+    /// `[n, stride)` zero. The slice is 64-byte aligned.
+    #[inline]
+    pub fn feature(&self, f: usize) -> &[f32] {
+        debug_assert!(f < self.d);
+        let start = self.offset + f * self.stride;
+        &self.buf[start..start + self.stride]
+    }
+
+    /// Number of (real, unpadded) points.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Feature dimension.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Per-feature row stride in f32 slots.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Actual heap footprint of the backing buffer, for pinning the
+    /// [`padded_bytes`](Self::padded_bytes) model against reality.
+    #[inline]
+    pub fn heap_bytes(&self) -> usize {
+        self.buf.len() * 4
+    }
+}
+
+/// A point set as the compute backends consume it: the row-major matrix
+/// (always present — the scalar backend and every per-column tail read
+/// it) plus, when the active backend asked for one, the SoA transpose.
+///
+/// Built once per kernel build by the `kernel::tile` drivers; whether
+/// the SoA copy exists is a *layout* decision only — the backends'
+/// per-column op order is identical either way (pinned by
+/// tests/backend_parity.rs).
+pub struct PointView<'a> {
+    mat: &'a Matrix,
+    soa: Option<SoaPoints>,
+}
+
+impl<'a> PointView<'a> {
+    /// Wrap `mat`, transposing an SoA copy iff `with_soa` (the tile
+    /// drivers pass the active backend's `wants_soa()`).
+    pub fn new(mat: &'a Matrix, with_soa: bool) -> Self {
+        let soa = if with_soa && mat.rows() > 0 && mat.cols() > 0 {
+            Some(SoaPoints::from_matrix(mat))
+        } else {
+            None
+        };
+        PointView { mat, soa }
+    }
+
+    /// Number of points.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.mat.rows()
+    }
+
+    /// Feature dimension.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.mat.cols()
+    }
+
+    /// The row-major operand.
+    #[inline]
+    pub fn mat(&self) -> &'a Matrix {
+        self.mat
+    }
+
+    /// The SoA operand, if this view was built with one.
+    #[inline]
+    pub fn soa(&self) -> Option<&SoaPoints> {
+        self.soa.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::from_vec(n, d, (0..n * d).map(|_| rng.next_gaussian() as f32).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn transpose_round_trips_and_pads_with_zeros() {
+        for (n, d) in [(1usize, 1usize), (7, 3), (16, 4), (33, 5), (150, 9)] {
+            let m = rand_matrix(n, d, 7 + n as u64);
+            let soa = SoaPoints::from_matrix(&m);
+            assert_eq!((soa.n(), soa.dim()), (n, d));
+            assert_eq!(soa.stride(), SoaPoints::padded_cols(n));
+            for f in 0..d {
+                let row = soa.feature(f);
+                assert_eq!(row.len(), soa.stride());
+                for j in 0..n {
+                    assert_eq!(row[j].to_bits(), m.get(j, f).to_bits(), "({j},{f})");
+                }
+                for &pad in &row[n..] {
+                    assert_eq!(pad, 0.0, "padding must stay zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allocation_matches_the_padded_bytes_model() {
+        // the peak-memory satellite: the analytic model must equal the
+        // real heap footprint, so tile::*_peak_bytes stays honest
+        for (n, d) in [(1usize, 1usize), (12, 2), (64, 128), (100, 7), (500, 128)] {
+            let m = rand_matrix(n, d, 31 + d as u64);
+            let soa = SoaPoints::from_matrix(&m);
+            assert_eq!(soa.heap_bytes(), SoaPoints::padded_bytes(n, d), "n={n} d={d}");
+        }
+    }
+
+    #[test]
+    fn feature_rows_are_cache_line_aligned() {
+        let m = rand_matrix(37, 6, 99);
+        let soa = SoaPoints::from_matrix(&m);
+        for f in 0..6 {
+            let addr = soa.feature(f).as_ptr() as usize;
+            assert_eq!(addr % 64, 0, "feature row {f} misaligned");
+        }
+    }
+
+    #[test]
+    fn padded_cols_rounds_to_lane_multiples() {
+        assert_eq!(SoaPoints::padded_cols(0), 0);
+        assert_eq!(SoaPoints::padded_cols(1), 16);
+        assert_eq!(SoaPoints::padded_cols(16), 16);
+        assert_eq!(SoaPoints::padded_cols(17), 32);
+        assert_eq!(SoaPoints::padded_cols(150), 160);
+    }
+
+    #[test]
+    fn view_without_soa_is_rowmajor_only() {
+        let m = rand_matrix(9, 3, 5);
+        let plain = PointView::new(&m, false);
+        assert!(plain.soa().is_none());
+        assert_eq!(plain.rows(), 9);
+        assert_eq!(plain.dim(), 3);
+        let with = PointView::new(&m, true);
+        assert!(with.soa().is_some());
+        // degenerate shapes never transpose
+        let empty = Matrix::zeros(0, 3);
+        assert!(PointView::new(&empty, true).soa().is_none());
+    }
+}

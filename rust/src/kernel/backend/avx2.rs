@@ -1,0 +1,258 @@
+//! The AVX2+FMA backend: `std::arch` f32x8 intrinsics over the SoA view.
+//!
+//! Op-order spec (the golden replica in tests/backend_parity.rs pins
+//! exactly this): the gram entry for column `j` is the sequential
+//! *fused* multiply-add chain over features,
+//!
+//! ```text
+//! g_j = fma(a_{d-1}, b_{j,d-1}, … fma(a_1, b_{j,1}, fma(a_0, b_{j,0}, 0)))
+//! ```
+//!
+//! — one rounding per step (`vfmadd231ps` per lane). The main loop runs
+//! 32 such chains at once (four f32x8 accumulators over 64-byte SoA
+//! groups), the 8-wide loop one vector, and sub-vector tails fall back
+//! to scalar `f32::mul_add` — which is the *same* correctly-rounded
+//! fused operation, so every path produces identical bits. As with the
+//! `wide` backend, per-column chains are independent of lane and block
+//! position: `j0` anchors, tile schedules, pool widths and the
+//! row-major fallback cannot change results.
+//!
+//! # Safety architecture
+//!
+//! This is the only module outside `runtime::pool` permitted to contain
+//! `unsafe` (conformance linter, `unsafe-confined` whitelist), and the
+//! linter additionally requires a `SAFETY:` justification on every
+//! line that mentions it. The obligations are narrow:
+//!
+//! * **ISA availability** — [`Avx2`] instances are only reachable
+//!   through `backend::avx2()`, which gates construction behind
+//!   `is_x86_feature_detected!("avx2")` && `("fma")`, discharging the
+//!   `#[target_feature]` precondition once per process.
+//! * **Pointer bounds** — all loads/stores go through `loadu`/`storeu`
+//!   (no alignment obligation; SoA alignment is purely a perf win) at
+//!   offsets the drivers keep inside the padded SoA rows / the output
+//!   slice, re-checked here with `debug_assert!` before each block.
+
+// Intrinsic calls are `unsafe fn` on older toolchains but plain safe
+// fns inside target_feature contexts on newer ones; the explicit
+// `unsafe {}` blocks below (required by `deny(unsafe_op_in_unsafe_fn)`
+// on the older compilers) would otherwise warn as redundant there.
+#![allow(unused_unsafe)]
+
+use std::arch::x86_64::{
+    _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+};
+
+use super::InnerKernel;
+use crate::data::points::{PointView, SoaPoints};
+use crate::kernel::metric::Metric;
+
+/// Lanes per AVX2 vector.
+const LANES: usize = 8;
+/// Vectors per main-loop block (4 × 8 lanes = 32 columns).
+const GROUPS: usize = 4;
+
+/// The x86_64 intrinsics backend (`name() == "avx2"`). The private
+/// field makes [`AVX2`] the only instance, so the type is unreachable
+/// except through `backend::avx2()`'s CPU feature detection — that
+/// gate is what discharges the `target_feature` obligation in the safe
+/// `fill_row` below.
+pub struct Avx2 {
+    _private: (),
+}
+
+/// The singleton `backend::avx2()` hands out after detection succeeds.
+pub(super) static AVX2: Avx2 = Avx2 { _private: () };
+
+impl InnerKernel for Avx2 {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+
+    fn wants_soa(&self) -> bool {
+        true
+    }
+
+    fn fill_row(
+        &self,
+        arow: &[f32],
+        sq_ai: f32,
+        b: &PointView<'_>,
+        sq_b: &[f32],
+        j0: usize,
+        metric: Metric,
+        distances: bool,
+        orow: &mut [f32],
+    ) {
+        // SAFETY: `Avx2` is only handed out by `backend::avx2()` after
+        // `is_x86_feature_detected!` confirmed avx2+fma, so the
+        // target_feature precondition of `fill_row_avx2` holds.
+        unsafe { fill_row_avx2(arow, sq_ai, b, sq_b, j0, metric, distances, orow) }
+    }
+}
+
+/// One gram entry via the scalar fused chain — `f32::mul_add` performs
+/// the identical correctly-rounded operation as one `vfmadd` lane, so
+/// tails and the row-major fallback match the vector loops bit for bit.
+#[inline]
+fn gram1_fused(arow: &[f32], brow: &[f32]) -> f32 {
+    debug_assert_eq!(arow.len(), brow.len());
+    let mut s = 0f32;
+    for (&x, &y) in arow.iter().zip(brow.iter()) {
+        s = x.mul_add(y, s);
+    }
+    s
+}
+
+/// Tail variant of [`gram1_fused`] reading the SoA view.
+#[inline]
+fn gram1_fused_soa(arow: &[f32], soa: &SoaPoints, j: usize) -> f32 {
+    let mut s = 0f32;
+    for (f, &x) in arow.iter().enumerate() {
+        s = x.mul_add(soa.feature(f)[j], s);
+    }
+    s
+}
+
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: callers must ensure this CPU supports avx2 and fma (checked
+// once at backend construction, see `backend::avx2()`).
+unsafe fn fill_row_avx2(
+    arow: &[f32],
+    sq_ai: f32,
+    b: &PointView<'_>,
+    sq_b: &[f32],
+    j0: usize,
+    metric: Metric,
+    distances: bool,
+    orow: &mut [f32],
+) {
+    let n = b.rows();
+    debug_assert_eq!(orow.len(), n - j0);
+    let soa = match b.soa() {
+        Some(soa) => soa,
+        None => {
+            // Row-major fallback (driver supplied no SoA view): scalar
+            // fused chains — identical bits to the vector loops.
+            let m = b.mat();
+            for jj in j0..n {
+                let g = [gram1_fused(arow, m.row(jj))];
+                metric.finalize_block(
+                    distances,
+                    sq_ai,
+                    &sq_b[jj..jj + 1],
+                    &g,
+                    &mut orow[jj - j0..jj - j0 + 1],
+                );
+            }
+            return;
+        }
+    };
+    debug_assert_eq!(arow.len(), soa.dim());
+    let mut gram = [0f32; GROUPS * LANES];
+    let mut j = j0;
+    while j + GROUPS * LANES <= n {
+        // SAFETY: j + 32 <= n <= stride of every padded feature row, so
+        // all loads in `gram32` stay in-bounds; avx2+fma hold here.
+        unsafe { gram32(arow, soa, j, &mut gram) };
+        metric.finalize_block(
+            distances,
+            sq_ai,
+            &sq_b[j..j + GROUPS * LANES],
+            &gram,
+            &mut orow[j - j0..j - j0 + GROUPS * LANES],
+        );
+        j += GROUPS * LANES;
+    }
+    while j + LANES <= n {
+        // SAFETY: j + 8 <= n <= feature-row stride, so the loads in
+        // `gram8` stay in-bounds; avx2+fma hold here.
+        unsafe { gram8(arow, soa, j, &mut gram[..LANES]) };
+        metric.finalize_block(
+            distances,
+            sq_ai,
+            &sq_b[j..j + LANES],
+            &gram[..LANES],
+            &mut orow[j - j0..j - j0 + LANES],
+        );
+        j += LANES;
+    }
+    for jj in j..n {
+        let g = [gram1_fused_soa(arow, soa, jj)];
+        metric.finalize_block(
+            distances,
+            sq_ai,
+            &sq_b[jj..jj + 1],
+            &g,
+            &mut orow[jj - j0..jj - j0 + 1],
+        );
+    }
+}
+
+/// 32 fused gram chains: four f32x8 accumulators swept over the SoA
+/// feature rows, written to `out[..32]`.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: callers must ensure avx2+fma are available and that
+// `j + 32 <= soa.stride()` so every load below is in-bounds.
+unsafe fn gram32(arow: &[f32], soa: &SoaPoints, j: usize, out: &mut [f32]) {
+    debug_assert!(out.len() >= GROUPS * LANES);
+    // SAFETY: value-only intrinsics; avx2 is enabled for this fn.
+    let (mut a0, mut a1, mut a2, mut a3) = unsafe {
+        (
+            _mm256_setzero_ps(),
+            _mm256_setzero_ps(),
+            _mm256_setzero_ps(),
+            _mm256_setzero_ps(),
+        )
+    };
+    for (f, &x) in arow.iter().enumerate() {
+        let col = soa.feature(f);
+        debug_assert!(j + GROUPS * LANES <= col.len());
+        let p = col.as_ptr();
+        // SAFETY: j + 32 <= col.len() (caller contract, re-asserted
+        // above), so the four 8-float loads read inside `col`; fma is
+        // enabled for this fn.
+        unsafe {
+            let xv = _mm256_set1_ps(x);
+            a0 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p.add(j)), a0);
+            a1 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p.add(j + LANES)), a1);
+            a2 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p.add(j + 2 * LANES)), a2);
+            a3 = _mm256_fmadd_ps(xv, _mm256_loadu_ps(p.add(j + 3 * LANES)), a3);
+        }
+    }
+    let o = out.as_mut_ptr();
+    // SAFETY: out.len() >= 32 (asserted above), so the four 8-float
+    // stores cover exactly out[..32].
+    unsafe {
+        _mm256_storeu_ps(o, a0);
+        _mm256_storeu_ps(o.add(LANES), a1);
+        _mm256_storeu_ps(o.add(2 * LANES), a2);
+        _mm256_storeu_ps(o.add(3 * LANES), a3);
+    }
+}
+
+/// 8 fused gram chains: one f32x8 accumulator, written to `out[..8]`.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+// SAFETY: callers must ensure avx2+fma are available and that
+// `j + 8 <= soa.stride()` so every load below is in-bounds.
+unsafe fn gram8(arow: &[f32], soa: &SoaPoints, j: usize, out: &mut [f32]) {
+    debug_assert!(out.len() >= LANES);
+    // SAFETY: value-only intrinsic; avx2 is enabled for this fn.
+    let mut acc = unsafe { _mm256_setzero_ps() };
+    for (f, &x) in arow.iter().enumerate() {
+        let col = soa.feature(f);
+        debug_assert!(j + LANES <= col.len());
+        // SAFETY: j + 8 <= col.len() (caller contract, re-asserted
+        // above), so the 8-float load reads inside `col`; fma is
+        // enabled for this fn.
+        unsafe {
+            acc = _mm256_fmadd_ps(_mm256_set1_ps(x), _mm256_loadu_ps(col.as_ptr().add(j)), acc);
+        }
+    }
+    // SAFETY: out.len() >= 8 (asserted above), so the 8-float store
+    // covers exactly out[..8].
+    unsafe { _mm256_storeu_ps(out.as_mut_ptr(), acc) };
+}

@@ -1,0 +1,259 @@
+//! Runtime-dispatched SIMD compute backends (ISSUE 9, ROADMAP item 2).
+//!
+//! Every flop in the library funnels through one inner kernel: given a
+//! query point and a block of candidate points, produce one *gram row*
+//! (dot products) and finalize it into similarities or distances. This
+//! module turns that kernel into a pluggable trait, [`InnerKernel`],
+//! with three implementations:
+//!
+//! * [`scalar`] — the pre-backend register-blocked path
+//!   (`linalg::dot8`/`dot4`/`dot`), safe Rust, runs everywhere. This is
+//!   the **reference backend**: it anchors the CSR contract and the
+//!   bench baseline, and `SUBMODLIB_BACKEND=scalar` reproduces the
+//!   pre-refactor kernels byte for byte (tests/backend_parity.rs).
+//! * [`wide`] — a portable 8-lane backend in safe Rust: structure-of-
+//!   arrays loads with a fixed-width accumulator array the compiler
+//!   auto-vectorizes. The non-x86 auto-detect fallback.
+//! * [`avx2`] (x86_64 only) — `std::arch` intrinsics, f32x8 FMA over
+//!   the SoA view, dispatched only after `is_x86_feature_detected!`
+//!   confirms `avx2` **and** `fma`. The only module outside
+//!   `runtime::pool` allowed to contain `unsafe` (enforced by the
+//!   conformance linter's `unsafe-confined` whitelist).
+//!
+//! # Selection
+//!
+//! The backend is selected **once per process** ([`active`]): the
+//! `SUBMODLIB_BACKEND` env var (`scalar` | `wide` | `avx2`) wins;
+//! otherwise auto-detect picks `avx2` when the CPU supports it and
+//! `wide` elsewhere. Requesting `avx2` on a CPU without it is a hard
+//! error, not a silent fallback — reproducibility scripts must not lie
+//! about what ran.
+//!
+//! # Determinism contract (per-backend bit-pinning)
+//!
+//! The old promise — every build bit-identical to one scalar op order —
+//! becomes a *per-backend* promise:
+//!
+//! * each backend is a pure function of its inputs: same data, same
+//!   backend ⇒ same bits, at any pool width and any tile schedule.
+//!   For the SIMD backends this holds because their per-column
+//!   reduction chain (sequential over features) is independent of the
+//!   column's position in a block, so tile boundaries, `j0` anchors and
+//!   SoA-vs-row-major layout cannot change results. The scalar backend
+//!   keeps its `j0`-anchored 8/4/1 block phases instead — that exact
+//!   op order is the pre-refactor contract.
+//! * squared norms ([`InnerKernel::sq_norms`]) and metric finalization
+//!   (`Metric::finalize_block`) are deliberately **shared** (provided
+//!   methods over `linalg::dot`), so backends can only disagree through
+//!   gram rounding — which the ULP parity sweep bounds against scalar.
+//! * cross-backend agreement is *parity*, not equality: ≤ 4 ULP on
+//!   well-conditioned rows, analytic-interval containment otherwise
+//!   (tests/backend_parity.rs). Non-finite classification is pinned
+//!   *per backend* (to its golden replica), not across backends: a
+//!   fused chain computing `fma(x, y, +∞)` yields +∞ where the unfused
+//!   chain's overflowed product makes ∞ − ∞ = NaN.
+
+use std::sync::OnceLock;
+
+use crate::data::points::PointView;
+use crate::kernel::metric::Metric;
+use crate::linalg::{self, Matrix};
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+pub mod scalar;
+pub mod wide;
+
+/// Env var naming the backend to use (`scalar` | `wide` | `avx2`).
+/// Unset ⇒ auto-detect. Read once, at first kernel build.
+pub const BACKEND_ENV: &str = "SUBMODLIB_BACKEND";
+
+/// One inner compute kernel: gram row + metric finalization over a
+/// block of candidate points, plus the (shared) squared-norm pass.
+///
+/// Implementations must be pure functions of their arguments — no
+/// clocks, no global state — so kernel builds stay deterministic at
+/// every pool width. Each implementation's exact op order is pinned by
+/// a golden replica in tests/backend_parity.rs.
+pub trait InnerKernel: Sync {
+    /// Stable identifier (`"scalar"`, `"wide"`, `"avx2"`) — recorded in
+    /// bench snapshots and accepted by [`BACKEND_ENV`].
+    fn name(&self) -> &'static str;
+
+    /// Whether the tile drivers should hand this backend an SoA
+    /// transpose of the candidate set ([`PointView::new`]). Layout
+    /// only: results are identical either way.
+    fn wants_soa(&self) -> bool;
+
+    /// Fill one gram row, finalized through `metric` (or raw euclidean
+    /// distances when `distances`): `orow[j - j0] = f(⟨arow, b_j⟩)` for
+    /// `j ∈ [j0, b.rows())`. `sq_b` is indexed by absolute `j`;
+    /// `orow.len()` must equal `b.rows() - j0`.
+    #[allow(clippy::too_many_arguments)]
+    fn fill_row(
+        &self,
+        arow: &[f32],
+        sq_ai: f32,
+        b: &PointView<'_>,
+        sq_b: &[f32],
+        j0: usize,
+        metric: Metric,
+        distances: bool,
+        orow: &mut [f32],
+    );
+
+    /// Squared norm of every row. Provided, and deliberately identical
+    /// across backends: finalization inputs (cosine denominators, rbf
+    /// exponents) must not vary per backend, so the parity story stays
+    /// confined to gram rounding.
+    fn sq_norms(&self, m: &Matrix) -> Vec<f32> {
+        (0..m.rows()).map(|i| linalg::dot(m.row(i), m.row(i))).collect()
+    }
+}
+
+static SCALAR: scalar::Scalar = scalar::Scalar;
+static WIDE: wide::Wide = wide::Wide;
+
+static ACTIVE: OnceLock<&'static dyn InnerKernel> = OnceLock::new();
+
+/// The reference scalar backend (always available).
+pub fn scalar() -> &'static dyn InnerKernel {
+    &SCALAR
+}
+
+/// The portable 8-lane backend (always available).
+pub fn wide() -> &'static dyn InnerKernel {
+    &WIDE
+}
+
+/// The AVX2+FMA backend, iff this CPU supports it.
+#[cfg(target_arch = "x86_64")]
+pub fn avx2() -> Option<&'static dyn InnerKernel> {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        Some(&avx2::AVX2)
+    } else {
+        None
+    }
+}
+
+/// The AVX2+FMA backend, iff this CPU supports it.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2() -> Option<&'static dyn InnerKernel> {
+    None
+}
+
+/// Every backend runnable on this host, scalar first. The bench harness
+/// sweeps this list so one run records all locally comparable kernels.
+pub fn available() -> Vec<&'static dyn InnerKernel> {
+    let mut out: Vec<&'static dyn InnerKernel> = vec![scalar(), wide()];
+    if let Some(k) = avx2() {
+        out.push(k);
+    }
+    out
+}
+
+/// Look up a backend by its [`InnerKernel::name`]. `None` when the name
+/// is unknown *or* the backend cannot run on this CPU.
+pub fn by_name(name: &str) -> Option<&'static dyn InnerKernel> {
+    match name {
+        "scalar" => Some(scalar()),
+        "wide" => Some(wide()),
+        "avx2" => avx2(),
+        _ => None,
+    }
+}
+
+/// Selection logic behind [`active`], split out so unit tests can
+/// exercise it without mutating process environment.
+fn resolve(spec: Option<&str>) -> &'static dyn InnerKernel {
+    match spec {
+        None => avx2().unwrap_or_else(wide),
+        Some(name) => match by_name(name) {
+            Some(k) => k,
+            None => panic!(
+                "{BACKEND_ENV}={name:?} is not available on this host \
+                 (valid: scalar, wide{})",
+                if cfg!(target_arch = "x86_64") { ", avx2 (CPU permitting)" } else { "" }
+            ),
+        },
+    }
+}
+
+/// The process-wide backend: `SUBMODLIB_BACKEND` if set, else
+/// auto-detect (avx2 where supported, wide elsewhere). Resolved once —
+/// every kernel build in the process uses the same backend, so
+/// mixed-backend artifacts cannot exist.
+pub fn active() -> &'static dyn InnerKernel {
+    *ACTIVE.get_or_init(|| {
+        let spec = std::env::var(BACKEND_ENV).ok();
+        resolve(spec.as_deref())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_round_trips_every_available_backend() {
+        for k in available() {
+            let again = by_name(k.name()).expect("available backend must resolve by name");
+            assert_eq!(again.name(), k.name());
+        }
+    }
+
+    #[test]
+    fn scalar_and_wide_are_always_available() {
+        let names: Vec<&str> = available().iter().map(|k| k.name()).collect();
+        assert!(names.contains(&"scalar"));
+        assert!(names.contains(&"wide"));
+        assert_eq!(names[0], "scalar", "scalar is the reference and leads the list");
+    }
+
+    #[test]
+    fn explicit_resolution_honours_the_request() {
+        assert_eq!(resolve(Some("scalar")).name(), "scalar");
+        assert_eq!(resolve(Some("wide")).name(), "wide");
+        if avx2().is_some() {
+            assert_eq!(resolve(Some("avx2")).name(), "avx2");
+        }
+    }
+
+    #[test]
+    fn auto_detection_prefers_simd() {
+        let picked = resolve(None).name();
+        match avx2() {
+            Some(_) => assert_eq!(picked, "avx2"),
+            None => assert_eq!(picked, "wide"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "is not available")]
+    fn unknown_backend_name_is_a_hard_error() {
+        resolve(Some("neon"));
+    }
+
+    #[test]
+    fn active_is_one_of_the_available_backends() {
+        let name = active().name();
+        assert!(
+            available().iter().any(|k| k.name() == name),
+            "active backend {name:?} must be runnable here"
+        );
+    }
+
+    #[test]
+    fn sq_norms_are_backend_independent() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::new(11);
+        let m = Matrix::from_vec(13, 5, (0..65).map(|_| rng.next_gaussian() as f32).collect())
+            .unwrap();
+        let reference: Vec<u32> =
+            scalar().sq_norms(&m).into_iter().map(f32::to_bits).collect();
+        for k in available() {
+            let got: Vec<u32> = k.sq_norms(&m).into_iter().map(f32::to_bits).collect();
+            assert_eq!(got, reference, "sq_norms must be shared verbatim ({})", k.name());
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! The reference backend: the pre-refactor register-blocked scalar
+//! kernels, verbatim.
+//!
+//! One gram row is produced in `j0`-anchored phases — 8-wide blocks
+//! through [`linalg::dot8`], then a 4-wide block through
+//! [`linalg::dot4`], then a scalar tail through [`linalg::dot`] — the
+//! exact op order `tile::fill_row` used before the backend layer
+//! existed. That makes this backend the anchor of the repo's
+//! determinism contracts: CSR goldens, bench baselines and the
+//! paper-behavior suites were all recorded against these bits, and
+//! `SUBMODLIB_BACKEND=scalar` must keep reproducing them byte for byte
+//! (pinned by tests/backend_parity.rs against an in-test replica of the
+//! old code).
+//!
+//! Because the phase boundaries are anchored at `j0`, this is the one
+//! backend whose bits *do* depend on where a block starts — which is
+//! why the symmetric and rect drivers must keep anchoring row `i` at
+//! `j0 = i` and `j0 = 0` respectively (see `kernel::tile` docs).
+
+use super::InnerKernel;
+use crate::data::points::PointView;
+use crate::kernel::metric::Metric;
+use crate::linalg;
+
+/// The always-available reference backend (`name() == "scalar"`).
+pub struct Scalar;
+
+impl InnerKernel for Scalar {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn wants_soa(&self) -> bool {
+        false
+    }
+
+    fn fill_row(
+        &self,
+        arow: &[f32],
+        sq_ai: f32,
+        b: &PointView<'_>,
+        sq_b: &[f32],
+        j0: usize,
+        metric: Metric,
+        distances: bool,
+        orow: &mut [f32],
+    ) {
+        let m = b.mat();
+        let n = m.rows();
+        debug_assert_eq!(orow.len(), n - j0);
+        let mut j = j0;
+        while j + 8 <= n {
+            let g = linalg::dot8(
+                arow,
+                [
+                    m.row(j),
+                    m.row(j + 1),
+                    m.row(j + 2),
+                    m.row(j + 3),
+                    m.row(j + 4),
+                    m.row(j + 5),
+                    m.row(j + 6),
+                    m.row(j + 7),
+                ],
+            );
+            metric.finalize_block(
+                distances,
+                sq_ai,
+                &sq_b[j..j + 8],
+                &g,
+                &mut orow[j - j0..j - j0 + 8],
+            );
+            j += 8;
+        }
+        while j + 4 <= n {
+            let g = linalg::dot4(arow, m.row(j), m.row(j + 1), m.row(j + 2), m.row(j + 3));
+            metric.finalize_block(
+                distances,
+                sq_ai,
+                &sq_b[j..j + 4],
+                &g,
+                &mut orow[j - j0..j - j0 + 4],
+            );
+            j += 4;
+        }
+        for jj in j..n {
+            let g = [linalg::dot(arow, m.row(jj))];
+            metric.finalize_block(
+                distances,
+                sq_ai,
+                &sq_b[jj..jj + 1],
+                &g,
+                &mut orow[jj - j0..jj - j0 + 1],
+            );
+        }
+    }
+}

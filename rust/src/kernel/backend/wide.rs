@@ -1,0 +1,128 @@
+//! The portable 8-lane backend: safe Rust the compiler auto-vectorizes.
+//!
+//! Op-order spec (the golden replica in tests/backend_parity.rs pins
+//! exactly this): the gram entry for column `j` is the sequential
+//! multiply-then-add chain over features,
+//!
+//! ```text
+//! g_j = (((0 + a_0·b_{j,0}) + a_1·b_{j,1}) + … + a_{d-1}·b_{j,d-1})
+//! ```
+//!
+//! with one rounding per multiply and one per add (never fused — Rust
+//! only emits FMA contraction when asked). The vectorized main loop
+//! computes eight such chains side by side from the SoA feature rows;
+//! because each column's chain is independent of its lane and block
+//! position, tails, `j0` anchors and the row-major fallback (used when
+//! the driver supplied no SoA view) all produce identical bits. That
+//! position-independence is what makes this backend bit-stable across
+//! pool widths and tile schedules.
+//!
+//! The inner loop is written as a fixed-size accumulator array updated
+//! lane-by-lane — the canonical shape LLVM turns into vector FMA-free
+//! mul+add on any target with 128/256-bit registers (NEON, SSE2, AVX),
+//! while staying 100% safe, deterministic scalar semantics.
+
+use super::InnerKernel;
+use crate::data::points::{PointView, SoaPoints};
+use crate::kernel::metric::Metric;
+
+/// Lanes per vectorized group.
+const LANES: usize = 8;
+
+/// The always-available portable SIMD backend (`name() == "wide"`).
+pub struct Wide;
+
+/// One gram entry from the row-major operand: the sequential
+/// multiply-then-add chain over features.
+#[inline]
+fn gram1_row(arow: &[f32], brow: &[f32]) -> f32 {
+    debug_assert_eq!(arow.len(), brow.len());
+    let mut s = 0f32;
+    for (&x, &y) in arow.iter().zip(brow.iter()) {
+        s += x * y;
+    }
+    s
+}
+
+/// One gram entry from the SoA operand — same chain, same bits, just a
+/// strided walk (used only for sub-vector tails).
+#[inline]
+fn gram1_soa(arow: &[f32], soa: &SoaPoints, j: usize) -> f32 {
+    let mut s = 0f32;
+    for (f, &x) in arow.iter().enumerate() {
+        s += x * soa.feature(f)[j];
+    }
+    s
+}
+
+impl InnerKernel for Wide {
+    fn name(&self) -> &'static str {
+        "wide"
+    }
+
+    fn wants_soa(&self) -> bool {
+        true
+    }
+
+    fn fill_row(
+        &self,
+        arow: &[f32],
+        sq_ai: f32,
+        b: &PointView<'_>,
+        sq_b: &[f32],
+        j0: usize,
+        metric: Metric,
+        distances: bool,
+        orow: &mut [f32],
+    ) {
+        let n = b.rows();
+        debug_assert_eq!(orow.len(), n - j0);
+        let soa = match b.soa() {
+            Some(soa) => soa,
+            None => {
+                // Row-major fallback: per-column chains, identical bits.
+                let m = b.mat();
+                for jj in j0..n {
+                    let g = [gram1_row(arow, m.row(jj))];
+                    metric.finalize_block(
+                        distances,
+                        sq_ai,
+                        &sq_b[jj..jj + 1],
+                        &g,
+                        &mut orow[jj - j0..jj - j0 + 1],
+                    );
+                }
+                return;
+            }
+        };
+        debug_assert_eq!(arow.len(), soa.dim());
+        let mut j = j0;
+        while j + LANES <= n {
+            let mut acc = [0f32; LANES];
+            for (f, &x) in arow.iter().enumerate() {
+                let col = &soa.feature(f)[j..j + LANES];
+                for l in 0..LANES {
+                    acc[l] += x * col[l];
+                }
+            }
+            metric.finalize_block(
+                distances,
+                sq_ai,
+                &sq_b[j..j + LANES],
+                &acc,
+                &mut orow[j - j0..j - j0 + LANES],
+            );
+            j += LANES;
+        }
+        for jj in j..n {
+            let g = [gram1_soa(arow, soa, jj)];
+            metric.finalize_block(
+                distances,
+                sq_ai,
+                &sq_b[jj..jj + 1],
+                &g,
+                &mut orow[jj - j0..jj - j0 + 1],
+            );
+        }
+    }
+}

@@ -3,7 +3,9 @@
 //! Construction is the O(n²·d) hot-spot of Table 5; the native path runs
 //! on the direct-write tile pipeline (`super::tile`): gram expansion (one
 //! blocked X·Xᵀ + an O(n²) metric transform) over row-block tiles claimed
-//! dynamically by scoped worker threads. The PJRT path
+//! dynamically by the persistent worker pool, with the inner gram math
+//! dispatched through the process-wide compute backend
+//! (`super::backend`: scalar / wide / avx2). The PJRT path
 //! (`runtime::tiled::build_dense_kernel`) runs the same math through the
 //! AOT-compiled Pallas artifact.
 

@@ -67,6 +67,36 @@ impl Metric {
     pub fn distance(a: &[f32], b: &[f32]) -> f32 {
         linalg::sq_dist(a, b).max(0.0).sqrt()
     }
+
+    /// Finalize a block of gram entries into `out`: similarities via
+    /// [`from_gram`](Self::from_gram), or raw euclidean distances when
+    /// `distances` (the disparity-function path:
+    /// `sqrt(max(sq_ai + sq_bj − 2g, 0))`).
+    ///
+    /// This is the **shared** finalization stage of the compute-backend
+    /// contract (`kernel::backend`): every backend must funnel its gram
+    /// bits through this exact element expression, so backends can only
+    /// differ in gram rounding — never in how a gram value becomes a
+    /// similarity. `gram`, `sq_bj` and `out` are indexed identically.
+    #[inline]
+    pub fn finalize_block(
+        &self,
+        distances: bool,
+        sq_ai: f32,
+        sq_bj: &[f32],
+        gram: &[f32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(gram.len(), out.len());
+        debug_assert_eq!(sq_bj.len(), out.len());
+        for t in 0..out.len() {
+            out[t] = if distances {
+                (sq_ai + sq_bj[t] - 2.0 * gram[t]).max(0.0).sqrt()
+            } else {
+                self.from_gram(gram[t], sq_ai, sq_bj[t])
+            };
+        }
+    }
 }
 
 #[cfg(test)]

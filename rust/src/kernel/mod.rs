@@ -16,8 +16,14 @@
 //!   consumers) for rectangular workloads, and symmetric upper-triangle
 //!   wedge streaming (each pair computed once) for sparse. See its docs
 //!   for the peak-memory model.
-//! * [`builder`] — backend-dispatching construction helpers.
+//! * [`backend`] — the runtime-dispatched SIMD inner kernels (scalar /
+//!   wide / avx2) every tile driver computes through; selected once per
+//!   process via `SUBMODLIB_BACKEND` or CPU auto-detection. (Distinct
+//!   from [`builder::KernelBackend`], which picks the *construction
+//!   path* — native tiles vs the PJRT artifact route.)
+//! * [`builder`] — construction-path dispatching helpers.
 
+pub mod backend;
 pub mod builder;
 pub mod dense;
 pub mod metric;

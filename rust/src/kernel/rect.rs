@@ -5,6 +5,10 @@
 //! (P × V) kernel in the MI / CG / CMI instantiations. FLQMI in particular
 //! only ever needs a Q × V kernel (paper §3.5), which is what makes it
 //! cheap.
+//!
+//! Builds run on the direct-write tile pipeline (`super::tile`) through
+//! the process-wide compute backend (`super::backend`), anchored at
+//! `j0 = 0` — the rectangular rows are full-width.
 
 use super::metric::Metric;
 use super::tile::build_pairwise;

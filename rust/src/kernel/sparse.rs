@@ -11,11 +11,14 @@
 //! tiles are computed — each unordered pair exactly once, the same 2×
 //! dot-product saving the dense symmetric path keeps — and every
 //! computed (i, j) value is delivered to *both* row i's and row j's
-//! top-k accumulator, so `s_ij == s_ji` holds bitwise by construction
-//! (and, because the wedge anchors row i's block phases at column i
-//! exactly like the dense path, every stored value is bit-identical to
-//! the dense kernel built from the same data). Peak memory is
-//! O(threads·TILE_ROWS·n + n·k) — see `tile::sparse_peak_bytes`.
+//! top-k accumulator, so `s_ij == s_ji` holds bitwise by construction.
+//! Every stored value is bit-identical to the dense kernel built from
+//! the same data *within whichever compute backend is active*
+//! (`kernel::backend`): the scalar backend needs the wedge's `j0 = i`
+//! block-phase anchoring to match the dense symmetric path, while the
+//! SIMD backends are position-independent and match everywhere. The
+//! scalar backend anchors the CSR golden contract. Peak memory is
+//! O(threads·TILE_ROWS·n + n·k + n·d) — see `tile::sparse_peak_bytes`.
 //!
 //! ## CSR contract: tie-stable top-k
 //!

@@ -34,36 +34,58 @@
 //!
 //! ## Peak-memory model
 //!
-//! With `t = runtime::pool::num_threads()` participants and 4-byte
-//! floats:
+//! With `t = runtime::pool::num_threads()` participants, feature
+//! dimension `d`, and 4-byte floats:
 //!
-//! * direct dense build: `4·n²` output + `8·n` squared norms — the
-//!   output is the floor, nothing transient scales with n²
-//!   ([`dense_peak_bytes`]);
+//! * direct dense build: `4·n²` output + `8·n` squared norms + the
+//!   backend's SoA operand copy (`SoaPoints::padded_bytes(n, d)`) when
+//!   the active backend wants one — the output is the floor, nothing
+//!   transient scales with n² ([`dense_peak_bytes`]);
 //! * symmetric streaming sparse build: `4·t·(TILE_ROWS·n/2 + n)` packed
 //!   per-worker wedge buffers (a tile's area is capped near half a
 //!   full-width tile, no matter how deep into the triangle's taper it
 //!   sits) + `8·n·k` CSR output (the top-k accumulators build in place)
-//!   + `8·n` per-row cursors + `4·n` squared norms
-//!   ([`sparse_peak_bytes`]) — O(t·n) instead of O(n²), which is what
-//!   lets sparse mode scale past the dense memory wall (apricot,
-//!   Schreiber et al. 2019, makes the same argument).
+//!   + `8·n` per-row cursors + `4·n` squared norms + the same optional
+//!   SoA copy ([`sparse_peak_bytes`]) — O(t·n + n·d) instead of O(n²),
+//!   which is what lets sparse mode scale past the dense memory wall
+//!   (apricot, Schreiber et al. 2019, makes the same argument).
 //!
-//! The inner loop is shared by all drivers ([`fill_row`]): 8-wide then
-//! 4-wide register-blocked dot products (`linalg::dot8` / `dot4`) with a
-//! scalar tail, exactly the op order of the pre-tile builder. Dense and
-//! rect outputs are pinned bit-identical to that builder by
-//! `tests/kernel_stream.rs`. The symmetric streamed wedge anchors row i
-//! at column i — the *same* block-phase alignment as the dense symmetric
-//! path — so the sparse build's stored values are bit-identical to the
-//! dense kernel built from the same data (full-width `stream_tiles` rows
-//! anchor at column 0 and can differ from these by an ulp; that is why
-//! the sparse build no longer uses them).
+//! ## Compute backends
+//!
+//! The inner loop — one gram row finalized through the metric — is not
+//! hard-wired: every driver dispatches through the process-wide
+//! [`backend::InnerKernel`] selected once per process from
+//! `SUBMODLIB_BACKEND` or CPU auto-detection (see `kernel::backend`).
+//! Each build constructs one [`PointView`] of the candidate operand —
+//! adding the 64-byte-aligned SoA transpose iff the backend asks for
+//! it — and hands every output row to `InnerKernel::fill_row`.
+//!
+//! Determinism is pinned *per backend* (tests/backend_parity.rs):
+//!
+//! * the `scalar` backend reproduces the pre-backend register-blocked
+//!   op order (8/4/1 blocks anchored at `j0`) byte for byte — it
+//!   anchors the CSR/bench contract. That is why the symmetric paths
+//!   here still anchor row i at `j0 = i`: under `scalar` the sparse
+//!   build's stored values stay bit-identical to the dense kernel of
+//!   the same data, while full-width [`stream_tiles`] rows (anchored
+//!   at column 0) can differ from those by an ulp — which is why the
+//!   sparse build does not use them;
+//! * the SIMD backends (`wide`, `avx2`) compute each column as a
+//!   position-independent per-column reduction chain, so under them
+//!   *all* paths — full-width, wedge, rect — agree bitwise;
+//! * within every backend, outputs are bit-identical at every pool
+//!   width and tile schedule (the indexed-slot rule below); across
+//!   backends, agreement is ULP-bounded parity, not bit-equality.
+//!
+//! Exactly one backend runs per process, so every driver-vs-driver
+//! bit-equality in the tests below holds unconditionally.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use super::backend;
 use super::metric::Metric;
-use crate::linalg::{self, Matrix};
+use crate::data::points::{PointView, SoaPoints};
+use crate::linalg::Matrix;
 use crate::runtime::pool;
 
 /// Rows per streamed tile. Chosen so a worker's buffer stays a few
@@ -87,74 +109,10 @@ pub struct Tile<'a> {
     pub data: &'a [f32],
 }
 
+/// Squared norms via the active backend's (shared) norm pass — the
+/// finalization inputs every backend agrees on bitwise.
 fn sq_norms(m: &Matrix) -> Vec<f32> {
-    (0..m.rows()).map(|i| linalg::dot(m.row(i), m.row(i))).collect()
-}
-
-/// Fill `orow` — the slice covering columns `[j0, n)` of an output row —
-/// with similarities (or distances) of `arow` against rows `j0..n` of
-/// `b`: 8-wide then 4-wide register blocking with a scalar tail — the
-/// exact op order of the pre-tile builder, which is what keeps every
-/// tile path bit-identical to it. The block phases are anchored at `j0`,
-/// so two calls agree bitwise on a shared column only when their `j0`s
-/// match (the symmetric paths all anchor row i at `j0 = i`).
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn fill_row(
-    arow: &[f32],
-    sq_ai: f32,
-    b: &Matrix,
-    sq_b: &[f32],
-    j0: usize,
-    metric: Metric,
-    distances: bool,
-    orow: &mut [f32],
-) {
-    let n = b.rows();
-    debug_assert_eq!(orow.len(), n - j0);
-    let mut j = j0;
-    while j + 8 <= n {
-        let g = linalg::dot8(
-            arow,
-            [
-                b.row(j),
-                b.row(j + 1),
-                b.row(j + 2),
-                b.row(j + 3),
-                b.row(j + 4),
-                b.row(j + 5),
-                b.row(j + 6),
-                b.row(j + 7),
-            ],
-        );
-        for t in 0..8 {
-            orow[j - j0 + t] = if distances {
-                (sq_ai + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
-            } else {
-                metric.from_gram(g[t], sq_ai, sq_b[j + t])
-            };
-        }
-        j += 8;
-    }
-    while j + 4 <= n {
-        let g = linalg::dot4(arow, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
-        for t in 0..4 {
-            orow[j - j0 + t] = if distances {
-                (sq_ai + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
-            } else {
-                metric.from_gram(g[t], sq_ai, sq_b[j + t])
-            };
-        }
-        j += 4;
-    }
-    for jj in j..n {
-        let g = linalg::dot(arow, b.row(jj));
-        orow[jj - j0] = if distances {
-            (sq_ai + sq_b[jj] - 2.0 * g).max(0.0).sqrt()
-        } else {
-            metric.from_gram(g, sq_ai, sq_b[jj])
-        };
-    }
+    backend::active().sq_norms(m)
 }
 
 /// Stream full-width row tiles of the `a × b` similarity matrix through
@@ -189,11 +147,14 @@ where
     let sq_b_own = if std::ptr::eq(a, b) { None } else { Some(sq_norms(b)) };
     let sq_b: &[f32] = sq_b_own.as_deref().unwrap_or(&sq_a);
 
+    let kernel = backend::active();
+    let bview = PointView::new(b, kernel.wants_soa());
+
     let tile_rows = TILE_ROWS.min(m);
     let tile_count = m.div_ceil(TILE_ROWS);
     let threads = pool::num_threads().min(tile_count).max(1);
     let next = AtomicUsize::new(0);
-    let (sq_a, sq_b) = (&sq_a, sq_b);
+    let (sq_a, sq_b, bview) = (&sq_a, sq_b, &bview);
     pool::run(threads, &|_worker| {
         let mut buf = vec![0f32; tile_rows * n];
         loop {
@@ -206,10 +167,10 @@ where
             let rows = r1 - r0;
             let data = &mut buf[..rows * n];
             for (bi, i) in (r0..r1).enumerate() {
-                fill_row(
+                kernel.fill_row(
                     a.row(i),
                     sq_a[i],
-                    b,
+                    bview,
                     sq_b,
                     0,
                     metric,
@@ -278,12 +239,14 @@ where
         return;
     }
     let sq = sq_norms(a);
+    let kernel = backend::active();
+    let aview = PointView::new(a, kernel.wants_soa());
     let bounds = triangle_bounds_by_area(n, sym_tile_area_target(n));
     let max_area =
         bounds.iter().map(|&(r0, r1)| wedge_area(n, r0, r1)).max().unwrap_or(0);
     let threads = pool::num_threads().min(bounds.len()).max(1);
     let next = AtomicUsize::new(0);
-    let (sq, bounds) = (&sq, &bounds);
+    let (sq, bounds, aview) = (&sq, &bounds, &aview);
     pool::run(threads, &|_worker| {
         let mut buf = vec![0f32; max_area];
         loop {
@@ -295,10 +258,10 @@ where
             let mut off = 0usize;
             for i in r0..r1 {
                 let len = n - i;
-                fill_row(
+                kernel.fill_row(
                     a.row(i),
                     sq[i],
-                    a,
+                    aview,
                     sq,
                     i,
                     metric,
@@ -401,11 +364,13 @@ pub(crate) fn build_pairwise(a: &Matrix, b: &Matrix, metric: Metric, distances: 
     }
     let sq_a = sq_norms(a);
     let sq_b = sq_norms(b);
+    let kernel = backend::active();
+    let bview = PointView::new(b, kernel.wants_soa());
     let bounds: Vec<(usize, usize)> = (0..m.div_ceil(TILE_ROWS))
         .map(|t| (t * TILE_ROWS, ((t + 1) * TILE_ROWS).min(m)))
         .collect();
     run_direct(&bounds, out.as_mut_slice(), n, |i, orow| {
-        fill_row(a.row(i), sq_a[i], b, &sq_b, 0, metric, distances, orow)
+        kernel.fill_row(a.row(i), sq_a[i], &bview, &sq_b, 0, metric, distances, orow)
     });
     out
 }
@@ -420,11 +385,13 @@ fn build_symmetric(a: &Matrix, metric: Metric, distances: bool) -> Matrix {
         return out;
     }
     let sq = sq_norms(a);
+    let kernel = backend::active();
+    let aview = PointView::new(a, kernel.wants_soa());
     // ~4 tiles per worker: coarse enough to amortize scheduling, fine
     // enough that dynamic claiming evens out the triangle's taper
     let bounds = triangle_bounds(n, pool::num_threads() * 4);
     run_direct(&bounds, out.as_mut_slice(), n, |i, orow| {
-        fill_row(a.row(i), sq[i], a, &sq, i, metric, distances, &mut orow[i..])
+        kernel.fill_row(a.row(i), sq[i], &aview, &sq, i, metric, distances, &mut orow[i..])
     });
     mirror_lower(out.as_mut_slice(), n);
     out
@@ -474,19 +441,34 @@ fn mirror_lower(out: &mut [f32], n: usize) {
     });
 }
 
-/// Peak heap bytes of the direct dense build at ground-set size `n`:
-/// the n×n output plus the two squared-norm vectors. Nothing transient
-/// scales with n².
-pub fn dense_peak_bytes(n: usize) -> usize {
-    4 * n * n + 8 * n
+/// SoA operand bytes the active backend adds to a build of `n` points
+/// in `d` dimensions: the padded transpose when the backend wants one
+/// ([`PointView::new`]), zero for the scalar backend. The model is
+/// pinned to the actual allocation by the `data::points` unit tests
+/// (`heap_bytes == padded_bytes`).
+fn soa_operand_bytes(n: usize, d: usize) -> usize {
+    if backend::active().wants_soa() && n > 0 && d > 0 {
+        SoaPoints::padded_bytes(n, d)
+    } else {
+        0
+    }
+}
+
+/// Peak heap bytes of the direct dense build at ground-set size `n`,
+/// feature dimension `d`: the n×n output, the two squared-norm vectors,
+/// and the backend's SoA operand copy (if it wants one). Nothing
+/// transient scales with n².
+pub fn dense_peak_bytes(n: usize, d: usize) -> usize {
+    4 * n * n + 8 * n + soa_operand_bytes(n, d)
 }
 
 /// Peak heap bytes of the symmetric streaming sparse (kNN, `k`
-/// neighbors) build at ground-set size `n`: packed per-worker wedge
-/// buffers, the CSR output (the top-k accumulators build in place — no
-/// separate scratch), per-row cursors, and the squared norms —
-/// O(threads·n + n·k), never O(n²).
-pub fn sparse_peak_bytes(n: usize, k: usize) -> usize {
+/// neighbors) build at ground-set size `n`, feature dimension `d`:
+/// packed per-worker wedge buffers, the CSR output (the top-k
+/// accumulators build in place — no separate scratch), per-row cursors,
+/// the squared norms, and the backend's SoA operand copy —
+/// O(threads·n + n·k + n·d), never O(n²).
+pub fn sparse_peak_bytes(n: usize, k: usize, d: usize) -> usize {
     let total = n * (n + 1) / 2;
     let target = sym_tile_area_target(n) as usize;
     // the greedy area walk closes a wedge within one row of the target,
@@ -498,6 +480,7 @@ pub fn sparse_peak_bytes(n: usize, k: usize) -> usize {
         + 8 * n * k // CSR columns + values (accumulators build in place)
         + 8 * n // per-row fill/worst cursors
         + 4 * n // squared norms
+        + soa_operand_bytes(n, d) // backend SoA transpose (if any)
 }
 
 #[cfg(test)]
@@ -663,9 +646,28 @@ mod tests {
 
     #[test]
     fn peak_models_are_monotone() {
-        assert!(dense_peak_bytes(2000) > dense_peak_bytes(500));
-        assert!(sparse_peak_bytes(2000, 32) > sparse_peak_bytes(500, 32));
+        assert!(dense_peak_bytes(2000, 128) > dense_peak_bytes(500, 128));
+        assert!(sparse_peak_bytes(2000, 32, 128) > sparse_peak_bytes(500, 32, 128));
         // the streaming model must beat dense materialization at scale
-        assert!(sparse_peak_bytes(100_000, 32) < dense_peak_bytes(100_000));
+        assert!(sparse_peak_bytes(100_000, 32, 128) < dense_peak_bytes(100_000, 128));
+    }
+
+    #[test]
+    fn peak_models_account_for_soa_padding() {
+        // the SoA term is exactly the padded transpose the drivers
+        // allocate for SoA backends — and exactly zero for scalar
+        let (n, d) = (500usize, 128usize);
+        let base_dense = 4 * n * n + 8 * n;
+        let extra = dense_peak_bytes(n, d) - base_dense;
+        if backend::active().wants_soa() {
+            assert_eq!(extra, SoaPoints::padded_bytes(n, d));
+        } else {
+            assert_eq!(extra, 0);
+        }
+        // the same term, and only it, shows up in the sparse model
+        assert_eq!(
+            sparse_peak_bytes(n, 32, d) - sparse_peak_bytes(n, 32, 0),
+            extra
+        );
     }
 }

@@ -38,9 +38,10 @@
 //! See `examples/` for the paper's experiment drivers and DESIGN.md for the
 //! experiment index.
 
-// `unsafe` appears only in `runtime::pool`, and every block there carries a
-// SAFETY comment (enforced statically by `analysis`); inside `unsafe fn`s the
-// individual operations must still be wrapped and justified explicitly.
+// `unsafe` appears only in `runtime::pool` and the AVX2 intrinsics backend
+// `kernel::backend::avx2`, and every line in both carries a SAFETY comment
+// (enforced statically by `analysis`); inside `unsafe fn`s the individual
+// operations must still be wrapped and justified explicitly.
 #![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod analysis;

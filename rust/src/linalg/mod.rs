@@ -4,6 +4,13 @@
 //! (the "Fast Greedy MAP Inference" of Chen et al. 2018 the paper cites in
 //! §5.2.1); the kernel builders need blocked matrix products. Everything
 //! here is row-major `f32`/`f64`, no external BLAS.
+//!
+//! [`dot`], [`dot4`] and [`dot8`] are the *scalar compute backend's*
+//! pinned inner kernels (`kernel::backend::scalar`): their exact op
+//! orders are the pre-backend determinism contract, reproduced bitwise
+//! under `SUBMODLIB_BACKEND=scalar` and replicated as the golden
+//! reference in tests/backend_parity.rs. Change them and every scalar
+//! golden in the repo moves — don't.
 
 pub mod cholesky;
 pub mod matrix;

@@ -8,6 +8,13 @@
 //! valid region. Zero-padding the *feature* axis is exact for every metric
 //! (dot, norms and distances are unchanged by appended zeros); padded
 //! *items* produce garbage rows/cols that are simply never copied out.
+//!
+//! These drivers are the device-side counterpart of the native compute
+//! backends (`kernel::backend`): on the CPU path one `InnerKernel` call
+//! fills one output row; here one artifact invocation fills one tile.
+//! The trait boundary is the seam a future PJRT-backed `InnerKernel`
+//! plugs into — one tile = one device launch — at which point backend
+//! selection covers devices, not just CPU ISAs.
 
 use super::client::Engine;
 use crate::error::{Result, SubmodError};

@@ -1,0 +1,546 @@
+//! Per-backend bit-pinning and cross-backend ULP parity for the compute
+//! backends (`kernel::backend`, ISSUE 9).
+//!
+//! The determinism contract is *per backend* (see the module docs):
+//!
+//! 1. **Golden bits.** Each backend's op order is pinned against a
+//!    hand-written serial replica: the scalar backend against the
+//!    verbatim pre-refactor inner loops (`dot8`/`dot4`/`dot`, the 8/4/1
+//!    `j0`-anchored phases), the `avx2` backend against a scalar
+//!    `f32::mul_add` chain (FMA is one correctly-rounded operation —
+//!    lane and scalar agree bitwise), and the `wide` backend against a
+//!    plain multiply-then-add chain. Bit-*equality*, not tolerance.
+//! 2. **Position independence.** The SIMD backends' per-column chains
+//!    cannot depend on `j0`, block grouping, or SoA-vs-row-major
+//!    layout — asserted directly, because this is the property that
+//!    makes them bit-stable across tile schedules and pool widths.
+//! 3. **ULP parity.** Across backends the same entry may round
+//!    differently; the sweep below bounds the divergence: ≤ 4 ULP on
+//!    well-conditioned rows, and containment in an analytic error
+//!    interval (gram error ≤ 8·d·ε·(|x|²+|y|²) pushed through the
+//!    monotone metric map in f64) when cancellation makes a fixed ULP
+//!    bound meaningless. Dims straddle every vector width
+//!    (d ∈ {1,3,4,7,8,127,128}).
+//! 4. **Non-finite classification.** Rows engineered to overflow must
+//!    classify (NaN / +∞ / −∞ / finite) exactly as each backend's own
+//!    golden replica dictates. The class is *not* cross-backend
+//!    portable — `fma(x, y, +∞)` is +∞ where the unfused chain makes
+//!    ∞ − ∞ = NaN — so the pin is per backend, under both layouts.
+//! 5. **Pool-width stability.** Dense and sparse builds are bit-equal
+//!    at widths 1 / 2 / default under whichever backend is active (CI
+//!    runs this suite under `SUBMODLIB_THREADS=2` and with
+//!    `SUBMODLIB_BACKEND=scalar` as part of the backend matrix).
+//! 6. **The scalar anchor.** Under `SUBMODLIB_BACKEND=scalar`, full
+//!    dense / rect / CSR builds must equal the pre-refactor builder
+//!    byte for byte — the selections/CSR byte-identity acceptance
+//!    criterion. (Gated on the active backend; the CI scalar step makes
+//!    it bite.)
+
+use submodlib::data::points::PointView;
+use submodlib::kernel::backend::{self, InnerKernel};
+use submodlib::kernel::{DenseKernel, Metric, RectKernel, SparseKernel};
+use submodlib::linalg::{self, Matrix};
+use submodlib::rng::Pcg64;
+use submodlib::runtime::pool;
+
+const ALL_METRICS: [Metric; 4] =
+    [Metric::Euclidean, Metric::Cosine, Metric::Dot, Metric::Rbf { gamma: 0.6 }];
+
+/// Dims straddling the 8-wide vector width and the 4-wide scalar block.
+const DIMS: [usize; 7] = [1, 3, 4, 7, 8, 127, 128];
+
+fn rand_data(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed);
+    Matrix::from_vec(n, d, (0..n * d).map(|_| rng.next_gaussian() as f32).collect()).unwrap()
+}
+
+fn sq_norms(m: &Matrix) -> Vec<f32> {
+    (0..m.rows()).map(|i| linalg::dot(m.row(i), m.row(i))).collect()
+}
+
+/// Run one backend `fill_row` over columns `[j0, n)` and return the row.
+#[allow(clippy::too_many_arguments)]
+fn backend_row(
+    k: &dyn InnerKernel,
+    a: &Matrix,
+    view: &PointView<'_>,
+    sq: &[f32],
+    i: usize,
+    j0: usize,
+    metric: Metric,
+    distances: bool,
+) -> Vec<f32> {
+    let mut out = vec![0f32; view.rows() - j0];
+    k.fill_row(a.row(i), sq[i], view, sq, j0, metric, distances, &mut out);
+    out
+}
+
+/// Shared finalization (identical to `Metric::finalize_block`'s element
+/// expression) — replicas differ only in how they produce the gram.
+fn finalize(metric: Metric, distances: bool, g: f32, sq_ai: f32, sq_bj: f32) -> f32 {
+    if distances {
+        (sq_ai + sq_bj - 2.0 * g).max(0.0).sqrt()
+    } else {
+        metric.from_gram(g, sq_ai, sq_bj)
+    }
+}
+
+/// Verbatim replica of the pre-refactor inner loop (the scalar
+/// backend's golden op order): 8-wide `dot8` blocks, then a 4-wide
+/// `dot4` block, then a `dot` tail, phases anchored at `j0`.
+#[allow(clippy::too_many_arguments)]
+fn replica_scalar_row(
+    arow: &[f32],
+    sq_ai: f32,
+    b: &Matrix,
+    sq_b: &[f32],
+    j0: usize,
+    metric: Metric,
+    distances: bool,
+) -> Vec<f32> {
+    let n = b.rows();
+    let mut orow = vec![0f32; n - j0];
+    let mut j = j0;
+    while j + 8 <= n {
+        let g = linalg::dot8(
+            arow,
+            [
+                b.row(j),
+                b.row(j + 1),
+                b.row(j + 2),
+                b.row(j + 3),
+                b.row(j + 4),
+                b.row(j + 5),
+                b.row(j + 6),
+                b.row(j + 7),
+            ],
+        );
+        for t in 0..8 {
+            orow[j - j0 + t] = finalize(metric, distances, g[t], sq_ai, sq_b[j + t]);
+        }
+        j += 8;
+    }
+    while j + 4 <= n {
+        let g = linalg::dot4(arow, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+        for t in 0..4 {
+            orow[j - j0 + t] = finalize(metric, distances, g[t], sq_ai, sq_b[j + t]);
+        }
+        j += 4;
+    }
+    for jj in j..n {
+        let g = linalg::dot(arow, b.row(jj));
+        orow[jj - j0] = finalize(metric, distances, g, sq_ai, sq_b[jj]);
+    }
+    orow
+}
+
+/// Golden gram chain of the SIMD backends: sequential over features,
+/// fused (`mul_add`, the avx2 spec) or unfused (the wide spec).
+fn replica_simd_gram(fused: bool, arow: &[f32], brow: &[f32]) -> f32 {
+    let mut s = 0f32;
+    if fused {
+        for (&x, &y) in arow.iter().zip(brow.iter()) {
+            s = x.mul_add(y, s);
+        }
+    } else {
+        for (&x, &y) in arow.iter().zip(brow.iter()) {
+            s += x * y;
+        }
+    }
+    s
+}
+
+/// Golden replica of a SIMD backend's row: per-column chains, by
+/// construction independent of `j0` and of any block grouping.
+#[allow(clippy::too_many_arguments)]
+fn replica_simd_row(
+    fused: bool,
+    arow: &[f32],
+    sq_ai: f32,
+    b: &Matrix,
+    sq_b: &[f32],
+    j0: usize,
+    metric: Metric,
+    distances: bool,
+) -> Vec<f32> {
+    (j0..b.rows())
+        .map(|j| {
+            let g = replica_simd_gram(fused, arow, b.row(j));
+            finalize(metric, distances, g, sq_ai, sq_b[j])
+        })
+        .collect()
+}
+
+fn assert_rows_bit_equal(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (t, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: entry {t} ({g} vs {w})");
+    }
+}
+
+#[test]
+fn scalar_backend_bit_equals_pre_refactor_op_order() {
+    let k = backend::scalar();
+    assert!(!k.wants_soa());
+    for &d in &DIMS {
+        let b = rand_data(41, d, 1000 + d as u64);
+        let sq = sq_norms(&b);
+        let view = PointView::new(&b, k.wants_soa());
+        for metric in ALL_METRICS {
+            for distances in [false, true] {
+                for j0 in [0usize, 1, 5, 40] {
+                    let got = backend_row(k, &b, &view, &sq, 2, j0, metric, distances);
+                    let want =
+                        replica_scalar_row(b.row(2), sq[2], &b, &sq, j0, metric, distances);
+                    assert_rows_bit_equal(
+                        &got,
+                        &want,
+                        &format!("scalar d={d} {metric:?} dist={distances} j0={j0}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_backends_match_their_golden_replicas() {
+    // n chosen to exercise the 32-block, the 8-block and the scalar
+    // tail of the avx2 kernel (and wide's 8-block + tail)
+    for k in backend::available() {
+        if k.name() == "scalar" {
+            continue;
+        }
+        let fused = k.name() == "avx2";
+        for &d in &DIMS {
+            for n in [1usize, 7, 8, 9, 33, 71] {
+                let b = rand_data(n, d, 2000 + (n * 131 + d) as u64);
+                let sq = sq_norms(&b);
+                // both layouts must produce the same bits as the replica
+                for with_soa in [true, false] {
+                    let view = PointView::new(&b, with_soa);
+                    for metric in ALL_METRICS {
+                        for distances in [false, true] {
+                            for j0 in [0usize, 1, n / 2] {
+                                let got =
+                                    backend_row(k, &b, &view, &sq, 0, j0, metric, distances);
+                                let want = replica_simd_row(
+                                    fused,
+                                    b.row(0),
+                                    sq[0],
+                                    &b,
+                                    &sq,
+                                    j0,
+                                    metric,
+                                    distances,
+                                );
+                                assert_rows_bit_equal(
+                                    &got,
+                                    &want,
+                                    &format!(
+                                        "{} d={d} n={n} soa={with_soa} {metric:?} \
+                                         dist={distances} j0={j0}",
+                                        k.name()
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_backends_are_position_independent() {
+    // the property that buys bit-stability across tile schedules: the
+    // row computed from j0 = q is exactly the suffix of the row from
+    // j0 = 0 — for every grouping the kernel's block loops land on
+    for k in backend::available() {
+        if k.name() == "scalar" {
+            continue;
+        }
+        let n = 67usize;
+        let b = rand_data(n, 9, 77);
+        let sq = sq_norms(&b);
+        let view = PointView::new(&b, k.wants_soa());
+        let full = backend_row(k, &b, &view, &sq, 3, 0, Metric::Cosine, false);
+        for j0 in [1usize, 2, 7, 8, 31, 32, 33, 66] {
+            let suffix = backend_row(k, &b, &view, &sq, 3, j0, Metric::Cosine, false);
+            assert_rows_bit_equal(
+                &suffix,
+                &full[j0..],
+                &format!("{} suffix j0={j0}", k.name()),
+            );
+        }
+    }
+}
+
+/// Total-order ULP distance between two finite f32s.
+fn ulp_diff(a: f32, b: f32) -> i64 {
+    fn ord(x: f32) -> i64 {
+        let bits = x.to_bits() as i64;
+        if bits & 0x8000_0000 != 0 {
+            0x8000_0000i64 - bits
+        } else {
+            bits
+        }
+    }
+    (ord(a) - ord(b)).abs()
+}
+
+/// The metric map in f64 — every supported finalization is monotone in
+/// the gram value, so an interval maps to an interval.
+fn metric_value_f64(metric: Metric, distances: bool, g: f64, sq_ai: f64, sq_bj: f64) -> f64 {
+    if distances {
+        return (sq_ai + sq_bj - 2.0 * g).max(0.0).sqrt();
+    }
+    match metric {
+        Metric::Dot => g,
+        Metric::Cosine => g / (sq_ai.sqrt() * sq_bj.sqrt()).max(1e-12),
+        Metric::Euclidean => 1.0 / (1.0 + (sq_ai + sq_bj - 2.0 * g).max(0.0).sqrt()),
+        Metric::Rbf { gamma } => (-(gamma as f64) * (sq_ai + sq_bj - 2.0 * g).max(0.0)).exp(),
+    }
+}
+
+#[test]
+fn ulp_parity_simd_vs_scalar_across_dims_and_metrics() {
+    let scalar = backend::scalar();
+    let n = 100usize;
+    for k in backend::available() {
+        if k.name() == "scalar" {
+            continue;
+        }
+        for &d in &DIMS {
+            let b = rand_data(n, d, 3000 + d as u64);
+            let sq = sq_norms(&b);
+            let sview = PointView::new(&b, scalar.wants_soa());
+            let kview = PointView::new(&b, k.wants_soa());
+            for metric in ALL_METRICS {
+                for distances in [false, true] {
+                    for i in [0usize, 13, 57, 99] {
+                        let s_row = backend_row(scalar, &b, &sview, &sq, i, 0, metric, distances);
+                        let k_row = backend_row(k, &b, &kview, &sq, i, 0, metric, distances);
+                        for j in 0..n {
+                            let (s, v) = (s_row[j], k_row[j]);
+                            assert!(s.is_finite() && v.is_finite(), "gaussian data non-finite");
+                            if ulp_diff(s, v) <= 4 {
+                                continue;
+                            }
+                            // Cancellation case: verify both values sit in
+                            // the interval the gram error bound permits. The
+                            // bound is generous (worst-case chain rounding is
+                            // ~d·ε·(|x|²+|y|²)/2; we allow 8× that, plus a
+                            // pad for the f32 finalization's own rounding) —
+                            // real op-order bugs miss by orders of magnitude.
+                            let g64: f64 = (0..d)
+                                .map(|f| b.get(i, f) as f64 * b.get(j, f) as f64)
+                                .sum();
+                            let bound = 8.0
+                                * d as f64
+                                * f32::EPSILON as f64
+                                * (sq[i] as f64 + sq[j] as f64 + 1e-30);
+                            let (sqa, sqb) = (sq[i] as f64, sq[j] as f64);
+                            let va = metric_value_f64(metric, distances, g64 - bound, sqa, sqb);
+                            let vb = metric_value_f64(metric, distances, g64 + bound, sqa, sqb);
+                            let (mut lo, mut hi) = if va <= vb { (va, vb) } else { (vb, va) };
+                            let pad = lo.abs().max(hi.abs()).max(1e-30) * 1e-4 + 1e-9;
+                            lo -= pad;
+                            hi += pad;
+                            for (label, x) in [("scalar", s), (k.name(), v)] {
+                                assert!(
+                                    (x as f64) >= lo && (x as f64) <= hi,
+                                    "{} vs scalar d={d} {metric:?} dist={distances} \
+                                     ({i},{j}): {label}={x} outside [{lo}, {hi}] \
+                                     (ulp_diff={})",
+                                    k.name(),
+                                    ulp_diff(s, v)
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn nonfinite_rows_match_each_backends_golden_replica() {
+    // ±1e20 features overflow products to ±∞ and force inf − inf = NaN
+    // cancellations. Non-finite classification is NOT cross-backend
+    // portable — a fused chain computing fma(x, y, +inf) never
+    // materializes the second infinity a mul-then-add chain overflows
+    // into, so `[1e20,1e20]·[1e20,-1e20]` is NaN under scalar/wide but
+    // +∞ under avx2. The contract is therefore *per backend*: these
+    // pathological rows must classify exactly as the backend's own
+    // golden replica (which shares its fusion semantics) says, under
+    // both layouts — NaNs stay NaNs, infinity signs match, finite
+    // entries stay bit-equal. Scalar and wide replicas additionally
+    // agree with each other (both unfused), which the replica equality
+    // transitively pins.
+    let sets: Vec<Matrix> = vec![
+        Matrix::from_vec(9, 1, vec![1e20, -1e20, 0.0, 1.0, 2.0, -3.0, 0.5, -0.25, 4.0])
+            .unwrap(),
+        Matrix::from_vec(
+            7,
+            2,
+            vec![
+                1e20, 1e20, 1e20, -1e20, 1.0, 2.0, 2.0, 1.0, 0.5, -0.5, -1.0, 3.0, 0.25, 0.75,
+            ],
+        )
+        .unwrap(),
+    ];
+    for (si, b) in sets.iter().enumerate() {
+        let n = b.rows();
+        let sq = sq_norms(b);
+        for k in backend::available() {
+            for with_soa in [k.wants_soa(), false] {
+                let kview = PointView::new(b, with_soa);
+                for i in 0..n {
+                    let k_row = backend_row(k, b, &kview, &sq, i, 0, Metric::Dot, false);
+                    let want = match k.name() {
+                        "scalar" => {
+                            replica_scalar_row(b.row(i), sq[i], b, &sq, 0, Metric::Dot, false)
+                        }
+                        name => replica_simd_row(
+                            name == "avx2",
+                            b.row(i),
+                            sq[i],
+                            b,
+                            &sq,
+                            0,
+                            Metric::Dot,
+                            false,
+                        ),
+                    };
+                    for j in 0..n {
+                        let (v, w) = (k_row[j], want[j]);
+                        let what = format!(
+                            "set {si} ({i},{j}) {} soa={with_soa} ({v} vs {w})",
+                            k.name()
+                        );
+                        if w.is_nan() {
+                            assert!(v.is_nan(), "{what}: NaN class");
+                        } else {
+                            // infinities and finite values alike: exact bits
+                            assert_eq!(v.to_bits(), w.to_bits(), "{what}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_builds_bit_stable_across_pool_widths() {
+    // within the active backend, dense + sparse builds must not depend
+    // on pool width (widths 1, 2, and whatever the env configured)
+    let data = rand_data(150, 16, 4004);
+    let dense_at = |w: usize| {
+        pool::with_thread_limit(w, || DenseKernel::from_data(&data, Metric::Euclidean))
+    };
+    let sparse_at = |w: usize| {
+        pool::with_thread_limit(w, || {
+            SparseKernel::from_data(&data, Metric::Euclidean, 9).unwrap()
+        })
+    };
+    let d1 = dense_at(1);
+    let d2 = dense_at(2);
+    let dd = DenseKernel::from_data(&data, Metric::Euclidean);
+    for i in 0..150 {
+        for j in 0..150 {
+            let w = d1.get(i, j).to_bits();
+            assert_eq!(d2.get(i, j).to_bits(), w, "dense width 2 ({i},{j})");
+            assert_eq!(dd.get(i, j).to_bits(), w, "dense default width ({i},{j})");
+        }
+    }
+    let s1 = sparse_at(1);
+    let s2 = sparse_at(2);
+    let sd = SparseKernel::from_data(&data, Metric::Euclidean, 9).unwrap();
+    for i in 0..150 {
+        let (c1, v1) = s1.row(i);
+        for (label, s) in [("width 2", &s2), ("default", &sd)] {
+            let (c, v) = s.row(i);
+            assert_eq!(c, c1, "sparse {label} row {i} cols");
+            let bits: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+            let bits1: Vec<u32> = v1.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits, bits1, "sparse {label} row {i} vals");
+        }
+    }
+}
+
+#[test]
+fn scalar_backend_pins_full_builds_to_pre_refactor_bytes() {
+    // The acceptance criterion: SUBMODLIB_BACKEND=scalar reproduces the
+    // pre-refactor dense / rect / CSR bytes. The backend is process-wide,
+    // so this bites when the suite runs under the CI scalar step (and is
+    // a no-op skip under SIMD backends, which have their own pins above).
+    if backend::active().name() != "scalar" {
+        eprintln!(
+            "skipping scalar byte-pin: active backend is {:?}",
+            backend::active().name()
+        );
+        return;
+    }
+    let data = rand_data(97, 9, 5005);
+    let sq = sq_norms(&data);
+    for metric in ALL_METRICS {
+        // dense: upper triangle anchored at j0 = i, mirrored — the
+        // pre-refactor symmetric builder, via the verbatim replica
+        let dense = DenseKernel::from_data(&data, metric);
+        for i in 0..97 {
+            let want = replica_scalar_row(data.row(i), sq[i], &data, &sq, i, metric, false);
+            for (off, w) in want.iter().enumerate() {
+                let j = i + off;
+                assert_eq!(
+                    dense.get(i, j).to_bits(),
+                    w.to_bits(),
+                    "dense {metric:?} ({i},{j})"
+                );
+                assert_eq!(
+                    dense.get(j, i).to_bits(),
+                    w.to_bits(),
+                    "dense mirror {metric:?} ({j},{i})"
+                );
+            }
+        }
+    }
+    // rect: full-width rows anchored at j0 = 0
+    let b = rand_data(55, 9, 5006);
+    let sq_b = sq_norms(&b);
+    let rect = RectKernel::from_data(&data, &b, Metric::Cosine).unwrap();
+    for i in 0..97 {
+        let want = replica_scalar_row(data.row(i), sq[i], &b, &sq_b, 0, Metric::Cosine, false);
+        for (j, w) in want.iter().enumerate() {
+            assert_eq!(rect.get(i, j).to_bits(), w.to_bits(), "rect ({i},{j})");
+        }
+    }
+    // CSR: materialize the replica's symmetric kernel, then brute-force
+    // top-k under the contract's (value desc via total_cmp, col asc)
+    let k = 9usize;
+    let sparse = SparseKernel::from_data(&data, Metric::Euclidean, k).unwrap();
+    let mut full = vec![vec![0f32; 97]; 97];
+    for i in 0..97 {
+        let row = replica_scalar_row(data.row(i), sq[i], &data, &sq, i, Metric::Euclidean, false);
+        for (off, w) in row.iter().enumerate() {
+            full[i][i + off] = *w;
+            full[i + off][i] = *w;
+        }
+    }
+    for i in 0..97 {
+        let mut entries: Vec<(u32, f32)> =
+            full[i].iter().enumerate().map(|(j, &s)| (j as u32, s)).collect();
+        entries.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        let mut top = entries[..k].to_vec();
+        top.sort_unstable_by_key(|e| e.0);
+        let (cols, vals) = sparse.row(i);
+        let want_cols: Vec<u32> = top.iter().map(|e| e.0).collect();
+        assert_eq!(cols, &want_cols[..], "csr row {i} cols");
+        for (t, (got, want)) in vals.iter().zip(top.iter()).enumerate() {
+            assert_eq!(got.to_bits(), want.1.to_bits(), "csr row {i} val {t}");
+        }
+    }
+}

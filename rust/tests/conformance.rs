@@ -42,6 +42,43 @@ fn every_rule_fires_on_its_bad_example() {
 }
 
 #[test]
+fn backend_unsafe_whitelist_is_exact() {
+    // The AVX2 intrinsics backend is whitelisted for `unsafe`, but only
+    // with a SAFETY justification on every line…
+    let bare = "fn f(p: *const f32) -> f32 { unsafe { *p } }\n";
+    let fired: Vec<_> = lint_source("rust/src/kernel/backend/avx2.rs", bare)
+        .into_iter()
+        .map(|v| v.rule)
+        .collect();
+    assert_eq!(fired, vec!["safety-comment"], "avx2 backend: unjustified unsafe");
+    let justified = "// SAFETY: caller guarantees p is in-bounds.\nfn f(p: *const f32) -> f32 { unsafe { *p } }\n";
+    assert!(
+        lint_source("rust/src/kernel/backend/avx2.rs", justified).is_empty(),
+        "justified unsafe in the avx2 backend must lint clean"
+    );
+    // …while the safe backend modules are NOT whitelisted: unsafe creep
+    // anywhere else under kernel/backend/ stays confined.
+    for path in [
+        "rust/src/kernel/backend/mod.rs",
+        "rust/src/kernel/backend/scalar.rs",
+        "rust/src/kernel/backend/wide.rs",
+    ] {
+        let fired: Vec<_> = lint_source(path, bare).into_iter().map(|v| v.rule).collect();
+        assert_eq!(fired, vec!["unsafe-confined"], "{path}");
+    }
+    // the real backend sources exist where the whitelist points
+    for probe in [
+        "rust/src/kernel/backend/mod.rs",
+        "rust/src/kernel/backend/scalar.rs",
+        "rust/src/kernel/backend/wide.rs",
+        "rust/src/kernel/backend/avx2.rs",
+        "rust/src/data/points.rs",
+    ] {
+        assert!(repo_root().join(probe).is_file(), "missing {probe}");
+    }
+}
+
+#[test]
 fn scan_actually_covers_the_tree() {
     // Guard against a silent walker regression: planting a violation in a
     // copy of a real source path must be caught. We lint the synthetic

@@ -1,21 +1,28 @@
 //! Bit-equality suite for the streaming tiled kernel construction
 //! (ISSUE 3) and the symmetric wavefront sparse build (ISSUE 4): the
-//! tiled dense / rect / distance builds must reproduce the pre-refactor
-//! builder *bit-for-bit* for every `Metric`, and the sparse build's CSR
+//! tiled dense / rect / distance builds must reproduce a serial
+//! reference *bit-for-bit* for every `Metric`, and the sparse build's CSR
 //! (row_ptr / col_idx / vals) must equal a serial
 //! materialize-upper-triangle-then-select reference exactly — including
 //! rows containing NaN/±∞ similarities and tie-heavy integer-valued
 //! kernels, where only the contract's `(value desc via total_cmp, col
 //! asc)` order keeps the survivor set well-defined.
 //!
-//! The references below are verbatim serial replicas of the pre-tile
-//! builder's inner loops (8-wide, then 4-wide register blocking, scalar
-//! tail; upper-triangle + mirror for the symmetric case). Tiling may
-//! change scheduling, but never op order — which is exactly what these
-//! tests pin.
+//! The references below are *serial* builds routed through the same
+//! process-wide compute backend (`kernel::backend::active()`) the tile
+//! drivers dispatch to, with the same `j0` anchoring (full-width rows
+//! for rect, row i anchored at column i + mirror for symmetric). Tiling
+//! and pool scheduling may change, but within one backend the op order
+//! never does — which is exactly what these tests pin. Each backend's
+//! op order is itself pinned against a hand-written golden replica in
+//! tests/backend_parity.rs (the scalar backend's replica being the
+//! verbatim pre-refactor inner loops), so the two suites compose into
+//! the old end-to-end guarantee under `SUBMODLIB_BACKEND=scalar`.
 
+use submodlib::data::points::PointView;
+use submodlib::kernel::backend;
 use submodlib::kernel::{DenseKernel, Metric, RectKernel, SparseKernel};
-use submodlib::linalg::{self, Matrix};
+use submodlib::linalg::Matrix;
 use submodlib::rng::Pcg64;
 
 fn rand_data(n: usize, d: usize, seed: u64) -> Matrix {
@@ -26,28 +33,33 @@ fn rand_data(n: usize, d: usize, seed: u64) -> Matrix {
 const ALL_METRICS: [Metric; 4] =
     [Metric::Euclidean, Metric::Cosine, Metric::Dot, Metric::Rbf { gamma: 0.6 }];
 
-/// Serial replica of the pre-refactor *rectangular* builder: for each
-/// row, 8-wide then 4-wide blocked dots over all of `b`, scalar tail.
+/// Serial replica of the *rectangular* builder: every row full-width
+/// (`j0 = 0`), one backend `fill_row` call per row.
 fn reference_rect(a: &Matrix, b: &Matrix, metric: Metric, distances: bool) -> Matrix {
+    let k = backend::active();
     let m = a.rows();
     let n = b.rows();
-    let sq_a: Vec<f32> = (0..m).map(|i| linalg::dot(a.row(i), a.row(i))).collect();
-    let sq_b: Vec<f32> = (0..n).map(|j| linalg::dot(b.row(j), b.row(j))).collect();
+    let sq_a = k.sq_norms(a);
+    let sq_b = k.sq_norms(b);
+    let bview = PointView::new(b, k.wants_soa());
     let mut out = Matrix::zeros(m, n);
     for i in 0..m {
-        fill_row_reference(a.row(i), sq_a[i], b, &sq_b, 0, metric, distances, out.row_mut(i));
+        k.fill_row(a.row(i), sq_a[i], &bview, &sq_b, 0, metric, distances, out.row_mut(i));
     }
     out
 }
 
-/// Serial replica of the pre-refactor *symmetric* builder: upper
-/// triangle from the diagonal, then a lower-triangle mirror.
+/// Serial replica of the *symmetric* builder: upper triangle with row i
+/// anchored at column i (`j0 = i`), then a lower-triangle mirror.
 fn reference_symmetric(a: &Matrix, metric: Metric, distances: bool) -> Matrix {
+    let k = backend::active();
     let n = a.rows();
-    let sq: Vec<f32> = (0..n).map(|i| linalg::dot(a.row(i), a.row(i))).collect();
+    let sq = k.sq_norms(a);
+    let aview = PointView::new(a, k.wants_soa());
     let mut out = Matrix::zeros(n, n);
     for i in 0..n {
-        fill_row_reference(a.row(i), sq[i], a, &sq, i, metric, distances, out.row_mut(i));
+        let orow = &mut out.row_mut(i)[i..];
+        k.fill_row(a.row(i), sq[i], &aview, &sq, i, metric, distances, orow);
     }
     for i in 1..n {
         for j in 0..i {
@@ -56,63 +68,6 @@ fn reference_symmetric(a: &Matrix, metric: Metric, distances: bool) -> Matrix {
         }
     }
     out
-}
-
-#[allow(clippy::too_many_arguments)]
-fn fill_row_reference(
-    arow: &[f32],
-    sq_ai: f32,
-    b: &Matrix,
-    sq_b: &[f32],
-    j0: usize,
-    metric: Metric,
-    distances: bool,
-    orow: &mut [f32],
-) {
-    let n = b.rows();
-    let mut j = j0;
-    while j + 8 <= n {
-        let g = linalg::dot8(
-            arow,
-            [
-                b.row(j),
-                b.row(j + 1),
-                b.row(j + 2),
-                b.row(j + 3),
-                b.row(j + 4),
-                b.row(j + 5),
-                b.row(j + 6),
-                b.row(j + 7),
-            ],
-        );
-        for t in 0..8 {
-            orow[j + t] = if distances {
-                (sq_ai + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
-            } else {
-                metric.from_gram(g[t], sq_ai, sq_b[j + t])
-            };
-        }
-        j += 8;
-    }
-    while j + 4 <= n {
-        let g = linalg::dot4(arow, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
-        for t in 0..4 {
-            orow[j + t] = if distances {
-                (sq_ai + sq_b[j + t] - 2.0 * g[t]).max(0.0).sqrt()
-            } else {
-                metric.from_gram(g[t], sq_ai, sq_b[j + t])
-            };
-        }
-        j += 4;
-    }
-    for jj in j..n {
-        let g = linalg::dot(arow, b.row(jj));
-        orow[jj] = if distances {
-            (sq_ai + sq_b[jj] - 2.0 * g).max(0.0).sqrt()
-        } else {
-            metric.from_gram(g, sq_ai, sq_b[jj])
-        };
-    }
 }
 
 fn assert_matrices_bit_equal(got: &Matrix, want: &Matrix, what: &str) {
@@ -259,11 +214,14 @@ fn streaming_sparse_handles_nonfinite_rows() {
 #[test]
 fn streaming_sparse_handles_nan_rows() {
     // Two-dimensional Dot features whose products overflow to opposite
-    // infinities: s(0,1) = ∞ + (−∞) = NaN. total_cmp gives NaN a
-    // deterministic rank (above +∞ if positive, below −∞ if negative —
-    // the produced sign is architecture-defined, which is exactly why
-    // the selection must be pinned against a reference running the same
-    // ops rather than against a hand-written expectation).
+    // infinities. What lands at s(0,1) is backend-dependent: an unfused
+    // chain (scalar, wide) overflows both products and sums
+    // ∞ + (−∞) = NaN, while a fused chain (avx2) computes
+    // fma(x, y, +∞) = +∞ — the −1e40 product is exact inside the fma
+    // and never materializes a −∞. Either way total_cmp gives the value
+    // a deterministic rank, which is exactly why the selection must be
+    // pinned against a reference running the same ops rather than a
+    // hand-written expectation.
     let rows: Vec<[f32; 2]> = vec![
         [1e20, 1e20],
         [1e20, -1e20],
@@ -280,14 +238,25 @@ fn streaming_sparse_handles_nan_rows() {
     for k in [1usize, 2, 3, n] {
         assert_sparse_equals_reference(&data, Metric::Dot, k, &format!("nan k={k}"));
     }
-    // with k = n every entry is stored: the (0,1) similarity really is
-    // NaN, and both endpoints hold the same bits — symmetry survives
-    // even non-finite arithmetic
+    // with k = n every entry is stored: the CSR must hold exactly what
+    // the active backend's gram chain produced for (0,1) — NaN class
+    // preserved, otherwise bit-equal — and both mirrored endpoints hold
+    // the same bits, so symmetry survives even non-finite arithmetic
     let sparse = SparseKernel::from_data(&data, Metric::Dot, n).unwrap();
+    let kb = backend::active();
+    let sq = kb.sq_norms(&data);
+    let view = PointView::new(&data, kb.wants_soa());
+    let mut row0 = vec![0f32; n];
+    kb.fill_row(data.row(0), sq[0], &view, &sq, 0, Metric::Dot, false, &mut row0);
+    let expect01 = row0[1];
     let s01 = sparse.get(0, 1);
     let s10 = sparse.get(1, 0);
-    assert!(s01.is_nan(), "expected NaN at (0,1), got {s01}");
-    assert_eq!(s01.to_bits(), s10.to_bits(), "NaN pair not mirrored");
+    if expect01.is_nan() {
+        assert!(s01.is_nan(), "expected NaN at (0,1), got {s01}");
+    } else {
+        assert_eq!(s01.to_bits(), expect01.to_bits(), "(0,1) diverged from backend row");
+    }
+    assert_eq!(s01.to_bits(), s10.to_bits(), "(0,1)/(1,0) pair not mirrored");
     assert!(sparse.get(0, 0).is_infinite() && sparse.get(0, 0) > 0.0);
 }
 
