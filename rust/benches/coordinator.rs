@@ -157,6 +157,9 @@ fn main() {
                 ("shard_failures", Json::Num(m.shard_failures as f64)),
                 ("shard_retries", Json::Num(m.shard_retries as f64)),
                 ("deadline_exceeded", Json::Num(m.deadline_exceeded as f64)),
+                // preemptive cancels (ISSUE 10): 0 in this clean run;
+                // cancelled latencies land in the failed histogram above
+                ("selections_cancelled", Json::Num(m.selections_cancelled as f64)),
                 ("drain_restarts", Json::Num(m.drain_restarts as f64)),
                 ("backpressure_waits", Json::Num(m.backpressure_waits as f64)),
             ]),

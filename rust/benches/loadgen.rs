@@ -8,9 +8,13 @@
 //!   seconds, not minutes;
 //! * `--smoke` — the tiny configuration CI runs with `--features faults`
 //!   to prove the chaos plumbing end-to-end without burning CI minutes.
+//!   The smoke also arms a tight per-request deadline, so the watchdog →
+//!   cancel-token → compute-layer-unwind path (ISSUE 10) runs under
+//!   chaos traffic, with stage-2 delays pushing some requests over it.
 //!
 //! Either way the closed-loop accounting must balance: every issued
-//! request resolves as served, shed, deadline-exceeded, or failed.
+//! request resolves as served, shed, deadline-exceeded, cancelled, or
+//! failed.
 
 use submodlib::coordinator::loadgen::{run, LoadgenConfig};
 use submodlib::runtime::pool;
@@ -36,6 +40,10 @@ fn main() {
             stage2_delay_prob: if chaos { 0.20 } else { 0.0 },
             stage2_delay_ms: 2,
             drain_panic_prob: if chaos { 0.05 } else { 0.0 },
+            // tight enough that delayed requests overrun it (exercising
+            // the preemptive cancel path), generous enough that a clean
+            // request on a loaded CI box still usually finishes
+            deadline_ms: Some(250),
             ..Default::default()
         }
     } else {
@@ -72,7 +80,11 @@ fn main() {
 
     // closed-loop accounting: every request resolved exactly once
     assert_eq!(
-        report.served + report.shed + report.deadline_exceeded + report.failed_other,
+        report.served
+            + report.shed
+            + report.deadline_exceeded
+            + report.cancelled
+            + report.failed_other,
         report.requests_total,
         "loadgen accounting must balance"
     );
@@ -82,7 +94,8 @@ fn main() {
 
     eprintln!(
         "{} requests in {:.3}s ({:.1} req/s): served {} (degraded {}), shed {}, \
-         deadline {}, failed {}; breaker trips {}, recoveries {}, drain restarts {}",
+         deadline {}, cancelled {}, failed {}; breaker trips {}, recoveries {}, \
+         drain restarts {}, preemptive cancels {}",
         report.requests_total,
         report.wall_s,
         report.throughput_rps,
@@ -90,10 +103,12 @@ fn main() {
         report.degraded,
         report.shed,
         report.deadline_exceeded,
+        report.cancelled,
         report.failed_other,
         report.metrics.breaker_trips,
         report.metrics.breaker_recoveries,
         report.metrics.drain_restarts,
+        report.metrics.selections_cancelled,
     );
     eprintln!("metrics: {}", report.metrics);
 

@@ -33,10 +33,14 @@
 //!   justified iteration takes a suppression pragma.
 //! * **`wall-clock`** — no `Instant::now` / `SystemTime` inside
 //!   selection logic (`optimizers/`, `functions/`, `kernel/`,
-//!   `clustering/`, `linalg/`, `rng.rs`, and the pool). Timing belongs
-//!   in the bench harness, the experiments layer, and the coordinator's
-//!   latency metrics — a clock read inside selection logic is a
-//!   determinism leak waiting to become a tie-break.
+//!   `clustering/`, `linalg/`, `rng.rs`, the pool, and
+//!   `runtime/cancel.rs`). Timing belongs in the bench harness, the
+//!   experiments layer, and the coordinator's latency metrics — a clock
+//!   read inside selection logic is a determinism leak waiting to
+//!   become a tie-break. The cancel module is in scope by design
+//!   (ISSUE 10): cancellation is a pure flag protocol, and the *only*
+//!   deadline-to-token translation point is the coordinator's watchdog,
+//!   at the rim.
 //! * **`unsafe-confined`** — no `unsafe` outside the whitelist: the
 //!   concurrency core (`runtime/pool.rs`) and the AVX2 intrinsics
 //!   compute backend (`kernel/backend/avx2.rs`). Everything else in the
@@ -78,6 +82,11 @@ const AVX2_BACKEND: &str = "rust/src/kernel/backend/avx2.rs";
 /// *not* whitelisted, so unsafe creep inside `kernel/backend/` still
 /// fires `unsafe-confined`.
 const UNSAFE_WHITELIST: &[&str] = &[POOL, AVX2_BACKEND];
+
+/// The cooperative-cancellation flag protocol (ISSUE 10): compute
+/// layers poll it, so it must stay wall-clock-free — the coordinator's
+/// watchdog is the only place deadlines become token fires.
+const CANCEL: &str = "rust/src/runtime/cancel.rs";
 
 /// Path prefixes that count as "selection logic" for `wall-clock`.
 const SELECTION_PATHS: &[&str] = &[
@@ -490,6 +499,7 @@ fn check_hash_iter(lines: &[Line], raw: &mut Vec<(usize, &'static str, String)>)
 fn check_wall_clock(path: &str, lines: &[Line], raw: &mut Vec<(usize, &'static str, String)>) {
     let scoped = SELECTION_PATHS.iter().any(|p| path.starts_with(p))
         || path == POOL
+        || path == CANCEL
         || path == "rust/src/rng.rs";
     if !scoped {
         return;
@@ -632,9 +642,14 @@ mod tests {
         let src = "fn f() { let t = std::time::Instant::now(); }\n";
         assert_eq!(rules_fired("rust/src/optimizers/naive.rs", src), vec![WALL_CLOCK]);
         assert_eq!(rules_fired("rust/src/kernel/tile.rs", src), vec![WALL_CLOCK]);
+        // the cancel flag protocol is compute-layer code: wall-clock-free
+        // by design (ISSUE 10) — only the coordinator watchdog translates
+        // deadlines into token fires
+        assert_eq!(rules_fired(CANCEL, src), vec![WALL_CLOCK]);
         // the bench harness, experiments, and coordinator may read clocks
         assert!(rules_fired("rust/src/util/bench.rs", src).is_empty());
         assert!(rules_fired("rust/src/coordinator/service.rs", src).is_empty());
+        assert!(rules_fired("rust/src/coordinator/watchdog.rs", src).is_empty());
         assert!(rules_fired("rust/src/main.rs", src).is_empty());
         let st = "fn f() { let t = std::time::SystemTime::now(); }\n";
         assert_eq!(rules_fired("rust/src/functions/fl.rs", st), vec![WALL_CLOCK]);

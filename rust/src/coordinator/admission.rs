@@ -146,6 +146,24 @@ impl AdmissionGate {
         }
     }
 
+    /// Like [`drain`](Self::drain) but bounded: wait at most `grace` for
+    /// the gate to empty. Returns `true` if it drained in time, `false`
+    /// if selections were still in flight when the grace budget ran out
+    /// (the graceful-shutdown caller then hard-cancels them and drains
+    /// unconditionally).
+    pub fn drain_timeout(&self, grace: Duration) -> bool {
+        let t0 = Instant::now();
+        let mut st = self.state.lock().unwrap();
+        while st.in_flight > 0 || !st.queue.is_empty() {
+            let elapsed = t0.elapsed();
+            if elapsed >= grace {
+                return false;
+            }
+            st = self.cv.wait_timeout(st, grace - elapsed).unwrap().0;
+        }
+        true
+    }
+
     fn admit(&self, st: &mut GateState) -> Permit<'_> {
         st.in_flight += 1;
         self.metrics.selections_inflight.fetch_add(1, Ordering::Relaxed);
@@ -229,6 +247,17 @@ mod tests {
         // shutdown refusals are not sheds
         assert_eq!(m.selections_shed.load(Ordering::Relaxed), 0);
         g.drain(); // empty gate: returns immediately
+    }
+
+    #[test]
+    fn drain_timeout_reports_stuck_inflight_then_drains() {
+        let (g, _m) = gate(1, 0);
+        let held = g.acquire(Instant::now(), None).unwrap();
+        g.close();
+        // a held permit outlives a tiny grace budget → not drained
+        assert!(!g.drain_timeout(Duration::from_millis(5)));
+        drop(held);
+        assert!(g.drain_timeout(Duration::from_secs(5)));
     }
 
     #[test]

@@ -20,7 +20,22 @@
 //!   overload tests force saturation deterministically);
 //! * [`KERNEL_BUILD`]  — [`super::service::ObjectiveKind`] kernel/
 //!   function construction, keyed by the ground-set size being built
-//!   (distinguishes per-shard builds from the stage-2 merge build).
+//!   (distinguishes per-shard builds from the stage-2 merge build);
+//! * [`TILE_CLAIM`]    — inside the `kernel::tile` drivers, once per
+//!   tile/wedge claim, keyed by the build's column count `n` (again
+//!   distinguishing per-shard builds from the stage-2 merge build);
+//!   a *poll-only* site reached through [`trip`];
+//! * [`GAIN_CHUNK`]    — inside `optimizers::batch_gains`, once per
+//!   `GAIN_CHUNK` chunk, keyed by the scan's candidate count; also
+//!   poll-only.
+//!
+//! The two poll-only sites exist so *mid-kernel-build* and *mid-scan*
+//! cancellation are forceable deterministically — no sleeps, no timing
+//! asserts: arm them with [`FaultAction::Cancel`] and the ambient
+//! `CancelToken` fires on the first matching claim. Which participant's
+//! chunk trips first may vary, but the observable outcome never does:
+//! the whole operation aborts with `SubmodError::Cancelled` either way
+//! (all-or-nothing is the cancellation contract).
 //!
 //! ## Determinism
 //!
@@ -47,6 +62,12 @@ pub const DRAIN_LOOP: &str = "drain_loop";
 pub const STAGE2_MERGE: &str = "stage2_merge";
 /// Objective kernel/function construction (keyed by ground-set size).
 pub const KERNEL_BUILD: &str = "kernel_build";
+/// Tile/wedge claim inside the `kernel::tile` drivers (keyed by the
+/// build's column count `n`). Poll-only: reached through [`trip`].
+pub const TILE_CLAIM: &str = "tile_claim";
+/// Per-chunk claim inside `optimizers::batch_gains` (keyed by the
+/// scan's candidate count). Poll-only: reached through [`trip`].
+pub const GAIN_CHUNK: &str = "gain_chunk";
 
 /// Check a named injection site. No-op unless the `faults` feature is
 /// enabled *and* the site has been armed with [`inject`]. `key`
@@ -58,8 +79,19 @@ pub fn failpoint(_site: &str, _key: usize) -> crate::error::Result<()> {
     Ok(())
 }
 
+/// Poll-only variant of [`failpoint`] for sites inside claim loops that
+/// have no `Result` channel ([`TILE_CLAIM`], [`GAIN_CHUNK`]). Armed
+/// [`FaultAction::Cancel`] / `Delay` / `Panic` behave as usual; an
+/// armed `Error` is escalated to a panic (loud, rather than silently
+/// swallowed) — use `Cancel` to abort through the poll-only sites.
+#[cfg(not(feature = "faults"))]
+#[inline(always)]
+pub fn trip(_site: &str, _key: usize) {}
+
 #[cfg(feature = "faults")]
-pub use enabled::{clear, clear_site, failpoint, hits, inject, FaultAction, FaultSpec, Trigger};
+pub use enabled::{
+    clear, clear_site, failpoint, hits, inject, trip, FaultAction, FaultSpec, Trigger,
+};
 
 #[cfg(feature = "faults")]
 mod enabled {
@@ -69,6 +101,7 @@ mod enabled {
 
     use crate::error::{Result, SubmodError};
     use crate::rng::Pcg64;
+    use crate::runtime::cancel::{self, CancelReason};
 
     /// What an armed site does when its trigger fires.
     #[derive(Debug, Clone, Copy, PartialEq)]
@@ -79,6 +112,12 @@ mod enabled {
         Delay(Duration),
         /// Return a typed `SubmodError::Coordinator` from the site.
         Error,
+        /// Fire the *ambient* `CancelToken` (the one in scope at the
+        /// site) with the given reason, then proceed — the operation
+        /// aborts at its next cancellation poll. This is how the tests
+        /// force a deadline/shutdown cancel mid-kernel-build or
+        /// mid-scan without any wall-clock.
+        Cancel(CancelReason),
     }
 
     /// When an armed site fires.
@@ -178,6 +217,17 @@ mod enabled {
             FaultAction::Error => Err(SubmodError::Coordinator(format!(
                 "injected fault: error at {site} (key {key})"
             ))),
+            FaultAction::Cancel(reason) => {
+                cancel::fire_current(reason);
+                Ok(())
+            }
+        }
+    }
+
+    /// See the stub's docs: [`super::failpoint`] for poll-only sites.
+    pub fn trip(site: &str, key: usize) {
+        if let Err(e) = failpoint(site, key) {
+            panic!("fault action Error at poll-only site {site}: {e} (use Cancel here)");
         }
     }
 
@@ -248,6 +298,39 @@ mod enabled {
             let b = run();
             assert_eq!(a, b, "same seed must give the same fire schedule");
             assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f), "p=0.5 mixes");
+        }
+
+        #[test]
+        fn cancel_action_fires_the_ambient_token() {
+            use crate::runtime::cancel::CancelToken;
+            let site = "faults_unit_cancel";
+            inject(
+                site,
+                FaultSpec {
+                    action: FaultAction::Cancel(CancelReason::Deadline),
+                    key: None,
+                    trigger: Trigger::Times(1),
+                },
+            );
+            let token = CancelToken::new();
+            cancel::with_scope(Some(token.clone()), || trip(site, 0));
+            assert!(token.is_fired(), "Cancel action must fire the ambient token");
+            assert_eq!(token.reason(), Some(CancelReason::Deadline));
+            // trigger exhausted: the next scope's token stays unfired
+            let second = CancelToken::new();
+            cancel::with_scope(Some(second.clone()), || trip(site, 0));
+            assert!(!second.is_fired());
+            // with no ambient scope the action is a harmless no-op
+            inject(
+                site,
+                FaultSpec {
+                    action: FaultAction::Cancel(CancelReason::Manual),
+                    key: None,
+                    trigger: Trigger::Times(1),
+                },
+            );
+            trip(site, 0);
+            clear_site(site);
         }
 
         #[test]

@@ -2,8 +2,8 @@
 //! multi-tenant closed-loop driver for the coordinator.
 //!
 //! PR 6 pinned each fault-recovery path with a unit-style failpoint
-//! test; this module measures the whole shed → degrade → error →
-//! shutdown stack under *sustained* chaos traffic. `run` builds a
+//! test; this module measures the whole shed → degrade → cancel →
+//! error → shutdown stack under *sustained* chaos traffic. `run` builds a
 //! coordinator, streams a synthetic ground set in, then drives
 //! `tenants × requests_per_tenant` selections from closed-loop tenant
 //! threads (each tenant issues its next request only after the previous
@@ -15,7 +15,10 @@
 //! given seed.
 //!
 //! Outcomes are tallied per closed-loop accounting — every issued
-//! request resolves as served, shed, deadline-exceeded, or failed — and
+//! request resolves as served, shed, deadline-exceeded, cancelled, or
+//! failed (deadlines enforced *preemptively* by the watchdog since
+//! ISSUE 10; `deadline_ms` is how the chaos smoke arms tight per-request
+//! budgets against the whole compute stack) — and
 //! the final [`LoadgenReport`] merges the tally with the coordinator's
 //! own metrics snapshot (shed/degraded/breaker/drain counters, success
 //! *and* failed latency percentiles) plus the shutdown checkpoint size.
@@ -150,6 +153,11 @@ pub struct LoadgenReport {
     pub degraded: u64,
     pub shed: u64,
     pub deadline_exceeded: u64,
+    /// Requests that resolved as `SubmodError::Cancelled` — a cancel
+    /// token fired for a reason other than a deadline (deadline fires
+    /// surface as `deadline_exceeded`). Distinct from `failed_other`
+    /// so preemptive cancels are never lumped in with real failures.
+    pub cancelled: u64,
     pub failed_other: u64,
     /// Tenant-level retries of `Overloaded` responses.
     pub shed_retries: u64,
@@ -214,6 +222,7 @@ impl LoadgenReport {
                     ("degraded", num(self.degraded)),
                     ("shed", num(self.shed)),
                     ("deadline_exceeded", num(self.deadline_exceeded)),
+                    ("cancelled", num(self.cancelled)),
                     ("failed_other", num(self.failed_other)),
                     ("shed_retries", num(self.shed_retries)),
                     ("ingest_retries", num(self.ingest_retries)),
@@ -228,6 +237,7 @@ impl LoadgenReport {
                     ("selections_shed", num(m.selections_shed)),
                     ("admission_waits", num(m.admission_waits)),
                     ("deadline_exceeded", num(m.deadline_exceeded)),
+                    ("selections_cancelled", num(m.selections_cancelled)),
                     ("shard_retries", num(m.shard_retries)),
                     ("shard_failures", num(m.shard_failures)),
                     ("breaker_trips", num(m.breaker_trips)),
@@ -258,6 +268,7 @@ struct Tally {
     degraded: AtomicU64,
     shed: AtomicU64,
     deadline: AtomicU64,
+    cancelled: AtomicU64,
     failed: AtomicU64,
     shed_retries: AtomicU64,
 }
@@ -352,6 +363,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                         Err(SubmodError::DeadlineExceeded) => {
                             tally.deadline.fetch_add(1, Ordering::Relaxed);
                         }
+                        Err(SubmodError::Cancelled) => {
+                            tally.cancelled.fetch_add(1, Ordering::Relaxed);
+                        }
                         Err(_) => {
                             tally.failed.fetch_add(1, Ordering::Relaxed);
                         }
@@ -370,8 +384,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let served = tally.served.load(Ordering::Relaxed);
     let shed = tally.shed.load(Ordering::Relaxed);
     let deadline_exceeded = tally.deadline.load(Ordering::Relaxed);
+    let cancelled = tally.cancelled.load(Ordering::Relaxed);
     let failed_other = tally.failed.load(Ordering::Relaxed);
-    debug_assert_eq!(served + shed + deadline_exceeded + failed_other, requests_total);
+    debug_assert_eq!(
+        served + shed + deadline_exceeded + cancelled + failed_other,
+        requests_total
+    );
     Ok(LoadgenReport {
         wall_s,
         throughput_rps: if wall_s > 0.0 { requests_total as f64 / wall_s } else { 0.0 },
@@ -380,6 +398,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         degraded: tally.degraded.load(Ordering::Relaxed),
         shed,
         deadline_exceeded,
+        cancelled,
         failed_other,
         shed_retries: tally.shed_retries.load(Ordering::Relaxed),
         ingest_retries,
@@ -452,11 +471,18 @@ mod tests {
         let report = run(&cfg).unwrap();
         assert_eq!(report.requests_total, 12);
         assert_eq!(
-            report.served + report.shed + report.deadline_exceeded + report.failed_other,
+            report.served
+                + report.shed
+                + report.deadline_exceeded
+                + report.cancelled
+                + report.failed_other,
             12
         );
-        // no chaos, generous queue: everything is eventually served
+        // no chaos, no deadlines, generous queue: everything is
+        // eventually served, nothing is cancelled
         assert_eq!(report.served + report.shed, 12);
+        assert_eq!(report.cancelled, 0);
+        assert_eq!(report.metrics.selections_cancelled, 0);
         assert_eq!(report.metrics.items_ingested, 120);
         assert!(report.throughput_rps > 0.0);
         assert_eq!(report.metrics.drain_restarts, 0);

@@ -47,6 +47,13 @@ pub struct Metrics {
     pub shard_retries: AtomicU64,
     /// Selections aborted because `SelectRequest::deadline` passed.
     pub deadline_exceeded: AtomicU64,
+    /// Selections aborted preemptively by a fired cancel token (deadline
+    /// watchdog, shutdown hard-cancel, or an injected Cancel fault) —
+    /// i.e. compute was actually unwound mid-flight, as opposed to a
+    /// deadline caught at a rim checkpoint. Every cancelled request also
+    /// counts in `selections_failed`, and its latency lands in the
+    /// failed histogram.
+    pub selections_cancelled: AtomicU64,
     /// Times the supervised ingest drain was restarted after a panic.
     pub drain_restarts: AtomicU64,
     /// Requests shed at admission (queue full, or deadline already spent
@@ -104,6 +111,7 @@ impl Metrics {
             shard_failures: self.shard_failures.load(Ordering::Relaxed),
             shard_retries: self.shard_retries.load(Ordering::Relaxed),
             deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            selections_cancelled: self.selections_cancelled.load(Ordering::Relaxed),
             drain_restarts: self.drain_restarts.load(Ordering::Relaxed),
             selections_shed: self.selections_shed.load(Ordering::Relaxed),
             admission_waits: self.admission_waits.load(Ordering::Relaxed),
@@ -154,6 +162,9 @@ pub struct MetricsSnapshot {
     pub shard_failures: u64,
     pub shard_retries: u64,
     pub deadline_exceeded: u64,
+    /// Selections unwound mid-compute by a fired cancel token (see
+    /// `Metrics::selections_cancelled`).
+    pub selections_cancelled: u64,
     pub drain_restarts: u64,
     pub selections_shed: u64,
     pub admission_waits: u64,
@@ -178,8 +189,8 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "ingested={} served={} failed={} degraded={} backpressure={} \
              shard_failures={} shard_retries={} deadline_exceeded={} \
-             drain_restarts={} shed={} admission_waits={} inflight={} \
-             quarantined={} breaker_trips={} breaker_probes={} \
+             cancelled={} drain_restarts={} shed={} admission_waits={} \
+             inflight={} quarantined={} breaker_trips={} breaker_probes={} \
              breaker_recoveries={} p50≤{}µs p99≤{}µs failed_p50≤{}µs \
              failed_p99≤{}µs",
             self.items_ingested,
@@ -190,6 +201,7 @@ impl std::fmt::Display for MetricsSnapshot {
             self.shard_failures,
             self.shard_retries,
             self.deadline_exceeded,
+            self.selections_cancelled,
             self.drain_restarts,
             self.selections_shed,
             self.admission_waits,
@@ -274,6 +286,21 @@ mod tests {
         assert!(text.contains("drain_restarts=1"));
         assert!(text.contains("shed=2"));
         assert!(text.contains("quarantined=1"));
+    }
+
+    #[test]
+    fn cancelled_counter_snapshots_and_displays() {
+        // regression (ISSUE 10 satellite): preemptive cancels get their
+        // own counter, visible in the snapshot and the Display line, and
+        // cancelled latencies land in the *failed* histogram
+        let m = Metrics::new();
+        m.selections_cancelled.fetch_add(2, Ordering::Relaxed);
+        m.record_failed_latency(Duration::from_millis(3));
+        let s = m.snapshot();
+        assert_eq!(s.selections_cancelled, 2);
+        assert!(s.failed_latency_p99_us > 0);
+        assert_eq!(s.latency_p99_us, 0, "cancels never pollute success latencies");
+        assert!(s.to_string().contains("cancelled=2"));
     }
 
     #[test]

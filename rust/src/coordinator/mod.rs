@@ -29,7 +29,7 @@
 //!
 //! ## Fault model, in one paragraph
 //!
-//! Shed → degrade → error → shutdown. Load beyond
+//! Shed → degrade → cancel → error → shutdown. Load beyond
 //! `CoordinatorConfig::max_inflight` waits in a bounded FIFO queue;
 //! beyond that it is *shed* fast with `SubmodError::Overloaded`. A
 //! stage-1 shard evaluation that panics or errors is isolated, retried
@@ -38,15 +38,20 @@
 //! count-based Half-Open probes readmit it). The request still succeeds
 //! — marked `degraded`, listing `failed_shards` — as long as
 //! `CoordinatorConfig::min_shard_quorum` shards survive (default: all
-//! must). Requests carry an optional deadline and fail fast with
-//! `SubmodError::DeadlineExceeded` instead of blocking. The ingest drain
-//! is supervised: producers get typed errors (never hangs) across a
-//! drain crash, and the drain resumes with the [`ShardStore`] intact.
-//! [`Coordinator::shutdown`] closes admission, drains in-flight work and
-//! the ingest queue, and returns a final checkpoint; the whole ground
-//! set snapshots to a versioned binary checkpoint from which a new
-//! coordinator serves byte-identical selections. See [`service`] for the
-//! full contract.
+//! must). Requests carry an optional deadline enforced *preemptively*:
+//! the [`watchdog`] fires the request's cancel token when the budget
+//! runs out, every compute layer polls it at claim boundaries
+//! (`runtime::cancel`), and the request unwinds within one
+//! tile/chunk/iteration as `SubmodError::DeadlineExceeded` instead of
+//! blocking. The ingest drain is supervised: producers get typed errors
+//! (never hangs) across a drain crash, and the drain resumes with the
+//! [`ShardStore`] intact. [`Coordinator::shutdown`] closes admission,
+//! drains in-flight work and the ingest queue, and returns a final
+//! checkpoint ([`Coordinator::shutdown_with_grace`] bounds the drain:
+//! selections still running when the grace budget ends are hard-
+//! cancelled); the whole ground set snapshots to a versioned binary
+//! checkpoint from which a new coordinator serves byte-identical
+//! selections. See [`service`] for the full contract.
 
 pub(crate) mod admission;
 pub mod faults;
@@ -55,6 +60,7 @@ pub mod loadgen;
 pub mod metrics;
 pub mod service;
 pub mod shard;
+pub(crate) mod watchdog;
 
 pub use ingest::IngestHandle;
 pub use loadgen::{LoadgenConfig, LoadgenReport};

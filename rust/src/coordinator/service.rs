@@ -32,9 +32,9 @@
 //! formal basis for the quorum policy below, and why a `degraded`
 //! response is still a principled answer rather than a best-effort one.
 //!
-//! ## Fault model (ISSUE 6 + ISSUE 8): shed → degrade → error → shutdown
+//! ## Fault model (ISSUE 6 + 8 + 10): shed → degrade → cancel → error → shutdown
 //!
-//! Overload protection wraps the per-request fault tolerance in four
+//! Overload protection wraps the per-request fault tolerance in five
 //! layers, ordered from cheapest to most drastic:
 //!
 //! 1. **Shed** ([`super::admission`]): at most
@@ -51,14 +51,32 @@
 //!    skipped — counted toward quorum exactly like a dropped shard,
 //!    surfaced in `failed_shards` and the `shards_quarantined` gauge —
 //!    until a request-count-based Half-Open probe readmits it.
-//! 3. **Error**: quorum misses, deadlines, and stage-2 failures return
-//!    typed errors; failed/shed request latencies land in a separate
-//!    histogram (`failed_latency_p50/p99_us`) so success percentiles
-//!    carry no survivorship bias.
-//! 4. **Shutdown** ([`Coordinator::shutdown`]): admission closes (typed
+//! 3. **Cancel** (ISSUE 10, [`super::watchdog`] + `runtime::cancel`):
+//!    every admitted request evaluates under its own [`CancelToken`],
+//!    installed as the ambient cancel scope and propagated by the worker
+//!    pool into every participant. When `SelectRequest::deadline` is
+//!    set, the watchdog arms the token and fires it the moment the
+//!    budget runs out; every compute layer — kernel tiles, the sparse
+//!    wavefront, gain-scan chunks, optimizer iterations, pool claim
+//!    loops — polls the token at its claim boundaries and unwinds within
+//!    one tile/chunk/iteration. The typed `SubmodError::Cancelled`
+//!    surfaces as `DeadlineExceeded` when the watchdog fired the token
+//!    (`Metrics::selections_cancelled` counts the preemptive unwind);
+//!    shard evaluations aborted by a cancel are *not* charged to circuit
+//!    breakers or `shard_failures` — the shard did nothing wrong. The
+//!    pool, memoized states, and CSR builders are left clean: the next
+//!    request on the same coordinator serves byte-identical results.
+//! 4. **Error**: quorum misses, deadlines, and stage-2 failures return
+//!    typed errors; failed/shed/cancelled request latencies land in a
+//!    separate histogram (`failed_latency_p50/p99_us`) so success
+//!    percentiles carry no survivorship bias.
+//! 5. **Shutdown** ([`Coordinator::shutdown`]): admission closes (typed
 //!    `ShuttingDown` for new requests), in-flight selections and the
 //!    ingest queue drain, the drain thread joins, and a final checkpoint
-//!    blob is returned.
+//!    blob is returned. [`Coordinator::shutdown_with_grace`] bounds the
+//!    drain: selections still in flight when the grace budget ends are
+//!    hard-cancelled (reason `Shutdown`) and unwind as
+//!    `SubmodError::Cancelled`.
 //!
 //! ## Fault model (ISSUE 6)
 //!
@@ -92,8 +110,9 @@
 //! Every path above is pinned by the deterministic fault-injection suite
 //! (`tests/fault_injection.rs`, via [`super::faults`]).
 
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -105,6 +124,7 @@ use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::shard::{
     BreakerDecision, BreakerTransition, Shard, ShardBreakers, ShardStore,
 };
+use crate::coordinator::watchdog::DeadlineWatchdog;
 use crate::error::{Result, SubmodError};
 use crate::functions::disparity_sum::DisparitySum;
 use crate::functions::facility_location::FacilityLocation;
@@ -114,6 +134,7 @@ use crate::functions::traits::SetFunction;
 use crate::kernel::{DenseKernel, Metric};
 use crate::linalg::Matrix;
 use crate::optimizers::{maximize, Budget, MaximizeOpts, OptimizerKind};
+use crate::runtime::cancel::{self, CancelReason, CancelToken};
 use crate::runtime::pool;
 
 /// Which objective a selection request optimizes.
@@ -134,7 +155,7 @@ impl ObjectiveKind {
         // injection site: keyed by the ground-set size being built, so
         // tests can target per-shard builds vs the stage-2 merge build
         faults::failpoint(faults::KERNEL_BUILD, data.rows())?;
-        Ok(match *self {
+        let f: Box<dyn SetFunction> = match *self {
             ObjectiveKind::FacilityLocation => {
                 Box::new(FacilityLocation::new(DenseKernel::from_data(data, metric)))
             }
@@ -159,7 +180,12 @@ impl ObjectiveKind {
             ObjectiveKind::DisparitySum => {
                 Box::new(DisparitySum::new(DenseKernel::distances_from_data(data)))
             }
-        })
+        };
+        // the tile drivers only *stop* on a fired token (they return
+        // `()`): a cancelled build's partial kernel is discarded here, at
+        // the nearest Result-returning layer
+        cancel::check_current()?;
+        Ok(f)
     }
 
     /// DisparitySum is supermodular → lazy bounds are invalid; route it to
@@ -190,9 +216,12 @@ pub struct SelectRequest {
     /// entry — time spent waiting in the admission queue counts. A
     /// deadline already spent at admission sheds the request
     /// (`SubmodError::Overloaded`); one expiring in the queue or during
-    /// evaluation (checked between shard claims and before the stage-2
-    /// merge) fails it with `SubmodError::DeadlineExceeded`. `None`
-    /// (default) = no deadline.
+    /// evaluation fails it with `SubmodError::DeadlineExceeded`.
+    /// Enforcement is *preemptive* (ISSUE 10): the [`super::watchdog`]
+    /// fires the request's cancel token when the budget runs out, and
+    /// every compute layer polls it at claim boundaries — a request
+    /// stuck inside one kernel build or gain scan still unwinds within
+    /// one tile/chunk/iteration. `None` (default) = no deadline.
     pub deadline: Option<Duration>,
 }
 
@@ -239,8 +268,27 @@ pub struct Coordinator {
     cfg: CoordinatorConfig,
     admission: AdmissionGate,
     breakers: ShardBreakers,
+    /// Fires request cancel tokens when their deadlines pass.
+    watchdog: DeadlineWatchdog,
+    /// Cancel tokens of admitted, still-running selections — what
+    /// [`shutdown_with_grace`](Self::shutdown_with_grace) hard-cancels
+    /// when the drain grace budget runs out.
+    inflight: Mutex<HashMap<u64, CancelToken>>,
+    next_request_id: AtomicU64,
     /// Taken (and joined) exactly once, by [`shutdown`](Self::shutdown).
     drain: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// RAII entry in [`Coordinator::inflight`]; deregisters on drop.
+struct InflightGuard<'a> {
+    coordinator: &'a Coordinator,
+    id: u64,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.coordinator.inflight.lock().unwrap().remove(&self.id);
+    }
 }
 
 impl Coordinator {
@@ -271,6 +319,9 @@ impl Coordinator {
             cfg,
             admission,
             breakers,
+            watchdog: DeadlineWatchdog::new(),
+            inflight: Mutex::new(HashMap::new()),
+            next_request_id: AtomicU64::new(0),
             drain: Mutex::new(Some(drain)),
         }
     }
@@ -302,25 +353,51 @@ impl Coordinator {
 
     /// Run one two-stage selection over the current ground set, gated by
     /// admission control. See the module docs for the full fault model
-    /// (shed → degrade → error → shutdown).
+    /// (shed → degrade → cancel → error → shutdown).
     pub fn select(&self, req: SelectRequest) -> Result<SelectResponse> {
         // the clock starts at entry: time waiting in the admission queue
         // counts against the request's deadline
         let t0 = Instant::now();
-        let res = self
-            .admission
-            .acquire(t0, req.deadline)
-            .and_then(|_permit| self.select_inner(&req, t0));
+        let token = CancelToken::new();
+        let res = self.admission.acquire(t0, req.deadline).and_then(|_permit| {
+            // register for shutdown hard-cancel, arm the deadline
+            // watchdog (RAII: both deregister when evaluation returns),
+            // and evaluate under the token as the ambient cancel scope —
+            // the pool propagates it into every participant
+            let _inflight = self.track_inflight(&token);
+            let _armed =
+                req.deadline.map(|d| self.watchdog.arm(t0 + d, token.clone()));
+            cancel::with_scope(Some(token.clone()), || self.select_inner(&req, t0))
+        });
+        // a token the watchdog fired IS the deadline: surface it under
+        // the request's contract; shutdown/manual cancels stay Cancelled
+        let res = res.map_err(|e| match (e, token.reason()) {
+            (SubmodError::Cancelled, Some(CancelReason::Deadline)) => {
+                SubmodError::DeadlineExceeded
+            }
+            (e, _) => e,
+        });
         if let Err(e) = &res {
             if matches!(e, SubmodError::DeadlineExceeded) {
                 self.metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
             }
+            if token.is_fired() {
+                // compute was actually unwound mid-flight (as opposed to
+                // a deadline caught at a rim checkpoint)
+                self.metrics.selections_cancelled.fetch_add(1, Ordering::Relaxed);
+            }
             self.metrics.selections_failed.fetch_add(1, Ordering::Relaxed);
-            // failed/shed latencies go to their own histogram so the
-            // success percentiles carry no survivorship bias
+            // failed/shed/cancelled latencies go to their own histogram
+            // so the success percentiles carry no survivorship bias
             self.metrics.record_failed_latency(t0.elapsed());
         }
         res
+    }
+
+    fn track_inflight(&self, token: &CancelToken) -> InflightGuard<'_> {
+        let id = self.next_request_id.fetch_add(1, Ordering::Relaxed);
+        self.inflight.lock().unwrap().insert(id, token.clone());
+        InflightGuard { coordinator: self, id }
     }
 
     /// Stop serving: close admission (new selections fail with
@@ -331,6 +408,28 @@ impl Coordinator {
     pub fn shutdown(&self) -> Result<Vec<u8>> {
         self.admission.close();
         self.admission.drain();
+        self.finish_shutdown()
+    }
+
+    /// [`shutdown`](Self::shutdown) with a bounded drain: in-flight
+    /// selections get `grace` to finish on their own; whatever is still
+    /// running after that is **hard-cancelled** — its cancel token fires
+    /// with [`CancelReason::Shutdown`], the compute layers unwind at
+    /// their next poll, and the caller sees `SubmodError::Cancelled`
+    /// (counted in `Metrics::selections_cancelled`). The drain then
+    /// completes unconditionally; everything else matches `shutdown`.
+    pub fn shutdown_with_grace(&self, grace: Duration) -> Result<Vec<u8>> {
+        self.admission.close();
+        if !self.admission.drain_timeout(grace) {
+            for token in self.inflight.lock().unwrap().values() {
+                token.fire(CancelReason::Shutdown);
+            }
+            self.admission.drain();
+        }
+        self.finish_shutdown()
+    }
+
+    fn finish_shutdown(&self) -> Result<Vec<u8>> {
         self.ingest.request_shutdown();
         let drain = self.drain.lock().unwrap().take();
         if let Some(join) = drain {
@@ -380,6 +479,11 @@ impl Coordinator {
         let outcomes: Vec<Mutex<Option<ShardOutcome>>> =
             (0..n_shards).map(|_| Mutex::new(None)).collect();
         pool::run_indexed(self.cfg.workers.max(1), shards, |t, shard: Shard| {
+            // a fired cancel token skips remaining shards without
+            // charging them (no evaluation, no retry, no breaker record)
+            if cancel::active() {
+                return;
+            }
             // deadline check between shard claims: once the budget is
             // gone, remaining shards are skipped, not evaluated
             if let Some(d) = req.deadline {
@@ -401,10 +505,27 @@ impl Coordinator {
                 BreakerDecision::Attempt { probe } => {
                     let result = match run_isolated(|| stage1(&shard, req, per_shard)) {
                         Ok(ids) => Ok(ids),
+                        // an evaluation aborted by the request's own
+                        // cancel token is not a shard fault: leave the
+                        // slot empty with no retry and no breaker charge
+                        // (a cancelled probe is un-decided so the shard
+                        // is re-probed on the next request)
+                        Err(_cancelled) if cancel::active() => {
+                            if probe {
+                                self.breakers.abort_probe(base_id);
+                            }
+                            return;
+                        }
                         Err(_first) => {
                             self.metrics.shard_retries.fetch_add(1, Ordering::Relaxed);
                             match run_isolated(|| stage1(&shard, req, per_shard)) {
                                 Ok(ids) => Ok(ids),
+                                Err(_cancelled) if cancel::active() => {
+                                    if probe {
+                                        self.breakers.abort_probe(base_id);
+                                    }
+                                    return;
+                                }
                                 Err(e) => {
                                     self.metrics
                                         .shard_failures
@@ -422,6 +543,10 @@ impl Coordinator {
             };
             *outcomes[t].lock().unwrap() = Some(ShardOutcome { base_id, result });
         });
+        // a cancel that landed anywhere in the fan-out (or during the
+        // admission-to-here window) aborts before the slots are read —
+        // cancel-skipped slots are legitimately empty
+        cancel::check_current()?;
         if deadline_hit.load(Ordering::Relaxed)
             || req.deadline.is_some_and(|d| t0.elapsed() >= d)
         {
@@ -437,7 +562,7 @@ impl Coordinator {
                 .lock()
                 .unwrap()
                 .take()
-                .expect("every shard slot is filled when no deadline fired");
+                .expect("every shard slot is filled when no deadline or cancel fired");
             match outcome.result {
                 Ok(ids) => candidates.extend(ids),
                 Err(e) => {
@@ -480,6 +605,9 @@ impl Coordinator {
             &MaximizeOpts {
                 stop_if_zero_gain: false,
                 stop_if_negative_gain: false,
+                // the request token, plumbed explicitly (it is also the
+                // ambient scope, but MaximizeOpts is the public contract)
+                cancel: cancel::current(),
                 ..Default::default()
             },
         )?;
@@ -536,6 +664,9 @@ fn stage1(shard: &Shard, req: &SelectRequest, per_shard: usize) -> Result<Vec<us
     let opts = MaximizeOpts {
         stop_if_zero_gain: false,
         stop_if_negative_gain: false,
+        // the request token: the pool installed it as this worker's
+        // ambient scope; hand it to maximize explicitly as well
+        cancel: cancel::current(),
         ..Default::default()
     };
     let sel = maximize(
@@ -734,6 +865,49 @@ mod tests {
         assert_eq!(after.value.to_bits(), before.value.to_bits());
         // shutdown is idempotent
         assert_eq!(c.shutdown().unwrap(), blob);
+    }
+
+    #[test]
+    fn shutdown_with_grace_is_shutdown_when_nothing_is_inflight() {
+        let c = seeded_coordinator(60, 20);
+        let before = c.select(SelectRequest { budget: 5, ..Default::default() }).unwrap();
+        let blob = c.shutdown_with_grace(Duration::from_millis(50)).unwrap();
+        let err = c.select(SelectRequest { budget: 5, ..Default::default() }).unwrap_err();
+        assert!(matches!(err, SubmodError::ShuttingDown), "{err}");
+        // nothing was in flight, so nothing was hard-cancelled
+        assert_eq!(c.metrics().selections_cancelled, 0);
+        let r = Coordinator::from_checkpoint(CoordinatorConfig::default(), &blob).unwrap();
+        let after = r.select(SelectRequest { budget: 5, ..Default::default() }).unwrap();
+        assert_eq!(after.ids, before.ids);
+        assert_eq!(after.value.to_bits(), before.value.to_bits());
+    }
+
+    #[test]
+    fn watchdog_deadline_returns_typed_error_and_leaves_pool_reusable() {
+        // a deadline far too small for a real selection: the watchdog
+        // fires the token mid-compute (or the rim checks catch it) —
+        // either way the contract is a typed DeadlineExceeded and an
+        // immediately reusable coordinator
+        let c = seeded_coordinator(150, 32);
+        let clean = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+        let err = c
+            .select(SelectRequest {
+                budget: 8,
+                deadline: Some(Duration::from_nanos(1)),
+                ..Default::default()
+            })
+            .unwrap_err();
+        // a 1 ns deadline may already be spent at admission (shed) —
+        // both outcomes are typed, neither is a hang or a panic
+        assert!(
+            matches!(err, SubmodError::DeadlineExceeded | SubmodError::Overloaded),
+            "{err}"
+        );
+        // the next request is byte-identical to the pre-cancel one
+        let again = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+        assert_eq!(again.ids, clean.ids);
+        assert_eq!(again.value.to_bits(), clean.value.to_bits());
+        assert_eq!(c.metrics().shard_failures, 0, "cancel never charges shards");
     }
 
     #[test]

@@ -404,6 +404,23 @@ impl ShardBreakers {
         }
     }
 
+    /// Un-decide a Half-Open probe whose evaluation was aborted by a
+    /// request cancel before producing an outcome: without this the
+    /// shard would be stuck Half-Open (permanently skipped). It returns
+    /// to Open, primed so the very next request carries a fresh probe.
+    /// No transition is reported — the gauge never moved.
+    pub fn abort_probe(&self, base_id: usize) {
+        if self.threshold.is_none() {
+            return;
+        }
+        let mut states = self.states.lock().unwrap();
+        if let Some(st) = states.get_mut(&base_id) {
+            if matches!(st, BreakerState::HalfOpen) {
+                *st = BreakerState::Open { seen: self.probe_after };
+            }
+        }
+    }
+
     /// Number of shards currently quarantined (Open or Half-Open).
     #[cfg(test)]
     pub fn quarantined(&self) -> usize {

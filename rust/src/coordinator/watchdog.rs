@@ -1,0 +1,187 @@
+//! Deadline watchdog: the coordinator-rim timer that turns request
+//! deadlines into *preemptive* cancellation.
+//!
+//! Before ISSUE 10, `SelectRequest::deadline` was enforced only at rim
+//! checkpoints (between shard claims, before the stage-2 merge) — a
+//! request stuck inside one long kernel build or gain scan sailed past
+//! its budget. The watchdog closes that gap: `select()` arms the
+//! request's [`CancelToken`] here, and when the deadline passes the
+//! watchdog *fires* it with [`CancelReason::Deadline`]; every compute
+//! layer polls the token at its claim boundaries (see
+//! `runtime::cancel`) and unwinds within one tile/chunk/iteration.
+//!
+//! This module is the only place where wall-clock time meets
+//! cancellation, by design: the linter's no-wall-clock rule keeps
+//! `Instant` out of every selection path, so deadlines are translated to
+//! token fires *here*, at the rim, and the compute layers see only the
+//! clockless flag.
+//!
+//! Mechanics: a `Mutex`+`Condvar` registry of armed `(deadline, token)`
+//! pairs, serviced by one lazily-spawned timer thread that
+//! `wait_timeout`s until the earliest deadline, fires whatever is due,
+//! and **exits when the registry empties** (the next `arm()` respawns
+//! it). A coordinator that never sees a deadline therefore never owns a
+//! watchdog thread — `tests/pool_threads.rs` keeps pinning that a plain
+//! `select()` spawns nothing. Arming returns an RAII [`ArmedDeadline`]
+//! guard; dropping it (the request finished in time) disarms the entry.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::runtime::cancel::{CancelReason, CancelToken};
+
+/// The armed-deadline registry plus its on-demand timer thread.
+pub(crate) struct DeadlineWatchdog {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct State {
+    next_id: u64,
+    /// Armed entries in arming order; the timer scans for the earliest.
+    armed: Vec<(u64, Instant, CancelToken)>,
+    /// Whether the timer thread is live (it exits when `armed` empties).
+    timer_live: bool,
+}
+
+/// RAII disarm guard: dropping it removes the entry (whether or not the
+/// token already fired) and wakes the timer to recompute its wait.
+pub(crate) struct ArmedDeadline {
+    inner: Arc<Inner>,
+    id: u64,
+}
+
+impl DeadlineWatchdog {
+    pub fn new() -> DeadlineWatchdog {
+        DeadlineWatchdog {
+            inner: Arc::new(Inner { state: Mutex::new(State::default()), cv: Condvar::new() }),
+        }
+    }
+
+    /// Arm `token` to fire with [`CancelReason::Deadline`] once
+    /// `deadline` passes. Drop the returned guard to disarm.
+    pub fn arm(&self, deadline: Instant, token: CancelToken) -> ArmedDeadline {
+        let mut st = self.inner.state.lock().unwrap();
+        let id = st.next_id;
+        st.next_id += 1;
+        st.armed.push((id, deadline, token));
+        if st.timer_live {
+            // the new entry may be the new earliest: shorten the wait
+            self.inner.cv.notify_all();
+        } else {
+            st.timer_live = true;
+            let inner = Arc::clone(&self.inner);
+            // lint: allow(thread-spawn) — rim timer thread: parks on a
+            // Condvar until the earliest armed deadline and exits when no
+            // deadlines remain; never runs on a compute path
+            std::thread::Builder::new()
+                .name("submodlib-watchdog".into())
+                .spawn(move || timer(inner))
+                .expect("spawn watchdog timer thread");
+        }
+        drop(st);
+        ArmedDeadline { inner: Arc::clone(&self.inner), id }
+    }
+}
+
+fn timer(inner: Arc<Inner>) {
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        let now = Instant::now();
+        // fire (and retire) everything due; a token races its guard's
+        // drop harmlessly — firing is idempotent and first-reason-wins
+        st.armed.retain(|(_, deadline, token)| {
+            if *deadline <= now {
+                token.fire(CancelReason::Deadline);
+                false
+            } else {
+                true
+            }
+        });
+        let Some(earliest) = st.armed.iter().map(|&(_, d, _)| d).min() else {
+            // idle: exit — the next arm() respawns the timer
+            st.timer_live = false;
+            return;
+        };
+        let wait = earliest.saturating_duration_since(now);
+        st = inner.cv.wait_timeout(st, wait).unwrap().0;
+    }
+}
+
+impl Drop for ArmedDeadline {
+    fn drop(&mut self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.armed.retain(|&(id, _, _)| id != self.id);
+        drop(st);
+        // wake the timer so it recomputes (or exits when now idle)
+        self.inner.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn wait_fired(token: &CancelToken, budget: Duration) -> bool {
+        let t0 = Instant::now();
+        while !token.is_fired() {
+            if t0.elapsed() > budget {
+                return false;
+            }
+            std::thread::yield_now();
+        }
+        true
+    }
+
+    #[test]
+    fn due_deadline_fires_with_deadline_reason() {
+        let w = DeadlineWatchdog::new();
+        let token = CancelToken::new();
+        let _armed = w.arm(Instant::now(), token.clone());
+        assert!(wait_fired(&token, Duration::from_secs(10)));
+        assert_eq!(token.reason(), Some(CancelReason::Deadline));
+    }
+
+    #[test]
+    fn dropped_guard_disarms_before_the_deadline() {
+        let w = DeadlineWatchdog::new();
+        let token = CancelToken::new();
+        let armed = w.arm(Instant::now() + Duration::from_millis(80), token.clone());
+        drop(armed);
+        std::thread::sleep(Duration::from_millis(160));
+        assert!(!token.is_fired(), "disarmed deadline must never fire");
+    }
+
+    #[test]
+    fn timer_respawns_after_going_idle() {
+        let w = DeadlineWatchdog::new();
+        let a = CancelToken::new();
+        let _g1 = w.arm(Instant::now(), a.clone());
+        assert!(wait_fired(&a, Duration::from_secs(10)));
+        drop(_g1);
+        // let the timer drain to idle, then arm again: a fresh timer
+        // must pick the new entry up
+        std::thread::sleep(Duration::from_millis(20));
+        let b = CancelToken::new();
+        let _g2 = w.arm(Instant::now(), b.clone());
+        assert!(wait_fired(&b, Duration::from_secs(10)));
+    }
+
+    #[test]
+    fn earlier_arm_shortens_a_live_timer_wait() {
+        let w = DeadlineWatchdog::new();
+        let far = CancelToken::new();
+        let near = CancelToken::new();
+        // the timer is parked on a far deadline when a near one arrives
+        let _g1 = w.arm(Instant::now() + Duration::from_secs(600), far.clone());
+        let _g2 = w.arm(Instant::now(), near.clone());
+        assert!(wait_fired(&near, Duration::from_secs(10)));
+        assert!(!far.is_fired());
+    }
+}

@@ -37,6 +37,17 @@ pub enum SubmodError {
     /// The coordinator is shutting down (`Coordinator::shutdown`): new
     /// selections are refused while in-flight work drains.
     ShuttingDown,
+    /// A cooperative [`runtime::cancel::CancelToken`] fired and the
+    /// operation unwound at its next poll point (per tile, per gain
+    /// chunk, per optimizer iteration). The result is all-or-nothing:
+    /// no partial selection or kernel is ever observable, and the pool
+    /// and memoized states are immediately reusable. The coordinator
+    /// maps deadline-armed tokens back to [`DeadlineExceeded`]; this
+    /// variant surfaces manual and shutdown cancellations.
+    ///
+    /// [`runtime::cancel::CancelToken`]: crate::runtime::cancel::CancelToken
+    /// [`DeadlineExceeded`]: SubmodError::DeadlineExceeded
+    Cancelled,
     /// The conformance linter (`submodlib lint` / the `analysis` module)
     /// found this many violations of the determinism invariants.
     Conformance(usize),
@@ -59,6 +70,9 @@ impl fmt::Display for SubmodError {
                 write!(f, "overloaded: admission queue full, request shed")
             }
             SubmodError::ShuttingDown => write!(f, "coordinator is shutting down"),
+            SubmodError::Cancelled => {
+                write!(f, "operation cancelled (cooperative cancel token fired)")
+            }
             SubmodError::Conformance(n) => write!(f, "conformance: {n} violation(s)"),
         }
     }
@@ -88,6 +102,7 @@ mod tests {
         // overload-protection errors must be distinguishable by message
         assert!(SubmodError::Overloaded.to_string().contains("shed"));
         assert!(SubmodError::ShuttingDown.to_string().contains("shutting down"));
+        assert!(SubmodError::Cancelled.to_string().contains("cancelled"));
     }
 
     #[test]

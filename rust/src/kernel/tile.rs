@@ -32,6 +32,22 @@
 //! determinism rule the pool documents), so outputs are bit-identical
 //! at every pool width and no per-call threads are ever spawned.
 //!
+//! ## Cooperative cancellation
+//!
+//! Every driver polls the ambient `runtime::cancel` token **once per
+//! tile claim** (direct tiles, streamed full-width tiles, and the
+//! symmetric wavefront's wedges alike; the `TILE_CLAIM` failpoint,
+//! keyed by the build's column count `n`, sits on the same boundary).
+//! A fired token makes workers stop claiming, so an in-flight build
+//! finishes within one tile per participant — but the drivers return
+//! `()`, not `Result`: a cancelled build's output buffer is *partial*,
+//! and the nearest Result-returning caller (`maximize`, the
+//! coordinator's `ObjectiveKind::build`) must poll
+//! `cancel::check_current()` and discard it. A token that never fires
+//! changes nothing — polls read an atomic flag, claim order and row
+//! arithmetic are untouched, so built kernels are byte-identical with
+//! or without a token, at every pool width and on every backend.
+//!
 //! ## Peak-memory model
 //!
 //! With `t = runtime::pool::num_threads()` participants, feature
@@ -84,9 +100,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::backend;
 use super::metric::Metric;
+use crate::coordinator::faults;
 use crate::data::points::{PointView, SoaPoints};
 use crate::linalg::Matrix;
-use crate::runtime::pool;
+use crate::runtime::{cancel, pool};
 
 /// Rows per streamed tile. Chosen so a worker's buffer stays a few
 /// hundred KB for typical n (64 rows × n cols × 4 bytes): large enough
@@ -158,6 +175,11 @@ where
     pool::run(threads, &|_worker| {
         let mut buf = vec![0f32; tile_rows * n];
         loop {
+            // per-tile cancellation poll (+ forceable failpoint)
+            faults::trip(faults::TILE_CLAIM, n);
+            if cancel::active() {
+                break;
+            }
             let t = next.fetch_add(1, Ordering::Relaxed);
             if t >= tile_count {
                 break;
@@ -250,6 +272,11 @@ where
     pool::run(threads, &|_worker| {
         let mut buf = vec![0f32; max_area];
         loop {
+            // per-wedge cancellation poll (+ forceable failpoint)
+            faults::trip(faults::TILE_CLAIM, n);
+            if cancel::active() {
+                break;
+            }
             let t = next.fetch_add(1, Ordering::Relaxed);
             if t >= bounds.len() {
                 break;
@@ -308,6 +335,12 @@ where
         rest = tail;
     }
     pool::run_indexed(pool::num_threads(), slots, |t, tile| {
+        // per-tile cancellation poll (+ forceable failpoint); run_indexed
+        // additionally polls before every claim
+        faults::trip(faults::TILE_CLAIM, n);
+        if cancel::active() {
+            return;
+        }
         let (r0, r1) = bounds[t];
         for (bi, i) in (r0..r1).enumerate() {
             fill(i, &mut tile[bi * n..(bi + 1) * n]);

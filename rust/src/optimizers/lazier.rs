@@ -26,6 +26,7 @@ use super::{batch_gains, should_stop, Budget, MaximizeOpts, Selection};
 use crate::error::{Result, SubmodError};
 use crate::functions::traits::SetFunction;
 use crate::rng::Pcg64;
+use crate::runtime::cancel;
 
 struct Entry {
     bound: f64,
@@ -89,6 +90,7 @@ pub(crate) fn run(
     let mut stale_gains: Vec<f64> = Vec::with_capacity(LAZY_STALE_BLOCK);
 
     for it in 0..k {
+        cancel::check_current()?; // per-iteration poll
         if pool.is_empty() {
             break;
         }
@@ -116,6 +118,7 @@ pub(crate) fn run(
             unseen_gains.clear();
             unseen_gains.resize(unseen.len(), 0.0);
             batch_gains(&*f, &unseen, &mut unseen_gains, opts.parallel, opts.threads);
+            cancel::check_current()?; // don't install bounds from a partial batch
             evaluations += unseen.len() as u64;
             for (&e, &g) in unseen.iter().zip(unseen_gains.iter()) {
                 debug_assert!(!g.is_nan(), "NaN gain for element {e}");
@@ -154,6 +157,7 @@ pub(crate) fn run(
             stale_gains.clear();
             stale_gains.resize(stale_ids.len(), 0.0);
             batch_gains(&*f, &stale_ids, &mut stale_gains, opts.parallel, opts.threads);
+            cancel::check_current()?; // don't reinsert bounds from a partial batch
             evaluations += stale_ids.len() as u64;
             for (&e, &gain) in stale_ids.iter().zip(stale_gains.iter()) {
                 debug_assert!(!gain.is_nan(), "NaN gain for element {e}");

@@ -41,6 +41,7 @@ use std::collections::BinaryHeap;
 use super::{batch_gains, should_stop, Budget, MaximizeOpts, Selection};
 use crate::error::Result;
 use crate::functions::traits::SetFunction;
+use crate::runtime::cancel;
 
 /// Heap entry ordered by upper bound (gain/cost key under knapsack).
 struct Entry {
@@ -111,6 +112,7 @@ pub(crate) fn run(
         let ids: Vec<usize> = (0..n).collect();
         let mut gains = vec![0f64; n];
         batch_gains(&*f, &ids, &mut gains, opts.parallel, opts.threads);
+        cancel::check_current()?; // a mid-seed cancel leaves `gains` partial
         evaluations += n as u64;
         for (e, &gain) in gains.iter().enumerate() {
             push(&mut heap, Entry { key: gain / budget.cost(e), gain, e, iter: 0 });
@@ -129,6 +131,7 @@ pub(crate) fn run(
     let mut stale_gains: Vec<f64> = Vec::with_capacity(LAZY_STALE_BLOCK);
 
     while let Some(top) = heap.pop() {
+        cancel::check_current()?; // per-iteration poll (see module docs)
         let remaining = budget.max_cost - spent;
         if budget.cost(top.e) > remaining + 1e-12 {
             // cannot afford now; keep for later iterations (smaller budgets
@@ -201,6 +204,7 @@ pub(crate) fn run(
             stale_gains.clear();
             stale_gains.resize(stale_ids.len(), 0.0);
             batch_gains(&*f, &stale_ids, &mut stale_gains, opts.parallel, opts.threads);
+            cancel::check_current()?; // don't reinsert bounds from a partial batch
             evaluations += stale_ids.len() as u64;
             for (&e, &gain) in stale_ids.iter().zip(stale_gains.iter()) {
                 push(&mut heap, Entry { key: gain / budget.cost(e), gain, e, iter });

@@ -31,6 +31,26 @@
 //! the old one-at-a-time loop did. `MaximizeOpts::parallel = false`
 //! forces the serial per-element path (used by the determinism tests and
 //! the bench baseline); selections are identical either way.
+//!
+//! ## Cooperative cancellation
+//!
+//! Every optimizer polls the ambient [`cancel`] token at two boundaries:
+//! once **per iteration** (before committing another pick) and once
+//! **after every [`batch_gains`] scan, before the argmax** — the second
+//! poll matters because a cancel that lands mid-scan leaves the tail of
+//! the gain buffer unwritten, and an argmax over it would commit a
+//! nondeterministic pick via `update_memoization`. [`batch_gains`]
+//! itself polls once per [`GAIN_CHUNK`] on *every* path (serial,
+//! single-call, pooled), so a fired token bounds the remaining work to
+//! one chunk per participant. Cancellation is all-or-nothing:
+//! [`maximize`] returns `SubmodError::Cancelled` and no partial
+//! [`Selection`] is observable (the memoized state mutated was a
+//! private clone). A token that never fires is inert — polls read an
+//! atomic flag and change no claim order, so selections are
+//! byte-identical with or without `MaximizeOpts::cancel`, at every pool
+//! width and on every backend (pinned by `tests/pool_matrix.rs`).
+//!
+//! [`cancel`]: crate::runtime::cancel
 
 pub mod cover;
 pub mod lazier;
@@ -40,8 +60,10 @@ pub mod stochastic;
 
 use std::sync::Arc;
 
+use crate::coordinator::faults;
 use crate::error::{Result, SubmodError};
 use crate::functions::traits::{ElementId, SetFunction, Subset};
+use crate::runtime::cancel::{self, CancelToken};
 use crate::runtime::pool;
 
 pub use cover::submodular_cover;
@@ -119,6 +141,15 @@ pub struct MaximizeOpts {
     /// any cap (the pool's indexed-slot determinism rule); this is a
     /// wall-clock knob only.
     pub threads: Option<usize>,
+    /// Cooperative cancellation token. [`maximize`] installs it as the
+    /// ambient cancel scope for the whole run (seeding scans, kernel
+    /// access, every pool fan-out) and returns
+    /// `SubmodError::Cancelled` at the next poll boundary once it
+    /// fires. `None` (default) inherits whatever ambient scope the
+    /// caller already installed (none, for plain library use). An
+    /// armed-but-unfired token is inert: selections are byte-identical
+    /// to a run without one.
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for MaximizeOpts {
@@ -131,6 +162,7 @@ impl Default for MaximizeOpts {
             verbose: false,
             parallel: true,
             threads: None,
+            cancel: None,
         }
     }
 }
@@ -209,11 +241,21 @@ pub fn maximize(
     }
     let mut work = f.clone_box();
     work.init_memoization(&Subset::empty(f.n()));
-    match kind {
-        OptimizerKind::NaiveGreedy => naive::run(work.as_mut(), &budget, opts),
-        OptimizerKind::LazyGreedy => lazy::run(work.as_mut(), &budget, opts),
-        OptimizerKind::StochasticGreedy => stochastic::run(work.as_mut(), &budget, opts),
-        OptimizerKind::LazierThanLazyGreedy => lazier::run(work.as_mut(), &budget, opts),
+    let run = move |work: &mut dyn SetFunction| -> Result<Selection> {
+        cancel::check_current()?;
+        match kind {
+            OptimizerKind::NaiveGreedy => naive::run(work, &budget, opts),
+            OptimizerKind::LazyGreedy => lazy::run(work, &budget, opts),
+            OptimizerKind::StochasticGreedy => stochastic::run(work, &budget, opts),
+            OptimizerKind::LazierThanLazyGreedy => lazier::run(work, &budget, opts),
+        }
+    };
+    match &opts.cancel {
+        // install the caller's token as the ambient scope for the whole
+        // run; None inherits any scope already installed (coordinator
+        // stage-1 workers run under the request's scope)
+        Some(token) => cancel::with_scope(Some(token.clone()), || run(work.as_mut())),
+        None => run(work.as_mut()),
     }
 }
 
@@ -256,6 +298,15 @@ pub const GAIN_CHUNK: usize = 64;
 /// state whichever participant claims its chunk, every gain lands in its
 /// own pre-split output slot, and the trait contract guarantees batch ==
 /// per-element bit-for-bit — the pool's indexed-slot determinism rule.
+///
+/// Every path — serial, single-call, pooled — walks the scan in
+/// [`GAIN_CHUNK`] chunks and polls the ambient cancel token (plus the
+/// `GAIN_CHUNK` failpoint, keyed by the scan's candidate count) before
+/// each chunk; the sub-batching is invisible in the output because the
+/// trait contract makes sub-batches bit-equal to one full batch. A
+/// fired token returns early with the *tail of `out` unwritten* —
+/// callers must poll `cancel::check_current()` before consuming the
+/// gains (every optimizer does, before its argmax).
 pub fn batch_gains(
     f: &dyn SetFunction,
     candidates: &[ElementId],
@@ -264,26 +315,43 @@ pub fn batch_gains(
     threads: Option<usize>,
 ) {
     debug_assert_eq!(candidates.len(), out.len());
+    let len = candidates.len();
     if !parallel {
-        for (o, &e) in out.iter_mut().zip(candidates) {
-            *o = f.marginal_gain_memoized(e);
+        for (ci, out_chunk) in out.chunks_mut(GAIN_CHUNK).enumerate() {
+            faults::trip(faults::GAIN_CHUNK, len);
+            if cancel::active() {
+                return;
+            }
+            let c0 = ci * GAIN_CHUNK;
+            for (o, &e) in out_chunk.iter_mut().zip(&candidates[c0..]) {
+                *o = f.marginal_gain_memoized(e);
+            }
         }
         return;
     }
-    let len = candidates.len();
     let width = threads
         .map(|t| t.clamp(1, pool::num_threads()))
         .unwrap_or_else(pool::num_threads);
     let chunks = len.div_ceil(GAIN_CHUNK);
     let parts = width.min(chunks);
     if len < PARALLEL_MIN_CANDIDATES || parts < 2 {
-        f.marginal_gains_batch(candidates, out);
+        for (ci, out_chunk) in out.chunks_mut(GAIN_CHUNK).enumerate() {
+            faults::trip(faults::GAIN_CHUNK, len);
+            if cancel::active() {
+                return;
+            }
+            let c0 = ci * GAIN_CHUNK;
+            f.marginal_gains_batch(&candidates[c0..c0 + out_chunk.len()], out_chunk);
+        }
         return;
     }
     pool::run_indexed(parts, out.chunks_mut(GAIN_CHUNK).collect(), |t, out_chunk| {
+        faults::trip(faults::GAIN_CHUNK, len);
+        if cancel::active() {
+            return;
+        }
         let c0 = t * GAIN_CHUNK;
-        let c1 = (c0 + GAIN_CHUNK).min(len);
-        f.marginal_gains_batch(&candidates[c0..c1], out_chunk);
+        f.marginal_gains_batch(&candidates[c0..c0 + out_chunk.len()], out_chunk);
     });
 }
 
@@ -378,6 +446,62 @@ mod tests {
         )
         .unwrap();
         assert!(b.value >= 0.9 * a.value, "{} vs {}", b.value, a.value);
+    }
+
+    const ALL_KINDS: [OptimizerKind; 4] = [
+        OptimizerKind::NaiveGreedy,
+        OptimizerKind::LazyGreedy,
+        OptimizerKind::StochasticGreedy,
+        OptimizerKind::LazierThanLazyGreedy,
+    ];
+
+    #[test]
+    fn fired_cancel_token_aborts_every_optimizer() {
+        use crate::runtime::cancel::CancelReason;
+        let f = fl(60, 5);
+        for kind in ALL_KINDS {
+            let token = CancelToken::new();
+            token.fire(CancelReason::Manual);
+            let res = maximize(
+                &f,
+                Budget::cardinality(8),
+                kind,
+                &MaximizeOpts { cancel: Some(token), ..Default::default() },
+            );
+            assert!(matches!(res, Err(SubmodError::Cancelled)), "{kind:?}");
+        }
+        // the shared instance is untouched (the optimizer mutated only
+        // its private clone): a clean run afterwards works normally
+        let sel = maximize(
+            &f,
+            Budget::cardinality(8),
+            OptimizerKind::NaiveGreedy,
+            &MaximizeOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(sel.order.len(), 8);
+    }
+
+    #[test]
+    fn unfired_cancel_token_is_byte_inert() {
+        let f = fl(70, 6);
+        for kind in ALL_KINDS {
+            let base =
+                maximize(&f, Budget::cardinality(9), kind, &MaximizeOpts::default())
+                    .unwrap();
+            let armed = maximize(
+                &f,
+                Budget::cardinality(9),
+                kind,
+                &MaximizeOpts { cancel: Some(CancelToken::new()), ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(base.ids(), armed.ids(), "{kind:?}");
+            assert_eq!(base.value.to_bits(), armed.value.to_bits(), "{kind:?}");
+            for (b, a) in base.order.iter().zip(&armed.order) {
+                assert_eq!(b.1.to_bits(), a.1.to_bits(), "{kind:?} gain bits");
+            }
+        }
     }
 
     #[test]

@@ -14,10 +14,16 @@
 //! the argmax then runs serially in ascending-id order accepting only
 //! strictly greater keys, so the selection is bit-identical to the old
 //! one-element-at-a-time loop.
+//!
+//! Cancellation polls: once per iteration at the loop top, and again
+//! after the batch scan *before the argmax* — a cancel landing mid-scan
+//! leaves the gain tail unwritten, and committing a pick from it would
+//! be a nondeterministic prefix (see the module docs' contract).
 
 use super::{batch_gains, should_stop, Budget, MaximizeOpts, Selection};
 use crate::error::Result;
 use crate::functions::traits::SetFunction;
+use crate::runtime::cancel;
 
 pub(crate) fn run(
     f: &mut dyn SetFunction,
@@ -34,6 +40,7 @@ pub(crate) fn run(
     let mut gains: Vec<f64> = Vec::with_capacity(n);
 
     loop {
+        cancel::check_current()?;
         let remaining = budget.max_cost - spent;
         candidates.clear();
         candidates
@@ -44,6 +51,7 @@ pub(crate) fn run(
         gains.clear();
         gains.resize(candidates.len(), 0.0);
         batch_gains(&*f, &candidates, &mut gains, opts.parallel, opts.threads);
+        cancel::check_current()?; // a mid-scan cancel leaves `gains` partial
         evaluations += candidates.len() as u64;
         let mut best: Option<(usize, f64, f64)> = None; // (e, gain, key)
         for (&e, &gain) in candidates.iter().zip(gains.iter()) {

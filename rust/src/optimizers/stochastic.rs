@@ -15,6 +15,7 @@ use super::{batch_gains, should_stop, Budget, MaximizeOpts, Selection};
 use crate::error::{Result, SubmodError};
 use crate::functions::traits::SetFunction;
 use crate::rng::Pcg64;
+use crate::runtime::cancel;
 
 /// Sample size for one stochastic-greedy iteration:
 /// `⌈(n/k)·ln(1/ε)⌉`, clamped to `[1, n]`. Public so parity suites can
@@ -52,6 +53,7 @@ pub(crate) fn run(
     let mut gains: Vec<f64> = Vec::with_capacity(s);
 
     for it in 0..k {
+        cancel::check_current()?; // per-iteration poll
         if pool.is_empty() {
             break;
         }
@@ -64,6 +66,7 @@ pub(crate) fn run(
         gains.clear();
         gains.resize(take, 0.0);
         batch_gains(&*f, &pool[..take], &mut gains, opts.parallel, opts.threads);
+        cancel::check_current()?; // a mid-sweep cancel leaves `gains` partial
         evaluations += take as u64;
         let mut best: Option<(usize, usize, f64)> = None; // (pool pos, e, gain)
         for (pos, (&e, &gain)) in pool[..take].iter().zip(gains.iter()).enumerate() {

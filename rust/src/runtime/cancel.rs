@@ -1,0 +1,264 @@
+//! Cooperative cancellation: bounded-latency compute without clocks.
+//!
+//! A [`CancelToken`] is a shared atomic flag that compute layers *poll*
+//! at their natural claim boundaries — per tile in the `kernel::tile`
+//! drivers (including the sparse wavefront's wedge claims), per
+//! `GAIN_CHUNK` in `optimizers::batch_gains`, per iteration in the
+//! greedy optimizer loops, per item claim in `pool::run_indexed` — and
+//! unwind from with a typed [`SubmodError::Cancelled`]. Nothing here
+//! preempts anything: a fired token means workers simply stop claiming
+//! new work and the Result-returning layer above discards its partial
+//! buffers. That keeps every invariant the compute stack already has:
+//! no poisoned locks, no partially-filled output ever escapes, the
+//! pool's generation protocol completes normally, and memoized function
+//! states are only mutated by `update_memoization` calls that were
+//! never issued.
+//!
+//! # No wall-clock below the rim
+//!
+//! This module contains **no** `Instant`/`SystemTime` — deliberately.
+//! Time lives only at the coordinator rim (`coordinator::watchdog`),
+//! which arms tokens from request deadlines and shutdown grace budgets;
+//! the compute layers see a pure boolean. The `wall-clock` conformance
+//! rule is scoped over this file (see `analysis::rules`), so an
+//! `Instant::now()` smuggled into token polling fails the tier-1
+//! conformance gate.
+//!
+//! # Determinism contract
+//!
+//! * A token that **never fires** is inert: every selection and kernel
+//!   build is byte-identical to a run with no token at all, at every
+//!   pool width and on every compute backend (polls read a flag; they
+//!   never reorder claims or change arithmetic).
+//! * A token that **fires** aborts the whole operation with
+//!   [`SubmodError::Cancelled`] — never a partial result, never a
+//!   nondeterministic prefix.
+//!
+//! # Ambient scope
+//!
+//! Tokens propagate through the stack as a thread-local *ambient
+//! scope* ([`with_scope`]) instead of threading an argument through
+//! every signature (kernel constructors like `DenseKernel::from_data`
+//! stay non-`Result`; cancellation there surfaces at the nearest
+//! Result-returning caller). `pool::run` captures the submitter's
+//! ambient token at submission and re-installs it inside each worker
+//! invocation, so a job polls the same token on every participant.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Result, SubmodError};
+
+/// Why a token fired. First `fire` wins; later reasons are ignored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelReason {
+    /// Fired directly by a library user.
+    Manual,
+    /// Fired by the coordinator's deadline watchdog; the coordinator
+    /// maps the resulting `Cancelled` back to `DeadlineExceeded`.
+    Deadline,
+    /// Fired by hard-cancel shutdown after the drain grace budget.
+    Shutdown,
+}
+
+const UNFIRED: u8 = 0;
+
+impl CancelReason {
+    fn code(self) -> u8 {
+        match self {
+            CancelReason::Manual => 1,
+            CancelReason::Deadline => 2,
+            CancelReason::Shutdown => 3,
+        }
+    }
+
+    fn decode(code: u8) -> Option<CancelReason> {
+        match code {
+            1 => Some(CancelReason::Manual),
+            2 => Some(CancelReason::Deadline),
+            3 => Some(CancelReason::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// Shared cooperative-cancellation flag. Cheap to clone (an `Arc`);
+/// all clones observe the same fire.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    // Single atomic: 0 = unfired, else the CancelReason code. The token
+    // carries no data, only a "stop claiming work" signal, so relaxed
+    // ordering is sufficient — visibility is eventual and the compute
+    // layers re-poll at every claim boundary anyway.
+    state: Arc<AtomicU8>,
+}
+
+impl CancelToken {
+    /// A fresh, unfired token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Fire the token. First caller's reason sticks; firing an already
+    /// fired token is a no-op. Returns whether this call was the one
+    /// that fired it.
+    pub fn fire(&self, reason: CancelReason) -> bool {
+        self.state
+            .compare_exchange(UNFIRED, reason.code(), Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Has the token fired? (The poll the compute layers use.)
+    pub fn is_fired(&self) -> bool {
+        self.state.load(Ordering::Relaxed) != UNFIRED
+    }
+
+    /// The reason the token fired, or `None` while unfired.
+    pub fn reason(&self) -> Option<CancelReason> {
+        CancelReason::decode(self.state.load(Ordering::Relaxed))
+    }
+
+    /// `Err(Cancelled)` once fired, `Ok(())` before.
+    pub fn check(&self) -> Result<()> {
+        if self.is_fired() {
+            Err(SubmodError::Cancelled)
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Do `self` and `other` observe the same underlying flag?
+    pub fn same_as(&self, other: &CancelToken) -> bool {
+        Arc::ptr_eq(&self.state, &other.state)
+    }
+}
+
+thread_local! {
+    /// The ambient token for this thread, if any. Installed by
+    /// [`with_scope`]; the pool re-installs the submitter's scope
+    /// inside worker invocations.
+    static SCOPE: std::cell::RefCell<Option<CancelToken>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Run `f` with `token` as the thread's ambient cancel scope,
+/// restoring the previous scope afterwards (also on unwind).
+/// `None` runs `f` with no ambient token (shadowing any outer scope) —
+/// callers that merely *might* have a token should pass the outer
+/// scope through via [`current`] instead of `None`.
+pub fn with_scope<R>(token: Option<CancelToken>, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<CancelToken>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            SCOPE.with(|s| *s.borrow_mut() = prev);
+        }
+    }
+    let prev = SCOPE.with(|s| std::mem::replace(&mut *s.borrow_mut(), token));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The ambient token installed on this thread, if any.
+pub fn current() -> Option<CancelToken> {
+    SCOPE.with(|s| s.borrow().clone())
+}
+
+/// Cheap poll: has the ambient token fired? `false` when no scope is
+/// installed — code with no token in play never aborts.
+pub fn active() -> bool {
+    SCOPE.with(|s| s.borrow().as_ref().is_some_and(CancelToken::is_fired))
+}
+
+/// `Err(Cancelled)` if the ambient token has fired, else `Ok(())`.
+/// The standard poll at Result-returning claim boundaries.
+pub fn check_current() -> Result<()> {
+    if active() {
+        Err(SubmodError::Cancelled)
+    } else {
+        Ok(())
+    }
+}
+
+/// Fire the ambient token (if any) with `reason`. Returns whether a
+/// scope was installed. Used by the `coordinator::faults` Cancel
+/// action so a failpoint can fire *whichever* request's token is in
+/// scope at the site — deterministic regardless of which chunk or tile
+/// trips first, because the whole operation aborts either way.
+pub fn fire_current(reason: CancelReason) -> bool {
+    SCOPE.with(|s| match s.borrow().as_ref() {
+        Some(t) => {
+            t.fire(reason);
+            true
+        }
+        None => false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_fire_wins_and_sticks() {
+        let t = CancelToken::new();
+        assert!(!t.is_fired());
+        assert_eq!(t.reason(), None);
+        assert!(t.check().is_ok());
+        assert!(t.fire(CancelReason::Deadline));
+        assert!(!t.fire(CancelReason::Manual), "second fire is a no-op");
+        assert!(t.is_fired());
+        assert_eq!(t.reason(), Some(CancelReason::Deadline));
+        assert!(matches!(t.check(), Err(SubmodError::Cancelled)));
+    }
+
+    #[test]
+    fn clones_share_the_flag() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(t.same_as(&c));
+        assert!(!t.same_as(&CancelToken::new()));
+        c.fire(CancelReason::Manual);
+        assert!(t.is_fired());
+    }
+
+    #[test]
+    fn scope_installs_nests_and_restores() {
+        assert!(current().is_none());
+        assert!(!active());
+        assert!(check_current().is_ok());
+        assert!(!fire_current(CancelReason::Manual), "no scope: nothing to fire");
+
+        let outer = CancelToken::new();
+        with_scope(Some(outer.clone()), || {
+            assert!(current().unwrap().same_as(&outer));
+            let inner = CancelToken::new();
+            with_scope(Some(inner.clone()), || {
+                assert!(current().unwrap().same_as(&inner));
+                // None shadows: no ambient token inside
+                with_scope(None, || {
+                    assert!(current().is_none());
+                    assert!(!active());
+                });
+                assert!(current().unwrap().same_as(&inner));
+                assert!(fire_current(CancelReason::Manual));
+                assert!(active());
+                assert!(matches!(check_current(), Err(SubmodError::Cancelled)));
+            });
+            // inner fired, outer untouched
+            assert!(!outer.is_fired());
+            assert!(!active());
+        });
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn scope_restores_on_unwind() {
+        let t = CancelToken::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            with_scope(Some(t.clone()), || panic!("boom"));
+        }));
+        assert!(r.is_err());
+        assert!(current().is_none(), "scope restored across unwind");
+    }
+}

@@ -7,6 +7,10 @@
 //!   scoped jobs here instead of spawning threads per call; see its
 //!   module docs for the `SUBMODLIB_THREADS` contract and the
 //!   indexed-slot determinism rule.
+//! * [`cancel`] — cooperative cancellation tokens (shared atomic flag,
+//!   no wall-clock) polled at claim boundaries by every compute layer;
+//!   the pool propagates the submitter's ambient token into worker
+//!   invocations.
 //! * [`client::Engine`] — PJRT CPU client + compiled-executable registry,
 //!   keyed by the entries in `artifacts/manifest.json` (loads the
 //!   AOT-compiled HLO artifacts produced by `make artifacts`; Python is
@@ -18,6 +22,7 @@
 //! docstring for why serialized protos don't work against
 //! xla_extension 0.5.1).
 
+pub mod cancel;
 pub mod client;
 pub mod pool;
 pub mod tiled;

@@ -54,11 +54,30 @@
 //! deadlocking. Most callers should reach for [`run_indexed`], which
 //! packages the claim-off-a-counter / own-slot discipline once instead
 //! of each call site hand-rolling it.
+//!
+//! ## Cooperative cancellation
+//!
+//! The pool is cancellation-transparent: [`run`] captures the
+//! submitter's ambient [`cancel`] scope at submission and re-installs
+//! it inside every worker invocation, so a job polls the same
+//! `CancelToken` on each participant. [`run_indexed`] polls the token
+//! before **every item claim** — a fired token means workers stop
+//! claiming and the job completes normally with the remaining items
+//! untouched; the Result-returning caller above then unwinds with
+//! `SubmodError::Cancelled` (see `runtime::cancel`). The generation
+//! protocol always runs to completion, so a cancelled pool is
+//! immediately reusable, and a token that never fires changes nothing:
+//! polls read a flag and claims stay in the same deterministic order,
+//! so outputs are byte-identical with or without a token, at any width.
+//!
+//! [`cancel`]: crate::runtime::cancel
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::runtime::cancel;
 
 /// A published job: one invocation per participant, with the
 /// participant's index. See the module docs for the determinism rule.
@@ -202,6 +221,13 @@ pub fn worker_count() -> usize {
 /// invocation has finished, so `job` may borrow from the caller's
 /// stack. Panics inside `job` are propagated to the caller.
 pub fn run(parts: usize, job: JobRef<'_>) {
+    // fired ambient token: don't start work that would only be thrown
+    // away — the Result-returning caller unwinds with `Cancelled`.
+    // (An unfired or absent token takes this branch never, so clean
+    // runs are untouched.)
+    if cancel::active() {
+        return;
+    }
     let parts = parts.clamp(1, num_threads());
     if parts == 1 || IN_JOB.with(|c| c.get()) {
         job(0);
@@ -230,6 +256,11 @@ where
     let slots: Mutex<Vec<Option<T>>> = Mutex::new(items.into_iter().map(Some).collect());
     let next = AtomicUsize::new(0);
     run(parts.min(count), &|_worker| loop {
+        // poll per item claim: a fired token stops this participant
+        // from claiming further work (already-claimed items finish)
+        if cancel::active() {
+            break;
+        }
         let t = next.fetch_add(1, Ordering::Relaxed);
         if t >= count {
             break;
@@ -286,13 +317,19 @@ impl Pool {
             return;
         }
         let serial = self.submit.lock().unwrap();
+        // propagate the submitter's ambient cancel scope into worker
+        // invocations: every participant polls the same token (workers
+        // have no ambient scope of their own)
+        let token = cancel::current();
+        let scoped = move |slot: usize| cancel::with_scope(token.clone(), || job(slot));
+        let scoped_ref: JobRef<'_> = &scoped;
         // SAFETY: lifetime erasure only — the transmute does not change
         // the fat reference's layout, and this function does not return
         // until `unclaimed` and `running` have both drained to 0 (the
         // `done` wait below), so the erased borrow outlives every
         // dereference a worker performs.
         let erased = Job(unsafe {
-            std::mem::transmute::<JobRef<'_>, JobRef<'static>>(job) as *const _
+            std::mem::transmute::<JobRef<'_>, JobRef<'static>>(scoped_ref) as *const _
         });
         {
             let mut st = self.shared.state.lock().unwrap();
@@ -585,6 +622,59 @@ mod tests {
         let wmax = compute(usize::MAX);
         assert_eq!(w1, w2, "width 1 vs 2");
         assert_eq!(w1, wmax, "width 1 vs max");
+    }
+
+    #[test]
+    fn submitter_cancel_scope_reaches_every_participant() {
+        use crate::runtime::cancel::{self, CancelToken};
+        let token = CancelToken::new();
+        let seen = AtomicUsize::new(0);
+        cancel::with_scope(Some(token.clone()), || {
+            run(num_threads(), &|_w| {
+                let ambient = cancel::current().expect("ambient token inside job");
+                assert!(ambient.same_as(&token), "worker sees the submitter's token");
+                seen.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(seen.load(Ordering::Relaxed) >= 1);
+        // workers' own scope is restored after the job
+        assert!(cancel::current().is_none());
+    }
+
+    #[test]
+    fn fired_token_stops_claims_and_pool_stays_reusable() {
+        use crate::runtime::cancel::{self, CancelReason, CancelToken};
+        let token = CancelToken::new();
+        token.fire(CancelReason::Manual);
+        let touched = AtomicUsize::new(0);
+        cancel::with_scope(Some(token), || {
+            run_indexed(num_threads(), (0..N_ITEMS).collect::<Vec<usize>>(), |_t, _item| {
+                touched.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(touched.load(Ordering::Relaxed), 0, "pre-fired token: no item claimed");
+        // the generation protocol completed; the next (clean) job runs fully
+        let done = AtomicUsize::new(0);
+        run_indexed(num_threads(), (0..N_ITEMS).collect::<Vec<usize>>(), |_t, _item| {
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), N_ITEMS);
+    }
+
+    #[test]
+    fn unfired_token_is_inert_for_run_indexed() {
+        use crate::runtime::cancel::{self, CancelToken};
+        let compute = |token: Option<CancelToken>| {
+            cancel::with_scope(token, || {
+                let out: Vec<AtomicUsize> =
+                    (0..N_ITEMS).map(|_| AtomicUsize::new(0)).collect();
+                run_indexed(num_threads(), (0..N_ITEMS).collect::<Vec<usize>>(), |t, item| {
+                    out[t].store(item * 7 + 1, Ordering::Relaxed);
+                });
+                out.into_iter().map(AtomicUsize::into_inner).collect::<Vec<usize>>()
+            })
+        };
+        assert_eq!(compute(None), compute(Some(CancelToken::new())));
     }
 
     #[test]

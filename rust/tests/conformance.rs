@@ -79,6 +79,28 @@ fn backend_unsafe_whitelist_is_exact() {
 }
 
 #[test]
+fn cancel_module_is_wall_clock_scoped() {
+    // ISSUE 10: the cooperative-cancellation flag protocol is
+    // compute-layer code, polled from kernel tiles and gain scans — a
+    // clock read inside it would be a determinism leak, so the
+    // wall-clock rule must cover it. Deadline-to-token translation is
+    // allowed in exactly one place: the coordinator's watchdog, at the
+    // rim with the rest of the timing code.
+    let bad = "fn f() -> std::time::Instant { std::time::Instant::now() }\n";
+    let fired: Vec<_> =
+        lint_source("rust/src/runtime/cancel.rs", bad).into_iter().map(|v| v.rule).collect();
+    assert_eq!(fired, vec!["wall-clock"], "cancel module must be wall-clock scoped");
+    assert!(
+        lint_source("rust/src/coordinator/watchdog.rs", bad).is_empty(),
+        "the watchdog is the sanctioned deadline rim"
+    );
+    // the real files exist where the scoping points
+    for probe in ["rust/src/runtime/cancel.rs", "rust/src/coordinator/watchdog.rs"] {
+        assert!(repo_root().join(probe).is_file(), "missing {probe}");
+    }
+}
+
+#[test]
 fn scan_actually_covers_the_tree() {
     // Guard against a silent walker regression: planting a violation in a
     // copy of a real source path must be caught. We lint the synthetic

@@ -16,6 +16,7 @@ use submodlib::coordinator::faults::{self, FaultAction, FaultSpec, Trigger};
 use submodlib::coordinator::{Coordinator, SelectRequest};
 use submodlib::data::synthetic;
 use submodlib::error::SubmodError;
+use submodlib::runtime::cancel::CancelReason;
 
 static SERIAL: Mutex<()> = Mutex::new(());
 
@@ -517,6 +518,196 @@ fn shutdown_waits_for_inflight_selection() {
             restored.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
         assert_eq!(again.ids, resp.ids);
         assert_eq!(again.value.to_bits(), resp.value.to_bits());
+    });
+}
+
+// ---------------------------------------------------------------------
+// Pillar 8 (ISSUE 10): cooperative cancellation through every compute
+// layer. The poll-only sites (TILE_CLAIM, GAIN_CHUNK) + FaultAction::
+// Cancel force a cancel at an exact depth — mid-kernel-build, mid-gain-
+// scan, mid-merge — with no sleeps and no timing asserts. The contract
+// everywhere: a typed `SubmodError::Cancelled`, `selections_cancelled`
+// bumped, NO shard charged (cancel is the request's fault, not the
+// shard's), and the same coordinator serving a byte-identical answer on
+// the very next request.
+// ---------------------------------------------------------------------
+
+/// Shared scenario: arm `site` to fire the ambient cancel token on its
+/// first hit, prove the typed abort + clean metrics, then prove the
+/// coordinator is immediately reusable with a byte-identical answer.
+fn assert_cancel_unwinds_cleanly(site: &str) {
+    let baseline = seeded(2, None)
+        .select(SelectRequest { budget: 8, ..Default::default() })
+        .unwrap();
+    arm(site, FaultAction::Cancel(CancelReason::Manual), None, Trigger::Times(1));
+    let c = seeded(2, None);
+    let err = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap_err();
+    assert!(matches!(err, SubmodError::Cancelled), "{site}: {err}");
+    let m = c.metrics();
+    assert_eq!(m.selections_cancelled, 1, "{site}: mid-flight unwind counted");
+    assert_eq!(m.selections_failed, 1);
+    assert_eq!(m.deadline_exceeded, 0, "{site}: manual cancel ≠ deadline");
+    assert_eq!(m.shard_failures, 0, "{site}: cancel never charges shards");
+    assert_eq!(m.shard_retries, 0, "{site}: cancelled evaluations are not retried");
+    assert_eq!(m.selections_inflight, 0, "{site}: permit returned");
+    // cancelled latencies land in the failed histogram (ISSUE 8 split)
+    assert!(m.failed_latency_p99_us > 0);
+    // the pool, memoized states and builders are clean: the next request
+    // on the SAME coordinator is byte-identical to an unfaulted run
+    faults::clear();
+    let again = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+    assert_eq!(again.ids, baseline.ids, "{site}: post-cancel selection drifted");
+    assert_eq!(again.value.to_bits(), baseline.value.to_bits(), "{site}");
+    assert!(!again.degraded);
+    assert_eq!(c.metrics().selections_served, 1);
+}
+
+#[test]
+fn cancel_mid_gain_scan_unwinds_cleanly() {
+    let _g = exclusive();
+    // fires inside optimizers::batch_gains, between two GAIN_CHUNK
+    // chunks of the first stage-1 shard scan
+    assert_cancel_unwinds_cleanly(faults::GAIN_CHUNK);
+}
+
+#[test]
+fn cancel_mid_kernel_build_unwinds_cleanly() {
+    let _g = exclusive();
+    // fires inside the kernel::tile claim loop of the first per-shard
+    // dense kernel build — the partial kernel is discarded at
+    // ObjectiveKind::build's check, never handed to an optimizer
+    assert_cancel_unwinds_cleanly(faults::TILE_CLAIM);
+}
+
+#[test]
+fn cancel_mid_stage2_merge_build_unwinds_cleanly() {
+    let _g = exclusive();
+    // key the TILE_CLAIM site by the stage-2 merge build's column count
+    // (the stage-1 candidate union) so stage 1 completes untouched and
+    // the cancel lands exactly inside the merge kernel build
+    let baseline = seeded(2, None)
+        .select(SelectRequest { budget: 8, ..Default::default() })
+        .unwrap();
+    assert_ne!(
+        baseline.stage1_candidates, SHARD_CAP,
+        "key must distinguish the merge build from per-shard builds"
+    );
+    arm(
+        faults::TILE_CLAIM,
+        FaultAction::Cancel(CancelReason::Manual),
+        Some(baseline.stage1_candidates),
+        Trigger::Times(1),
+    );
+    let c = seeded(2, None);
+    let err = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap_err();
+    assert!(matches!(err, SubmodError::Cancelled), "{err}");
+    let m = c.metrics();
+    assert_eq!(m.selections_cancelled, 1);
+    // stage 1 ran to completion before the cancel: still no shard charged
+    assert_eq!(m.shard_failures, 0);
+    assert_eq!(m.shard_retries, 0);
+    faults::clear();
+    let again = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+    assert_eq!(again.ids, baseline.ids);
+    assert_eq!(again.value.to_bits(), baseline.value.to_bits());
+}
+
+#[test]
+fn watchdog_fires_mid_kernel_build_as_typed_deadline() {
+    let _g = exclusive();
+    // a 200 ms stall inside the tile claim loop vs a 25 ms deadline: the
+    // watchdog fires the request token while compute is stuck deep in a
+    // kernel build, and the unwind surfaces under the deadline contract
+    // (SubmodError::DeadlineExceeded, not a bare Cancelled)
+    arm(
+        faults::TILE_CLAIM,
+        FaultAction::Delay(Duration::from_millis(200)),
+        None,
+        Trigger::Times(1),
+    );
+    let c = seeded(2, None);
+    let err = c
+        .select(SelectRequest {
+            budget: 8,
+            deadline: Some(Duration::from_millis(25)),
+            ..Default::default()
+        })
+        .unwrap_err();
+    assert!(matches!(err, SubmodError::DeadlineExceeded), "{err}");
+    let m = c.metrics();
+    assert_eq!(m.deadline_exceeded, 1);
+    assert_eq!(m.selections_cancelled, 1, "preemptive unwind, not a rim check");
+    assert_eq!(m.shard_failures, 0);
+    assert_eq!(m.shard_retries, 0);
+    // cleared, the same coordinator serves normally again
+    faults::clear();
+    let resp = c.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+    assert_eq!(resp.ids.len(), 8);
+}
+
+#[test]
+fn watchdog_fires_mid_gain_scan_as_typed_deadline() {
+    let _g = exclusive();
+    // same shape one layer up: the stall sits between gain-scan chunks
+    arm(
+        faults::GAIN_CHUNK,
+        FaultAction::Delay(Duration::from_millis(200)),
+        None,
+        Trigger::Times(1),
+    );
+    let c = seeded(2, None);
+    let err = c
+        .select(SelectRequest {
+            budget: 8,
+            deadline: Some(Duration::from_millis(25)),
+            ..Default::default()
+        })
+        .unwrap_err();
+    assert!(matches!(err, SubmodError::DeadlineExceeded), "{err}");
+    let m = c.metrics();
+    assert_eq!(m.deadline_exceeded, 1);
+    assert_eq!(m.selections_cancelled, 1);
+    assert_eq!(m.shard_failures, 0);
+}
+
+#[test]
+fn shutdown_with_grace_hard_cancels_a_stuck_selection() {
+    let _g = exclusive();
+    // hold one selection in flight at the stage-2 merge far past the
+    // grace budget: shutdown must fire its token instead of waiting out
+    // the full stall, and the caller sees the typed cancel
+    arm(
+        faults::STAGE2_MERGE,
+        FaultAction::Delay(Duration::from_millis(600)),
+        None,
+        Trigger::Times(1),
+    );
+    let c = seeded(2, None);
+    // lint: allow(thread-spawn) — tenant is an external caller overlapping shutdown, not pool work
+    std::thread::scope(|scope| {
+        let stuck =
+            scope.spawn(|| c.select(SelectRequest { budget: 8, ..Default::default() }));
+        while c.metrics().selections_inflight == 0 {
+            std::thread::yield_now();
+        }
+        let blob = c.shutdown_with_grace(Duration::from_millis(40)).unwrap();
+        let err = stuck.join().unwrap().unwrap_err();
+        assert!(matches!(err, SubmodError::Cancelled), "{err}");
+        let m = c.metrics();
+        assert_eq!(m.selections_cancelled, 1);
+        assert_eq!(m.selections_served, 0);
+        assert_eq!(m.selections_inflight, 0, "permit returned through the unwind");
+        assert_eq!(m.shard_failures, 0);
+        // post-shutdown work is refused, and the checkpoint still
+        // restores a fully working service
+        assert!(matches!(
+            c.select(SelectRequest::default()).unwrap_err(),
+            SubmodError::ShuttingDown
+        ));
+        let restored = Coordinator::from_checkpoint(cfg(2, None), &blob).unwrap();
+        let resp =
+            restored.select(SelectRequest { budget: 8, ..Default::default() }).unwrap();
+        assert_eq!(resp.ids.len(), 8);
     });
 }
 

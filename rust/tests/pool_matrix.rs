@@ -145,6 +145,59 @@ fn maximize_opts_threads_cap_is_inert_on_results() {
 }
 
 #[test]
+fn unfired_cancel_token_is_byte_inert_at_every_width() {
+    // ISSUE 10 never-fired contract: arming a cancel token that never
+    // fires must not change a single output bit — the polls read an
+    // atomic flag and touch no claim order. Covered here at every pool
+    // width for both surfaces the token threads through: a selection
+    // (MaximizeOpts::cancel + the gain-scan polls) and the kernel build
+    // paths (the ambient scope the tile/wavefront claim loops poll),
+    // including the sparse CSR output. CI's backend matrix runs this
+    // file under the scalar backend too, so the contract is pinned
+    // per-backend, not just for the auto-detected one.
+    use submodlib::runtime::cancel::{self, CancelToken};
+    let data = ground();
+    let nk = 24;
+    let reference = at_width(Some(1), || {
+        let f = FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+        fingerprint(&f, OptimizerKind::LazyGreedy)
+    });
+    let ref_sparse =
+        at_width(Some(1), || SparseKernel::from_data(&data, Metric::Euclidean, nk).unwrap());
+    for width in [Some(1), Some(2), None] {
+        let (sel, sparse) = at_width(width, || {
+            // the ambient scope covers the kernel builds' claim loops
+            cancel::with_scope(Some(CancelToken::new()), || {
+                let f =
+                    FacilityLocation::new(DenseKernel::from_data(&data, Metric::Euclidean));
+                let sel = maximize(
+                    &f,
+                    Budget::cardinality(K),
+                    OptimizerKind::LazyGreedy,
+                    &MaximizeOpts { cancel: Some(CancelToken::new()), ..Default::default() },
+                )
+                .unwrap();
+                let sparse = SparseKernel::from_data(&data, Metric::Euclidean, nk).unwrap();
+                (sel, sparse)
+            })
+        });
+        let got: (Vec<(usize, u64)>, u64) = (
+            sel.order.iter().map(|&(e, g)| (e, g.to_bits())).collect(),
+            sel.value.to_bits(),
+        );
+        assert_eq!(got, reference, "armed-unfired selection drifted at width {width:?}");
+        for i in 0..data.rows() {
+            let (gc, gv) = sparse.row(i);
+            let (wc, wv) = ref_sparse.row(i);
+            assert_eq!(gc, wc, "sparse cols row {i} width {width:?}");
+            for (g, w) in gv.iter().zip(wv) {
+                assert_eq!(g.to_bits(), w.to_bits(), "sparse vals row {i} width {width:?}");
+            }
+        }
+    }
+}
+
+#[test]
 fn kernel_builds_bit_identical_across_widths() {
     // several wedge/tile boundaries (n > 3·TILE_ROWS) so the width
     // actually changes the parallel schedule being tested
